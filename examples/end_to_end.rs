@@ -1,0 +1,91 @@
+//! End-to-end driver: the full three-layer stack on a real small
+//! workload, proving all layers compose (DESIGN.md §8).
+//!
+//! L1 (Pallas pairwise kernel) → L2 (JAX top-k tile graph, AOT-lowered to
+//! `artifacts/*.hlo.txt`) → L3 (this binary: PJRT runtime + sharded SCC
+//! coordinator). Requires `make artifacts`; falls back to the native
+//! backend with a warning otherwise.
+//!
+//! Workload: the ALOI analog at scale 0.25 (27k × 128, ~500 classes).
+//! Reports per-phase wall-clock, per-round coordinator stats, and the
+//! paper's headline metrics (dendrogram purity, F1@k*, DP-means cost).
+//! The recorded run lives in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end [scale]
+//! ```
+
+use scc::data::analogs::{bench_analog, spec_by_name};
+use scc::eval::common::f1_at_k;
+use scc::knn::knn_graph_with_backend;
+use scc::linkage::Measure;
+use scc::metrics::{dendrogram_purity, dp_means_cost};
+use scc::runtime::{auto_backend, Backend};
+use scc::scc::{SccConfig, Thresholds};
+use scc::util::{par, stats::fmt_count, stats::fmt_secs, timer::PhaseTimer};
+
+fn main() {
+    let scale: f64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.25);
+    let threads = par::default_threads();
+    let mut timers = PhaseTimer::new();
+
+    let backend: Box<dyn Backend> = auto_backend();
+    if backend.name() != "pjrt" {
+        eprintln!("WARNING: artifacts not found, using native backend (run `make artifacts`)");
+    }
+
+    // ALOI analog: 108k x 128, 1000 classes at full scale (DESIGN.md §4)
+    let spec = spec_by_name("aloi").unwrap();
+    let ds = timers.time("generate", || bench_analog(spec, scale, 7));
+    println!(
+        "workload: ALOI analog n={} d={} k*={}  backend={} threads={threads}",
+        fmt_count(ds.n),
+        ds.d,
+        ds.num_classes(),
+        backend.name()
+    );
+
+    // L1+L2 via L3 runtime: tiled exact k-NN graph
+    let graph = timers.time("knn_graph (L1/L2 tiles via PJRT)", || {
+        knn_graph_with_backend(&ds, 25, Measure::CosineDist, backend.as_ref(), threads)
+    });
+    println!("graph: {} undirected edges", fmt_count(graph.num_undirected()));
+
+    // L3: sharded SCC coordinator
+    let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
+    let config = SccConfig::new(Thresholds::geometric(lo, hi, 30).taus);
+    let (result, coord_stats) = timers.time("scc rounds (coordinator)", || {
+        scc::coordinator::run_parallel(&graph, &config, threads)
+    });
+
+    println!("\nround  threshold  clusters   merges  shuffleKB  time");
+    for (s, sh) in result.stats.iter().zip(&coord_stats.shuffles) {
+        println!(
+            "{:>5} {:>10.4} {:>9} {:>8} {:>10} {:>9}",
+            s.round,
+            s.threshold,
+            s.clusters_after,
+            s.merge_edges,
+            sh.bytes / 1024,
+            fmt_secs(s.secs),
+        );
+    }
+
+    // headline metrics
+    let labels = ds.labels.as_ref().unwrap();
+    let dp = timers.time("dendrogram purity", || dendrogram_purity(&result.tree(), labels));
+    let f1 = timers.time("pairwise F1", || f1_at_k(&result.rounds, labels, ds.num_classes()));
+    let dp_cost = dp_means_cost(&ds, result.round_closest_to_k(ds.num_classes()), 0.5);
+
+    println!("\n== phase timings ==\n{}", timers.report());
+    println!("== headline metrics ==");
+    println!("dendrogram purity: {dp:.4}");
+    println!("pairwise F1 @ k*:  {f1:.4}");
+    println!("DP-means cost (lambda=0.5): {dp_cost:.1}");
+    println!(
+        "rounds: {} (vs {} HAC merges) — the paper's order-of-magnitude claim",
+        result.rounds.len(),
+        ds.n - 1
+    );
+}

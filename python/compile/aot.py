@@ -1,0 +1,108 @@
+"""AOT lowering: JAX tile graphs -> HLO text artifacts + manifest.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+>= 0.5 emits HloModuleProtos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (/opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out ../artifacts` from `python/` (the
+Makefile's `make artifacts` target). Idempotent: skips lowering when the
+artifact file already exists and inputs are unchanged (make handles the
+dependency tracking; `--force` overrides here).
+
+The emitted shapes are the contract with rust/src/runtime/ (see
+manifest.rs). Keep in sync:
+  knn:    b=256 m=2048 k=32 d in {64, 128}, measure in {l2sq, dot}
+  assign: b=512 c=256       d in {64, 128}, measure in {l2sq, dot}
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+KNN_SHAPES = [
+    # (b, m, k, d)
+    (256, 2048, 32, 64),
+    (256, 2048, 32, 128),
+]
+ASSIGN_SHAPES = [
+    # (b, c, d)
+    (512, 256, 64),
+    (512, 256, 128),
+]
+MEASURES = ["l2sq", "dot"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (gen_hlo.py recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_knn(b, m, k, d, measure):
+    fn = functools.partial(model.knn_tile, k=k, measure=measure)
+    q = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    c = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    v = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.jit(fn).lower(q, c, v)
+
+
+def lower_assign(b, c, d, measure):
+    fn = functools.partial(model.assign_tile, measure=measure)
+    p = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    cc = jax.ShapeDtypeStruct((c, d), jnp.float32)
+    v = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.jit(fn).lower(p, cc, v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = [
+        "# AOT artifacts for the scc rust runtime (see DESIGN.md).",
+        "# kernel=knn:    (queries[b,d], cands[m,d], valid i32) -> (dist[b,k], idx[b,k])",
+        "# kernel=assign: (points[b,d], centers[c,d], valid i32) -> (dist[b], idx[b])",
+    ]
+    for measure in MEASURES:
+        for (b, m, k, d) in KNN_SHAPES:
+            name = f"knn_{measure}_b{b}_m{m}_k{k}_d{d}.hlo.txt"
+            path = os.path.join(args.out, name)
+            if args.force or not os.path.exists(path):
+                text = to_hlo_text(lower_knn(b, m, k, d, measure))
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"lowered {name} ({len(text)} chars)")
+            manifest_lines.append(
+                f"kernel=knn measure={measure} b={b} m={m} d={d} k={k} file={name}"
+            )
+        for (b, c, d) in ASSIGN_SHAPES:
+            name = f"assign_{measure}_b{b}_c{c}_d{d}.hlo.txt"
+            path = os.path.join(args.out, name)
+            if args.force or not os.path.exists(path):
+                text = to_hlo_text(lower_assign(b, c, d, measure))
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"lowered {name} ({len(text)} chars)")
+            manifest_lines.append(
+                f"kernel=assign measure={measure} b={b} c={c} d={d} file={name}"
+            )
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines) - 3} entries to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

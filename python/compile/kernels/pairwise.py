@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: blocked pairwise dissimilarity.
+
+The compute hot-spot of the whole system (DESIGN.md §3): every k-NN graph
+tile and every DP-means/k-means assignment reduces to a dense
+query×candidate dissimilarity block. The kernel tiles candidates over a
+1-D grid; per step it holds one query block and one candidate block in
+VMEM and computes the cross term with a single MXU-shaped matmul
+(`q @ c.T`), assembling ℓ2² as ‖q‖² + ‖c‖² − 2·q·cᵀ (the same
+decomposition the rust NativeBackend uses).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * queries block [B, D] stays VMEM-resident across the grid (BlockSpec
+    index_map pins it to block (0, 0));
+  * candidate blocks [BM, D] stream HBM→VMEM along the grid;
+  * output block [B, BM] written per step;
+  * VMEM working set = (B + BM)·D + B·BM floats — sized ≤ 2 MiB for the
+    default B=256, BM=512, D=128 (see EXPERIMENTS.md §Perf).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is exactly what
+the AOT artifacts need (/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default candidate block width; must divide the M of every AOT shape.
+DEFAULT_BLOCK_M = 512
+
+
+def _pairwise_kernel(q_ref, c_ref, o_ref, *, measure: str):
+    """One grid step: dissimilarity of the query block vs one cand block."""
+    q = q_ref[...]  # [B, D] f32
+    c = c_ref[...]  # [BM, D] f32
+    # cross term on the MXU: contract the D axis of both operands
+    cross = jax.lax.dot_general(
+        q, c, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [B, BM]
+    if measure == "l2sq":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)  # [B, 1]
+        cn = jnp.sum(c * c, axis=1, keepdims=True)  # [BM, 1]
+        o_ref[...] = jnp.maximum(qn + cn.T - 2.0 * cross, 0.0)
+    elif measure == "dot":
+        o_ref[...] = 1.0 - cross
+    else:
+        raise ValueError(f"unknown measure {measure!r}")
+
+
+def pairwise_block(queries, cands, *, measure: str, block_m: int = DEFAULT_BLOCK_M):
+    """Full [nq, nc] dissimilarity matrix via the Pallas kernel.
+
+    `nc` must be divisible by `block_m` (AOT shapes guarantee this; tests
+    pick compatible blocks). No masking here — `model.py` applies the
+    `valid` mask on the assembled matrix so the kernel stays a pure
+    dense block.
+    """
+    nq, d = queries.shape
+    nc, d2 = cands.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    bm = min(block_m, nc)
+    assert nc % bm == 0, f"nc={nc} must be divisible by block_m={bm}"
+    grid = (nc // bm,)
+    kernel = functools.partial(_pairwise_kernel, measure=measure)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nq, d), lambda i: (0, 0)),  # queries resident
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),  # candidates stream
+        ],
+        out_specs=pl.BlockSpec((nq, bm), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, nc), jnp.float32),
+        interpret=True,
+    )(queries, cands)
+
+
+def vmem_bytes(b: int, bm: int, d: int) -> int:
+    """Estimated VMEM working set of one grid step, in bytes (f32)."""
+    return 4 * (b * d + bm * d + b * bm)
+
+
+def mxu_flops(b: int, m: int, d: int) -> int:
+    """FLOPs of the cross-term matmul for a full [b, m] tile."""
+    return 2 * b * m * d

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: pytest checks the Pallas kernels
+against these functions exactly (same dtype, same masking convention), and
+the rust NativeBackend mirrors the same semantics on the other side of the
+AOT boundary.
+
+Conventions (shared with rust/src/runtime/):
+  * measure "l2sq": squared euclidean distance, clamped at 0 (guards fp
+    cancellation); measure "dot": 1 - <x, y> (cosine dissimilarity on
+    unit-normalized rows).
+  * candidate rows with index >= valid are masked to +inf.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_ref(queries, cands, valid, measure: str):
+    """Dense dissimilarity matrix [nq, nc] with masked invalid columns.
+
+    Args:
+      queries: f32[nq, d]
+      cands:   f32[nc, d]
+      valid:   i32 scalar; columns >= valid are masked to +inf
+      measure: "l2sq" | "dot"
+    """
+    if measure == "l2sq":
+        qn = jnp.sum(queries * queries, axis=1, keepdims=True)  # [nq,1]
+        cn = jnp.sum(cands * cands, axis=1, keepdims=True).T  # [1,nc]
+        cross = queries @ cands.T  # [nq,nc]
+        dist = jnp.maximum(qn + cn - 2.0 * cross, 0.0)
+    elif measure == "dot":
+        dist = 1.0 - queries @ cands.T
+    else:
+        raise ValueError(f"unknown measure {measure!r}")
+    mask = jnp.arange(cands.shape[0])[None, :] < valid
+    return jnp.where(mask, dist, jnp.inf)
+
+
+def topk_ref(queries, cands, valid, k: int, measure: str):
+    """Reference top-k: ascending (dist f32[nq,k], idx i32[nq,k])."""
+    dist = pairwise_ref(queries, cands, valid, measure)
+    neg_top, idx = jax.lax.top_k(-dist, k)
+    return -neg_top, idx.astype(jnp.int32)
+
+
+def assign_ref(points, centers, valid, measure: str):
+    """Reference nearest-center: (dist f32[np], idx i32[np])."""
+    dist = pairwise_ref(points, centers, valid, measure)
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    best = jnp.min(dist, axis=1)
+    return best, idx

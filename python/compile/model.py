@@ -1,0 +1,58 @@
+"""L2: the JAX tile graphs the rust runtime executes.
+
+Two programs, both calling the L1 Pallas kernel
+(`kernels.pairwise.pairwise_block`) so the kernel lowers into the same
+HLO module:
+
+  * `knn_tile`    — top-k nearest candidates per query (the k-NN graph
+    builder's inner tile);
+  * `assign_tile` — nearest center per point (DP-means / k-means inner
+    tile).
+
+Both take a `valid` scalar: candidate/center rows with index >= valid are
+masked to +inf before the reduction, which is how the rust runtime
+expresses partial final tiles without recompiling (see
+rust/src/runtime/pjrt.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise import pairwise_block
+
+
+def _masked_pairwise(queries, cands, valid, measure: str, block_m: int):
+    dist = pairwise_block(queries, cands, measure=measure, block_m=block_m)
+    mask = jnp.arange(cands.shape[0], dtype=jnp.int32)[None, :] < valid
+    return jnp.where(mask, dist, jnp.inf)
+
+
+def knn_tile(queries, cands, valid, *, k: int, measure: str,
+             block_m: int = 512):
+    """Top-k nearest candidates per query.
+
+    Returns (dist f32[nq, k] ascending, idx i32[nq, k]).
+
+    Implemented as a full `lax.sort` + slice rather than `lax.top_k`:
+    jax lowers top_k to the `topk` HLO instruction, which the pinned
+    xla_extension 0.5.1 HLO-text parser rejects (`largest=true` attr);
+    `sort` round-trips cleanly and XLA fuses the slice.
+    """
+    dist = _masked_pairwise(queries, cands, valid, measure, block_m)
+    nc = cands.shape[0]
+    idx = jnp.broadcast_to(
+        jnp.arange(nc, dtype=jnp.int32)[None, :], dist.shape
+    )
+    sorted_d, sorted_i = jax.lax.sort((dist, idx), dimension=1, num_keys=1)
+    return sorted_d[:, :k], sorted_i[:, :k]
+
+
+def assign_tile(points, centers, valid, *, measure: str, block_m: int = 256):
+    """Nearest center per point.
+
+    Returns (dist f32[np], idx i32[np]).
+    """
+    dist = _masked_pairwise(points, centers, valid, measure, block_m)
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    best = jnp.min(dist, axis=1)
+    return best, idx

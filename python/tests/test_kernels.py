@@ -1,0 +1,89 @@
+"""L1 correctness: the Pallas pairwise kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes and measures; assert_allclose with
+tight tolerances (the kernel and oracle use the same f32 decomposition,
+so differences are pure reassociation noise).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise import mxu_flops, pairwise_block, vmem_bytes
+from compile.kernels.ref import pairwise_ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("measure", ["l2sq", "dot"])
+@pytest.mark.parametrize(
+    "nq,nc,d,bm",
+    [
+        (4, 8, 3, 8),
+        (16, 32, 7, 16),
+        (256, 2048, 64, 512),  # the AOT shape
+        (1, 4, 1, 4),
+    ],
+)
+def test_matches_ref_fixed_shapes(measure, nq, nc, d, bm):
+    q = rand((nq, d), 1)
+    c = rand((nc, d), 2)
+    got = pairwise_block(q, c, measure=measure, block_m=bm)
+    want = pairwise_ref(q, c, jnp.int32(nc), measure)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nq=st.integers(1, 24),
+    blocks=st.integers(1, 4),
+    bm=st.sampled_from([4, 8, 16]),
+    d=st.integers(1, 24),
+    measure=st.sampled_from(["l2sq", "dot"]),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref_hypothesis(nq, blocks, bm, d, measure, seed):
+    nc = blocks * bm
+    q = rand((nq, d), seed)
+    c = rand((nc, d), seed + 1)
+    got = pairwise_block(q, c, measure=measure, block_m=bm)
+    want = pairwise_ref(q, c, jnp.int32(nc), measure)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_l2_nonnegative_under_cancellation():
+    # identical large-magnitude rows: naive qn+cn-2cross can go negative
+    q = jnp.full((4, 8), 1e3, dtype=jnp.float32)
+    got = pairwise_block(q, q, measure="l2sq", block_m=4)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+def test_l2_diagonal_is_zero():
+    x = rand((8, 5), 3)
+    # pad nc to a block multiple of 8
+    d = pairwise_block(x, x, measure="l2sq", block_m=8)
+    np.testing.assert_allclose(np.diag(np.asarray(d)), 0.0, atol=1e-4)
+
+
+def test_dot_of_unit_vectors_in_range():
+    x = rand((16, 8), 4)
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+    d = np.asarray(pairwise_block(x, x, measure="dot", block_m=16))
+    assert d.min() >= -1e-5 and d.max() <= 2.0 + 1e-5
+
+
+def test_rejects_indivisible_block():
+    q = rand((4, 3), 0)
+    c = rand((10, 3), 1)
+    with pytest.raises(AssertionError):
+        pairwise_block(q, c, measure="l2sq", block_m=4)
+
+
+def test_vmem_estimate_within_budget():
+    # the AOT shapes must fit comfortably in a 16 MiB VMEM
+    assert vmem_bytes(256, 512, 128) < 2 * 2**20
+    assert mxu_flops(256, 2048, 128) == 2 * 256 * 2048 * 128

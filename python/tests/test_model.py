@@ -1,0 +1,93 @@
+"""L2 correctness: knn_tile / assign_tile vs the jnp oracles, including
+the `valid` masking convention the rust runtime relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import assign_ref, topk_ref
+from compile.model import assign_tile, knn_tile
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("measure", ["l2sq", "dot"])
+def test_knn_tile_matches_ref(measure):
+    q = rand((16, 8), 0)
+    c = rand((32, 8), 1)
+    dist, idx = knn_tile(q, c, jnp.int32(32), k=5, measure=measure, block_m=16)
+    rdist, ridx = topk_ref(q, c, jnp.int32(32), 5, measure)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+@pytest.mark.parametrize("valid", [1, 7, 16, 31, 32])
+def test_knn_tile_masks_invalid_candidates(valid):
+    q = rand((8, 4), 2)
+    c = rand((32, 4), 3)
+    dist, idx = knn_tile(q, c, jnp.int32(valid), k=6, measure="l2sq", block_m=16)
+    dist, idx = np.asarray(dist), np.asarray(idx)
+    finite = np.isfinite(dist)
+    # all finite results point at valid candidates, ascending per row
+    assert np.all(idx[finite] < valid)
+    for r in range(8):
+        row = dist[r][np.isfinite(dist[r])]
+        assert np.all(np.diff(row) >= -1e-6)
+        # exactly min(k, valid) finite entries
+        assert finite[r].sum() == min(6, valid)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nq=st.integers(1, 12),
+    d=st.integers(1, 16),
+    k=st.integers(1, 8),
+    valid=st.integers(1, 32),
+    measure=st.sampled_from(["l2sq", "dot"]),
+    seed=st.integers(0, 2**31),
+)
+def test_knn_tile_hypothesis(nq, d, k, valid, measure, seed):
+    q = rand((nq, d), seed)
+    c = rand((32, d), seed + 1)
+    dist, idx = knn_tile(q, c, jnp.int32(valid), k=k, measure=measure, block_m=16)
+    rdist, ridx = topk_ref(q, c, jnp.int32(valid), k, measure)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-4, atol=1e-5)
+    # idx may differ only on exact distance ties; compare via distances
+    got_d = np.asarray(dist)
+    want_d = np.asarray(rdist)
+    assert got_d.shape == want_d.shape == (nq, k)
+
+
+@pytest.mark.parametrize("measure", ["l2sq", "dot"])
+def test_assign_tile_matches_ref(measure):
+    p = rand((24, 6), 5)
+    c = rand((16, 6), 6)
+    dist, idx = assign_tile(p, c, jnp.int32(16), measure=measure, block_m=16)
+    rdist, ridx = assign_ref(p, c, jnp.int32(16), measure)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_assign_tile_respects_valid():
+    p = rand((8, 4), 7)
+    # center 0 is far, the rest are copies of the points (perfect matches)
+    c = jnp.concatenate([jnp.full((1, 4), 50.0), p], axis=0)
+    dist, idx = assign_tile(p, c, jnp.int32(1), measure="l2sq", block_m=3)
+    # only center 0 is valid -> everyone assigned there
+    assert np.all(np.asarray(idx) == 0)
+    dist2, idx2 = assign_tile(p, c, jnp.int32(9), measure="l2sq", block_m=3)
+    np.testing.assert_allclose(np.asarray(dist2), 0.0, atol=1e-4)
+
+
+def test_aot_shapes_lower():
+    """The exact AOT configurations lower to HLO text (smoke, small dim)."""
+    from compile.aot import lower_knn, lower_assign, to_hlo_text
+
+    text = to_hlo_text(lower_knn(8, 32, 4, 8, "l2sq"))
+    assert "HloModule" in text and "ENTRY" in text
+    text2 = to_hlo_text(lower_assign(8, 16, 8, "dot"))
+    assert "HloModule" in text2

@@ -1,0 +1,38 @@
+//! Shared plumbing for the `harness = false` bench binaries (the offline
+//! registry has no criterion; this provides the equivalent run-and-report
+//! loop for the experiment benches).
+//!
+//! Environment knobs:
+//! * `SCC_BENCH_SCALE`   — workload scale multiplier (default 1.0)
+//! * `SCC_BENCH_BACKEND` — auto|native|pjrt (default auto)
+
+use scc::cli::BackendKind;
+use scc::eval::EvalConfig;
+use scc::runtime::Backend;
+use scc::util::Timer;
+
+pub fn config() -> EvalConfig {
+    let scale = std::env::var("SCC_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    EvalConfig { scale, ..Default::default() }
+}
+
+pub fn backend() -> Box<dyn Backend> {
+    let kind = match std::env::var("SCC_BENCH_BACKEND").as_deref() {
+        Ok("native") => BackendKind::Native,
+        Ok("pjrt") => BackendKind::Pjrt,
+        _ => BackendKind::Auto,
+    };
+    scc::cli::make_backend(kind).expect("backend")
+}
+
+/// Run one experiment closure, print its report and wall-clock.
+pub fn run_experiment(name: &str, f: impl FnOnce() -> String) {
+    // `cargo bench` passes --bench; ignore all args
+    let t = Timer::start();
+    let report = f();
+    println!("{report}");
+    println!("[{name}] total wall-clock: {}", scc::util::stats::fmt_secs(t.secs()));
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper Figure 4 (simulated web-query human eval).
+mod bench_util;
+
+fn main() {
+    let cfg = bench_util::config();
+    bench_util::run_experiment("fig4", || scc::eval::fig4::run(&cfg));
+}

@@ -1,0 +1,101 @@
+//! Microbenchmarks of the hot paths (criterion-less; §Perf of
+//! EXPERIMENTS.md records the numbers):
+//!
+//! * k-NN tile execution — native vs PJRT (L1 kernel through the runtime)
+//! * full k-NN graph build (threads sweep)
+//! * SCC round engine (argmin scan + contraction)
+//! * union-find throughput
+//! * coordinator end-to-end vs sequential engine
+
+mod bench_util;
+
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph_with_backend;
+use scc::linkage::Measure;
+use scc::runtime::{Backend, NativeBackend};
+use scc::scc::{SccConfig, Thresholds};
+use scc::util::stats::{fmt_secs, Summary};
+use scc::util::Timer;
+
+/// criterion-like sample loop: warmup once, then time `samples` runs.
+fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) {
+    let _ = f(); // warmup
+    let mut s = Summary::new();
+    for _ in 0..samples {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        s.add(t.secs());
+    }
+    println!(
+        "{name:<44} {:>10} ± {:<10} (min {})",
+        fmt_secs(s.mean()),
+        fmt_secs(s.std()),
+        fmt_secs(s.min())
+    );
+}
+
+fn main() {
+    let backend = bench_util::backend();
+    println!("perf microbenches (backend for tile bench: {})\n", backend.name());
+
+    // --- tile: 256 queries x 2048 candidates x 64 dims, top-32
+    let mut rng = scc::util::Rng::new(1);
+    let q: Vec<f32> = (0..256 * 64).map(|_| rng.normal_f32()).collect();
+    let c: Vec<f32> = (0..2048 * 64).map(|_| rng.normal_f32()).collect();
+    let native = NativeBackend::new();
+    bench("tile 256x2048x64 k32 native", 20, || {
+        native.pairwise_topk(&q, 256, &c, 2048, 64, 32, Measure::L2Sq)
+    });
+    if backend.name() == "pjrt" {
+        bench("tile 256x2048x64 k32 pjrt", 20, || {
+            backend.pairwise_topk(&q, 256, &c, 2048, 64, 32, Measure::L2Sq)
+        });
+    }
+
+    // --- full knn graph build, thread sweep
+    let ds = separated_mixture(&MixtureSpec {
+        n: 4000,
+        d: 64,
+        k: 40,
+        sigma: 0.05,
+        delta: 6.0,
+        ..Default::default()
+    });
+    for threads in [1usize, 4, 8] {
+        bench(&format!("knn_graph n=4k d=64 k=25 threads={threads}"), 3, || {
+            knn_graph_with_backend(&ds, 25, Measure::L2Sq, &native, threads)
+        });
+    }
+    if backend.name() == "pjrt" {
+        bench("knn_graph n=4k d=64 k=25 pjrt t=8", 3, || {
+            knn_graph_with_backend(&ds, 25, Measure::L2Sq, backend.as_ref(), 8)
+        });
+    }
+
+    // --- SCC engines
+    let graph = knn_graph_with_backend(&ds, 25, Measure::L2Sq, &native, 8);
+    let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
+    let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 30).taus);
+    bench("scc sequential n=4k", 5, || scc::scc::run(&graph, &cfg));
+    for threads in [2usize, 4, 8] {
+        bench(&format!("scc coordinator n=4k workers={threads}"), 5, || {
+            scc::coordinator::run_parallel(&graph, &cfg, threads)
+        });
+    }
+
+    // --- union-find
+    let edges: Vec<(u32, u32)> = {
+        let mut r = scc::util::Rng::new(2);
+        (0..1_000_000).map(|_| (r.index(100_000) as u32, r.index(100_000) as u32)).collect()
+    };
+    bench("union-find 1M unions / 100k nodes", 10, || {
+        let mut uf = scc::graph::UnionFind::new(100_000);
+        for &(a, b) in &edges {
+            uf.union(a, b);
+        }
+        uf.components()
+    });
+
+    // --- affinity (boruvka) for comparison
+    bench("affinity (boruvka rounds) n=4k", 5, || scc::affinity::run(&graph));
+}

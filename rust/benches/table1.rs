@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table1 (see DESIGN.md §6 experiment index).
+mod bench_util;
+
+fn main() {
+    let cfg = bench_util::config();
+    let backend = bench_util::backend();
+    bench_util::run_experiment("table1", || scc::eval::table1::run(&cfg, backend.as_ref()));
+}

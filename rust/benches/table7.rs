@@ -1,0 +1,8 @@
+//! Bench: regenerate paper Table7 (see DESIGN.md §6 experiment index).
+mod bench_util;
+
+fn main() {
+    let cfg = bench_util::config();
+    let backend = bench_util::backend();
+    bench_util::run_experiment("table7", || scc::eval::table7::run(&cfg, backend.as_ref()));
+}

@@ -1,0 +1,140 @@
+//! Affinity clustering (Bateni et al., NeurIPS 2017) — the paper's main
+//! scalable competitor (§4.1, §5).
+//!
+//! Affinity clustering is Borůvka's MST algorithm read as a hierarchical
+//! clusterer: in each round every current cluster links to its nearest
+//! neighbor along the **minimum single edge** (not the average linkage SCC
+//! uses, and with no distance threshold), and all links contract at once.
+//! Both differences cause the over-merging / chaining the paper observes
+//! (Affinity's clusters chain through single cheap edges; SCC's threshold
+//! + argmin condition prevents it).
+
+use crate::core::{Partition, Tree};
+use crate::graph::{boruvka_rounds, CsrGraph};
+
+/// Result of an Affinity clustering run: nested partitions, coarsest last
+/// (round 0 = singletons, matching [`crate::scc::SccResult`] conventions).
+#[derive(Debug, Clone)]
+pub struct AffinityResult {
+    pub rounds: Vec<Partition>,
+}
+
+impl AffinityResult {
+    pub fn tree(&self) -> Tree {
+        Tree::from_rounds(&self.rounds)
+    }
+
+    /// The round whose cluster count is closest to `k` (ties: finer round).
+    pub fn round_closest_to_k(&self, k: usize) -> &Partition {
+        self.rounds
+            .iter()
+            .min_by_key(|p| (p.num_clusters() as i64 - k as i64).abs())
+            .expect("non-empty rounds")
+    }
+
+    pub fn final_partition(&self) -> &Partition {
+        self.rounds.last().expect("non-empty rounds")
+    }
+}
+
+/// Run Affinity clustering on a symmetrized k-NN graph.
+pub fn run(graph: &CsrGraph) -> AffinityResult {
+    let mut rounds = vec![Partition::singletons(graph.n)];
+    rounds.extend(boruvka_rounds(graph, 64));
+    AffinityResult { rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::metrics::{dendrogram_purity, pairwise_prf};
+
+    #[test]
+    fn recovers_separated_clusters_at_some_round() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 300,
+            d: 4,
+            k: 6,
+            sigma: 0.04,
+            delta: 10.0,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let res = run(&g);
+        let labels = ds.labels.as_ref().unwrap();
+        let best = res.rounds.iter().map(|p| pairwise_prf(p, labels).f1).fold(0.0f64, f64::max);
+        assert!(best > 0.999, "best f1 {best}");
+        let dp = dendrogram_purity(&res.tree(), labels);
+        assert!(dp > 0.99, "dp {dp}");
+    }
+
+    #[test]
+    fn rounds_nested_and_logarithmic() {
+        let ds = separated_mixture(&MixtureSpec { n: 256, d: 3, k: 4, ..Default::default() });
+        let g = knn_graph(&ds, 6, Measure::L2Sq);
+        let res = run(&g);
+        assert!(res.rounds.len() <= 10, "boruvka needs <= log2(n) rounds");
+        for w in res.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]));
+        }
+    }
+
+    #[test]
+    fn affinity_overmerges_chained_data_where_scc_does_not() {
+        // two tight blobs bridged by a sparse chain of midpoints: Affinity
+        // follows the chain (min single edge, no threshold) and merges the
+        // blobs in early rounds; SCC's average-linkage threshold keeps them
+        // apart until late. This is the §4/§5 failure mode.
+        let mut data = Vec::new();
+        let mut rng = crate::util::Rng::new(3);
+        let n_blob = 60;
+        for _ in 0..n_blob {
+            data.push(-5.0 + 0.05 * rng.normal_f32());
+        }
+        for _ in 0..n_blob {
+            data.push(5.0 + 0.05 * rng.normal_f32());
+        }
+        // bridge: 9 points evenly spaced between the blobs
+        for i in 1..10 {
+            data.push(-5.0 + i as f32);
+        }
+        let n = data.len();
+        let ds = crate::core::Dataset::new("bridge", data, n, 1);
+        let g = knn_graph(&ds, 4, Measure::L2Sq);
+
+        let aff = run(&g);
+        // find earliest affinity round where the blob cores merge
+        let blob_merge_round = aff
+            .rounds
+            .iter()
+            .position(|p| p.assign[0] == p.assign[n_blob])
+            .expect("affinity eventually merges the blobs");
+        assert!(
+            blob_merge_round <= 3,
+            "affinity should chain-merge early (round {blob_merge_round})"
+        );
+
+        // SCC with a 30-round geometric schedule keeps blobs apart for many
+        // more rounds (merge only when tau reaches the bridge linkage)
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = crate::scc::SccConfig::new(
+            crate::scc::Thresholds::geometric(lo, hi, 30).taus,
+        );
+        let scc_res = crate::scc::run(&g, &cfg);
+        let scc_merge_round = scc_res
+            .rounds
+            .iter()
+            .position(|p| p.assign[0] == p.assign[n_blob])
+            .unwrap_or(scc_res.rounds.len());
+        // compare fraction of hierarchy depth: SCC holds out longer
+        let aff_frac = blob_merge_round as f64 / aff.rounds.len() as f64;
+        let scc_frac = scc_merge_round as f64 / scc_res.rounds.len() as f64;
+        assert!(
+            scc_frac > aff_frac,
+            "scc frac {scc_frac} should exceed affinity frac {aff_frac}"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! GRINCH (Monath et al., KDD 2019a), simplified: PERCH's insert+rotate
+//! plus the **graft** subroutine — after inserting a point, find its exact
+//! nearest leaf; if that leaf lives in a different subtree and is closer
+//! than the current sibling, detach the new leaf and re-attach it beside
+//! the nearest leaf. Grafts give the global re-arrangements rotations
+//! cannot (the paper credits them for GRINCH > PERCH).
+
+use super::online_tree::OnlineTree;
+use crate::core::{Dataset, Tree};
+use crate::linkage::Measure;
+
+/// GRINCH configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GrinchConfig {
+    pub max_rotations: usize,
+    /// Perform the graft check every insertion (true) or never (false —
+    /// degenerates to PERCH; used by ablation tests).
+    pub grafts: bool,
+}
+
+impl Default for GrinchConfig {
+    fn default() -> Self {
+        GrinchConfig { max_rotations: 16, grafts: true }
+    }
+}
+
+/// Build a GRINCH tree over the dataset in presentation order.
+pub fn grinch(ds: &Dataset, measure: Measure, config: &GrinchConfig) -> Tree {
+    assert!(ds.n >= 1);
+    let mut t = OnlineTree::new(ds.d, ds.row(0), measure);
+    for i in 1..ds.n {
+        let x = ds.row(i);
+        // greedy (cheap) placement first — grafting then corrects it with
+        // the exact NN, which is GRINCH's division of labor
+        let at = t.nearest_leaf(x);
+        let leaf = t.insert_at(i as u32, x, at);
+        if config.grafts {
+            if let Some(target) = t.nearest_leaf_exact(x, leaf) {
+                // graft when the exact NN beats the greedy placement
+                t.graft(leaf, target);
+            }
+        }
+        t.rotate_up(leaf, config.max_rotations);
+    }
+    t.freeze(ds.n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::metrics::dendrogram_purity;
+
+    #[test]
+    fn grinch_separated_data_high_purity() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 200,
+            d: 4,
+            k: 4,
+            sigma: 0.05,
+            delta: 10.0,
+            ..Default::default()
+        });
+        let tree = grinch(&ds, Measure::L2Sq, &GrinchConfig::default());
+        tree.validate().unwrap();
+        let dp = dendrogram_purity(&tree, ds.labels.as_ref().unwrap());
+        assert!(dp > 0.9, "dendrogram purity {dp}");
+    }
+
+    #[test]
+    fn grafts_do_not_hurt_on_shuffled_blobs() {
+        let mut ds = separated_mixture(&MixtureSpec {
+            n: 240,
+            d: 3,
+            k: 6,
+            sigma: 0.05,
+            delta: 8.0,
+            seed: 3,
+            ..Default::default()
+        });
+        // shuffle presentation order (online methods are order sensitive)
+        let mut rng = crate::util::Rng::new(1);
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        rng.shuffle(&mut order);
+        let mut data = Vec::with_capacity(ds.n * ds.d);
+        let mut labels = Vec::with_capacity(ds.n);
+        for &i in &order {
+            data.extend_from_slice(ds.row(i));
+            labels.push(ds.labels.as_ref().unwrap()[i]);
+        }
+        ds = crate::core::Dataset::new("shuffled", data, ds.n, ds.d).with_labels(labels);
+
+        let no_graft = grinch(&ds, Measure::L2Sq, &GrinchConfig { grafts: false, ..Default::default() });
+        let with_graft = grinch(&ds, Measure::L2Sq, &GrinchConfig::default());
+        let dp0 = dendrogram_purity(&no_graft, ds.labels.as_ref().unwrap());
+        let dp1 = dendrogram_purity(&with_graft, ds.labels.as_ref().unwrap());
+        assert!(dp1 >= dp0 - 0.02, "grafts should not materially hurt: {dp0} -> {dp1}");
+    }
+
+    #[test]
+    fn tree_structure_stays_valid_under_many_grafts() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 150,
+            d: 2,
+            k: 3,
+            sigma: 0.3,
+            delta: 1.0, // overlapping: forces frequent grafts
+            ..Default::default()
+        });
+        let tree = grinch(&ds, Measure::L2Sq, &GrinchConfig::default());
+        tree.validate().unwrap();
+        assert_eq!(tree.n_leaves, 150);
+    }
+}

@@ -1,0 +1,21 @@
+//! Online hierarchical-clustering baselines from paper Table 1.
+//!
+//! * [`perch`] — PERCH (Kobren et al. 2017): insert each point next to its
+//!   nearest leaf, then restore local structure with **rotations**.
+//! * [`grinch`] — GRINCH (Monath et al. 2019a): PERCH's rotations plus a
+//!   **graft** subroutine that re-attaches the new node next to its global
+//!   nearest neighbor when that improves linkage.
+//!
+//! Faithful-but-simplified re-implementations (documented in DESIGN.md):
+//! nearest-leaf search descends by centroid distance (PERCH's bounding-box
+//! A* search is an exact-NN accelerator, not a different objective), and
+//! linkages between subtrees use centroid distance. gHHC (gradient-based
+//! hyperbolic embedding) is *not* re-implemented; Table 1 quotes the
+//! paper's numbers for it.
+
+pub mod grinch;
+pub mod online_tree;
+pub mod perch;
+
+pub use grinch::grinch;
+pub use perch::perch;

@@ -1,0 +1,481 @@
+//! Mutable binary tree with per-node centroids — the shared substrate of
+//! the PERCH and GRINCH baselines. Supports nearest-leaf descent, leaf
+//! insertion, subtree detach/re-attach (grafts), and conversion to the
+//! immutable [`crate::core::Tree`] for evaluation.
+
+use crate::core::Tree;
+use crate::linkage::Measure;
+
+const NONE: u32 = u32::MAX;
+
+/// One tree node: a leaf holds a point id; internal nodes cache the
+/// centroid (sum / count) of their descendant leaves.
+#[derive(Debug, Clone)]
+struct Node {
+    parent: u32,
+    /// children[0..2]; NONE for leaves.
+    children: [u32; 2],
+    /// Sum of descendant point vectors (length d).
+    sum: Vec<f32>,
+    count: u32,
+    /// Point id for leaves, NONE for internal nodes.
+    point: u32,
+}
+
+/// Growable online binary tree.
+#[derive(Debug)]
+pub struct OnlineTree {
+    d: usize,
+    nodes: Vec<Node>,
+    root: u32,
+    measure: Measure,
+}
+
+impl OnlineTree {
+    /// Start a tree containing the single point `x0` (id 0).
+    pub fn new(d: usize, x0: &[f32], measure: Measure) -> OnlineTree {
+        let leaf = Node {
+            parent: NONE,
+            children: [NONE, NONE],
+            sum: x0.to_vec(),
+            count: 1,
+            point: 0,
+        };
+        OnlineTree { d, nodes: vec![leaf], root: 0, measure }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.point != NONE).count()
+    }
+
+    fn is_leaf(&self, v: u32) -> bool {
+        self.nodes[v as usize].point != NONE
+    }
+
+    /// Dissimilarity from a point to a node's centroid.
+    fn dist_to(&self, v: u32, x: &[f32]) -> f32 {
+        let n = &self.nodes[v as usize];
+        let inv = 1.0 / n.count as f32;
+        // centroid distance without materializing the centroid
+        match self.measure {
+            Measure::L2Sq => {
+                let mut s = 0.0f32;
+                for i in 0..self.d {
+                    let t = x[i] - n.sum[i] * inv;
+                    s += t * t;
+                }
+                s
+            }
+            Measure::CosineDist => {
+                let mut dot = 0.0f32;
+                let mut nn = 0.0f32;
+                for i in 0..self.d {
+                    let c = n.sum[i] * inv;
+                    dot += x[i] * c;
+                    nn += c * c;
+                }
+                1.0 - dot / nn.sqrt().max(1e-12)
+            }
+        }
+    }
+
+    /// Centroid distance between two nodes.
+    fn node_dist(&self, a: u32, b: u32) -> f32 {
+        let na = &self.nodes[a as usize];
+        let inv = 1.0 / na.count as f32;
+        let centroid: Vec<f32> = na.sum.iter().map(|s| s * inv).collect();
+        self.dist_to(b, &centroid)
+    }
+
+    /// Greedy nearest-leaf descent (the simplified PERCH search).
+    pub fn nearest_leaf(&self, x: &[f32]) -> u32 {
+        let mut v = self.root;
+        while !self.is_leaf(v) {
+            let [a, b] = self.nodes[v as usize].children;
+            v = if self.dist_to(a, x) <= self.dist_to(b, x) { a } else { b };
+        }
+        v
+    }
+
+    /// Exact nearest leaf by scanning all leaves (GRINCH's graft target).
+    pub fn nearest_leaf_exact(&self, x: &[f32], exclude: u32) -> Option<u32> {
+        let mut best = None;
+        let mut best_d = f32::INFINITY;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.point == NONE || i as u32 == exclude {
+                continue;
+            }
+            let d = self.dist_to(i as u32, x);
+            if d < best_d {
+                best_d = d;
+                best = Some(i as u32);
+            }
+        }
+        best
+    }
+
+    /// Insert point `pid` with vector `x` as the sibling of `at`.
+    /// Returns the new leaf's node id.
+    pub fn insert_at(&mut self, pid: u32, x: &[f32], at: u32) -> u32 {
+        let leaf = self.push_node(Node {
+            parent: NONE,
+            children: [NONE, NONE],
+            sum: x.to_vec(),
+            count: 1,
+            point: pid,
+        });
+        let old_parent = self.nodes[at as usize].parent;
+        let joint = self.push_node(Node {
+            parent: old_parent,
+            children: [at, leaf],
+            sum: vec![0.0; self.d],
+            count: 0,
+            point: NONE,
+        });
+        self.nodes[at as usize].parent = joint;
+        self.nodes[leaf as usize].parent = joint;
+        if old_parent == NONE {
+            self.root = joint;
+        } else {
+            let slot = self.child_slot(old_parent, at);
+            self.nodes[old_parent as usize].children[slot] = joint;
+        }
+        self.recompute(joint);
+        self.update_ancestors_add(joint, x, 1);
+        leaf
+    }
+
+    fn push_node(&mut self, n: Node) -> u32 {
+        self.nodes.push(n);
+        (self.nodes.len() - 1) as u32
+    }
+
+    fn child_slot(&self, parent: u32, child: u32) -> usize {
+        if self.nodes[parent as usize].children[0] == child {
+            0
+        } else {
+            debug_assert_eq!(self.nodes[parent as usize].children[1], child);
+            1
+        }
+    }
+
+    fn recompute(&mut self, v: u32) {
+        let [a, b] = self.nodes[v as usize].children;
+        let mut sum = self.nodes[a as usize].sum.clone();
+        for (s, t) in sum.iter_mut().zip(&self.nodes[b as usize].sum) {
+            *s += t;
+        }
+        let count = self.nodes[a as usize].count + self.nodes[b as usize].count;
+        let n = &mut self.nodes[v as usize];
+        n.sum = sum;
+        n.count = count;
+    }
+
+    fn update_ancestors_add(&mut self, from: u32, x: &[f32], count: u32) {
+        let mut v = self.nodes[from as usize].parent;
+        while v != NONE {
+            for (s, &xi) in self.nodes[v as usize].sum.iter_mut().zip(x) {
+                *s += xi;
+            }
+            self.nodes[v as usize].count += count;
+            v = self.nodes[v as usize].parent;
+        }
+    }
+
+    fn update_ancestors_sub(&mut self, from: u32, sum: &[f32], count: u32) {
+        let mut v = self.nodes[from as usize].parent;
+        while v != NONE {
+            for (s, &xi) in self.nodes[v as usize].sum.iter_mut().zip(sum) {
+                *s -= xi;
+            }
+            self.nodes[v as usize].count -= count;
+            v = self.nodes[v as usize].parent;
+        }
+    }
+
+    /// PERCH-style masking-repair rotations (centroid-simplified), walking
+    /// up from `leaf`'s parent. At each grandparent triple
+    /// `((v, sib), aunt)` the closest of the three pairs is placed
+    /// together at depth:
+    /// * `(v, sib)` closest — locally correct, continue upward;
+    /// * `(sib, aunt)` closest — `v` masks them: rotate `v` up
+    ///   (`((sib, aunt), v)`);
+    /// * `(v, aunt)` closest — `sib` masks them: rotate `sib` up
+    ///   (`((v, aunt), sib)`).
+    /// Bounded by `max_rotations`.
+    pub fn rotate_up(&mut self, leaf: u32, max_rotations: usize) {
+        let mut rotations = 0;
+        let mut v = leaf;
+        while rotations < max_rotations {
+            let p = self.nodes[v as usize].parent;
+            if p == NONE {
+                break;
+            }
+            let g = self.nodes[p as usize].parent;
+            if g == NONE {
+                break;
+            }
+            let sib = self.sibling(v);
+            let aunt = self.sibling(p);
+            let d_vs = self.node_dist(v, sib);
+            let d_va = self.node_dist(v, aunt);
+            let d_sa = self.node_dist(sib, aunt);
+            if d_vs <= d_va && d_vs <= d_sa {
+                v = p; // locally correct
+            } else if d_sa <= d_va {
+                // pair (sib, aunt): swap v and aunt => ((sib, aunt), v)
+                self.swap_with_aunt(v, p, g);
+                rotations += 1;
+                // v moved up one level; re-examine from its new position
+            } else {
+                // pair (v, aunt): swap sib and aunt => ((v, aunt), sib)
+                self.swap_with_aunt(sib, p, g);
+                rotations += 1;
+                v = p;
+            }
+        }
+    }
+
+    /// Swap node `x` (a child of `p`) with `p`'s sibling (child of `g`).
+    fn swap_with_aunt(&mut self, x: u32, p: u32, g: u32) {
+        let aunt = self.sibling(p);
+        let ps = self.child_slot(p, x);
+        let gs = self.child_slot(g, aunt);
+        self.nodes[p as usize].children[ps] = aunt;
+        self.nodes[aunt as usize].parent = p;
+        self.nodes[g as usize].children[gs] = x;
+        self.nodes[x as usize].parent = g;
+        self.recompute(p);
+        // g's totals are unchanged (same leaf set)
+    }
+
+    fn sibling(&self, v: u32) -> u32 {
+        let p = self.nodes[v as usize].parent;
+        let [a, b] = self.nodes[p as usize].children;
+        if a == v {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// GRINCH graft: detach subtree `v` and re-insert it as the sibling of
+    /// `target`. No-op (returns false) if `target` is inside `v`'s subtree
+    /// or they are already siblings.
+    pub fn graft(&mut self, v: u32, target: u32) -> bool {
+        if v == target || self.is_ancestor(v, target) || self.is_ancestor(target, v) {
+            return false;
+        }
+        if self.sibling_of(v) == Some(target) {
+            return false;
+        }
+        let p = self.nodes[v as usize].parent;
+        if p == NONE {
+            return false;
+        }
+        // detach: sibling replaces parent
+        let sib = self.sibling(v);
+        let g = self.nodes[p as usize].parent;
+        let moved_sum = self.nodes[v as usize].sum.clone();
+        let moved_count = self.nodes[v as usize].count;
+        self.update_ancestors_sub(v, &moved_sum, moved_count); // from v's parent chain
+        self.nodes[sib as usize].parent = g;
+        if g == NONE {
+            self.root = sib;
+        } else {
+            let gs = self.child_slot(g, p);
+            self.nodes[g as usize].children[gs] = sib;
+        }
+        // p is now orphaned; reuse it as the new joint above target
+        let tp = self.nodes[target as usize].parent;
+        self.nodes[p as usize] = Node {
+            parent: tp,
+            children: [target, v],
+            sum: vec![0.0; self.d],
+            count: 0,
+            point: NONE,
+        };
+        self.nodes[target as usize].parent = p;
+        self.nodes[v as usize].parent = p;
+        if tp == NONE {
+            self.root = p;
+        } else {
+            let slot = self.child_slot(tp, target);
+            self.nodes[tp as usize].children[slot] = p;
+        }
+        self.recompute(p);
+        self.update_ancestors_add(p, &moved_sum, moved_count);
+        true
+    }
+
+    fn sibling_of(&self, v: u32) -> Option<u32> {
+        let p = self.nodes[v as usize].parent;
+        if p == NONE {
+            None
+        } else {
+            Some(self.sibling(v))
+        }
+    }
+
+    fn is_ancestor(&self, anc: u32, v: u32) -> bool {
+        let mut cur = v;
+        while cur != NONE {
+            if cur == anc {
+                return true;
+            }
+            cur = self.nodes[cur as usize].parent;
+        }
+        false
+    }
+
+    /// Structural invariant check for tests: parent/child coherence and
+    /// centroid sums consistent with descendant leaves.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.point != NONE {
+                continue;
+            }
+            if n.children == [NONE, NONE] && i as u32 != self.root {
+                // orphan joint slots only appear transiently inside graft
+                return Err(format!("internal node {i} has no children"));
+            }
+            for &c in &n.children {
+                if c != NONE && self.nodes[c as usize].parent != i as u32 {
+                    return Err(format!("child {c} of {i} has wrong parent"));
+                }
+            }
+            let [a, b] = n.children;
+            let want = self.nodes[a as usize].count + self.nodes[b as usize].count;
+            if n.count != want {
+                return Err(format!("node {i} count {} != {want}", n.count));
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert to the immutable evaluation tree. Leaves are point ids;
+    /// heights are subtree leaf counts (monotone). `n_points` must equal
+    /// the number of inserted points.
+    pub fn freeze(&self, n_points: usize) -> Tree {
+        assert_eq!(self.num_leaves(), n_points);
+        // assign ids: leaves = point ids; internal nodes in postorder
+        let mut id_map = vec![NONE; self.nodes.len()];
+        let mut order: Vec<u32> = Vec::new(); // internal nodes, children first
+        let mut stack = vec![(self.root, false)];
+        while let Some((v, processed)) = stack.pop() {
+            if self.is_leaf(v) {
+                id_map[v as usize] = self.nodes[v as usize].point;
+                continue;
+            }
+            if processed {
+                order.push(v);
+            } else {
+                stack.push((v, true));
+                let [a, b] = self.nodes[v as usize].children;
+                stack.push((a, false));
+                stack.push((b, false));
+            }
+        }
+        let mut parent = vec![crate::core::tree::NO_PARENT; n_points + order.len()];
+        let mut children: Vec<Vec<u32>> = vec![Vec::new(); n_points + order.len()];
+        let mut height = vec![0.0f64; n_points + order.len()];
+        for (pos, &v) in order.iter().enumerate() {
+            id_map[v as usize] = (n_points + pos) as u32;
+        }
+        for &v in &order {
+            let nid = id_map[v as usize] as usize;
+            let [a, b] = self.nodes[v as usize].children;
+            let (ca, cb) = (id_map[a as usize], id_map[b as usize]);
+            children[nid] = vec![ca, cb];
+            parent[ca as usize] = nid as u32;
+            parent[cb as usize] = nid as u32;
+            height[nid] = self.nodes[v as usize].count as f64;
+        }
+        Tree { n_leaves: n_points, parent, children, height }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grow(points: &[(f32, f32)]) -> OnlineTree {
+        let first = [points[0].0, points[0].1];
+        let mut t = OnlineTree::new(2, &first, Measure::L2Sq);
+        for (i, &(x, y)) in points.iter().enumerate().skip(1) {
+            let v = [x, y];
+            let leaf = t.nearest_leaf(&v);
+            t.insert_at(i as u32, &v, leaf);
+        }
+        t
+    }
+
+    #[test]
+    fn insertion_keeps_invariants() {
+        let t = grow(&[(0.0, 0.0), (0.1, 0.0), (5.0, 5.0), (5.1, 5.0), (0.05, 0.02)]);
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), 5);
+        let tree = t.freeze(5);
+        tree.validate().unwrap();
+    }
+
+    #[test]
+    fn nearest_leaf_descent_finds_close_blob() {
+        let t = grow(&[(0.0, 0.0), (0.1, 0.0), (5.0, 5.0), (5.1, 5.0)]);
+        let nl = t.nearest_leaf(&[5.05, 5.0]);
+        // should land on one of the (5, 5) leaves, i.e. point 2 or 3
+        let pid = t.nodes[nl as usize].point;
+        assert!(pid == 2 || pid == 3, "landed on {pid}");
+    }
+
+    #[test]
+    fn rotation_repairs_bad_placement() {
+        // force a bad tree by inserting far point next to near pair
+        let mut t = grow(&[(0.0, 0.0), (0.1, 0.0)]);
+        // insert a far point at leaf 0's position (simulates bad NN search)
+        let leaf0 = t.nearest_leaf(&[0.0, 0.0]);
+        let newleaf = t.insert_at(2, &[10.0, 10.0], leaf0);
+        t.rotate_up(newleaf, 10);
+        t.validate().unwrap();
+        let tree = t.freeze(3);
+        // after rotation, (0,0) and (0.1,0) should be siblings again
+        let d = tree.depths();
+        let lca01 = tree.lca(0, 1, &d);
+        let lca02 = tree.lca(0, 2, &d);
+        assert!(d[lca01 as usize] >= d[lca02 as usize], "pair should be deeper");
+    }
+
+    #[test]
+    fn graft_moves_subtree() {
+        let mut t = grow(&[(0.0, 0.0), (5.0, 5.0), (0.1, 0.0)]);
+        // find the leaf for point 2 and graft it next to point 0's leaf
+        let l2 = (0..t.nodes.len() as u32).find(|&i| t.nodes[i as usize].point == 2).unwrap();
+        let l0 = (0..t.nodes.len() as u32).find(|&i| t.nodes[i as usize].point == 0).unwrap();
+        let moved = t.graft(l2, l0);
+        t.validate().unwrap();
+        if moved {
+            let tree = t.freeze(3);
+            let d = tree.depths();
+            let lca02 = tree.lca(0, 2, &d);
+            let lca01 = tree.lca(0, 1, &d);
+            assert!(d[lca02 as usize] > d[lca01 as usize]);
+        }
+    }
+
+    #[test]
+    fn graft_rejects_ancestor_moves() {
+        let mut t = grow(&[(0.0, 0.0), (1.0, 0.0), (2.0, 0.0)]);
+        let root = t.root;
+        let some_leaf = t.nearest_leaf(&[0.0, 0.0]);
+        assert!(!t.graft(root, some_leaf));
+        assert!(!t.graft(some_leaf, root));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn freeze_heights_are_monotone() {
+        let t = grow(&[(0.0, 0.0), (0.1, 0.0), (5.0, 5.0), (5.1, 5.0), (2.5, 2.5)]);
+        let tree = t.freeze(5);
+        tree.validate().unwrap(); // includes height monotonicity
+    }
+}

@@ -1,0 +1,231 @@
+//! Hand-rolled CLI (no clap in the offline registry).
+//!
+//! ```text
+//! scc <command> [--scale F] [--seed N] [--threads N] [--knn N]
+//!               [--rounds N] [--measure l2sq|dot] [--backend auto|native|pjrt]
+//! ```
+//!
+//! Commands: `table1 table2 table3 table4 table5 table7 fig2 fig4 fig5
+//! fig9 all` (the experiment harness, DESIGN.md §6), plus `cluster` (run
+//! SCC on one analog and print round stats).
+
+use crate::eval::EvalConfig;
+use crate::linkage::Measure;
+use crate::runtime::{auto_backend, Backend, NativeBackend, PjrtBackend};
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub cfg: EvalConfig,
+    pub backend_kind: BackendKind,
+    /// Dataset name for single-dataset commands (`cluster`).
+    pub dataset: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Auto,
+    Native,
+    Pjrt,
+}
+
+pub const USAGE: &str = "\
+scc — Scalable Bottom-Up Hierarchical Clustering (SCC, KDD 2021)
+
+USAGE: scc <command> [options]
+
+COMMANDS (paper experiments; see DESIGN.md §6):
+  table1    dendrogram purity across 6 datasets x 4 methods
+  table2    pairwise F1 @ ground-truth k
+  table3    threshold-schedule ablation
+  table4    metric x fixed-rounds ablation
+  table5    best-F1-any-round, Affinity vs SCC
+  table7    running time + best F1 (SCC vs OCC vs DPMeans++)
+  fig2      DP-means cost & F1 vs lambda (Figures 2 and 3)
+  fig4      simulated web-query human eval (Figure 4 / section 5)
+  fig5      SCC vs HAC on synthetic (Figure 5)
+  fig9      number-of-rounds ablation (Figures 8/9)
+  all       run every experiment above
+  cluster   run SCC once on one analog (--dataset) and print round stats
+
+OPTIONS:
+  --scale F       workload scale multiplier (default 1.0 ~ 2.5k pts/dataset)
+  --seed N        RNG seed (default 20210824)
+  --threads N     worker threads (default: all cores)
+  --knn N         k of the k-NN graph (default 25)
+  --rounds N      threshold schedule length L (default 30)
+  --measure M     l2sq | dot (default dot)
+  --backend B     auto | native | pjrt (default auto: pjrt when artifacts exist)
+  --dataset D     covtype|ilsvrc_sm|aloi|speaker|imagenet|ilsvrc_lg (cluster cmd)
+";
+
+/// Parse argv (excluding the program name).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    let mut cli = Cli {
+        command: String::new(),
+        cfg: EvalConfig::default(),
+        backend_kind: BackendKind::Auto,
+        dataset: "aloi".to_string(),
+    };
+    let mut it = args.iter();
+    cli.command = it.next().cloned().unwrap_or_else(|| "help".into());
+    while let Some(flag) = it.next() {
+        let mut val = || -> Result<&String> {
+            it.next().with_context(|| format!("flag {flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--scale" => cli.cfg.scale = val()?.parse().context("--scale")?,
+            "--seed" => cli.cfg.seed = val()?.parse().context("--seed")?,
+            "--threads" => cli.cfg.threads = val()?.parse().context("--threads")?,
+            "--knn" => cli.cfg.knn_k = val()?.parse().context("--knn")?,
+            "--rounds" => cli.cfg.rounds = val()?.parse().context("--rounds")?,
+            "--measure" => {
+                cli.cfg.measure = match val()?.as_str() {
+                    "l2sq" => Measure::L2Sq,
+                    "dot" => Measure::CosineDist,
+                    m => bail!("unknown measure {m:?} (l2sq|dot)"),
+                }
+            }
+            "--backend" => {
+                cli.backend_kind = match val()?.as_str() {
+                    "auto" => BackendKind::Auto,
+                    "native" => BackendKind::Native,
+                    "pjrt" => BackendKind::Pjrt,
+                    b => bail!("unknown backend {b:?} (auto|native|pjrt)"),
+                }
+            }
+            "--dataset" => cli.dataset = val()?.clone(),
+            other => bail!("unknown flag {other:?}\n{USAGE}"),
+        }
+    }
+    Ok(cli)
+}
+
+/// Instantiate the requested backend.
+pub fn make_backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    Ok(match kind {
+        BackendKind::Auto => auto_backend(),
+        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::Pjrt => {
+            let dir = std::env::var("SCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Box::new(PjrtBackend::load(std::path::Path::new(&dir))?)
+        }
+    })
+}
+
+/// Execute a parsed CLI; returns the report text.
+pub fn execute(cli: &Cli) -> Result<String> {
+    let backend = make_backend(cli.backend_kind)?;
+    let cfg = &cli.cfg;
+    let out = match cli.command.as_str() {
+        "table1" => crate::eval::table1::run(cfg, backend.as_ref()),
+        "table2" => crate::eval::table2::run(cfg, backend.as_ref()),
+        "table3" => crate::eval::table3::run(cfg, backend.as_ref()),
+        "table4" => crate::eval::table4::run(cfg, backend.as_ref()),
+        "table5" => crate::eval::table5::run(cfg, backend.as_ref()),
+        "table7" => crate::eval::table7::run(cfg, backend.as_ref()),
+        "fig2" => crate::eval::fig2::run(cfg, backend.as_ref()),
+        "fig4" => crate::eval::fig4::run(cfg),
+        "fig5" => crate::eval::fig5::run(cfg, backend.as_ref()),
+        "fig9" => crate::eval::fig9::run(cfg, backend.as_ref()),
+        "all" => {
+            let mut s = String::new();
+            for c in
+                ["table1", "table2", "table3", "table4", "table5", "table7", "fig2", "fig4", "fig5", "fig9"]
+            {
+                let sub = Cli { command: c.into(), ..cli.clone() };
+                s.push_str(&execute(&sub)?);
+                s.push('\n');
+            }
+            s
+        }
+        "cluster" => cluster_once(&cli.dataset, cfg, backend.as_ref()),
+        "help" | "--help" | "-h" => USAGE.to_string(),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    };
+    Ok(out)
+}
+
+fn cluster_once(dataset: &str, cfg: &EvalConfig, backend: &dyn Backend) -> String {
+    let w = crate::eval::common::Workload::build(dataset, cfg, backend);
+    let res = w.scc(cfg);
+    let labels = w.labels();
+    let tree = res.tree();
+    let dp = crate::metrics::dendrogram_purity(&tree, labels);
+    let f1 = crate::eval::common::f1_at_k(&res.rounds, labels, w.k_true);
+    let mut out = format!(
+        "SCC on {} (n={}, d={}, k*={}, backend={}, {} threads)\n{}",
+        w.ds.name,
+        w.ds.n,
+        w.ds.d,
+        w.k_true,
+        backend.name(),
+        cfg.threads,
+        w.timers.report()
+    );
+    out.push_str("round  threshold   clusters   merges  time\n");
+    for s in &res.stats {
+        out.push_str(&format!(
+            "{:>5} {:>10.4} {:>10} {:>8}  {}\n",
+            s.round,
+            s.threshold,
+            s.clusters_after,
+            s.merge_edges,
+            crate::util::stats::fmt_secs(s.secs)
+        ));
+    }
+    out.push_str(&format!("dendrogram purity {dp:.4}   F1@k* {f1:.4}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let cli = parse(&argv(
+            "table1 --scale 0.5 --seed 7 --threads 3 --knn 10 --rounds 20 --measure l2sq --backend native",
+        ))
+        .unwrap();
+        assert_eq!(cli.command, "table1");
+        assert_eq!(cli.cfg.scale, 0.5);
+        assert_eq!(cli.cfg.seed, 7);
+        assert_eq!(cli.cfg.threads, 3);
+        assert_eq!(cli.cfg.knn_k, 10);
+        assert_eq!(cli.cfg.rounds, 20);
+        assert_eq!(cli.cfg.measure, Measure::L2Sq);
+        assert_eq!(cli.backend_kind, BackendKind::Native);
+    }
+
+    #[test]
+    fn rejects_bad_flags() {
+        assert!(parse(&argv("table1 --bogus 3")).is_err());
+        assert!(parse(&argv("table1 --measure cosine")).is_err());
+        assert!(parse(&argv("table1 --scale")).is_err());
+    }
+
+    #[test]
+    fn help_prints_usage() {
+        let cli = parse(&argv("help")).unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("USAGE"));
+    }
+
+    #[test]
+    fn cluster_command_runs() {
+        let cli = parse(&argv(
+            "cluster --dataset aloi --scale 0.05 --knn 6 --rounds 10 --backend native",
+        ))
+        .unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("dendrogram purity"), "{out}");
+        assert!(out.contains("round"));
+    }
+}

@@ -1,0 +1,255 @@
+//! The sharded SCC round coordinator — the paper's scalability story
+//! (§1 "builds many sub-clusters in parallel in a given round", §3.6
+//! "our algorithm can easily parallelize the computation of sub-cluster
+//! components") realized as an explicit leader/worker message-passing
+//! engine.
+//!
+//! The cluster-edge multiset is sharded across `W` persistent workers by
+//! `hash(a, b) % W`. Each round runs the MapReduce-shaped protocol:
+//!
+//! 1. **ArgminScan** — every worker folds its edge shard into a partial
+//!    best-neighbor map; the leader min-reduces the partials (Def. 3's
+//!    1-NN side);
+//! 2. **SelectMerges** — the leader broadcasts the reduced best map
+//!    (`Arc`-shared, as a real system would broadcast a small table);
+//!    workers emit their shard's qualifying merge edges (`avg ≤ τ` ∧
+//!    argmin of an endpoint);
+//! 3. **Union + relabel** — the leader runs union-find over merge edges
+//!    and broadcasts the relabel map;
+//! 4. **Contract + shuffle** — workers relabel their shards, drop
+//!    interior edges, pre-aggregate locally, then shuffle partial
+//!    aggregates to their new owners (hash of the relabeled pair);
+//!    owners merge. Fixed-point linkage sums ([`crate::linkage::LinkAgg`])
+//!    make this reduction exact, so the result is **bit-identical to the
+//!    sequential engine** for any worker count — enforced by property
+//!    tests below.
+//!
+//! Message and byte counts are tracked per round ([`ShuffleStat`]) so the
+//! communication behaviour is inspectable (EXPERIMENTS.md reports them).
+
+pub mod protocol;
+
+use crate::core::Partition;
+use crate::graph::{CsrGraph, UnionFind};
+use crate::linkage::LinkAgg;
+use crate::scc::engine::ClusterEdge;
+use crate::scc::{RoundStat, SccConfig, SccResult};
+use protocol::{Leader, ShuffleStat};
+
+/// Communication statistics for a full run.
+#[derive(Debug, Clone, Default)]
+pub struct CoordStats {
+    pub rounds: Vec<RoundStat>,
+    pub shuffles: Vec<ShuffleStat>,
+    pub workers: usize,
+}
+
+/// Deterministic shard assignment for a cluster-pair edge.
+#[inline]
+pub fn shard_of(a: u32, b: u32, workers: usize) -> usize {
+    let mut h = ((a as u64) << 32 | b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 29;
+    (h % workers as u64) as usize
+}
+
+/// Run SCC through the sharded coordinator. Produces the same rounds as
+/// [`crate::scc::run`] (bit-identical partitions), plus communication
+/// stats.
+pub fn run_parallel(graph: &CsrGraph, config: &SccConfig, workers: usize) -> (SccResult, CoordStats) {
+    let workers = workers.max(1);
+    let n = graph.n;
+
+    // initial shards: undirected edges once, routed by hash
+    let mut shards: Vec<Vec<ClusterEdge>> = vec![Vec::new(); workers];
+    for u in 0..n as u32 {
+        for (v, w) in graph.neighbors(u) {
+            if u < v {
+                shards[shard_of(u, v, workers)].push(ClusterEdge {
+                    a: u,
+                    b: v,
+                    agg: LinkAgg::new(w as f64),
+                });
+            }
+        }
+    }
+    for s in &mut shards {
+        s.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
+    }
+
+    let mut leader = Leader::spawn(shards);
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut num_clusters = n;
+    let mut rounds = vec![Partition::singletons(n)];
+    let mut stats = CoordStats { workers, ..Default::default() };
+
+    let mut idx = 0usize;
+    let mut round_no = 0usize;
+    while idx < config.thresholds.len() && round_no < config.max_rounds {
+        let tau = config.thresholds[idx];
+        let timer = crate::util::Timer::start();
+        round_no += 1;
+
+        // 1. argmin scan + reduce
+        let best = leader.argmin_reduce(num_clusters);
+        // 2. merge-edge selection
+        let merge_edges = leader.select_merges(tau, &best);
+        if merge_edges.is_empty() {
+            idx += 1; // Alg. 1: advance threshold when nothing merges
+            continue;
+        }
+        // 3. union + relabel
+        let mut uf = UnionFind::new(num_clusters);
+        for &(a, b) in &merge_edges {
+            uf.union(a, b);
+        }
+        let relabel = uf.labels();
+        let new_count = uf.components();
+        if new_count == num_clusters {
+            idx += 1;
+            continue;
+        }
+        // 4. contract + shuffle
+        let shuffle = leader.contract(&relabel);
+        for l in labels.iter_mut() {
+            *l = relabel[*l as usize];
+        }
+        let before = num_clusters;
+        num_clusters = new_count;
+        rounds.push(Partition::new(labels.clone()));
+        stats.rounds.push(RoundStat {
+            round: round_no,
+            threshold: tau,
+            clusters_before: before,
+            clusters_after: num_clusters,
+            merge_edges: merge_edges.len(),
+            live_edges: shuffle.edges_after,
+            secs: timer.secs(),
+        });
+        stats.shuffles.push(shuffle);
+        if config.advance_each_round {
+            idx += 1;
+        }
+        if num_clusters <= 1 {
+            break;
+        }
+    }
+    leader.shutdown();
+    (SccResult { rounds, stats: stats.rounds.clone() }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::scc::Thresholds;
+
+    fn graph_for(n: usize, k: usize, d: usize, kc: usize, seed: u64) -> CsrGraph {
+        let ds = separated_mixture(&MixtureSpec {
+            n,
+            d,
+            k: kc,
+            sigma: 0.08,
+            delta: 4.0,
+            seed,
+            ..Default::default()
+        });
+        knn_graph(&ds, k, Measure::L2Sq)
+    }
+
+    #[test]
+    fn parallel_equals_sequential_bit_exact() {
+        crate::util::prop::check("coordinator == sequential scc", 12, |g| {
+            let n = g.usize_in(20..200);
+            let kc = g.usize_in(2..8);
+            let k = g.usize_in(2..8);
+            let seed = g.rng().next_u64();
+            let graph = graph_for(n, k, 3, kc, seed);
+            let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
+            let l = g.usize_in(3..25);
+            let cfg = SccConfig::new(Thresholds::geometric(lo, hi, l).taus);
+            let seq = crate::scc::run(&graph, &cfg);
+            for workers in [1usize, 2, 5] {
+                let (par, _) = run_parallel(&graph, &cfg, workers);
+                assert_eq!(
+                    par.rounds.len(),
+                    seq.rounds.len(),
+                    "round count differs at W={workers} (n={n})"
+                );
+                for (i, (a, b)) in par.rounds.iter().zip(&seq.rounds).enumerate() {
+                    assert_eq!(a.assign, b.assign, "round {i} differs at W={workers}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fixed_rounds_mode_matches_too() {
+        let graph = graph_for(150, 5, 4, 5, 9);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
+        let cfg = SccConfig::fixed_rounds(Thresholds::geometric(lo, hi, 20).taus);
+        let seq = crate::scc::run(&graph, &cfg);
+        let (par, _) = run_parallel(&graph, &cfg, 4);
+        assert_eq!(par.rounds.len(), seq.rounds.len());
+        for (a, b) in par.rounds.iter().zip(&seq.rounds) {
+            assert_eq!(a.assign, b.assign);
+        }
+    }
+
+    #[test]
+    fn stats_track_communication() {
+        let graph = graph_for(200, 6, 4, 4, 2);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 15).taus);
+        let (res, stats) = run_parallel(&graph, &cfg, 3);
+        assert_eq!(stats.workers, 3);
+        assert_eq!(stats.rounds.len(), res.rounds.len() - 1);
+        assert_eq!(stats.shuffles.len(), stats.rounds.len());
+        for (i, sh) in stats.shuffles.iter().enumerate() {
+            assert!(sh.messages > 0);
+            // all rounds except possibly the last shuffle real payload
+            // (a final full merge leaves no surviving edges)
+            if i + 1 < stats.shuffles.len() {
+                assert!(sh.bytes > 0, "round {i} shuffled no bytes");
+            }
+        }
+        // edge count shrinks over rounds (contraction)
+        if stats.shuffles.len() >= 2 {
+            assert!(
+                stats.shuffles.last().unwrap().edges_after
+                    <= stats.shuffles[0].edges_after
+            );
+        }
+    }
+
+    #[test]
+    fn shard_assignment_is_balanced() {
+        let mut counts = vec![0usize; 8];
+        for a in 0..200u32 {
+            for b in (a + 1)..200u32 {
+                counts[shard_of(a, b, 8)] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let expect = total / 8;
+        for &c in &counts {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "imbalanced shards: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_worker_degenerate_case() {
+        let graph = graph_for(60, 4, 3, 3, 5);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 10).taus);
+        let (res, _) = run_parallel(&graph, &cfg, 1);
+        assert!(res.rounds.len() >= 2);
+        for w in res.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]));
+        }
+    }
+}

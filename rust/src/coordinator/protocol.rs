@@ -1,0 +1,326 @@
+//! Leader/worker wire protocol for the sharded SCC coordinator.
+//!
+//! Workers are persistent OS threads owning their edge shard for the whole
+//! run; the leader drives them with typed messages over mpsc channels.
+//! Large read-only broadcasts (best map, relabel map) travel as `Arc`s —
+//! the in-process analog of a cluster broadcast; shuffled edge aggregates
+//! travel by value and are counted into [`ShuffleStat`].
+
+use crate::linkage::LinkAgg;
+use crate::scc::engine::ClusterEdge;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Best (avg, neighbor) per cluster; `None` = isolated.
+pub type BestMap = Vec<Option<(f64, u32)>>;
+
+/// Shuffle-phase communication stats for one round.
+#[derive(Debug, Clone, Default)]
+pub struct ShuffleStat {
+    /// Messages exchanged (leader→worker + worker→leader).
+    pub messages: usize,
+    /// Approximate payload bytes of shuffled edge aggregates.
+    pub bytes: usize,
+    /// Total edges alive after contraction.
+    pub edges_after: usize,
+}
+
+enum Request {
+    /// Fold the shard into a partial best map of size `num_clusters`.
+    ArgminScan { num_clusters: usize },
+    /// Emit qualifying merge edges at threshold `tau` given the reduced
+    /// best map.
+    SelectMerges { tau: f64, best: Arc<BestMap> },
+    /// Relabel + pre-aggregate + partition by new owner. Replies with one
+    /// outbox per worker.
+    Contract { relabel: Arc<Vec<u32>>, workers: usize },
+    /// Install shuffled-in partial aggregates as the new shard.
+    Ingest { parts: Vec<Vec<(u32, u32, u128, u64)>> },
+    Shutdown,
+}
+
+enum Reply {
+    PartialBest(BestMap),
+    Merges(Vec<(u32, u32)>),
+    Outboxes(Vec<Vec<(u32, u32, u128, u64)>>),
+    Ingested { edges: usize },
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Request>,
+    rx: mpsc::Receiver<Reply>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// The leader side: owns the worker handles and implements the per-round
+/// phases (see module docs of [`super`]).
+pub struct Leader {
+    workers: Vec<WorkerHandle>,
+}
+
+impl Leader {
+    /// Spawn one worker per initial shard.
+    pub fn spawn(shards: Vec<Vec<ClusterEdge>>) -> Leader {
+        let workers = shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, shard)| {
+                let (req_tx, req_rx) = mpsc::channel::<Request>();
+                let (rep_tx, rep_rx) = mpsc::channel::<Reply>();
+                let join = std::thread::Builder::new()
+                    .name(format!("scc-worker-{w}"))
+                    .spawn(move || worker_main(shard, req_rx, rep_tx))
+                    .expect("spawn worker");
+                WorkerHandle { tx: req_tx, rx: rep_rx, join }
+            })
+            .collect();
+        Leader { workers }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Phase 1: scatter ArgminScan, min-reduce the partial best maps.
+    pub fn argmin_reduce(&mut self, num_clusters: usize) -> Arc<BestMap> {
+        for w in &self.workers {
+            w.tx.send(Request::ArgminScan { num_clusters }).expect("worker alive");
+        }
+        let mut best: BestMap = vec![None; num_clusters];
+        for w in &self.workers {
+            match w.rx.recv().expect("worker reply") {
+                Reply::PartialBest(partial) => {
+                    for (slot, cand) in best.iter_mut().zip(partial) {
+                        if let Some(c) = cand {
+                            match slot {
+                                None => *slot = Some(c),
+                                Some(cur) if (c.0, c.1) < (cur.0, cur.1) => *slot = Some(c),
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                _ => unreachable!("protocol violation"),
+            }
+        }
+        Arc::new(best)
+    }
+
+    /// Phase 2: gather qualifying merge edges.
+    pub fn select_merges(&mut self, tau: f64, best: &Arc<BestMap>) -> Vec<(u32, u32)> {
+        for w in &self.workers {
+            w.tx.send(Request::SelectMerges { tau, best: best.clone() }).expect("worker alive");
+        }
+        let mut merges = Vec::new();
+        for w in &self.workers {
+            match w.rx.recv().expect("worker reply") {
+                Reply::Merges(m) => merges.extend(m),
+                _ => unreachable!("protocol violation"),
+            }
+        }
+        merges
+    }
+
+    /// Phases 3–4: broadcast the relabel map, collect outboxes, route them
+    /// to their owners, and let owners install the merged shards.
+    pub fn contract(&mut self, relabel: &[u32]) -> ShuffleStat {
+        let workers = self.workers.len();
+        let relabel = Arc::new(relabel.to_vec());
+        for w in &self.workers {
+            w.tx.send(Request::Contract { relabel: relabel.clone(), workers })
+                .expect("worker alive");
+        }
+        // inbox[target][source] = partial aggregate list
+        let mut inbox: Vec<Vec<Vec<(u32, u32, u128, u64)>>> =
+            (0..workers).map(|_| Vec::with_capacity(workers)).collect();
+        let mut stat = ShuffleStat::default();
+        for w in &self.workers {
+            match w.rx.recv().expect("worker reply") {
+                Reply::Outboxes(boxes) => {
+                    stat.messages += workers + 1;
+                    for (target, b) in boxes.into_iter().enumerate() {
+                        stat.bytes += b.len() * std::mem::size_of::<(u32, u32, u128, u64)>();
+                        inbox[target].push(b);
+                    }
+                }
+                _ => unreachable!("protocol violation"),
+            }
+        }
+        for (w, parts) in self.workers.iter().zip(inbox) {
+            w.tx.send(Request::Ingest { parts }).expect("worker alive");
+        }
+        for w in &self.workers {
+            match w.rx.recv().expect("worker reply") {
+                Reply::Ingested { edges } => {
+                    stat.messages += 1;
+                    stat.edges_after += edges;
+                }
+                _ => unreachable!("protocol violation"),
+            }
+        }
+        stat
+    }
+
+    /// Stop all workers and join their threads.
+    pub fn shutdown(self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Request::Shutdown);
+        }
+        for w in self.workers {
+            let _ = w.join.join();
+        }
+    }
+}
+
+fn worker_main(
+    mut shard: Vec<ClusterEdge>,
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<Reply>,
+) {
+    // scratch reused across Contract rounds
+    let mut relabeled: Vec<ClusterEdge> = Vec::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::ArgminScan { num_clusters } => {
+                let mut best: BestMap = vec![None; num_clusters];
+                for e in &shard {
+                    let avg = e.agg.avg();
+                    for (me, other) in [(e.a, e.b), (e.b, e.a)] {
+                        let slot = &mut best[me as usize];
+                        let cand = (avg, other);
+                        match slot {
+                            None => *slot = Some(cand),
+                            Some(cur) if (cand.0, cand.1) < (cur.0, cur.1) => *slot = Some(cand),
+                            _ => {}
+                        }
+                    }
+                }
+                tx.send(Reply::PartialBest(best)).expect("leader alive");
+            }
+            Request::SelectMerges { tau, best } => {
+                let mut merges = Vec::new();
+                for e in &shard {
+                    let avg = e.agg.avg();
+                    if avg > tau {
+                        continue;
+                    }
+                    let a_best = matches!(best[e.a as usize], Some((_, nb)) if nb == e.b);
+                    let b_best = matches!(best[e.b as usize], Some((_, nb)) if nb == e.a);
+                    if a_best || b_best {
+                        merges.push((e.a, e.b));
+                    }
+                }
+                tx.send(Reply::Merges(merges)).expect("leader alive");
+            }
+            Request::Contract { relabel, workers } => {
+                relabeled.clear();
+                for e in &shard {
+                    let (na, nb) = (relabel[e.a as usize], relabel[e.b as usize]);
+                    if na == nb {
+                        continue;
+                    }
+                    let (a, b) = if na < nb { (na, nb) } else { (nb, na) };
+                    relabeled.push(ClusterEdge { a, b, agg: e.agg });
+                }
+                // pre-aggregate locally (sort + merge runs), then route
+                relabeled.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
+                let mut outboxes: Vec<Vec<(u32, u32, u128, u64)>> =
+                    (0..workers).map(|_| Vec::new()).collect();
+                let mut i = 0;
+                while i < relabeled.len() {
+                    let (a, b) = (relabeled[i].a, relabeled[i].b);
+                    let mut agg = relabeled[i].agg;
+                    let mut j = i + 1;
+                    while j < relabeled.len() && relabeled[j].a == a && relabeled[j].b == b {
+                        agg.merge(&relabeled[j].agg);
+                        j += 1;
+                    }
+                    outboxes[super::shard_of(a, b, workers)]
+                        .push((a, b, agg.sum_fp, agg.count));
+                    i = j;
+                }
+                tx.send(Reply::Outboxes(outboxes)).expect("leader alive");
+            }
+            Request::Ingest { parts } => {
+                let mut incoming: Vec<ClusterEdge> = parts
+                    .into_iter()
+                    .flatten()
+                    .map(|(a, b, sum_fp, count)| ClusterEdge {
+                        a,
+                        b,
+                        agg: LinkAgg::from_parts(sum_fp, count),
+                    })
+                    .collect();
+                incoming.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
+                shard.clear();
+                for e in incoming {
+                    match shard.last_mut() {
+                        Some(last) if last.a == e.a && last.b == e.b => last.agg.merge(&e.agg),
+                        _ => shard.push(e),
+                    }
+                }
+                tx.send(Reply::Ingested { edges: shard.len() }).expect("leader alive");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge(a: u32, b: u32, w: f64) -> ClusterEdge {
+        ClusterEdge { a, b, agg: LinkAgg::new(w) }
+    }
+
+    #[test]
+    fn argmin_reduce_merges_partials() {
+        // shard 0 sees (0,1,2.0); shard 1 sees (0,2,1.0)
+        let mut leader = Leader::spawn(vec![vec![edge(0, 1, 2.0)], vec![edge(0, 2, 1.0)]]);
+        let best = leader.argmin_reduce(3);
+        assert_eq!(best[0], Some((1.0, 2))); // global min across shards
+        assert_eq!(best[1], Some((2.0, 0)));
+        assert_eq!(best[2], Some((1.0, 0)));
+        leader.shutdown();
+    }
+
+    #[test]
+    fn select_merges_applies_threshold_and_argmin() {
+        let mut leader = Leader::spawn(vec![vec![edge(0, 1, 2.0), edge(1, 2, 5.0)]]);
+        let best = leader.argmin_reduce(3);
+        let m_low = leader.select_merges(1.0, &best);
+        assert!(m_low.is_empty());
+        let m_mid = leader.select_merges(2.0, &best);
+        assert_eq!(m_mid, vec![(0, 1)]);
+        let m_high = leader.select_merges(10.0, &best);
+        assert_eq!(m_high.len(), 2);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn contract_shuffles_and_aggregates_across_workers() {
+        // both shards hold an edge that relabels to the same pair (0',1')
+        let shards = vec![vec![edge(0, 2, 4.0)], vec![edge(1, 3, 6.0)]];
+        let mut leader = Leader::spawn(shards);
+        // relabel: {0,1} -> 0, {2,3} -> 1
+        let relabel = vec![0u32, 0, 1, 1];
+        let stat = leader.contract(&relabel);
+        assert_eq!(stat.edges_after, 1, "duplicates must merge at the owner");
+        // verify the merged aggregate via a fresh argmin scan
+        let best = leader.argmin_reduce(2);
+        let (avg, nbr) = best[0].unwrap();
+        assert_eq!(nbr, 1);
+        assert!((avg - 5.0).abs() < 1e-9, "avg of 4 and 6 is 5, got {avg}");
+        leader.shutdown();
+    }
+
+    #[test]
+    fn interior_edges_disappear_on_contract() {
+        let mut leader = Leader::spawn(vec![vec![edge(0, 1, 1.0), edge(0, 2, 3.0)]]);
+        let relabel = vec![0u32, 0, 1]; // 0,1 merge
+        let stat = leader.contract(&relabel);
+        assert_eq!(stat.edges_after, 1);
+        leader.shutdown();
+    }
+}

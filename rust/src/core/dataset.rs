@@ -1,0 +1,224 @@
+//! Dense row-major datasets with optional ground-truth labels.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A dataset of `n` points in `d` dimensions, stored row-major as `f32`,
+/// with optional ground-truth cluster labels (used only by evaluation).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major point matrix, length `n * d`.
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    /// Ground-truth labels, `labels.len() == n` when present.
+    pub labels: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, data: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        Dataset { name: name.into(), data, n, d, labels: None }
+    }
+
+    pub fn with_labels(mut self, labels: Vec<u32>) -> Self {
+        assert_eq!(labels.len(), self.n, "labels length must be n");
+        self.labels = Some(labels);
+        self
+    }
+
+    /// The `i`-th point.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Number of distinct ground-truth clusters (0 when unlabeled).
+    pub fn num_classes(&self) -> usize {
+        match &self.labels {
+            None => 0,
+            Some(ls) => {
+                let mut seen = std::collections::HashSet::new();
+                for &l in ls {
+                    seen.insert(l);
+                }
+                seen.len()
+            }
+        }
+    }
+
+    /// ℓ2-normalize every row in place (zero rows are left unchanged).
+    /// After normalization, ℓ2² distances lie in `[0, 4]` and dot products
+    /// in `[-1, 1]` — the ranges the paper's threshold schedules assume
+    /// (App. B.3).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n {
+            let row = &mut self.data[i * self.d..(i + 1) * self.d];
+            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for x in row.iter_mut() {
+                    *x /= norm;
+                }
+            }
+        }
+    }
+
+    /// Squared Euclidean distance between points `i` and `j`.
+    #[inline]
+    pub fn l2sq(&self, i: usize, j: usize) -> f32 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f32;
+        for k in 0..self.d {
+            let t = a[k] - b[k];
+            s += t * t;
+        }
+        s
+    }
+
+    /// Dot product between points `i` and `j`.
+    #[inline]
+    pub fn dot(&self, i: usize, j: usize) -> f32 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f32;
+        for k in 0..self.d {
+            s += a[k] * b[k];
+        }
+        s
+    }
+
+    /// Take the first `m` points (used for scaled-down experiments).
+    pub fn head(&self, m: usize) -> Dataset {
+        let m = m.min(self.n);
+        Dataset {
+            name: self.name.clone(),
+            data: self.data[..m * self.d].to_vec(),
+            n: m,
+            d: self.d,
+            labels: self.labels.as_ref().map(|ls| ls[..m].to_vec()),
+        }
+    }
+
+    /// Serialize to a simple binary container:
+    /// magic `SCCD1\n`, then ASCII header `n d has_labels\n`, then
+    /// little-endian f32 data, then (optional) little-endian u32 labels.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        writeln!(f, "SCCD1")?;
+        writeln!(f, "{} {} {}", self.n, self.d, u8::from(self.labels.is_some()))?;
+        let bytes: Vec<u8> = self.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        if let Some(ls) = &self.labels {
+            let lb: Vec<u8> = ls.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&lb)?;
+        }
+        Ok(())
+    }
+
+    /// Load a dataset written by [`Dataset::save`].
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut header = String::new();
+        read_line(&mut f, &mut header)?;
+        if header.trim() != "SCCD1" {
+            bail!("bad magic in {path:?}: {header:?}");
+        }
+        header.clear();
+        read_line(&mut f, &mut header)?;
+        let parts: Vec<&str> = header.split_whitespace().collect();
+        if parts.len() != 3 {
+            bail!("bad header in {path:?}");
+        }
+        let n: usize = parts[0].parse()?;
+        let d: usize = parts[1].parse()?;
+        let has_labels: u8 = parts[2].parse()?;
+        let mut buf = vec![0u8; n * d * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> =
+            buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        let mut ds = Dataset::new(
+            path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            data,
+            n,
+            d,
+        );
+        if has_labels == 1 {
+            let mut lb = vec![0u8; n * 4];
+            f.read_exact(&mut lb)?;
+            let labels =
+                lb.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+            ds = ds.with_labels(labels);
+        }
+        Ok(ds)
+    }
+}
+
+fn read_line(r: &mut impl std::io::BufRead, out: &mut String) -> Result<()> {
+    r.read_line(out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new("toy", vec![0.0, 0.0, 3.0, 4.0, 1.0, 0.0], 3, 2)
+            .with_labels(vec![0, 1, 0])
+    }
+
+    #[test]
+    fn rows_and_distances() {
+        let ds = toy();
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.l2sq(0, 1), 25.0);
+        assert_eq!(ds.dot(1, 2), 3.0);
+        assert_eq!(ds.num_classes(), 2);
+    }
+
+    #[test]
+    fn normalize_makes_unit_rows() {
+        let mut ds = Dataset::new("t", vec![1.0, 1.0, 3.0, 4.0, 2.0, 0.0], 3, 2);
+        ds.normalize_rows();
+        for i in 0..ds.n {
+            let norm: f32 = ds.row(i).iter().map(|x| x * x).sum();
+            assert!((norm - 1.0).abs() < 1e-6, "row {i} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn normalize_skips_zero_rows() {
+        let mut ds = Dataset::new("z", vec![0.0, 0.0], 1, 2);
+        ds.normalize_rows();
+        assert_eq!(ds.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn head_truncates_consistently() {
+        let ds = toy();
+        let h = ds.head(2);
+        assert_eq!(h.n, 2);
+        assert_eq!(h.labels.as_ref().unwrap().len(), 2);
+        assert_eq!(h.row(1), ds.row(1));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = toy();
+        let dir = std::env::temp_dir().join(format!("scc_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.sccd");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.d, ds.d);
+        assert_eq!(back.data, ds.data);
+        assert_eq!(back.labels, ds.labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Core data structures: dense datasets, flat partitions, and cluster
+//! trees (hierarchies). These are the vocabulary types shared by every
+//! algorithm and metric in the crate (paper §2.1, Defs. 1–2).
+
+pub mod dataset;
+pub mod partition;
+pub mod tree;
+
+pub use dataset::Dataset;
+pub use partition::Partition;
+pub use tree::Tree;

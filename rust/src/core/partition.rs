@@ -1,0 +1,157 @@
+//! Flat clusterings (paper Def. 1): an assignment of each point to a
+//! cluster id. Stored as a dense `Vec<u32>` over points.
+
+/// A flat clustering of `n` points. `assign[i]` is the cluster id of point
+/// `i`. Ids need not be contiguous; call [`Partition::normalized`] for a
+/// canonical relabeling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub assign: Vec<u32>,
+}
+
+impl Partition {
+    pub fn new(assign: Vec<u32>) -> Self {
+        Partition { assign }
+    }
+
+    /// The shattered partition: each point its own cluster (round 0 of SCC).
+    pub fn singletons(n: usize) -> Self {
+        Partition { assign: (0..n as u32).collect() }
+    }
+
+    /// Every point in one cluster.
+    pub fn single_cluster(n: usize) -> Self {
+        Partition { assign: vec![0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Number of distinct clusters.
+    pub fn num_clusters(&self) -> usize {
+        let mut ids: Vec<u32> = self.assign.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Relabel cluster ids to `0..K` in order of first appearance.
+    /// Canonical form: two partitions describe the same clustering iff
+    /// their normalized assignments are equal.
+    pub fn normalized(&self) -> Partition {
+        let mut map = std::collections::HashMap::new();
+        let mut next = 0u32;
+        let assign = self
+            .assign
+            .iter()
+            .map(|&c| {
+                *map.entry(c).or_insert_with(|| {
+                    let id = next;
+                    next += 1;
+                    id
+                })
+            })
+            .collect();
+        Partition { assign }
+    }
+
+    /// `true` iff the two partitions induce the same grouping (label names
+    /// ignored).
+    pub fn same_clustering(&self, other: &Partition) -> bool {
+        self.n() == other.n() && self.normalized().assign == other.normalized().assign
+    }
+
+    /// Sizes indexed by normalized cluster id (first-appearance order).
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let norm = self.normalized();
+        let k = norm.assign.iter().map(|&c| c + 1).max().unwrap_or(0) as usize;
+        let mut sizes = vec![0usize; k];
+        for &c in &norm.assign {
+            sizes[c as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Point indices grouped by normalized cluster id.
+    pub fn members(&self) -> Vec<Vec<u32>> {
+        let norm = self.normalized();
+        let k = norm.assign.iter().map(|&c| c + 1).max().unwrap_or(0) as usize;
+        let mut groups = vec![Vec::new(); k];
+        for (i, &c) in norm.assign.iter().enumerate() {
+            groups[c as usize].push(i as u32);
+        }
+        groups
+    }
+
+    /// `true` iff `self` refines `coarser`: every cluster of `self` is
+    /// contained in exactly one cluster of `coarser`. Used to verify SCC's
+    /// rounds are nested (hierarchical-clustering invariant, Def. 2).
+    pub fn refines(&self, coarser: &Partition) -> bool {
+        if self.n() != coarser.n() {
+            return false;
+        }
+        let mut rep: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        for i in 0..self.n() {
+            match rep.entry(self.assign[i]) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(coarser.assign[i]);
+                }
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    if *e.get() != coarser.assign[i] {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singletons_and_single() {
+        let s = Partition::singletons(4);
+        assert_eq!(s.num_clusters(), 4);
+        let o = Partition::single_cluster(4);
+        assert_eq!(o.num_clusters(), 1);
+        assert!(s.refines(&o));
+        assert!(!o.refines(&s));
+    }
+
+    #[test]
+    fn normalization_is_canonical() {
+        let a = Partition::new(vec![5, 5, 9, 2]);
+        let b = Partition::new(vec![0, 0, 1, 2]);
+        assert!(a.same_clustering(&b));
+        assert_eq!(a.normalized().assign, vec![0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn sizes_and_members() {
+        let p = Partition::new(vec![3, 3, 1, 3]);
+        assert_eq!(p.cluster_sizes(), vec![3, 1]);
+        assert_eq!(p.members(), vec![vec![0, 1, 3], vec![2]]);
+    }
+
+    #[test]
+    fn refinement_detects_violation() {
+        let fine = Partition::new(vec![0, 0, 1, 1]);
+        let coarse = Partition::new(vec![0, 0, 0, 0]);
+        let crossing = Partition::new(vec![0, 1, 0, 1]);
+        assert!(fine.refines(&coarse));
+        assert!(fine.refines(&fine));
+        assert!(!crossing.refines(&fine));
+        assert!(!fine.refines(&Partition::new(vec![0, 1, 1, 1])));
+    }
+
+    #[test]
+    fn refines_rejects_length_mismatch() {
+        let a = Partition::singletons(3);
+        let b = Partition::singletons(4);
+        assert!(!a.refines(&b));
+    }
+}

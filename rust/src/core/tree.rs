@@ -1,0 +1,371 @@
+//! Cluster trees (hierarchical clusterings, paper Def. 2).
+//!
+//! Leaves are node ids `0..n_leaves` (one per point); internal nodes are
+//! appended in construction order. Trees are built either from a sequence
+//! of **nested partitions** (SCC / Affinity rounds — non-binary branching)
+//! or from a sequence of **binary merges** (HAC). A virtual root is added
+//! when the final level is a forest so that every pair of leaves has an
+//! LCA.
+
+use super::partition::Partition;
+
+/// A rooted cluster tree over `n_leaves` points.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub n_leaves: usize,
+    /// Parent id per node; the root's parent is `u32::MAX`.
+    pub parent: Vec<u32>,
+    /// Children lists per node (empty for leaves).
+    pub children: Vec<Vec<u32>>,
+    /// Monotone merge height per node (e.g. round index or linkage value);
+    /// 0 for leaves.
+    pub height: Vec<f64>,
+}
+
+pub const NO_PARENT: u32 = u32::MAX;
+
+impl Tree {
+    fn with_leaves(n: usize) -> Tree {
+        Tree {
+            n_leaves: n,
+            parent: vec![NO_PARENT; n],
+            children: vec![Vec::new(); n],
+            height: vec![0.0; n],
+        }
+    }
+
+    fn add_node(&mut self, children: Vec<u32>, height: f64) -> u32 {
+        let id = self.parent.len() as u32;
+        for &c in &children {
+            self.parent[c as usize] = id;
+        }
+        self.parent.push(NO_PARENT);
+        self.children.push(children);
+        self.height.push(height);
+        id
+    }
+
+    /// Build from a sequence of partitions, **finest first** (round 0 =
+    /// singletons). Each partition must be refined by its predecessor;
+    /// identical consecutive clusters are collapsed (no unary chains).
+    /// Heights are the round indices. A virtual root joins any remaining
+    /// forest.
+    pub fn from_rounds(rounds: &[Partition]) -> Tree {
+        assert!(!rounds.is_empty(), "need at least one round");
+        let n = rounds[0].n();
+        let mut t = Tree::with_leaves(n);
+        // current tree-node id representing each point's cluster
+        let mut node_of_point: Vec<u32> = (0..n as u32).collect();
+        let first = &rounds[0];
+        // if round 0 is not singletons, merge its clusters first at height 1
+        if first.num_clusters() != n {
+            t.merge_level(first, &mut node_of_point, 1.0);
+        }
+        let start_round = 1;
+        for (ridx, part) in rounds.iter().enumerate().skip(start_round) {
+            debug_assert!(
+                rounds[ridx - 1].refines(part),
+                "round {ridx} does not coarsen its predecessor"
+            );
+            t.merge_level(part, &mut node_of_point, (ridx + 1) as f64);
+        }
+        t.join_forest(&mut node_of_point);
+        t
+    }
+
+    /// Merge the current per-point nodes according to `part`: clusters of
+    /// `part` containing >1 distinct current node get a new internal node.
+    fn merge_level(&mut self, part: &Partition, node_of_point: &mut [u32], height: f64) {
+        use std::collections::HashMap;
+        // cluster id -> distinct current node ids (insertion-ordered)
+        let mut groups: HashMap<u32, Vec<u32>> = HashMap::new();
+        let mut seen: HashMap<u32, u32> = HashMap::new(); // node -> cluster (dedup)
+        for i in 0..part.n() {
+            let c = part.assign[i];
+            let nd = node_of_point[i];
+            match seen.entry(nd) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(c);
+                    groups.entry(c).or_default().push(nd);
+                }
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    debug_assert_eq!(*e.get(), c, "partition does not nest current tree level");
+                }
+            }
+        }
+        let mut new_node_of_cluster: HashMap<u32, u32> = HashMap::new();
+        for (c, nodes) in groups {
+            if nodes.len() > 1 {
+                let id = self.add_node(nodes, height);
+                new_node_of_cluster.insert(c, id);
+            }
+        }
+        if new_node_of_cluster.is_empty() {
+            return;
+        }
+        for i in 0..part.n() {
+            if let Some(&nd) = new_node_of_cluster.get(&part.assign[i]) {
+                node_of_point[i] = nd;
+            }
+        }
+    }
+
+    fn join_forest(&mut self, node_of_point: &mut [u32]) {
+        let mut roots: Vec<u32> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for &nd in node_of_point.iter() {
+            if seen.insert(nd) {
+                roots.push(nd);
+            }
+        }
+        if roots.len() > 1 {
+            let h = self.height.iter().cloned().fold(0.0f64, f64::max) + 1.0;
+            let id = self.add_node(roots, h);
+            for nd in node_of_point.iter_mut() {
+                *nd = id;
+            }
+        }
+    }
+
+    /// Build a binary tree from HAC-style merges: `merges[t] = (a, b, h)`
+    /// joins current clusters `a` and `b` (node ids) at height `h`; the new
+    /// node gets id `n_leaves + t`.
+    pub fn from_merges(n_leaves: usize, merges: &[(u32, u32, f64)]) -> Tree {
+        let mut t = Tree::with_leaves(n_leaves);
+        for &(a, b, h) in merges {
+            t.add_node(vec![a, b], h);
+        }
+        // join any forest that remains (incomplete HAC runs)
+        let roots: Vec<u32> = (0..t.parent.len() as u32)
+            .filter(|&i| t.parent[i as usize] == NO_PARENT)
+            .collect();
+        if roots.len() > 1 {
+            let h = t.height.iter().cloned().fold(0.0f64, f64::max) + 1.0;
+            t.add_node(roots, h);
+        }
+        t
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn root(&self) -> u32 {
+        (0..self.parent.len() as u32)
+            .find(|&i| self.parent[i as usize] == NO_PARENT)
+            .expect("tree has a root")
+    }
+
+    pub fn is_leaf(&self, v: u32) -> bool {
+        (v as usize) < self.n_leaves
+    }
+
+    /// Depth of each node (root = 0).
+    pub fn depths(&self) -> Vec<u32> {
+        let mut depth = vec![0u32; self.num_nodes()];
+        // children have larger ids than parents only for leaves; internal
+        // nodes are appended after their children, so iterate ids downward.
+        for v in (0..self.num_nodes()).rev() {
+            for &c in &self.children[v] {
+                depth[c as usize] = depth[v] + 1;
+            }
+        }
+        depth
+    }
+
+    /// Leaf count of each node's subtree.
+    pub fn leaf_counts(&self) -> Vec<u64> {
+        let mut cnt = vec![0u64; self.num_nodes()];
+        for v in 0..self.n_leaves {
+            cnt[v] = 1;
+        }
+        // internal nodes appear after all their children (construction
+        // order), so a single forward pass accumulates correctly.
+        for v in self.n_leaves..self.num_nodes() {
+            let mut s = 0;
+            for &c in &self.children[v] {
+                s += cnt[c as usize];
+            }
+            cnt[v] = s;
+        }
+        cnt
+    }
+
+    /// Least common ancestor by parent walking (O(depth)).
+    pub fn lca(&self, a: u32, b: u32, depth: &[u32]) -> u32 {
+        let (mut a, mut b) = (a, b);
+        while depth[a as usize] > depth[b as usize] {
+            a = self.parent[a as usize];
+        }
+        while depth[b as usize] > depth[a as usize] {
+            b = self.parent[b as usize];
+        }
+        while a != b {
+            a = self.parent[a as usize];
+            b = self.parent[b as usize];
+        }
+        a
+    }
+
+    /// The flat partition obtained by cutting the tree so that exactly the
+    /// maximal nodes with height ≤ `h` become clusters.
+    pub fn cut_at(&self, h: f64) -> Partition {
+        let mut assign = vec![0u32; self.n_leaves];
+        // find maximal nodes with height <= h whose parent has height > h
+        let root = self.root();
+        let mut stack = vec![root];
+        let mut cid = 0u32;
+        while let Some(v) = stack.pop() {
+            if self.height[v as usize] <= h || self.is_leaf(v) {
+                // v is a cluster
+                self.assign_subtree(v, cid, &mut assign);
+                cid += 1;
+            } else {
+                for &c in &self.children[v as usize] {
+                    stack.push(c);
+                }
+            }
+        }
+        Partition::new(assign)
+    }
+
+    fn assign_subtree(&self, v: u32, cid: u32, assign: &mut [u32]) {
+        let mut stack = vec![v];
+        while let Some(u) = stack.pop() {
+            if self.is_leaf(u) {
+                assign[u as usize] = cid;
+            } else {
+                for &c in &self.children[u as usize] {
+                    stack.push(c);
+                }
+            }
+        }
+    }
+
+    /// All nodes in postorder (children before parents).
+    pub fn postorder(&self) -> Vec<u32> {
+        // construction guarantees children have smaller ids than internal
+        // parents, so ascending id order is a valid postorder.
+        (0..self.num_nodes() as u32).collect()
+    }
+
+    /// Validate structural invariants (used by property tests):
+    /// single root, parent/child consistency, leaves have no children,
+    /// heights non-decreasing from child to parent.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut roots = 0;
+        for v in 0..self.num_nodes() {
+            if self.parent[v] == NO_PARENT {
+                roots += 1;
+            } else {
+                let p = self.parent[v] as usize;
+                if !self.children[p].contains(&(v as u32)) {
+                    return Err(format!("node {v}: parent {p} does not list it as child"));
+                }
+                if self.height[p] < self.height[v] {
+                    return Err(format!(
+                        "height not monotone: node {v} h={} parent {p} h={}",
+                        self.height[v], self.height[p]
+                    ));
+                }
+            }
+            if v < self.n_leaves && !self.children[v].is_empty() {
+                return Err(format!("leaf {v} has children"));
+            }
+            for &c in &self.children[v] {
+                if self.parent[c as usize] != v as u32 {
+                    return Err(format!("child {c} of {v} has wrong parent"));
+                }
+            }
+        }
+        if roots != 1 {
+            return Err(format!("expected 1 root, found {roots}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_round_tree() -> Tree {
+        // points 0..4; round1 merges {0,1} and {2,3}; round2 merges all
+        let r0 = Partition::singletons(4);
+        let r1 = Partition::new(vec![0, 0, 1, 1]);
+        let r2 = Partition::new(vec![0, 0, 0, 0]);
+        Tree::from_rounds(&[r0, r1, r2])
+    }
+
+    #[test]
+    fn from_rounds_builds_nested_tree() {
+        let t = three_round_tree();
+        t.validate().unwrap();
+        assert_eq!(t.n_leaves, 4);
+        assert_eq!(t.num_nodes(), 7); // 4 leaves + 2 internal + root
+        let counts = t.leaf_counts();
+        assert_eq!(counts[t.root() as usize], 4);
+    }
+
+    #[test]
+    fn lca_and_depths() {
+        let t = three_round_tree();
+        let d = t.depths();
+        let l01 = t.lca(0, 1, &d);
+        let l02 = t.lca(0, 2, &d);
+        assert_ne!(l01, l02);
+        assert_eq!(l02, t.root());
+        assert_eq!(t.lca(2, 3, &d), t.lca(3, 2, &d));
+        assert_eq!(t.lca(1, 1, &d), 1);
+    }
+
+    #[test]
+    fn unchanged_clusters_do_not_create_unary_nodes() {
+        let r0 = Partition::singletons(3);
+        let r1 = Partition::new(vec![0, 0, 1]); // {0,1}, {2}
+        let r2 = Partition::new(vec![0, 0, 1]); // unchanged
+        let r3 = Partition::new(vec![0, 0, 0]);
+        let t = Tree::from_rounds(&[r0, r1, r2, r3]);
+        t.validate().unwrap();
+        assert_eq!(t.num_nodes(), 5); // 3 leaves + {0,1} + root
+    }
+
+    #[test]
+    fn forest_gets_virtual_root() {
+        let r0 = Partition::singletons(4);
+        let r1 = Partition::new(vec![0, 0, 1, 1]); // never fully merged
+        let t = Tree::from_rounds(&[r0, r1]);
+        t.validate().unwrap();
+        assert_eq!(t.leaf_counts()[t.root() as usize], 4);
+    }
+
+    #[test]
+    fn from_merges_binary() {
+        // HAC order: (0,1)@1, (2,3)@2, (4,5)@3 where 4,5 are the new nodes
+        let t = Tree::from_merges(4, &[(0, 1, 1.0), (2, 3, 2.0), (4, 5, 3.0)]);
+        t.validate().unwrap();
+        assert_eq!(t.num_nodes(), 7);
+        let d = t.depths();
+        assert_eq!(t.lca(0, 3, &d), t.root());
+    }
+
+    #[test]
+    fn cut_at_recovers_levels() {
+        let t = three_round_tree();
+        // heights: internal at 2.0 (round idx 1 -> height 2), root at 3.0
+        let p_fine = t.cut_at(0.5);
+        assert_eq!(p_fine.num_clusters(), 4);
+        let p_mid = t.cut_at(2.0);
+        assert_eq!(p_mid.num_clusters(), 2);
+        assert!(p_mid.same_clustering(&Partition::new(vec![0, 0, 1, 1])));
+        let p_all = t.cut_at(10.0);
+        assert_eq!(p_all.num_clusters(), 1);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut t = three_round_tree();
+        t.parent[0] = 2; // leaf 0 now claims node 2 as parent, not listed
+        assert!(t.validate().is_err());
+    }
+}

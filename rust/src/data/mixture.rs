@@ -1,0 +1,209 @@
+//! Gaussian-mixture generators, including δ-separated instances
+//! (paper Assumption 1): centers with pairwise distance ≥ δ·R where R is
+//! the maximum point-to-own-center distance.
+
+use crate::core::Dataset;
+use crate::util::Rng;
+
+/// Parameters for a Gaussian-mixture dataset.
+#[derive(Debug, Clone)]
+pub struct MixtureSpec {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Cluster standard deviation (per coordinate).
+    pub sigma: f64,
+    /// Minimum pairwise center separation as a multiple of the cluster
+    /// radius bound R (the paper's δ). Values ≥ 6 satisfy Theorem 1 for
+    /// metrics; ≥ 30 for ℓ2². Small values (≈1) give overlapping clusters.
+    pub delta: f64,
+    /// Zipf exponent for cluster sizes (0 = balanced).
+    pub imbalance: f64,
+    pub seed: u64,
+}
+
+impl Default for MixtureSpec {
+    fn default() -> Self {
+        MixtureSpec { n: 1000, d: 8, k: 10, sigma: 0.05, delta: 8.0, imbalance: 0.0, seed: 0 }
+    }
+}
+
+/// Generate a mixture whose centers are placed so that every pair is at
+/// least `delta * R_emp` apart, where `R_emp` is the *realized* maximum
+/// point-to-center distance. Placement: random directions on the sphere of
+/// radius `delta * R_bound`, rejection-sampled for minimum separation, with
+/// radius growth if rejection stalls (keeps generation O(k²) but robust).
+///
+/// Truncates each Gaussian at `3σ` so `R` is bounded and the δ-separability
+/// certificate holds deterministically.
+pub fn separated_mixture(spec: &MixtureSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed);
+    let d = spec.d;
+    let k = spec.k.max(1);
+    // R bound from truncation at 3 sigma: R = 3*sigma*sqrt(d)
+    let r_bound = 3.0 * spec.sigma * (d as f64).sqrt();
+    let min_sep = spec.delta * r_bound;
+
+    // place centers with rejection sampling in a box that grows as needed
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut box_half = min_sep * (k as f64).powf(1.0 / d.min(6) as f64).max(1.0);
+    let mut attempts = 0usize;
+    while centers.len() < k {
+        let cand: Vec<f64> = (0..d).map(|_| rng.range_f64(-box_half, box_half)).collect();
+        let ok = centers.iter().all(|c| {
+            let dist2: f64 = c.iter().zip(&cand).map(|(a, b)| (a - b) * (a - b)).sum();
+            dist2.sqrt() >= min_sep
+        });
+        if ok {
+            centers.push(cand);
+        }
+        attempts += 1;
+        if attempts > 200 * k {
+            box_half *= 1.5; // expand and keep going
+            attempts = 0;
+        }
+    }
+
+    // cluster sizes: balanced or Zipf-imbalanced, each >= 1
+    let sizes = cluster_sizes(spec.n, k, spec.imbalance, &mut rng);
+
+    let mut data = Vec::with_capacity(spec.n * d);
+    let mut labels = Vec::with_capacity(spec.n);
+    for (ci, (&sz, center)) in sizes.iter().zip(&centers).enumerate() {
+        for _ in 0..sz {
+            for &c in center.iter() {
+                // truncated normal at 3 sigma
+                let mut z = rng.normal();
+                while z.abs() > 3.0 {
+                    z = rng.normal();
+                }
+                data.push((c + spec.sigma * z) as f32);
+            }
+            labels.push(ci as u32);
+        }
+    }
+    Dataset::new(format!("mixture_n{}_k{}_d{}", spec.n, k, d), data, spec.n, d)
+        .with_labels(labels)
+}
+
+/// Split `n` points over `k` clusters; `imbalance` is the Zipf exponent
+/// (0 = equal sizes). Every cluster gets at least one point.
+pub fn cluster_sizes(n: usize, k: usize, imbalance: f64, rng: &mut Rng) -> Vec<usize> {
+    assert!(n >= k, "need at least one point per cluster (n={n}, k={k})");
+    if imbalance <= 0.0 {
+        let base = n / k;
+        let extra = n % k;
+        return (0..k).map(|i| base + usize::from(i < extra)).collect();
+    }
+    let w = Rng::zipf_weights(k, imbalance);
+    let mut sizes = vec![1usize; k];
+    let remaining = n - k;
+    // proportional allocation of the remainder, then stochastic leftover
+    for (s, wi) in sizes.iter_mut().zip(&w) {
+        let add = (wi * remaining as f64).floor() as usize;
+        *s += add;
+    }
+    let mut allocated: usize = sizes.iter().sum();
+    while allocated < n {
+        sizes[rng.weighted(&w)] += 1;
+        allocated += 1;
+    }
+    sizes
+}
+
+/// The verified δ of a labeled dataset: min center separation divided by
+/// max point-to-own-center distance (∞ when every cluster is a single
+/// point). Used by tests to certify generated instances.
+pub fn measured_delta(ds: &Dataset) -> f64 {
+    let labels = ds.labels.as_ref().expect("labeled dataset");
+    let k = ds.num_classes();
+    let mut sums = vec![0.0f64; k * ds.d];
+    let mut counts = vec![0usize; k];
+    for i in 0..ds.n {
+        let c = labels[i] as usize;
+        counts[c] += 1;
+        for (s, &x) in sums[c * ds.d..(c + 1) * ds.d].iter_mut().zip(ds.row(i)) {
+            *s += x as f64;
+        }
+    }
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|c| sums[c * ds.d..(c + 1) * ds.d].iter().map(|s| s / counts[c] as f64).collect())
+        .collect();
+    let mut r: f64 = 0.0;
+    for i in 0..ds.n {
+        let c = labels[i] as usize;
+        let d2: f64 = centers[c]
+            .iter()
+            .zip(ds.row(i))
+            .map(|(m, &x)| (x as f64 - m) * (x as f64 - m))
+            .sum();
+        r = r.max(d2.sqrt());
+    }
+    let mut min_sep = f64::INFINITY;
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let d2: f64 =
+                centers[a].iter().zip(&centers[b]).map(|(x, y)| (x - y) * (x - y)).sum();
+            min_sep = min_sep.min(d2.sqrt());
+        }
+    }
+    if r == 0.0 {
+        f64::INFINITY
+    } else {
+        min_sep / r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_sum_and_minimum() {
+        let mut rng = Rng::new(1);
+        for &(n, k, imb) in &[(100usize, 7usize, 0.0), (100, 7, 1.5), (50, 50, 2.0)] {
+            let s = cluster_sizes(n, k, imb, &mut rng);
+            assert_eq!(s.iter().sum::<usize>(), n);
+            assert!(s.iter().all(|&x| x >= 1));
+        }
+    }
+
+    #[test]
+    fn zipf_sizes_are_skewed() {
+        let mut rng = Rng::new(2);
+        let s = cluster_sizes(10_000, 10, 1.5, &mut rng);
+        assert!(s[0] > s[9] * 3, "head {} tail {}", s[0], s[9]);
+    }
+
+    #[test]
+    fn generated_mixture_is_delta_separated() {
+        let spec = MixtureSpec { n: 600, d: 4, k: 8, sigma: 0.05, delta: 8.0, ..Default::default() };
+        let ds = separated_mixture(&spec);
+        assert_eq!(ds.n, 600);
+        assert_eq!(ds.num_classes(), 8);
+        // realized delta should be at least the requested one (centers are
+        // placed vs the R *bound*; realized R <= bound)
+        let delta = measured_delta(&ds);
+        assert!(delta >= spec.delta * 0.9, "measured delta {delta}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = MixtureSpec { n: 100, seed: 42, ..Default::default() };
+        let a = separated_mixture(&spec);
+        let b = separated_mixture(&spec);
+        assert_eq!(a.data, b.data);
+        let spec2 = MixtureSpec { n: 100, seed: 43, ..Default::default() };
+        let c = separated_mixture(&spec2);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn overlapping_mixture_is_not_separated() {
+        let spec =
+            MixtureSpec { n: 400, d: 4, k: 6, sigma: 0.3, delta: 0.5, ..Default::default() };
+        let ds = separated_mixture(&spec);
+        let delta = measured_delta(&ds);
+        assert!(delta < 6.0, "expected overlap, got delta {delta}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic data generation: δ-separated Gaussian mixtures (paper
+//! Assumption 1), analogs of the paper's benchmark datasets (§4, Table 1),
+//! and the web-query corpus simulator (§5). See DESIGN.md §4 for the
+//! substitution rationale — the real benchmark features and the 30 B
+//! proprietary query corpus are not available, so we generate workloads
+//! matching their cluster statistics (N, K, imbalance, separation).
+
+pub mod analogs;
+pub mod mixture;
+pub mod webqueries;
+
+pub use analogs::{bench_analog, AnalogSpec, ANALOGS};
+pub use mixture::{separated_mixture, MixtureSpec};
+pub use webqueries::{QueryCorpus, WebQuerySpec};

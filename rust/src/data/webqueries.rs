@@ -1,0 +1,238 @@
+//! Web-query corpus simulator (paper §5 substitution, DESIGN.md §4).
+//!
+//! The paper clusters 30 B proprietary queries represented by lexical +
+//! behavioral features. We simulate the *structure* of that workload: a
+//! 3-level topic tree (topic → subtopic → fine-grained intent), Zipf
+//! head/tail popularity, and per-query embeddings = intent center + noise
+//! that grows for tail queries (tail queries are noisier and lexically
+//! more varied, the failure mode the paper's human eval probes). Query
+//! strings are generated from topic vocabularies so sampled clusters are
+//! human-readable (paper Table 6 / Fig. 6).
+
+use crate::core::Dataset;
+use crate::util::Rng;
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct WebQuerySpec {
+    /// Number of queries (the paper's 30 B, scaled to the testbed).
+    pub n: usize,
+    pub d: usize,
+    /// Top-level topics.
+    pub topics: usize,
+    /// Subtopics per topic.
+    pub subtopics: usize,
+    /// Fine-grained intents per subtopic — the ground-truth clusters.
+    pub intents: usize,
+    /// Embedding noise for head queries; tail queries get up to 3×.
+    pub sigma: f64,
+    /// Zipf exponent for intent popularity.
+    pub zipf: f64,
+    pub seed: u64,
+}
+
+impl Default for WebQuerySpec {
+    fn default() -> Self {
+        WebQuerySpec {
+            n: 100_000,
+            d: 64,
+            topics: 12,
+            subtopics: 8,
+            intents: 10,
+            sigma: 0.08,
+            zipf: 1.1,
+            seed: 0,
+        }
+    }
+}
+
+/// A simulated query corpus: embeddings (as a [`Dataset`] labeled with the
+/// fine-grained intent id) plus query strings and the topic tree metadata
+/// needed by the coherence annotator.
+#[derive(Debug)]
+pub struct QueryCorpus {
+    pub dataset: Dataset,
+    /// Query strings, `n` entries.
+    pub queries: Vec<String>,
+    /// intent id -> (topic id, subtopic id).
+    pub intent_parent: Vec<(u32, u32)>,
+    /// One display name per intent.
+    pub intent_names: Vec<String>,
+}
+
+const TOPIC_WORDS: &[&str] = &[
+    "tea", "tennis", "piano", "camping", "laptops", "gardening", "mortgage", "sneakers",
+    "astronomy", "sushi", "yoga", "plumbing", "guitars", "skiing", "aquarium", "coffee",
+];
+const SUB_WORDS: &[&str] = &[
+    "recipes", "strategy", "prices", "near me", "reviews", "beginner", "repair", "vintage",
+    "best", "cheap", "lessons", "store", "types", "history", "guide", "comparison",
+];
+const INTENT_WORDS: &[&str] = &[
+    "how to", "top rated", "buy", "used", "deals", "ideas", "problems", "diy", "local",
+    "online", "small", "professional", "home", "advanced", "easy", "popular",
+];
+const TAIL_FILLERS: &[&str] = &["today", "2021", "ca", "with pictures", "for kids", "at home",
+    "near cupertino", "open now", "step by step", "on a budget"];
+
+pub fn generate(spec: &WebQuerySpec) -> QueryCorpus {
+    let mut rng = Rng::new(spec.seed ^ 0x9E37);
+    let d = spec.d;
+    let n_topics = spec.topics;
+    let n_sub = spec.topics * spec.subtopics;
+    let n_intents = n_sub * spec.intents;
+
+    // hierarchical centers: topic ~ unit sphere; subtopic = topic + small
+    // offset; intent = subtopic + smaller offset
+    let unit = |rng: &mut Rng, scale: f64, base: Option<&[f64]>| -> Vec<f64> {
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in &mut v {
+            *x = *x / norm.max(1e-12) * scale;
+        }
+        if let Some(b) = base {
+            for (x, bb) in v.iter_mut().zip(b) {
+                *x += bb;
+            }
+        }
+        v
+    };
+    let topic_centers: Vec<Vec<f64>> = (0..n_topics).map(|_| unit(&mut rng, 1.0, None)).collect();
+    let mut sub_centers = Vec::with_capacity(n_sub);
+    for t in 0..n_topics {
+        for _ in 0..spec.subtopics {
+            sub_centers.push(unit(&mut rng, 0.35, Some(&topic_centers[t])));
+        }
+    }
+    let mut intent_centers = Vec::with_capacity(n_intents);
+    let mut intent_parent = Vec::with_capacity(n_intents);
+    let mut intent_names = Vec::with_capacity(n_intents);
+    for s in 0..n_sub {
+        let topic = (s / spec.subtopics) as u32;
+        for i in 0..spec.intents {
+            intent_centers.push(unit(&mut rng, 0.15, Some(&sub_centers[s])));
+            intent_parent.push((topic, s as u32));
+            let tw = TOPIC_WORDS[topic as usize % TOPIC_WORDS.len()];
+            let sw = SUB_WORDS[s % SUB_WORDS.len()];
+            let iw = INTENT_WORDS[i % INTENT_WORDS.len()];
+            intent_names.push(format!("{iw} {tw} {sw}"));
+        }
+    }
+
+    // popularity over intents
+    let weights = Rng::zipf_weights(n_intents, spec.zipf);
+    // cumulative for O(log) sampling
+    let mut cum = Vec::with_capacity(n_intents);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w;
+        cum.push(acc);
+    }
+
+    let mut data = Vec::with_capacity(spec.n * d);
+    let mut labels = Vec::with_capacity(spec.n);
+    let mut queries = Vec::with_capacity(spec.n);
+    for q in 0..spec.n {
+        let u = rng.f64() * acc;
+        let intent = cum.partition_point(|&c| c < u).min(n_intents - 1);
+        // head queries (popular intents, early draws) are clean; tail noisy
+        let popularity = weights[intent] * n_intents as f64; // ~1 for uniform
+        let tail_factor = if popularity >= 1.0 { 1.0 } else { 1.0 + 1.2 * (1.0 - popularity) };
+        let sigma = spec.sigma * tail_factor;
+        for &c in &intent_centers[intent] {
+            data.push((c + sigma * rng.normal()) as f32);
+        }
+        labels.push(intent as u32);
+        // query text: intent name (+ tail filler for tail draws)
+        let name = &intent_names[intent];
+        if tail_factor > 1.5 && rng.f64() < 0.7 {
+            let filler = TAIL_FILLERS[rng.index(TAIL_FILLERS.len())];
+            queries.push(format!("{name} {filler}"));
+        } else if q % 3 == 0 {
+            queries.push(name.clone());
+        } else {
+            // light lexical variation
+            let filler = TAIL_FILLERS[rng.index(TAIL_FILLERS.len())];
+            queries.push(format!("{name} {filler}"));
+        }
+    }
+    let mut dataset =
+        Dataset::new(format!("webqueries_n{}", spec.n), data, spec.n, d).with_labels(labels);
+    dataset.normalize_rows();
+    QueryCorpus { dataset, queries, intent_parent, intent_names }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> WebQuerySpec {
+        WebQuerySpec { n: 2000, d: 16, topics: 4, subtopics: 3, intents: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn corpus_shapes() {
+        let spec = tiny();
+        let c = generate(&spec);
+        assert_eq!(c.dataset.n, 2000);
+        assert_eq!(c.queries.len(), 2000);
+        assert_eq!(c.intent_parent.len(), 4 * 3 * 4);
+        assert_eq!(c.intent_names.len(), 48);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let c = generate(&tiny());
+        let mut counts = std::collections::HashMap::new();
+        for &l in c.dataset.labels.as_ref().unwrap() {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        let mut sizes: Vec<usize> = counts.values().copied().collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(sizes[0] > sizes[sizes.len() - 1] * 3);
+    }
+
+    #[test]
+    fn same_intent_queries_are_close() {
+        let c = generate(&tiny());
+        let labels = c.dataset.labels.as_ref().unwrap();
+        let mut rng = Rng::new(3);
+        let (mut same, mut cross) = (0.0, 0.0);
+        let (mut ns, mut nc) = (0, 0);
+        for _ in 0..3000 {
+            let i = rng.index(c.dataset.n);
+            let j = rng.index(c.dataset.n);
+            if i == j {
+                continue;
+            }
+            let d = c.dataset.l2sq(i, j) as f64;
+            if labels[i] == labels[j] {
+                same += d;
+                ns += 1;
+            } else {
+                cross += d;
+                nc += 1;
+            }
+        }
+        assert!(ns > 10 && nc > 10);
+        assert!(same / (ns as f64) < cross / (nc as f64));
+    }
+
+    #[test]
+    fn intent_parents_consistent() {
+        let spec = tiny();
+        let c = generate(&spec);
+        for (i, &(t, s)) in c.intent_parent.iter().enumerate() {
+            assert_eq!(s as usize, i / spec.intents);
+            assert_eq!(t as usize, s as usize / spec.subtopics);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&tiny());
+        let b = generate(&tiny());
+        assert_eq!(a.dataset.data, b.dataset.data);
+        assert_eq!(a.queries, b.queries);
+    }
+}

@@ -1,0 +1,147 @@
+//! DP-means solvers (paper §4.3, App. C).
+//!
+//! * [`serial`] — SerialDPMeans (Kulis & Jordan 2012; Broderick et al.
+//!   2013): iterate points, open a new cluster whenever the nearest center
+//!   is farther than λ, alternate with mean updates.
+//! * [`occ`] — Optimistic Concurrency Control DP-means (Pan et al. 2013):
+//!   the distributed variant — batches processed in parallel, proposed new
+//!   centers validated serially by a leader.
+//! * [`pp`] — DPMeans++ (Bachem et al. 2015): k-means++-style seeding that
+//!   stops when the expected cost reduction of another center drops below
+//!   λ, followed by a single assignment.
+//! * [`from_scc`] — the paper's novel application (Cor. 3): SCC's rounds
+//!   form a λ-independent solution path; for a given λ simply pick the
+//!   round minimizing the DP-means objective.
+
+pub mod occ;
+pub mod pp;
+pub mod serial;
+
+use crate::core::{Dataset, Partition};
+use crate::metrics::dp_means_cost;
+
+/// Outcome of any DP-means solver.
+#[derive(Debug, Clone)]
+pub struct DpResult {
+    pub partition: Partition,
+    pub cost: f64,
+    pub k: usize,
+}
+
+impl DpResult {
+    pub fn from_partition(ds: &Dataset, partition: Partition, lambda: f64) -> DpResult {
+        let cost = dp_means_cost(ds, &partition, lambda);
+        let k = partition.num_clusters();
+        DpResult { partition, cost, k }
+    }
+}
+
+/// Select the SCC round minimizing the DP-means objective for `lambda`
+/// (paper App. C.1: SCC "constructs a series of candidate solutions …
+/// independent of λ and then selects amongst these clusterings").
+/// O(#rounds × N·d) — one cost evaluation per round; trivially cacheable
+/// across λ values because the k-means term is λ-independent.
+pub fn from_scc(ds: &Dataset, rounds: &[Partition], lambda: f64) -> DpResult {
+    assert!(!rounds.is_empty());
+    // cache λ-independent terms once per round
+    let mut best: Option<(f64, &Partition, usize)> = None;
+    for p in rounds {
+        let km = crate::metrics::kmeans_cost(ds, p);
+        let k = p.num_clusters();
+        let cost = km + lambda * k as f64;
+        match best {
+            None => best = Some((cost, p, k)),
+            Some((bc, _, _)) if cost < bc => best = Some((cost, p, k)),
+            _ => {}
+        }
+    }
+    let (cost, p, k) = best.unwrap();
+    DpResult { partition: p.clone(), cost, k }
+}
+
+/// Precomputed per-round k-means costs for sweeping many λ values
+/// (Fig. 2/3 need 13 λ's; the k-means term is shared).
+pub struct SccSweep {
+    pub kmeans_costs: Vec<f64>,
+    pub cluster_counts: Vec<usize>,
+}
+
+impl SccSweep {
+    pub fn new(ds: &Dataset, rounds: &[Partition]) -> SccSweep {
+        SccSweep {
+            kmeans_costs: rounds.iter().map(|p| crate::metrics::kmeans_cost(ds, p)).collect(),
+            cluster_counts: rounds.iter().map(|p| p.num_clusters()).collect(),
+        }
+    }
+
+    /// Index and cost of the best round for `lambda`.
+    pub fn best_for(&self, lambda: f64) -> (usize, f64) {
+        let mut best = (0usize, f64::INFINITY);
+        for i in 0..self.kmeans_costs.len() {
+            let c = self.kmeans_costs[i] + lambda * self.cluster_counts[i] as f64;
+            if c < best.1 {
+                best = (i, c);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+
+    fn toy_rounds() -> (Dataset, Vec<Partition>) {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 120,
+            d: 3,
+            k: 4,
+            sigma: 0.05,
+            delta: 10.0,
+            ..Default::default()
+        });
+        let g = crate::knn::knn_graph(&ds, 8, crate::linkage::Measure::L2Sq);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = crate::scc::SccConfig::new(crate::scc::Thresholds::geometric(lo, hi, 20).taus);
+        let res = crate::scc::run(&g, &cfg);
+        (ds, res.rounds)
+    }
+
+    #[test]
+    fn from_scc_picks_cost_minimizing_round() {
+        let (ds, rounds) = toy_rounds();
+        let lambda = 0.5;
+        let picked = from_scc(&ds, &rounds, lambda);
+        for p in &rounds {
+            let c = dp_means_cost(&ds, p, lambda);
+            assert!(picked.cost <= c + 1e-9);
+        }
+    }
+
+    #[test]
+    fn lambda_monotonicity_of_k() {
+        // larger λ penalizes clusters more => chosen k is non-increasing
+        let (ds, rounds) = toy_rounds();
+        let sweep = SccSweep::new(&ds, &rounds);
+        let mut prev_k = usize::MAX;
+        for lambda in [0.001, 0.01, 0.1, 0.5, 1.0, 2.0] {
+            let (i, _) = sweep.best_for(lambda);
+            let k = sweep.cluster_counts[i];
+            assert!(k <= prev_k, "k must not increase with lambda");
+            prev_k = k;
+        }
+    }
+
+    #[test]
+    fn sweep_matches_direct_selection() {
+        let (ds, rounds) = toy_rounds();
+        let sweep = SccSweep::new(&ds, &rounds);
+        for lambda in [0.05, 0.75, 1.5] {
+            let (i, c) = sweep.best_for(lambda);
+            let direct = from_scc(&ds, &rounds, lambda);
+            assert!((c - direct.cost).abs() < 1e-9);
+            assert_eq!(sweep.cluster_counts[i], direct.k);
+        }
+    }
+}

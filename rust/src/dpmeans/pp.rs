@@ -1,0 +1,120 @@
+//! DPMeans++ (Bachem et al. 2015): an initialization-only solver.
+//!
+//! k-means++-style adaptive sampling — each new center is drawn with
+//! probability proportional to the squared distance to the nearest chosen
+//! center — continuing while the *expected* cost reduction of one more
+//! center (≈ the current mean contribution of the sampled mass, bounded
+//! below by the λ opening price) exceeds λ. A final nearest-center
+//! assignment produces the clustering; centers are then replaced by
+//! cluster means when scoring (App. C.1: "this strictly improves the
+//! DP-Means objective").
+
+use super::DpResult;
+use crate::core::{Dataset, Partition};
+use crate::linkage::Measure;
+use crate::util::Rng;
+
+/// Configuration for DPMeans++.
+#[derive(Debug, Clone)]
+pub struct PpConfig {
+    pub lambda: f64,
+    /// Safety cap on centers (the sampler stops earlier via the λ rule).
+    pub max_centers: usize,
+    pub seed: u64,
+}
+
+impl PpConfig {
+    pub fn new(lambda: f64) -> Self {
+        PpConfig { lambda, max_centers: usize::MAX, seed: 0 }
+    }
+}
+
+/// Run DPMeans++ center sampling + one assignment pass.
+pub fn run(ds: &Dataset, config: &PpConfig) -> DpResult {
+    let d = ds.d;
+    let mut rng = Rng::new(config.seed);
+    let max_centers = config.max_centers.min(ds.n);
+
+    let first = rng.index(ds.n);
+    let mut centers: Vec<f32> = ds.row(first).to_vec();
+    let mut min_d2: Vec<f64> =
+        (0..ds.n).map(|i| Measure::L2Sq.dissim(ds.row(i), ds.row(first)) as f64).collect();
+    let mut nearest: Vec<u32> = vec![0; ds.n];
+
+    while centers.len() / d < max_centers {
+        let potential: f64 = min_d2.iter().sum();
+        // Expected gain of one more center is at most the sampled point's
+        // current cost; stop when even the *average* residual per future
+        // cluster is below the opening price λ (Bachem et al.'s rule, in
+        // its sampling form: draw, accept only if its d² > λ).
+        if potential <= 0.0 {
+            break;
+        }
+        let cand = rng.weighted(&min_d2);
+        if min_d2[cand] <= config.lambda {
+            break; // opening a center here cannot pay for itself
+        }
+        centers.extend_from_slice(ds.row(cand));
+        let c = (centers.len() / d - 1) as u32;
+        let crow = ds.row(cand);
+        for i in 0..ds.n {
+            let dd = Measure::L2Sq.dissim(ds.row(i), crow) as f64;
+            if dd < min_d2[i] {
+                min_d2[i] = dd;
+                nearest[i] = c;
+            }
+        }
+    }
+    DpResult::from_partition(ds, Partition::new(nearest), config.lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::metrics::pairwise_prf;
+
+    fn blobs() -> Dataset {
+        separated_mixture(&MixtureSpec {
+            n: 300,
+            d: 3,
+            k: 5,
+            sigma: 0.04,
+            delta: 10.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn moderate_lambda_recovers_blobs() {
+        let ds = blobs();
+        let res = run(&ds, &PpConfig::new(0.5));
+        assert_eq!(res.k, 5, "k = {}", res.k);
+        let f1 = pairwise_prf(&res.partition, ds.labels.as_ref().unwrap()).f1;
+        assert!(f1 > 0.95, "f1 {f1}");
+    }
+
+    #[test]
+    fn lambda_controls_cluster_count() {
+        let ds = blobs();
+        let k_small = run(&ds, &PpConfig::new(5.0)).k;
+        let k_large = run(&ds, &PpConfig::new(0.001)).k;
+        assert!(k_small <= k_large);
+        assert!(k_large > 5);
+    }
+
+    #[test]
+    fn respects_center_cap() {
+        let ds = blobs();
+        let res = run(&ds, &PpConfig { lambda: 1e-9, max_centers: 7, seed: 0 });
+        assert!(res.k <= 7);
+    }
+
+    #[test]
+    fn seeds_vary_results() {
+        let ds = blobs();
+        let a = run(&ds, &PpConfig { lambda: 0.5, max_centers: usize::MAX, seed: 1 });
+        let b = run(&ds, &PpConfig { lambda: 0.5, max_centers: usize::MAX, seed: 1 });
+        assert_eq!(a.partition.assign, b.partition.assign, "same seed deterministic");
+    }
+}

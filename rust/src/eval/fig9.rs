@@ -1,0 +1,90 @@
+//! Figures 8 & 9 (App. C.5): ablation on the number of rounds L —
+//! DP-means cost, k-means cost, #clusters, pairwise F1 and running time
+//! as L grows from 2 toward 700, for λ ∈ {1.5, 2.0}.
+//!
+//! Reproduced claims: cost decreases then plateaus around L≈100–200;
+//! #clusters grows with L; λ=2 yields fewer clusters than λ=1.5; running
+//! time is linear in L (and identical across λ — SCC runs once).
+
+use super::common::EvalConfig;
+use crate::dpmeans::SccSweep;
+use crate::metrics::pairwise_prf;
+use crate::runtime::Backend;
+use crate::scc::{SccConfig, Thresholds};
+use crate::util::Timer;
+
+pub const ROUND_COUNTS: &[usize] = &[2, 5, 10, 25, 50, 100, 200, 400, 700];
+pub const LAMBDAS: &[f64] = &[1.5, 2.0];
+
+#[derive(Debug, Clone)]
+pub struct Fig9Point {
+    pub l: usize,
+    pub secs: f64,
+    /// Per λ: (dp cost, kmeans cost, #clusters, f1).
+    pub per_lambda: Vec<(f64, f64, usize, f64)>,
+}
+
+pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Vec<Fig9Point> {
+    let mcfg = EvalConfig { measure: crate::linkage::Measure::L2Sq, ..cfg.clone() };
+    let w = super::common::Workload::build(name, &mcfg, backend);
+    let labels = w.labels();
+    let (lo, hi) = crate::scc::thresholds::edge_range(&w.graph);
+    ROUND_COUNTS
+        .iter()
+        .map(|&l| {
+            let t = Timer::start();
+            let sc = SccConfig::new(Thresholds::geometric(lo, hi, l).taus);
+            let (res, _) = crate::coordinator::run_parallel(&w.graph, &sc, cfg.threads);
+            let secs = t.secs();
+            let sweep = SccSweep::new(&w.ds, &res.rounds);
+            let per_lambda = LAMBDAS
+                .iter()
+                .map(|&lambda| {
+                    let (ri, cost) = sweep.best_for(lambda);
+                    let km = sweep.kmeans_costs[ri];
+                    let k = sweep.cluster_counts[ri];
+                    let f1 = pairwise_prf(&res.rounds[ri], labels).f1;
+                    (cost, km, k, f1)
+                })
+                .collect();
+            Fig9Point { l, secs, per_lambda }
+        })
+        .collect()
+}
+
+pub fn run(cfg: &EvalConfig, backend: &dyn Backend) -> String {
+    let mut out = String::from("Figures 8/9 — Number-of-rounds ablation (speaker analog)\n");
+    out.push_str(
+        "L        time(s)  | l=1.5: DPcost  KMcost     k     F1 | l=2.0: DPcost  KMcost     k     F1\n",
+    );
+    for p in run_dataset("speaker", cfg, backend) {
+        let a = &p.per_lambda[0];
+        let b = &p.per_lambda[1];
+        out.push_str(&format!(
+            "{:<8} {:>7.3}  | {:>13.1} {:>7.1} {:>5} {:>6.3} | {:>13.1} {:>7.1} {:>5} {:>6.3}\n",
+            p.l, p.secs, a.0, a.1, a.2, a.3, b.0, b.1, b.2, b.3,
+        ));
+    }
+    out.push_str("paper: cost tapers off by L~100-200; k(l=2) <= k(l=1.5); time linear in L.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn more_rounds_never_hurt_dp_cost_much() {
+        let cfg = EvalConfig { scale: 0.06, knn_k: 8, ..Default::default() };
+        let pts = run_dataset("speaker", &cfg, &NativeBackend::new());
+        // DP cost at the largest L should be <= cost at the smallest L
+        let first = pts.first().unwrap().per_lambda[0].0;
+        let last = pts.last().unwrap().per_lambda[0].0;
+        assert!(last <= first * 1.05, "cost grew: {first} -> {last}");
+        // lambda=2.0 never selects more clusters than lambda=1.5
+        for p in &pts {
+            assert!(p.per_lambda[1].2 <= p.per_lambda[0].2);
+        }
+    }
+}

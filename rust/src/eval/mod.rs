@@ -1,0 +1,23 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (DESIGN.md §6 maps each to its bench target).
+//!
+//! Every module exposes `run(cfg) -> String`: it generates the workload,
+//! runs the methods, and returns the formatted rows (also printed by the
+//! bench binaries and the CLI). Absolute values differ from the paper
+//! (synthetic analogs, scaled N — DESIGN.md §4); the reproduced object is
+//! the *comparison structure*: who wins, by roughly what factor, where
+//! crossovers fall.
+
+pub mod common;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig9;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table7;
+
+pub use common::EvalConfig;

@@ -1,0 +1,123 @@
+//! Table 1: dendrogram purity on the six benchmark datasets ×
+//! {gHHC, Grinch, Perch, Affinity, SCC}.
+//!
+//! gHHC is quoted from the paper (training-based method out of scope —
+//! DESIGN.md §4); all other methods run on the analog workloads. The
+//! reproduced claim: **SCC ≥ Affinity ≥ online baselines on (nearly) all
+//! datasets**.
+
+use super::common::{num, row, EvalConfig, Workload, ALL_DATASETS};
+use crate::baselines::{grinch, perch};
+use crate::baselines::{grinch::GrinchConfig, perch::PerchConfig};
+use crate::metrics::dendrogram_purity;
+use crate::runtime::Backend;
+
+/// Paper-reported dendrogram purity (for the side-by-side print).
+pub const PAPER: &[(&str, [f64; 5])] = &[
+    // (dataset, [gHHC, Grinch, Perch, Affinity, SCC])
+    ("covtype", [0.444, 0.430, 0.448, 0.433, 0.433]),
+    ("ilsvrc_sm", [0.381, 0.557, 0.531, 0.587, 0.622]),
+    ("aloi", [0.462, 0.504, 0.445, 0.478, 0.575]),
+    ("speaker", [f64::NAN, 0.48, 0.372, 0.424, 0.510]),
+    ("imagenet", [0.020, 0.065, 0.065, 0.055, 0.072]),
+    ("ilsvrc_lg", [0.367, f64::NAN, 0.207, 0.601, 0.606]),
+];
+
+/// One dataset's measured dendrogram purities.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub dataset: &'static str,
+    pub n: usize,
+    pub k: usize,
+    pub grinch: f64,
+    pub perch: f64,
+    pub affinity: f64,
+    pub scc: f64,
+}
+
+/// Run Table 1 on one dataset.
+pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table1Row {
+    let w = Workload::build(name, cfg, backend);
+    let labels = w.labels();
+
+    let scc_tree = w.scc(cfg).tree();
+    let scc_dp = dendrogram_purity(&scc_tree, labels);
+
+    let aff_tree = w.affinity().tree();
+    let aff_dp = dendrogram_purity(&aff_tree, labels);
+
+    let perch_tree = perch(&w.ds, cfg.measure, &PerchConfig::default());
+    let perch_dp = dendrogram_purity(&perch_tree, labels);
+
+    let grinch_tree = grinch(&w.ds, cfg.measure, &GrinchConfig::default());
+    let grinch_dp = dendrogram_purity(&grinch_tree, labels);
+
+    Table1Row {
+        dataset: w.spec.name,
+        n: w.ds.n,
+        k: w.k_true,
+        grinch: grinch_dp,
+        perch: perch_dp,
+        affinity: aff_dp,
+        scc: scc_dp,
+    }
+}
+
+/// Run the whole table; returns the formatted report.
+pub fn run(cfg: &EvalConfig, backend: &dyn Backend) -> String {
+    let mut out = String::from(
+        "Table 1 — Dendrogram Purity (measured on analogs; paper values in parens)\n",
+    );
+    out.push_str(&row(
+        "dataset",
+        &["n".into(), "k*".into(), "Grinch".into(), "Perch".into(), "Affinity".into(), "SCC".into()],
+    ));
+    for name in ALL_DATASETS {
+        let r = run_dataset(name, cfg, backend);
+        let paper = PAPER.iter().find(|(n, _)| n == name).map(|(_, v)| v);
+        let fmt = |ours: f64, idx: usize| -> String {
+            match paper {
+                Some(p) => format!("{} ({})", num(ours), num(p[idx])),
+                None => num(ours),
+            }
+        };
+        out.push_str(&format!(
+            "{:<10} {:>6} {:>5} {:>15} {:>15} {:>15} {:>15}\n",
+            r.dataset,
+            r.n,
+            r.k,
+            fmt(r.grinch, 1),
+            fmt(r.perch, 2),
+            fmt(r.affinity, 3),
+            fmt(r.scc, 4),
+        ));
+    }
+    out.push_str("gHHC: paper-only (0.444/0.381/0.462/-/0.020/0.367); see DESIGN.md §4.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn scc_beats_or_matches_online_baselines_on_separable_analog() {
+        let cfg = EvalConfig { scale: 0.12, knn_k: 10, rounds: 20, ..Default::default() };
+        let r = run_dataset("ilsvrc_sm", &cfg, &NativeBackend::new());
+        assert!(r.scc > 0.0 && r.scc <= 1.0);
+        // the paper's ordering on ILSVRC: SCC >= Affinity and both beat
+        // Perch; allow small tolerance at tiny scale
+        assert!(r.scc >= r.perch - 0.05, "scc {} vs perch {}", r.scc, r.perch);
+        assert!(r.scc >= r.affinity - 0.05, "scc {} vs affinity {}", r.scc, r.affinity);
+    }
+
+    #[test]
+    fn report_contains_all_rows() {
+        let cfg = EvalConfig { scale: 0.03, knn_k: 6, rounds: 10, ..Default::default() };
+        let report = run(&cfg, &NativeBackend::new());
+        for name in ALL_DATASETS {
+            assert!(report.contains(name), "missing {name} in report");
+        }
+    }
+}

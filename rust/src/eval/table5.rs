@@ -1,0 +1,62 @@
+//! Table 5 (App. B.6): best F1 achieved in *any* round — Affinity vs SCC.
+//! The paper's point: SCC's trees hold more high-quality alternative
+//! clusterings; its best-round F1 is consistently ≥ Affinity's.
+
+use super::common::{best_f1, num, EvalConfig, Workload, ALL_DATASETS};
+use crate::runtime::Backend;
+
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub dataset: &'static str,
+    pub affinity: f64,
+    pub scc: f64,
+}
+
+pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table5Row {
+    let w = Workload::build(name, cfg, backend);
+    let labels = w.labels();
+    let scc = best_f1(&w.scc(cfg).rounds, labels);
+    let affinity = best_f1(&w.affinity().rounds, labels);
+    Table5Row { dataset: w.spec.name, affinity, scc }
+}
+
+pub fn run(cfg: &EvalConfig, backend: &dyn Backend) -> String {
+    let mut out = String::from(
+        "Table 5 — Best F1 over any round (paper: SCC consistently best)\n\
+         dataset        Affinity        SCC\n",
+    );
+    let mut scc_wins = 0usize;
+    let mut total = 0usize;
+    for name in ALL_DATASETS {
+        let r = run_dataset(name, cfg, backend);
+        out.push_str(&format!(
+            "{:<14} {:>8} {:>10}\n",
+            r.dataset,
+            num(r.affinity),
+            num(r.scc)
+        ));
+        total += 1;
+        if r.scc >= r.affinity - 1e-9 {
+            scc_wins += 1;
+        }
+    }
+    out.push_str(&format!("SCC >= Affinity on {scc_wins}/{total} datasets.\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn scc_best_f1_competitive_on_separable_analog() {
+        // tiny-scale smoke: both methods must find strong rounds; the
+        // full-scale "SCC consistently best" claim is checked by the
+        // table5 bench at default scale (EXPERIMENTS.md)
+        let cfg = EvalConfig { scale: 0.12, knn_k: 10, rounds: 20, ..Default::default() };
+        let r = run_dataset("ilsvrc_sm", &cfg, &NativeBackend::new());
+        assert!(r.scc >= r.affinity - 0.10, "scc {} affinity {}", r.scc, r.affinity);
+        assert!(r.scc > 0.3);
+    }
+}

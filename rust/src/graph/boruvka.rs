@@ -1,0 +1,226 @@
+//! Borůvka minimum-spanning-forest rounds (Borůvka 1926).
+//!
+//! Each round, every current component selects its minimum-weight outgoing
+//! edge; all selected edges are contracted simultaneously. This is both
+//! the classic MST algorithm and, read round-by-round, **Affinity
+//! clustering** (Bateni et al. 2017): the per-round partitions form the
+//! hierarchy levels. Ties are broken deterministically by
+//! `(weight, min endpoint, max endpoint)` so runs are reproducible and the
+//! implicit MST is unique.
+
+use super::edges::CsrGraph;
+use super::unionfind::UnionFind;
+use crate::core::Partition;
+
+/// One candidate edge with a total deterministic order.
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    w: f32,
+    a: u32,
+    b: u32,
+}
+
+impl Cand {
+    #[inline]
+    fn key(&self) -> (f32, u32, u32) {
+        (self.w, self.a.min(self.b), self.a.max(self.b))
+    }
+    #[inline]
+    fn better_than(&self, other: &Cand) -> bool {
+        let (w1, x1, y1) = self.key();
+        let (w2, x2, y2) = other.key();
+        (w1, x1, y1) < (w2, x2, y2)
+    }
+}
+
+/// Run Borůvka rounds on `g` until components stop changing (MST forest of
+/// each connected component fully contracted). Returns the partition after
+/// each round, **excluding** the trivial singleton round — i.e.
+/// `result[0]` is the clustering after the first contraction. Capped at
+/// `max_rounds` (Borůvka needs ≤ ⌈log2 N⌉ rounds; the cap guards
+/// degenerate inputs).
+pub fn boruvka_rounds(g: &CsrGraph, max_rounds: usize) -> Vec<Partition> {
+    let n = g.n;
+    let mut uf = UnionFind::new(n);
+    let mut rounds: Vec<Partition> = Vec::new();
+    for _ in 0..max_rounds {
+        // min outgoing candidate per component root
+        let mut best: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
+        for u in 0..n as u32 {
+            let ru = uf.find(u);
+            for (v, w) in g.neighbors(u) {
+                let rv = uf.find(v);
+                if ru == rv {
+                    continue;
+                }
+                let cand = Cand { w, a: u, b: v };
+                match best.entry(ru) {
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(cand);
+                    }
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        if cand.better_than(e.get()) {
+                            e.insert(cand);
+                        }
+                    }
+                }
+            }
+        }
+        if best.is_empty() {
+            break;
+        }
+        let mut merged_any = false;
+        for cand in best.values() {
+            merged_any |= uf.union(cand.a, cand.b);
+        }
+        if !merged_any {
+            break;
+        }
+        rounds.push(Partition::new(uf.labels()));
+        if uf.components() <= 1 {
+            break;
+        }
+    }
+    rounds
+}
+
+/// Total weight of the minimum spanning forest implied by full Borůvka
+/// contraction (for testing against a Kruskal oracle).
+pub fn msf_weight(g: &CsrGraph) -> f64 {
+    let n = g.n;
+    let mut uf = UnionFind::new(n);
+    let mut total = 0.0f64;
+    loop {
+        let mut best: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
+        for u in 0..n as u32 {
+            let ru = uf.find(u);
+            for (v, w) in g.neighbors(u) {
+                let rv = uf.find(v);
+                if ru == rv {
+                    continue;
+                }
+                let cand = Cand { w, a: u, b: v };
+                match best.entry(ru) {
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(cand);
+                    }
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        if cand.better_than(e.get()) {
+                            e.insert(cand);
+                        }
+                    }
+                }
+            }
+        }
+        let mut merged_any = false;
+        for cand in best.values() {
+            if uf.union(cand.a, cand.b) {
+                total += cand.w as f64;
+                merged_any = true;
+            }
+        }
+        if !merged_any {
+            return total;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edges::Edge;
+
+    fn sym(n: usize, pairs: &[(u32, u32, f32)]) -> CsrGraph {
+        let mut edges = Vec::new();
+        for &(a, b, w) in pairs {
+            edges.push(Edge { src: a, dst: b, w });
+            edges.push(Edge { src: b, dst: a, w });
+        }
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn chain_contracts_in_log_rounds() {
+        // path 0-1-2-3-4-5-6-7 with unit weights
+        let pairs: Vec<(u32, u32, f32)> = (0..7).map(|i| (i, i + 1, 1.0)).collect();
+        let g = sym(8, &pairs);
+        let rounds = boruvka_rounds(&g, 64);
+        assert!(rounds.len() <= 3, "8-path must contract in <= log2(8) rounds");
+        assert_eq!(rounds.last().unwrap().num_clusters(), 1);
+    }
+
+    #[test]
+    fn respects_disconnected_components() {
+        let g = sym(5, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        let rounds = boruvka_rounds(&g, 64);
+        let last = rounds.last().unwrap();
+        assert_eq!(last.num_clusters(), 3); // {0,1} {2,3} {4}
+    }
+
+    fn kruskal_weight(n: usize, pairs: &[(u32, u32, f32)]) -> f64 {
+        let mut es: Vec<_> = pairs.to_vec();
+        es.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        let mut uf = UnionFind::new(n);
+        let mut total = 0.0;
+        for (a, b, w) in es {
+            if uf.union(a, b) {
+                total += w as f64;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn msf_weight_matches_kruskal_on_random_graphs() {
+        crate::util::prop::check("boruvka MSF == kruskal", 60, |g| {
+            let n = g.usize_in(2..40);
+            let m = g.usize_in(1..120);
+            // distinct weights to make the MST unique
+            let mut pairs = Vec::new();
+            let mut used = std::collections::HashSet::new();
+            for i in 0..m {
+                let a = g.rng().index(n) as u32;
+                let b = g.rng().index(n) as u32;
+                if a == b || !used.insert((a.min(b), a.max(b))) {
+                    continue;
+                }
+                pairs.push((a, b, 1.0 + i as f32 * 0.125));
+            }
+            if pairs.is_empty() {
+                return;
+            }
+            let graph = sym(n, &pairs);
+            let got = msf_weight(&graph);
+            let want = kruskal_weight(n, &pairs);
+            assert!((got - want).abs() < 1e-6, "boruvka {got} kruskal {want}");
+        });
+    }
+
+    #[test]
+    fn rounds_are_nested() {
+        crate::util::prop::check("boruvka rounds coarsen monotonically", 40, |g| {
+            let n = g.usize_in(2..40);
+            let m = g.usize_in(1..100);
+            let mut pairs = Vec::new();
+            let mut used = std::collections::HashSet::new();
+            for i in 0..m {
+                let a = g.rng().index(n) as u32;
+                let b = g.rng().index(n) as u32;
+                if a == b || !used.insert((a.min(b), a.max(b))) {
+                    continue;
+                }
+                pairs.push((a, b, 1.0 + (i % 7) as f32));
+            }
+            if pairs.is_empty() {
+                return;
+            }
+            let graph = sym(n, &pairs);
+            let rounds = boruvka_rounds(&graph, 64);
+            let mut prev = Partition::singletons(n);
+            for r in &rounds {
+                assert!(prev.refines(r), "round does not coarsen predecessor");
+                prev = r.clone();
+            }
+        });
+    }
+}

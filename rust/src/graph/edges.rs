@@ -1,0 +1,146 @@
+//! Weighted edge lists and CSR adjacency for the k-NN graph.
+//!
+//! The k-NN graph `W` (paper App. B.2) is stored as a directed edge list
+//! (query → neighbor, weight = chosen dissimilarity) and indexed as CSR
+//! when per-node scans are needed.
+
+/// A weighted directed edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: u32,
+    pub dst: u32,
+    pub w: f32,
+}
+
+/// Compressed-sparse-row adjacency over `n` nodes.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    pub n: usize,
+    /// Offsets into `dst`/`w`, length `n + 1`.
+    pub offsets: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub w: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// Build from a directed edge list (counting sort by `src`).
+    pub fn from_edges(n: usize, edges: &[Edge]) -> CsrGraph {
+        let mut counts = vec![0u32; n + 1];
+        for e in edges {
+            counts[e.src as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut dst = vec![0u32; edges.len()];
+        let mut w = vec![0f32; edges.len()];
+        for e in edges {
+            let pos = cursor[e.src as usize] as usize;
+            dst[pos] = e.dst;
+            w[pos] = e.w;
+            cursor[e.src as usize] += 1;
+        }
+        CsrGraph { n, offsets, dst, w }
+    }
+
+    /// Make the graph symmetric: for every edge (u→v, w) ensure (v→u, w)
+    /// exists; duplicate (u,v) pairs keep the **minimum** weight. Returns a
+    /// new graph. The paper's Eq. 25 linkage treats the k-NN graph as the
+    /// set of observed pairwise distances, which is symmetric.
+    pub fn symmetrized(&self) -> CsrGraph {
+        use std::collections::HashMap;
+        let mut best: HashMap<(u32, u32), f32> = HashMap::with_capacity(self.dst.len() * 2);
+        for u in 0..self.n as u32 {
+            for (v, w) in self.neighbors(u) {
+                if u == v {
+                    continue; // drop self loops
+                }
+                let key = if u < v { (u, v) } else { (v, u) };
+                best.entry(key).and_modify(|x| *x = x.min(w)).or_insert(w);
+            }
+        }
+        // sort pairs so the CSR layout is deterministic (HashMap iteration
+        // order is randomly seeded per instance)
+        let mut pairs: Vec<((u32, u32), f32)> = best.into_iter().collect();
+        pairs.sort_unstable_by_key(|&((a, b), _)| ((a as u64) << 32) | b as u64);
+        let mut edges = Vec::with_capacity(pairs.len() * 2);
+        for ((a, b), w) in pairs {
+            edges.push(Edge { src: a, dst: b, w });
+            edges.push(Edge { src: b, dst: a, w });
+        }
+        CsrGraph::from_edges(self.n, &edges)
+    }
+
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+    }
+
+    /// Iterate neighbors of `u` as `(dst, weight)`.
+    pub fn neighbors(&self, u: u32) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let a = self.offsets[u as usize] as usize;
+        let b = self.offsets[u as usize + 1] as usize;
+        self.dst[a..b].iter().copied().zip(self.w[a..b].iter().copied())
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.dst.len()
+    }
+
+    /// Undirected unique pair count (assumes symmetrized graph).
+    pub fn num_undirected(&self) -> usize {
+        self.dst.len() / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_edges() -> Vec<Edge> {
+        vec![
+            Edge { src: 0, dst: 1, w: 1.0 },
+            Edge { src: 2, dst: 0, w: 3.0 },
+            Edge { src: 0, dst: 2, w: 2.0 },
+        ]
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = CsrGraph::from_edges(3, &toy_edges());
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 0);
+        assert_eq!(g.degree(2), 1);
+        let n0: Vec<(u32, f32)> = g.neighbors(0).collect();
+        assert!(n0.contains(&(1, 1.0)));
+        assert!(n0.contains(&(2, 2.0)));
+    }
+
+    #[test]
+    fn symmetrize_keeps_min_weight() {
+        let g = CsrGraph::from_edges(3, &toy_edges()).symmetrized();
+        // (0,2) appears with weights 2.0 and 3.0 -> min 2.0, both directions
+        let w02 = g.neighbors(0).find(|&(v, _)| v == 2).unwrap().1;
+        let w20 = g.neighbors(2).find(|&(v, _)| v == 0).unwrap().1;
+        assert_eq!(w02, 2.0);
+        assert_eq!(w20, 2.0);
+        // (0,1) now bidirectional
+        assert!(g.neighbors(1).any(|(v, _)| v == 0));
+        assert_eq!(g.num_undirected(), 2);
+    }
+
+    #[test]
+    fn symmetrize_drops_self_loops() {
+        let g = CsrGraph::from_edges(2, &[Edge { src: 0, dst: 0, w: 1.0 }]).symmetrized();
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(4, &[]);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.degree(3), 0);
+    }
+}

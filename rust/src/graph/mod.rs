@@ -1,0 +1,14 @@
+//! Graph substrates: union-find (sequential and concurrent), weighted edge
+//! lists with CSR indexing, and Borůvka minimum-spanning-forest rounds.
+//!
+//! SCC's sub-cluster components (paper Def. 3) are connected components of
+//! a 1-NN/threshold graph; Affinity clustering (Bateni et al. 2017) is
+//! Borůvka MST rounds. Both sit on these structures.
+
+pub mod boruvka;
+pub mod edges;
+pub mod unionfind;
+
+pub use boruvka::boruvka_rounds;
+pub use edges::{CsrGraph, Edge};
+pub use unionfind::{ConcurrentUnionFind, UnionFind};

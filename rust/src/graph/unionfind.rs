@@ -1,0 +1,286 @@
+//! Disjoint-set union: a sequential implementation (union by rank + path
+//! halving) and a lock-free concurrent one (atomic parent CAS with
+//! rank-free linking by index order — Anderson & Woll style hooking), used
+//! by the coordinator to merge sub-cluster components discovered by
+//! parallel workers.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Sequential disjoint-set union with union-by-rank and path halving.
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect(), rank: vec![0; n], components: n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint components.
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp; // path halving
+            x = gp;
+        }
+        x
+    }
+
+    /// Union the sets of `a` and `b`; returns `true` if they were distinct.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[ra as usize] == self.rank[rb as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        self.components -= 1;
+        true
+    }
+
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Component label per element, compacted to `0..#components` in order
+    /// of first appearance.
+    pub fn labels(&mut self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut map = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(n);
+        let mut next = 0u32;
+        for x in 0..n as u32 {
+            let r = self.find(x);
+            let id = *map.entry(r).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            });
+            out.push(id);
+        }
+        out
+    }
+}
+
+/// Lock-free concurrent union-find. `find` uses path compression via CAS;
+/// `union` links the larger root index under the smaller (deterministic
+/// tie-break), retrying on contention. Wait-free in practice for our edge
+/// densities.
+pub struct ConcurrentUnionFind {
+    parent: Vec<AtomicU32>,
+}
+
+impl ConcurrentUnionFind {
+    pub fn new(n: usize) -> Self {
+        ConcurrentUnionFind { parent: (0..n as u32).map(AtomicU32::new).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    pub fn find(&self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize].load(Ordering::Acquire);
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize].load(Ordering::Acquire);
+            if gp != p {
+                // path halving (best-effort)
+                let _ = self.parent[x as usize].compare_exchange(
+                    p,
+                    gp,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
+            }
+            x = gp;
+        }
+    }
+
+    /// Union; safe to call concurrently from many threads.
+    pub fn union(&self, a: u32, b: u32) {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        loop {
+            if ra == rb {
+                return;
+            }
+            // deterministic orientation: larger index points to smaller
+            let (hi, lo) = if ra > rb { (ra, rb) } else { (rb, ra) };
+            match self.parent[hi as usize].compare_exchange(
+                hi,
+                lo,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(_) => {
+                    ra = self.find(hi);
+                    rb = self.find(lo);
+                }
+            }
+        }
+    }
+
+    /// Collapse into a sequential UnionFind-style label vector
+    /// (single-threaded call after parallel unions complete).
+    pub fn labels(&self) -> Vec<u32> {
+        let n = self.parent.len();
+        let mut map = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(n);
+        let mut next = 0u32;
+        for x in 0..n as u32 {
+            let r = self.find(x);
+            let id = *map.entry(r).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            });
+            out.push(id);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.components(), 5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(3, 4));
+        assert!(!uf.union(1, 0));
+        assert_eq!(uf.components(), 3);
+        assert!(uf.same(0, 1));
+        assert!(!uf.same(0, 3));
+        let labels = uf.labels();
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[2]);
+    }
+
+    #[test]
+    fn transitive_unions() {
+        let mut uf = UnionFind::new(10);
+        for i in 0..9 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.components(), 1);
+        assert!(uf.same(0, 9));
+    }
+
+    /// Oracle: label connected components by BFS over the explicit edges.
+    fn bfs_labels(n: usize, edges: &[(u32, u32)]) -> Vec<u32> {
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            adj[a as usize].push(b);
+            adj[b as usize].push(a);
+        }
+        let mut label = vec![u32::MAX; n];
+        let mut next = 0;
+        for s in 0..n {
+            if label[s] != u32::MAX {
+                continue;
+            }
+            let mut q = std::collections::VecDeque::from([s as u32]);
+            label[s] = next;
+            while let Some(v) = q.pop_front() {
+                for &w in &adj[v as usize] {
+                    if label[w as usize] == u32::MAX {
+                        label[w as usize] = next;
+                        q.push_back(w);
+                    }
+                }
+            }
+            next += 1;
+        }
+        label
+    }
+
+    #[test]
+    fn matches_bfs_oracle_on_random_graphs() {
+        crate::util::prop::check("union-find == BFS components", 100, |g| {
+            let n = g.usize_in(1..80);
+            let m = g.scaled_len(160);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.rng().index(n) as u32, g.rng().index(n) as u32))
+                .collect();
+            let mut uf = UnionFind::new(n);
+            for &(a, b) in &edges {
+                uf.union(a, b);
+            }
+            let want = bfs_labels(n, &edges);
+            let got = uf.labels();
+            // same grouping (labels both first-appearance ordered => equal)
+            assert_eq!(got, want);
+            let distinct: std::collections::HashSet<_> = want.iter().collect();
+            assert_eq!(uf.components(), distinct.len());
+        });
+    }
+
+    #[test]
+    fn concurrent_matches_sequential() {
+        crate::util::prop::check("concurrent UF == sequential UF", 40, |g| {
+            let n = g.usize_in(1..200);
+            let m = g.scaled_len(400);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.rng().index(n) as u32, g.rng().index(n) as u32))
+                .collect();
+            let cuf = ConcurrentUnionFind::new(n);
+            crate::util::par::parallel_ranges(edges.len(), 4, |_, r| {
+                for &(a, b) in &edges[r] {
+                    cuf.union(a, b);
+                }
+            });
+            let mut uf = UnionFind::new(n);
+            for &(a, b) in &edges {
+                uf.union(a, b);
+            }
+            assert_eq!(cuf.labels(), uf.labels());
+        });
+    }
+
+    #[test]
+    fn concurrent_stress_many_threads() {
+        let n = 10_000;
+        let cuf = ConcurrentUnionFind::new(n);
+        // ring unions from 8 threads: final = 1 component
+        crate::util::par::parallel_ranges(n, 8, |_, r| {
+            for i in r {
+                cuf.union(i as u32, ((i + 1) % n) as u32);
+            }
+        });
+        let labels = cuf.labels();
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+}

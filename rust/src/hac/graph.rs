@@ -1,0 +1,193 @@
+//! Graph-restricted HAC: exact greedy agglomeration under the k-NN-graph
+//! average linkage (Eq. 25) — the "HAC" baseline of paper App. B.4
+//! (Fig. 5), which runs HAC on the same sparsified graph SCC uses.
+//!
+//! Lazy-deletion binary heap over cluster-pair linkages: pop the global
+//! minimum, skip stale entries, merge, re-aggregate the merged cluster's
+//! adjacency, push refreshed pairs. O(E log E) amortized per merge wave;
+//! exactly one merge per round, which is precisely why it is slower than
+//! SCC (the comparison Fig. 5 makes).
+
+use crate::core::{Partition, Tree};
+use crate::graph::{CsrGraph, UnionFind};
+use crate::linkage::LinkAgg;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Heap key: ordered by (avg, a, b) ascending via Reverse.
+#[derive(Debug, PartialEq)]
+struct Key(f64, u32, u32);
+
+impl Eq for Key {}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+            .then(self.2.cmp(&other.2))
+    }
+}
+
+/// Exact graph-restricted average-linkage HAC. Returns the merge list
+/// (tree-node ids as in [`Tree::from_merges`]) and the tree. Stops when no
+/// connected pairs remain (forest roots joined by the virtual root).
+pub fn graph_hac(graph: &CsrGraph) -> (Tree, Vec<(u32, u32, f64)>) {
+    let n = graph.n;
+    // adjacency: cluster -> (neighbor -> aggregate)
+    let mut adj: Vec<HashMap<u32, LinkAgg>> = vec![HashMap::new(); n];
+    for u in 0..n as u32 {
+        for (v, w) in graph.neighbors(u) {
+            if u < v {
+                let agg = LinkAgg::new(w as f64);
+                adj[u as usize].insert(v, agg);
+                adj[v as usize].insert(u, agg);
+            }
+        }
+    }
+    let mut heap: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+    for a in 0..n as u32 {
+        for (&b, agg) in &adj[a as usize] {
+            if a < b {
+                heap.push(Reverse(Key(agg.avg(), a, b)));
+            }
+        }
+    }
+
+    let mut uf = UnionFind::new(n);
+    // cluster root -> current tree node id
+    let mut node_id: Vec<u32> = (0..n as u32).collect();
+    let mut merges: Vec<(u32, u32, f64)> = Vec::with_capacity(n.saturating_sub(1));
+
+    while let Some(Reverse(Key(avg, a, b))) = heap.pop() {
+        let (ra, rb) = (uf.find(a), uf.find(b));
+        if ra == rb {
+            continue; // stale: already merged
+        }
+        // stale check: entry must match the *current* aggregate of (ra, rb)
+        let cur = adj[ra as usize].get(&rb).copied();
+        let fresh = matches!(cur, Some(agg) if (agg.avg() - avg).abs() <= f64::EPSILON * avg.abs().max(1.0))
+            && (a, b) == (ra.min(rb), ra.max(rb));
+        if !fresh {
+            continue;
+        }
+        // merge rb into ra (keep the smaller root for determinism)
+        let (keep, gone) = (ra.min(rb), ra.max(rb));
+        merges.push((node_id[keep as usize], node_id[gone as usize], avg));
+        uf.union(keep, gone);
+        let root = uf.find(keep);
+        node_id[root as usize] = (n + merges.len() - 1) as u32;
+
+        // re-aggregate adjacency of the merged cluster
+        let gone_adj = std::mem::take(&mut adj[gone as usize]);
+        let mut keep_adj = std::mem::take(&mut adj[keep as usize]);
+        keep_adj.remove(&gone);
+        for (nbr, agg) in gone_adj {
+            if nbr == keep {
+                continue;
+            }
+            keep_adj.entry(nbr).and_modify(|e| e.merge(&agg)).or_insert(agg);
+        }
+        // rewrite neighbors' back-references and push refreshed keys
+        let root = uf.find(keep); // == keep by union order (min root kept)
+        for (&nbr, agg) in &keep_adj {
+            let na = &mut adj[nbr as usize];
+            na.remove(&keep);
+            na.remove(&gone);
+            na.insert(root, *agg);
+            let (x, y) = (root.min(nbr), root.max(nbr));
+            heap.push(Reverse(Key(agg.avg(), x, y)));
+        }
+        adj[root as usize] = keep_adj;
+    }
+    let tree = Tree::from_merges(n, &merges);
+    (tree, merges)
+}
+
+/// Flat partition with `k` clusters from the graph-HAC merge order.
+pub fn graph_hac_cut(n: usize, merges: &[(u32, u32, f64)], k: usize) -> Partition {
+    super::cut_to_k(n, merges, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::metrics::{dendrogram_purity, pairwise_prf};
+
+    #[test]
+    fn recovers_separated_mixture() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 300,
+            d: 4,
+            k: 6,
+            sigma: 0.04,
+            delta: 10.0,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 10, Measure::L2Sq);
+        let (tree, merges) = graph_hac(&g);
+        tree.validate().unwrap();
+        let labels = ds.labels.as_ref().unwrap();
+        let dp = dendrogram_purity(&tree, labels);
+        assert!(dp > 0.99, "dp {dp}");
+        let p = graph_hac_cut(ds.n, &merges, 6);
+        let f1 = pairwise_prf(&p, labels).f1;
+        assert!(f1 > 0.99, "f1 {f1}");
+    }
+
+    #[test]
+    fn merge_heights_non_decreasing() {
+        // average linkage on a graph is reducible => monotone merges
+        let ds = separated_mixture(&MixtureSpec { n: 120, d: 3, k: 3, ..Default::default() });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let (_, merges) = graph_hac(&g);
+        for w in merges.windows(2) {
+            assert!(w[0].2 <= w[1].2 + 1e-9, "heights decreased: {} -> {}", w[0].2, w[1].2);
+        }
+    }
+
+    #[test]
+    fn agrees_with_dense_hac_on_complete_graph() {
+        // on a complete graph, Eq. 25 average linkage == classic UPGMA
+        let ds = separated_mixture(&MixtureSpec { n: 40, d: 3, k: 4, ..Default::default() });
+        let g = knn_graph(&ds, ds.n - 1, Measure::L2Sq); // complete
+        let (_, sparse_merges) = graph_hac(&g);
+        let (_, dense_merges) =
+            crate::hac::hac_dense(&ds, Measure::L2Sq, crate::hac::HacLinkage::Average);
+        assert_eq!(sparse_merges.len(), dense_merges.len());
+        for (s, d) in sparse_merges.iter().zip(&dense_merges) {
+            assert!(
+                (s.2 - d.2).abs() < 1e-5 * (1.0 + d.2.abs()),
+                "heights differ: {} vs {}",
+                s.2,
+                d.2
+            );
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_yields_forest_cut() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 100,
+            d: 3,
+            k: 4,
+            sigma: 0.02,
+            delta: 20.0,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 3, Measure::L2Sq);
+        let (tree, merges) = graph_hac(&g);
+        tree.validate().unwrap();
+        assert!(merges.len() < ds.n - 1, "cannot merge across components");
+    }
+}

@@ -1,0 +1,278 @@
+//! Exact hierarchical agglomerative clustering (paper Alg. 2, §3.5).
+//!
+//! The nearest-neighbor-chain algorithm computes the exact HAC dendrogram
+//! in O(N²) time and memory for any **reducible** linkage (Bruynooghe
+//! 1978) — single, complete, average, Ward — using Lance–Williams updates.
+//! This is the baseline SCC is compared against in App. B.4 (Fig. 5) and
+//! the object of the Prop. 2 equivalence (SCC with per-merge thresholds
+//! reproduces HAC's tree — tested in `tests/scc_hac_equivalence.rs`).
+
+pub mod graph;
+
+use crate::core::{Dataset, Tree};
+use crate::linkage::Measure;
+
+/// Linkage function for dense HAC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HacLinkage {
+    Single,
+    Complete,
+    /// Unweighted average (UPGMA) — the paper's Eq. 1 linkage.
+    Average,
+    /// Ward's minimum-variance criterion.
+    Ward,
+}
+
+impl HacLinkage {
+    /// Lance–Williams update: distance from the merge of `a` (size na) and
+    /// `b` (size nb) to cluster `c` (size nc), given the pre-merge
+    /// distances. Ward assumes squared-Euclidean input distances.
+    #[inline]
+    fn update(&self, dac: f64, dbc: f64, dab: f64, na: f64, nb: f64, nc: f64) -> f64 {
+        match self {
+            HacLinkage::Single => dac.min(dbc),
+            HacLinkage::Complete => dac.max(dbc),
+            HacLinkage::Average => (na * dac + nb * dbc) / (na + nb),
+            HacLinkage::Ward => {
+                let s = na + nb + nc;
+                ((na + nc) * dac + (nb + nc) * dbc - nc * dab) / s
+            }
+        }
+    }
+}
+
+/// A single HAC merge: cluster node ids (in [`Tree`] numbering: leaves
+/// `0..n`, the t-th merge creates node `n+t`) and the linkage height.
+pub type Merge = (u32, u32, f64);
+
+/// Exact HAC via the NN-chain algorithm. Returns the merge list in
+/// **execution order** (heights are non-decreasing for reducible
+/// linkages after the canonical reordering applied here) and the tree.
+///
+/// O(N²) memory: suitable for N up to ~20k (the paper itself only runs
+/// HAC on small synthetic data, App. B.4).
+pub fn hac_dense(ds: &Dataset, measure: Measure, linkage: HacLinkage) -> (Tree, Vec<Merge>) {
+    let n = ds.n;
+    assert!(n >= 1);
+    if n == 1 {
+        return (Tree::from_merges(1, &[]), vec![]);
+    }
+    // condensed distance matrix, row-major upper triangle accessor
+    let mut dist = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = measure.dissim(ds.row(i), ds.row(j)) as f64;
+            dist[i * n + j] = d;
+            dist[j * n + i] = d;
+        }
+    }
+    nn_chain(n, &mut dist, linkage)
+}
+
+/// NN-chain over an explicit distance matrix (`n × n`, symmetric).
+/// Exposed for tests that need custom metrics.
+pub fn nn_chain(n: usize, dist: &mut [f64], linkage: HacLinkage) -> (Tree, Vec<Merge>) {
+    // active cluster -> representative tree-node id & size
+    let mut node_id: Vec<u32> = (0..n as u32).collect();
+    let mut size: Vec<f64> = vec![1.0; n];
+    let mut active: Vec<bool> = vec![true; n];
+    let mut merges_raw: Vec<(usize, usize, f64)> = Vec::with_capacity(n - 1);
+
+    let mut chain: Vec<usize> = Vec::with_capacity(n);
+    let mut remaining = n;
+    while remaining > 1 {
+        if chain.is_empty() {
+            let start = (0..n).find(|&i| active[i]).unwrap();
+            chain.push(start);
+        }
+        loop {
+            let top = *chain.last().unwrap();
+            // nearest active neighbor of top (deterministic tie-break by id)
+            let mut best = usize::MAX;
+            let mut best_d = f64::INFINITY;
+            for j in 0..n {
+                if j == top || !active[j] {
+                    continue;
+                }
+                let d = dist[top * n + j];
+                if d < best_d || (d == best_d && j < best) {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            let prev = if chain.len() >= 2 { chain[chain.len() - 2] } else { usize::MAX };
+            if best == prev {
+                // reciprocal nearest neighbors: merge top & prev
+                chain.pop();
+                chain.pop();
+                let (a, b) = (top.min(prev), top.max(prev));
+                merges_raw.push((a, b, best_d));
+                // Lance-Williams update into slot `a`; deactivate `b`
+                let (na, nb) = (size[a], size[b]);
+                let dab = dist[a * n + b];
+                for c in 0..n {
+                    if !active[c] || c == a || c == b {
+                        continue;
+                    }
+                    let nd =
+                        linkage.update(dist[a * n + c], dist[b * n + c], dab, na, nb, size[c]);
+                    dist[a * n + c] = nd;
+                    dist[c * n + a] = nd;
+                }
+                size[a] += size[b];
+                active[b] = false;
+                remaining -= 1;
+                break;
+            } else {
+                chain.push(best);
+            }
+        }
+    }
+
+    // canonical order: NN-chain discovers merges out of height order;
+    // sort stably by height (valid for reducible linkages) and renumber.
+    let mut order: Vec<usize> = (0..merges_raw.len()).collect();
+    order.sort_by(|&x, &y| {
+        merges_raw[x].2.partial_cmp(&merges_raw[y].2).unwrap().then(x.cmp(&y))
+    });
+    // replay merges in sorted order, tracking each point-set's current node
+    let mut uf = crate::graph::UnionFind::new(n);
+    let mut merges: Vec<Merge> = Vec::with_capacity(merges_raw.len());
+    for (t, &oi) in order.iter().enumerate() {
+        let (a, b, h) = merges_raw[oi];
+        let ra = uf.find(a as u32);
+        let rb = uf.find(b as u32);
+        let (na, nb) = (node_id[ra as usize], node_id[rb as usize]);
+        merges.push((na, nb, h));
+        uf.union(ra, rb);
+        let newroot = uf.find(ra);
+        node_id[newroot as usize] = (n + t) as u32;
+    }
+    let tree = Tree::from_merges(n, &merges);
+    (tree, merges)
+}
+
+/// Flat clustering with exactly `k` clusters from a binary HAC merge list
+/// (stop after `n − k` merges).
+pub fn cut_to_k(n: usize, merges: &[Merge], k: usize) -> crate::core::Partition {
+    let k = k.clamp(1, n);
+    let mut uf = crate::graph::UnionFind::new(n);
+    let mut node_members: Vec<u32> = (0..n as u32).collect(); // root -> any member
+    let mut node_of: std::collections::HashMap<u32, u32> = (0..n as u32)
+        .map(|i| (i, i))
+        .collect();
+    let mut next_id = n as u32;
+    for &(a, b, _) in merges {
+        if uf.components() <= k {
+            break;
+        }
+        // a and b are tree-node ids; find a member point of each
+        let pa = member_of(a, &node_of, &node_members);
+        let pb = member_of(b, &node_of, &node_members);
+        uf.union(pa, pb);
+        let root = uf.find(pa);
+        node_members[root as usize] = pa;
+        node_of.insert(next_id, pa);
+        next_id += 1;
+    }
+    crate::core::Partition::new(uf.labels())
+}
+
+fn member_of(
+    node: u32,
+    node_of: &std::collections::HashMap<u32, u32>,
+    _members: &[u32],
+) -> u32 {
+    *node_of.get(&node).expect("merge references known node")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::pairwise_prf;
+
+    fn line_dataset() -> Dataset {
+        // points at x = 0, 1, 10, 11, 30
+        Dataset::new("line", vec![0.0, 1.0, 10.0, 11.0, 30.0], 5, 1)
+    }
+
+    #[test]
+    fn single_linkage_on_line() {
+        let ds = line_dataset();
+        let (tree, merges) = hac_dense(&ds, Measure::L2Sq, HacLinkage::Single);
+        tree.validate().unwrap();
+        assert_eq!(merges.len(), 4);
+        // first merges are the two unit-distance pairs
+        assert_eq!(merges[0].2, 1.0);
+        assert_eq!(merges[1].2, 1.0);
+        // heights non-decreasing
+        for w in merges.windows(2) {
+            assert!(w[0].2 <= w[1].2);
+        }
+    }
+
+    #[test]
+    fn average_linkage_heights_match_manual() {
+        // two pairs {0,1} and {10,11}: avg linkage between pairs =
+        // mean(100, 121, 81, 100) = 100.5 in l2sq
+        let ds = Dataset::new("p", vec![0.0, 1.0, 10.0, 11.0], 4, 1);
+        let (_, merges) = hac_dense(&ds, Measure::L2Sq, HacLinkage::Average);
+        assert_eq!(merges.len(), 3);
+        assert!((merges[2].2 - 100.5).abs() < 1e-9, "got {}", merges[2].2);
+    }
+
+    #[test]
+    fn cut_to_k_recovers_blocks() {
+        let ds = line_dataset();
+        let (_, merges) = hac_dense(&ds, Measure::L2Sq, HacLinkage::Average);
+        let p = cut_to_k(5, &merges, 3);
+        assert_eq!(p.num_clusters(), 3);
+        let want = crate::core::Partition::new(vec![0, 0, 1, 1, 2]);
+        assert!(p.same_clustering(&want));
+    }
+
+    #[test]
+    fn hac_recovers_separated_mixture() {
+        let ds = crate::data::mixture::separated_mixture(&crate::data::mixture::MixtureSpec {
+            n: 120,
+            d: 3,
+            k: 4,
+            sigma: 0.05,
+            delta: 10.0,
+            ..Default::default()
+        });
+        for linkage in [HacLinkage::Single, HacLinkage::Complete, HacLinkage::Average, HacLinkage::Ward] {
+            let (tree, merges) = hac_dense(&ds, Measure::L2Sq, linkage);
+            tree.validate().unwrap();
+            let p = cut_to_k(ds.n, &merges, 4);
+            let f1 = pairwise_prf(&p, ds.labels.as_ref().unwrap()).f1;
+            assert!(f1 > 0.999, "{linkage:?} f1 {f1}");
+        }
+    }
+
+    #[test]
+    fn ward_merges_monotone() {
+        let ds = crate::data::mixture::separated_mixture(&crate::data::mixture::MixtureSpec {
+            n: 60,
+            d: 2,
+            k: 3,
+            ..Default::default()
+        });
+        let (_, merges) = hac_dense(&ds, Measure::L2Sq, HacLinkage::Ward);
+        for w in merges.windows(2) {
+            assert!(w[0].2 <= w[1].2 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let ds = Dataset::new("one", vec![1.0], 1, 1);
+        let (tree, merges) = hac_dense(&ds, Measure::L2Sq, HacLinkage::Average);
+        assert!(merges.is_empty());
+        assert_eq!(tree.n_leaves, 1);
+        let ds2 = Dataset::new("two", vec![1.0, 2.0], 2, 1);
+        let (tree2, merges2) = hac_dense(&ds2, Measure::L2Sq, HacLinkage::Average);
+        assert_eq!(merges2.len(), 1);
+        tree2.validate().unwrap();
+    }
+}

@@ -1,0 +1,169 @@
+//! Lloyd's k-means with k-means++ seeding (Arthur & Vassilvitskii 2007) —
+//! the flat-clustering baseline of paper Table 2.
+//!
+//! Assignment runs through a [`Backend`] so the same AOT tile kernel that
+//! powers k-NN construction accelerates k-means here (and DP-means in
+//! [`crate::dpmeans`]).
+
+use crate::core::{Dataset, Partition};
+use crate::linkage::Measure;
+use crate::runtime::Backend;
+use crate::util::Rng;
+
+/// k-means configuration.
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative cost improvement below which iteration stops.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl KMeansConfig {
+    pub fn new(k: usize) -> Self {
+        KMeansConfig { k, max_iters: 50, tol: 1e-4, seed: 0 }
+    }
+}
+
+/// k-means result.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub partition: Partition,
+    pub centers: Vec<f32>,
+    pub cost: f64,
+    pub iters: usize,
+}
+
+/// k-means++ seeding: first center uniform, then each next center sampled
+/// with probability proportional to the squared distance to the nearest
+/// chosen center.
+pub fn kmeanspp_init(ds: &Dataset, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let k = k.clamp(1, ds.n);
+    let d = ds.d;
+    let mut centers = Vec::with_capacity(k * d);
+    let first = rng.index(ds.n);
+    centers.extend_from_slice(ds.row(first));
+    let mut min_d2: Vec<f64> = (0..ds.n)
+        .map(|i| Measure::L2Sq.dissim(ds.row(i), ds.row(first)) as f64)
+        .collect();
+    while centers.len() / d < k {
+        let total: f64 = min_d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.index(ds.n) // degenerate: all points identical
+        } else {
+            rng.weighted(&min_d2)
+        };
+        centers.extend_from_slice(ds.row(next));
+        let c = centers.len() / d - 1;
+        let crow = &centers[c * d..(c + 1) * d];
+        for i in 0..ds.n {
+            let dd = Measure::L2Sq.dissim(ds.row(i), crow) as f64;
+            if dd < min_d2[i] {
+                min_d2[i] = dd;
+            }
+        }
+    }
+    centers
+}
+
+/// Run Lloyd's algorithm from k-means++ seeds.
+pub fn run(ds: &Dataset, config: &KMeansConfig, backend: &dyn Backend) -> KMeansResult {
+    let d = ds.d;
+    let mut rng = Rng::new(config.seed);
+    let mut centers = kmeanspp_init(ds, config.k, &mut rng);
+    let k = centers.len() / d;
+    let mut assign = vec![0u32; ds.n];
+    let mut prev_cost = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..config.max_iters {
+        iters = it + 1;
+        let (idx, dist) = backend.assign(&ds.data, ds.n, &centers, k, d, Measure::L2Sq);
+        assign = idx;
+        let cost: f64 = dist.iter().map(|&x| x as f64).sum();
+        // update means
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for i in 0..ds.n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            for (s, &x) in sums[c * d..(c + 1) * d].iter_mut().zip(ds.row(i)) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the farthest point
+                let far = (0..ds.n)
+                    .max_by(|&a, &b| dist[a].partial_cmp(&dist[b]).unwrap())
+                    .unwrap();
+                centers[c * d..(c + 1) * d].copy_from_slice(ds.row(far));
+                continue;
+            }
+            for (j, s) in sums[c * d..(c + 1) * d].iter().enumerate() {
+                centers[c * d + j] = (*s / counts[c] as f64) as f32;
+            }
+        }
+        if prev_cost.is_finite() && (prev_cost - cost).abs() <= config.tol * prev_cost.abs() {
+            break;
+        }
+        prev_cost = cost;
+    }
+    let partition = Partition::new(assign);
+    let cost = crate::metrics::kmeans_cost(ds, &partition);
+    KMeansResult { partition, centers, cost, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::metrics::pairwise_prf;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn recovers_separated_mixture() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 400,
+            d: 4,
+            k: 5,
+            sigma: 0.04,
+            delta: 10.0,
+            ..Default::default()
+        });
+        let res = run(&ds, &KMeansConfig::new(5), &NativeBackend::new());
+        let f1 = pairwise_prf(&res.partition, ds.labels.as_ref().unwrap()).f1;
+        assert!(f1 > 0.95, "f1 {f1}");
+        assert_eq!(res.partition.num_clusters(), 5);
+    }
+
+    #[test]
+    fn cost_decreases_with_k() {
+        let ds = separated_mixture(&MixtureSpec { n: 200, d: 3, k: 4, ..Default::default() });
+        let c2 = run(&ds, &KMeansConfig::new(2), &NativeBackend::new()).cost;
+        let c8 = run(&ds, &KMeansConfig::new(8), &NativeBackend::new()).cost;
+        assert!(c8 < c2);
+    }
+
+    #[test]
+    fn kpp_centers_are_dataset_rows() {
+        let ds = separated_mixture(&MixtureSpec { n: 50, d: 3, k: 3, ..Default::default() });
+        let mut rng = Rng::new(1);
+        let centers = kmeanspp_init(&ds, 4, &mut rng);
+        assert_eq!(centers.len(), 4 * 3);
+        for c in 0..4 {
+            let row = &centers[c * 3..(c + 1) * 3];
+            assert!((0..ds.n).any(|i| ds.row(i) == row));
+        }
+    }
+
+    #[test]
+    fn handles_k_equal_one_and_k_ge_n() {
+        let ds = separated_mixture(&MixtureSpec { n: 20, d: 2, k: 2, ..Default::default() });
+        let r1 = run(&ds, &KMeansConfig::new(1), &NativeBackend::new());
+        assert_eq!(r1.partition.num_clusters(), 1);
+        let rn = run(&ds, &KMeansConfig::new(40), &NativeBackend::new());
+        assert!(rn.partition.num_clusters() <= 20);
+        assert!(rn.cost < 1e-6); // every point can be its own center
+    }
+}

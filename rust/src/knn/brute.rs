@@ -1,0 +1,190 @@
+//! Exact tiled brute-force k-NN graph construction.
+//!
+//! Queries are processed in blocks across worker threads; candidates are
+//! scanned in fixed-size tiles through a [`Backend`] (native rust or the
+//! PJRT-compiled Pallas kernel). Per-tile top-k results are merged in rust
+//! — merging per-tile exact top-k lists yields the exact global top-k, so
+//! the backend tile shape is a pure performance knob.
+
+use super::{topk_to_graph, KSmallest, TopK};
+use crate::core::Dataset;
+use crate::graph::CsrGraph;
+use crate::linkage::Measure;
+use crate::runtime::{Backend, NativeBackend};
+use crate::util::par;
+
+/// Candidate tile width. Matches the `M` of the AOT artifacts so the PJRT
+/// path runs unpadded except on the final tile.
+pub const CAND_TILE: usize = 2048;
+/// Query block height per backend call.
+pub const QUERY_TILE: usize = 256;
+
+/// Build the exact k-NN graph of `ds` under `measure` using the native
+/// backend and all available threads.
+pub fn knn_graph(ds: &Dataset, k: usize, measure: Measure) -> CsrGraph {
+    knn_graph_with_backend(ds, k, measure, &NativeBackend::new(), par::default_threads())
+}
+
+/// Build the exact k-NN graph through an explicit backend.
+///
+/// The self-match (query == candidate, dissimilarity 0) is dropped, so
+/// each row holds up to `k` *other* points.
+pub fn knn_graph_with_backend(
+    ds: &Dataset,
+    k: usize,
+    measure: Measure,
+    backend: &dyn Backend,
+    threads: usize,
+) -> CsrGraph {
+    let topk = all_pairs_topk(ds, k, measure, backend, threads);
+    topk_to_graph(ds.n, &topk)
+}
+
+/// The tiled all-pairs top-k (exposed for tests and the runtime
+/// cross-check). Excludes self matches.
+pub fn all_pairs_topk(
+    ds: &Dataset,
+    k: usize,
+    measure: Measure,
+    backend: &dyn Backend,
+    threads: usize,
+) -> TopK {
+    let n = ds.n;
+    let d = ds.d;
+    // fetch k+1 per tile so dropping the self-match still leaves k
+    let kk = (k + 1).min(n.max(1));
+    let mut out = TopK::new(n, k);
+    let out_ptr = SyncOut { idx: out.idx.as_mut_ptr() as usize, dist: out.dist.as_mut_ptr() as usize };
+    par::parallel_ranges(n.div_ceil(QUERY_TILE), threads, |_, block_range| {
+        for bi in block_range {
+            let q0 = bi * QUERY_TILE;
+            let q1 = (q0 + QUERY_TILE).min(n);
+            let nq = q1 - q0;
+            let queries = &ds.data[q0 * d..q1 * d];
+            let mut heaps: Vec<KSmallest> = (0..nq).map(|_| KSmallest::new(k)).collect();
+            let mut c0 = 0usize;
+            while c0 < n {
+                let c1 = (c0 + CAND_TILE).min(n);
+                let cands = &ds.data[c0 * d..c1 * d];
+                let tile = backend.pairwise_topk(queries, nq, cands, c1 - c0, d, kk, measure);
+                for q in 0..nq {
+                    let (idx, dist) = tile.row(q);
+                    for j in 0..kk {
+                        if idx[j] == u32::MAX {
+                            break;
+                        }
+                        let global = idx[j] + c0 as u32;
+                        if global as usize == q0 + q {
+                            continue; // self match
+                        }
+                        heaps[q].push(dist[j], global);
+                    }
+                }
+                c0 = c1;
+            }
+            // write rows (each thread owns disjoint rows, so the raw
+            // pointer writes are race-free)
+            for (q, heap) in heaps.iter().enumerate() {
+                let row = q0 + q;
+                unsafe {
+                    let idx_slice = std::slice::from_raw_parts_mut(
+                        (out_ptr.idx as *mut u32).add(row * k),
+                        k,
+                    );
+                    let dist_slice = std::slice::from_raw_parts_mut(
+                        (out_ptr.dist as *mut f32).add(row * k),
+                        k,
+                    );
+                    heap.write_row(idx_slice, dist_slice);
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Shared raw output pointers. Safety: `parallel_ranges` hands each thread
+/// a disjoint set of query blocks, hence disjoint output rows.
+#[derive(Clone, Copy)]
+struct SyncOut {
+    idx: usize,
+    dist: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+
+    fn naive_knn(ds: &Dataset, k: usize, measure: Measure) -> Vec<Vec<(f32, u32)>> {
+        (0..ds.n)
+            .map(|i| {
+                let mut all: Vec<(f32, u32)> = (0..ds.n)
+                    .filter(|&j| j != i)
+                    .map(|j| (measure.dissim(ds.row(i), ds.row(j)), j as u32))
+                    .collect();
+                all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                all.truncate(k);
+                all
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tiled_topk_matches_naive() {
+        let ds = separated_mixture(&MixtureSpec { n: 300, d: 5, k: 6, ..Default::default() });
+        for measure in [Measure::L2Sq, Measure::CosineDist] {
+            let topk = all_pairs_topk(&ds, 4, measure, &NativeBackend::new(), 3);
+            let want = naive_knn(&ds, 4, measure);
+            for q in 0..ds.n {
+                let (_idx, dist) = topk.row(q);
+                for j in 0..4 {
+                    assert!(
+                        (dist[j] - want[q][j].0).abs() < 1e-4,
+                        "{measure:?} q{q} j{j}: {} vs {}",
+                        dist[j],
+                        want[q][j].0
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn excludes_self() {
+        let ds = separated_mixture(&MixtureSpec { n: 50, d: 3, k: 2, ..Default::default() });
+        let topk = all_pairs_topk(&ds, 3, Measure::L2Sq, &NativeBackend::new(), 2);
+        for q in 0..ds.n {
+            let (idx, _) = topk.row(q);
+            assert!(idx.iter().all(|&i| i != q as u32));
+        }
+    }
+
+    #[test]
+    fn graph_has_expected_degree_bounds() {
+        let ds = separated_mixture(&MixtureSpec { n: 120, d: 4, k: 4, ..Default::default() });
+        let g = knn_graph(&ds, 5, Measure::L2Sq);
+        assert_eq!(g.n, 120);
+        for u in 0..120u32 {
+            // symmetrization can raise degree above k but never drop below
+            assert!(g.degree(u) >= 5, "node {u} degree {}", g.degree(u));
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let ds = separated_mixture(&MixtureSpec { n: 257, d: 4, k: 5, ..Default::default() });
+        let a = all_pairs_topk(&ds, 3, Measure::L2Sq, &NativeBackend::new(), 1);
+        let b = all_pairs_topk(&ds, 3, Measure::L2Sq, &NativeBackend::new(), 7);
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(a.dist, b.dist);
+    }
+
+    #[test]
+    fn k_larger_than_n_pads() {
+        let ds = separated_mixture(&MixtureSpec { n: 4, d: 2, k: 2, ..Default::default() });
+        let topk = all_pairs_topk(&ds, 10, Measure::L2Sq, &NativeBackend::new(), 2);
+        let (idx, _) = topk.row(0);
+        assert_eq!(idx.iter().filter(|&&i| i != u32::MAX).count(), 3);
+    }
+}

@@ -1,0 +1,170 @@
+//! k-nearest-neighbor graph construction (paper App. B.2).
+//!
+//! Two candidate strategies:
+//! * [`brute`] — exact tiled brute force, multi-threaded; this is also the
+//!   semantic reference for the PJRT-accelerated path in [`crate::runtime`]
+//!   (identical tiling, identical merge).
+//! * [`lsh`] — random-hyperplane LSH banding for approximate candidate
+//!   generation at web scale (the paper's "hashing techniques", §5).
+
+pub mod brute;
+pub mod lsh;
+
+pub use brute::{all_pairs_topk, knn_graph, knn_graph_with_backend};
+pub use lsh::{lsh_knn_graph, LshParams};
+
+use crate::graph::{CsrGraph, Edge};
+
+/// Top-k result rows: `idx[q*k + j]` / `dist[q*k + j]` are the j-th nearest
+/// neighbor of query q and its dissimilarity, ascending per query.
+/// Slots beyond the number of valid neighbors hold `u32::MAX` / `+∞`.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    pub k: usize,
+    pub idx: Vec<u32>,
+    pub dist: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(nq: usize, k: usize) -> Self {
+        TopK { k, idx: vec![u32::MAX; nq * k], dist: vec![f32::INFINITY; nq * k] }
+    }
+
+    pub fn row(&self, q: usize) -> (&[u32], &[f32]) {
+        (&self.idx[q * self.k..(q + 1) * self.k], &self.dist[q * self.k..(q + 1) * self.k])
+    }
+}
+
+/// Convert per-query top-k lists into a symmetrized k-NN graph.
+pub fn topk_to_graph(n: usize, topk: &TopK) -> CsrGraph {
+    let mut edges = Vec::with_capacity(n * topk.k);
+    for q in 0..n {
+        let (idx, dist) = topk.row(q);
+        for j in 0..topk.k {
+            if idx[j] == u32::MAX {
+                break;
+            }
+            edges.push(Edge { src: q as u32, dst: idx[j], w: dist[j] });
+        }
+    }
+    CsrGraph::from_edges(n, &edges).symmetrized()
+}
+
+/// Bounded max-heap selecting the k smallest (dist, idx) pairs.
+/// Deterministic: ties broken by smaller index.
+#[derive(Debug, Clone)]
+pub struct KSmallest {
+    k: usize,
+    /// Max-heap as a sorted-insertion vec; k is small (≤ 64) so linear
+    /// insertion beats a binary heap in practice.
+    items: Vec<(f32, u32)>,
+}
+
+impl KSmallest {
+    pub fn new(k: usize) -> Self {
+        KSmallest { k, items: Vec::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    pub fn worst(&self) -> f32 {
+        if self.items.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.items.last().map(|&(d, _)| d).unwrap_or(f32::INFINITY)
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, d: f32, i: u32) {
+        if self.items.len() >= self.k {
+            let &(wd, wi) = self.items.last().unwrap();
+            if (d, i) >= (wd, wi) {
+                return;
+            }
+        }
+        // insertion sort position by (d, i); drop exact duplicates (the
+        // same pair can be proposed by several LSH tables)
+        let pos = self.items.partition_point(|&(pd, pi)| (pd, pi) < (d, i));
+        if self.items.get(pos) == Some(&(d, i)) {
+            return;
+        }
+        self.items.insert(pos, (d, i));
+        if self.items.len() > self.k {
+            self.items.pop();
+        }
+    }
+
+    /// Drain into ascending (idx, dist) slices of a TopK row.
+    pub fn write_row(&self, idx_out: &mut [u32], dist_out: &mut [f32]) {
+        for (j, &(d, i)) in self.items.iter().enumerate() {
+            idx_out[j] = i;
+            dist_out[j] = d;
+        }
+        for j in self.items.len()..idx_out.len() {
+            idx_out[j] = u32::MAX;
+            dist_out[j] = f32::INFINITY;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ksmallest_keeps_k_smallest_sorted() {
+        let mut h = KSmallest::new(3);
+        for (d, i) in [(5.0, 0), (1.0, 1), (3.0, 2), (2.0, 3), (4.0, 4)] {
+            h.push(d, i);
+        }
+        let mut idx = [0u32; 3];
+        let mut dist = [0f32; 3];
+        h.write_row(&mut idx, &mut dist);
+        assert_eq!(idx, [1, 3, 2]);
+        assert_eq!(dist, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ksmallest_tie_break_by_index() {
+        let mut h = KSmallest::new(2);
+        h.push(1.0, 5);
+        h.push(1.0, 2);
+        h.push(1.0, 9);
+        let mut idx = [0u32; 2];
+        let mut dist = [0f32; 2];
+        h.write_row(&mut idx, &mut dist);
+        assert_eq!(idx, [2, 5]);
+    }
+
+    #[test]
+    fn ksmallest_partial_fill_pads() {
+        let h = {
+            let mut h = KSmallest::new(4);
+            h.push(2.0, 1);
+            h
+        };
+        let mut idx = [0u32; 4];
+        let mut dist = [0f32; 4];
+        h.write_row(&mut idx, &mut dist);
+        assert_eq!(idx[1], u32::MAX);
+        assert!(dist[1].is_infinite());
+    }
+
+    #[test]
+    fn topk_to_graph_symmetrizes() {
+        let mut t = TopK::new(2, 1);
+        t.idx[0] = 1;
+        t.dist[0] = 0.5;
+        // query 1 found nothing (padded)
+        let g = topk_to_graph(2, &t);
+        assert!(g.neighbors(1).any(|(v, w)| v == 0 && w == 0.5));
+    }
+}

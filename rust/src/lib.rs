@@ -1,0 +1,39 @@
+//! # scc — Scalable Bottom-Up Hierarchical Clustering
+//!
+//! A production-grade reproduction of the **Sub-Cluster Component
+//! algorithm** (SCC) from *"Scalable Hierarchical Agglomerative
+//! Clustering"* (Monath et al., KDD 2021), built as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the round coordinator, the algorithms (SCC,
+//!   HAC, Affinity, DP-means family, k-means, Perch/Grinch), metrics,
+//!   synthetic workloads and the experiment harness;
+//! * **L2 (python/compile/model.py)** — JAX tile graphs (k-NN top-k,
+//!   nearest-center assignment) AOT-lowered to HLO text;
+//! * **L1 (python/compile/kernels/)** — the Pallas pairwise-distance
+//!   kernel those graphs call.
+//!
+//! Python never runs at inference time: `make artifacts` lowers the tile
+//! graphs once; [`runtime`] loads and executes them through PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod affinity;
+pub mod baselines;
+pub mod coordinator;
+pub mod cli;
+pub mod core;
+pub mod dpmeans;
+pub mod eval;
+pub mod hac;
+pub mod kmeans;
+pub mod knn;
+pub mod linkage;
+pub mod runtime;
+pub mod scc;
+pub mod sim;
+pub mod data;
+pub mod graph;
+pub mod metrics;
+pub mod util;

@@ -1,0 +1,169 @@
+//! Dissimilarity measures and cluster-pair linkage aggregates.
+//!
+//! The paper evaluates two point measures (App. B.3): normalized ℓ2²
+//! distance (range `[0, 4]` on unit vectors) and dot-product similarity
+//! (range `[0, 1]`). Internally everything is a **dissimilarity** (smaller
+//! = closer); similarities are mapped through `1 − dot` so one code path
+//! serves both (the mapping is strictly monotone, so cluster orderings and
+//! threshold schedules are preserved — thresholds are mapped alongside).
+//!
+//! Cluster-pair linkage is the k-NN-graph average of Eq. 25: the mean of
+//! the *observed* edge dissimilarities between two clusters, `∞` when no
+//! edge exists. Averages aggregate additively under cluster union, so
+//! round contraction is exact.
+
+/// Point-pair dissimilarity measure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Measure {
+    /// Squared Euclidean distance (paper's ℓ2², Eq. 1).
+    L2Sq,
+    /// `1 − x·y` over (unit-normalized) rows — the paper's dot-product
+    /// similarity, expressed as a dissimilarity.
+    CosineDist,
+}
+
+impl Measure {
+    /// Dissimilarity between two vectors.
+    #[inline]
+    pub fn dissim(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Measure::L2Sq => {
+                let mut s = 0.0f32;
+                for i in 0..a.len() {
+                    let t = a[i] - b[i];
+                    s += t * t;
+                }
+                s
+            }
+            Measure::CosineDist => {
+                let mut s = 0.0f32;
+                for i in 0..a.len() {
+                    s += a[i] * b[i];
+                }
+                1.0 - s
+            }
+        }
+    }
+
+    /// Map a *similarity* threshold into this dissimilarity space
+    /// (identity for distances).
+    pub fn threshold_from_similarity(&self, sim: f64) -> f64 {
+        match self {
+            Measure::L2Sq => sim,
+            Measure::CosineDist => 1.0 - sim,
+        }
+    }
+
+    /// Natural dissimilarity range on ℓ2-normalized data, used by the
+    /// paper's threshold schedules (App. B.3: `[0,4]` for ℓ2², similarity
+    /// `[0,1]` → dissimilarity `[0,1]`).
+    pub fn default_range(&self) -> (f64, f64) {
+        match self {
+            Measure::L2Sq => (1e-4, 4.0),
+            Measure::CosineDist => (1e-4, 1.0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Measure::L2Sq => "l2sq",
+            Measure::CosineDist => "dot",
+        }
+    }
+}
+
+/// Fixed-point scale for linkage sums: weights are stored as
+/// `round(w · 2³²)`. On normalized data dissimilarities are ≤ 4, so one
+/// edge contributes ≤ 2³⁴ and u128 holds > 2⁹⁰ edges — overflow-free.
+const FP_SHIFT: u32 = 32;
+const FP_ONE: f64 = (1u64 << FP_SHIFT) as f64;
+
+/// An additive average-linkage aggregate between a pair of clusters: the
+/// sum and count of observed k-NN edge dissimilarities (Eq. 25).
+///
+/// Sums are **exact fixed-point integers**, so aggregation is associative
+/// and commutative bit-for-bit: the sharded coordinator merges partial
+/// aggregates in arbitrary order and still reproduces the sequential
+/// engine exactly (the `coordinator` property tests rely on this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkAgg {
+    /// Σ round(w · 2³²), exact.
+    pub sum_fp: u128,
+    pub count: u64,
+}
+
+impl LinkAgg {
+    pub fn new(w: f64) -> Self {
+        debug_assert!(w >= 0.0 && w.is_finite(), "dissimilarity must be finite, got {w}");
+        LinkAgg { sum_fp: (w * FP_ONE).round() as u128, count: 1 }
+    }
+
+    /// Rebuild from raw parts (coordinator wire format).
+    pub fn from_parts(sum_fp: u128, count: u64) -> Self {
+        LinkAgg { sum_fp, count }
+    }
+
+    #[inline]
+    pub fn merge(&mut self, other: &LinkAgg) {
+        self.sum_fp += other.sum_fp;
+        self.count += other.count;
+    }
+
+    /// Average linkage value (∞ if the aggregate is empty). Deterministic
+    /// function of the exact `(sum_fp, count)` pair — independent of the
+    /// order contributions were added.
+    #[inline]
+    pub fn avg(&self) -> f64 {
+        if self.count == 0 {
+            f64::INFINITY
+        } else {
+            (self.sum_fp as f64 / FP_ONE) / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2sq_matches_manual() {
+        let m = Measure::L2Sq;
+        assert_eq!(m.dissim(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(m.dissim(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn cosine_dist_on_unit_vectors() {
+        let m = Measure::CosineDist;
+        assert!((m.dissim(&[1.0, 0.0], &[1.0, 0.0])).abs() < 1e-7);
+        assert!((m.dissim(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-7);
+        assert!((m.dissim(&[1.0, 0.0], &[-1.0, 0.0]) - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn similarity_threshold_mapping_is_monotone_reversing() {
+        let m = Measure::CosineDist;
+        let hi = m.threshold_from_similarity(0.9);
+        let lo = m.threshold_from_similarity(0.1);
+        assert!(hi < lo, "high similarity => small dissimilarity");
+    }
+
+    #[test]
+    fn linkagg_average_is_exact_under_merge() {
+        // edges 1.0, 2.0, 6.0 merged pairwise equals direct average
+        let mut a = LinkAgg::new(1.0);
+        a.merge(&LinkAgg::new(2.0));
+        let mut b = LinkAgg::new(6.0);
+        b.merge(&a);
+        assert!((b.avg() - 3.0).abs() < 1e-12);
+        assert_eq!(b.count, 3);
+    }
+
+    #[test]
+    fn empty_agg_is_infinite() {
+        let z = LinkAgg { sum_fp: 0, count: 0 };
+        assert!(z.avg().is_infinite());
+    }
+}

@@ -1,0 +1,19 @@
+//! `scc` binary: the experiment harness CLI (see [`scc::cli::USAGE`]).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match scc::cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match scc::cli::execute(&cli) {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Dendrogram purity (paper §3.4 Eq. 7, App. B.1.2).
+//!
+//! Exact computation in a single postorder pass with small-to-large class
+//! count maps: for internal node `v` with children `c_1..c_m`, the pairs of
+//! same-class leaves whose LCA is `v` number, per class `t`,
+//! `(n_t(v)² − Σ_i n_t(c_i)²) / 2`; each contributes
+//! `pur(v, t) = n_t(v) / |leaves(v)|`. Cost is
+//! O(Σ_v distinct-classes(v)) — with small-to-large merging this is
+//! O(N log N · avg-map-op) and handles 100k+ points comfortably.
+//!
+//! A pair-sampling estimator is provided for very large trees.
+
+use crate::core::Tree;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Exact dendrogram purity of `tree` against ground-truth `labels`.
+/// Returns 1.0 exactly when every ground-truth cluster appears as a
+/// tree-consistent node (Kobren et al. 2017).
+pub fn dendrogram_purity(tree: &Tree, labels: &[u32]) -> f64 {
+    assert_eq!(labels.len(), tree.n_leaves);
+    let n_nodes = tree.num_nodes();
+    // class -> count map per live node; taken (moved) when parent merges
+    let mut maps: Vec<Option<HashMap<u32, u64>>> = (0..n_nodes).map(|_| None).collect();
+    let mut leaf_total: Vec<u64> = vec![0; n_nodes];
+
+    let mut numer = 0.0f64;
+    let mut denom_pairs = 0u64;
+    {
+        // total same-class pairs (denominator |P*|)
+        let mut class_sz: HashMap<u32, u64> = HashMap::new();
+        for &l in labels {
+            *class_sz.entry(l).or_insert(0) += 1;
+        }
+        for &s in class_sz.values() {
+            denom_pairs += s * (s - 1) / 2;
+        }
+    }
+    if denom_pairs == 0 {
+        return 1.0; // no same-class pairs: vacuously pure
+    }
+
+    for v in tree.postorder() {
+        let v = v as usize;
+        if tree.is_leaf(v as u32) {
+            let mut m = HashMap::with_capacity(1);
+            m.insert(labels[v], 1u64);
+            maps[v] = Some(m);
+            leaf_total[v] = 1;
+            continue;
+        }
+        // Merge children maps small-to-large; accumulate cross-pair
+        // contributions incrementally: when merging child map `small` into
+        // accumulator `acc`, the new same-class cross pairs are
+        // Σ_t acc[t] * small[t] — summed over all (implicit) child
+        // orderings this equals (n_t(v)² − Σ n_t(c)²)/2 exactly.
+        let mut total: u64 = 0;
+        let mut acc: Option<HashMap<u32, u64>> = None;
+        let mut cross: HashMap<u32, u64> = HashMap::new(); // class -> cross pairs at v
+        for &c in &tree.children[v] {
+            let child_map = maps[c as usize].take().expect("child map computed");
+            total += leaf_total[c as usize];
+            match acc {
+                None => acc = Some(child_map),
+                Some(ref mut a) => {
+                    // ensure we iterate the smaller map
+                    let (mut big, small) = if a.len() >= child_map.len() {
+                        (std::mem::take(a), child_map)
+                    } else {
+                        (child_map, std::mem::take(a))
+                    };
+                    for (t, s_cnt) in small {
+                        let b_cnt = big.entry(t).or_insert(0);
+                        if *b_cnt > 0 {
+                            *cross.entry(t).or_insert(0) += *b_cnt * s_cnt;
+                        }
+                        *b_cnt += s_cnt;
+                    }
+                    *a = big;
+                }
+            }
+        }
+        let acc = acc.expect("internal node has children");
+        // contributions: purity(v,t) * cross_pairs(v,t)
+        for (t, pairs) in &cross {
+            let n_t = *acc.get(t).unwrap_or(&0);
+            if *pairs > 0 {
+                numer += (n_t as f64 / total as f64) * *pairs as f64;
+            }
+        }
+        leaf_total[v] = total;
+        maps[v] = Some(acc);
+    }
+    numer / denom_pairs as f64
+}
+
+/// Monte-Carlo estimate of dendrogram purity: sample `samples` same-class
+/// pairs uniformly, compute the exact purity of each pair's LCA. Unbiased;
+/// use for trees too large for the exact pass.
+pub fn sampled_dendrogram_purity(
+    tree: &Tree,
+    labels: &[u32],
+    samples: usize,
+    rng: &mut Rng,
+) -> f64 {
+    assert_eq!(labels.len(), tree.n_leaves);
+    // group leaves by class
+    let mut by_class: HashMap<u32, Vec<u32>> = HashMap::new();
+    for (i, &l) in labels.iter().enumerate() {
+        by_class.entry(l).or_default().push(i as u32);
+    }
+    let classes: Vec<(u32, Vec<u32>)> =
+        by_class.into_iter().filter(|(_, v)| v.len() >= 2).collect();
+    if classes.is_empty() {
+        return 1.0;
+    }
+    // class sampling weights proportional to #pairs
+    let weights: Vec<f64> =
+        classes.iter().map(|(_, v)| (v.len() * (v.len() - 1) / 2) as f64).collect();
+
+    let depth = tree.depths();
+    let leaf_counts = tree.leaf_counts();
+    // per-node per-class counts are too big to precompute in general; for
+    // each sampled pair we count the sampled class within the LCA subtree
+    // lazily with memoization per (node, class).
+    let mut memo: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut acc = 0.0;
+    for _ in 0..samples {
+        let ci = rng.weighted(&weights);
+        let (class, members) = &classes[ci];
+        let a = members[rng.index(members.len())];
+        let b = loop {
+            let x = members[rng.index(members.len())];
+            if x != a {
+                break x;
+            }
+        };
+        let l = tree.lca(a, b, &depth);
+        let cnt = count_class_in_subtree(tree, l, *class, labels, &mut memo);
+        acc += cnt as f64 / leaf_counts[l as usize] as f64;
+    }
+    acc / samples as f64
+}
+
+fn count_class_in_subtree(
+    tree: &Tree,
+    v: u32,
+    class: u32,
+    labels: &[u32],
+    memo: &mut HashMap<(u32, u32), u64>,
+) -> u64 {
+    if let Some(&c) = memo.get(&(v, class)) {
+        return c;
+    }
+    let mut count = 0u64;
+    let mut stack = vec![v];
+    while let Some(u) = stack.pop() {
+        if tree.is_leaf(u) {
+            if labels[u as usize] == class {
+                count += 1;
+            }
+        } else {
+            for &c in &tree.children[u as usize] {
+                stack.push(c);
+            }
+        }
+    }
+    memo.insert((v, class), count);
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Partition;
+
+    /// O(N² · N) brute-force oracle straight from Eq. 7.
+    fn brute_dp(tree: &Tree, labels: &[u32]) -> f64 {
+        let depth = tree.depths();
+        let n = tree.n_leaves;
+        let mut numer = 0.0;
+        let mut pairs = 0u64;
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                if labels[i as usize] != labels[j as usize] {
+                    continue;
+                }
+                pairs += 1;
+                let l = tree.lca(i, j, &depth);
+                // purity of l wrt class of i
+                let mut same = 0u64;
+                let mut total = 0u64;
+                let mut stack = vec![l];
+                while let Some(u) = stack.pop() {
+                    if tree.is_leaf(u) {
+                        total += 1;
+                        if labels[u as usize] == labels[i as usize] {
+                            same += 1;
+                        }
+                    } else {
+                        for &c in &tree.children[u as usize] {
+                            stack.push(c);
+                        }
+                    }
+                }
+                numer += same as f64 / total as f64;
+            }
+        }
+        if pairs == 0 {
+            1.0
+        } else {
+            numer / pairs as f64
+        }
+    }
+
+    fn tree_of_rounds(rounds: &[Vec<u32>]) -> Tree {
+        let parts: Vec<Partition> = rounds.iter().map(|r| Partition::new(r.clone())).collect();
+        Tree::from_rounds(&parts)
+    }
+
+    #[test]
+    fn pure_tree_scores_one() {
+        // ground truth {0,1} {2,3}; tree merges exactly those then the root
+        let t = tree_of_rounds(&[vec![0, 1, 2, 3], vec![0, 0, 1, 1], vec![0, 0, 0, 0]]);
+        let labels = vec![0, 0, 1, 1];
+        assert!((dendrogram_purity(&t, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn impure_merge_scores_below_one() {
+        // tree merges {0,2} first (cross-class), then all
+        let t = tree_of_rounds(&[vec![0, 1, 2, 3], vec![0, 1, 0, 2], vec![0, 0, 0, 0]]);
+        let labels = vec![0, 0, 1, 1];
+        let dp = dendrogram_purity(&t, &labels);
+        assert!(dp < 1.0);
+        assert!((dp - brute_dp(&t, &labels)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_trees() {
+        crate::util::prop::check("dendrogram purity == brute force", 60, |g| {
+            let n = g.usize_in(2..40);
+            // random nested rounds: repeatedly merge random pairs of clusters
+            let mut rounds = vec![Partition::singletons(n)];
+            let mut current: Vec<u32> = (0..n as u32).collect();
+            while {
+                let k = {
+                    let mut ids = current.clone();
+                    ids.sort_unstable();
+                    ids.dedup();
+                    ids.len()
+                };
+                k > 1
+            } {
+                let mut ids: Vec<u32> = current.clone();
+                ids.sort_unstable();
+                ids.dedup();
+                // merge a random subset of cluster ids into one
+                let m = g.usize_in(2..(ids.len() + 1).min(5));
+                let chosen = g.rng().sample_indices(ids.len(), m);
+                let target = ids[chosen[0]];
+                let chosen_ids: std::collections::HashSet<u32> =
+                    chosen.iter().map(|&i| ids[i]).collect();
+                for c in current.iter_mut() {
+                    if chosen_ids.contains(c) {
+                        *c = target;
+                    }
+                }
+                rounds.push(Partition::new(current.clone()));
+            }
+            let tree = Tree::from_rounds(&rounds);
+            tree.validate().unwrap();
+            let labels: Vec<u32> = (0..n).map(|_| g.rng().index(4) as u32).collect();
+            let fast = dendrogram_purity(&tree, &labels);
+            let slow = brute_dp(&tree, &labels);
+            assert!(
+                (fast - slow).abs() < 1e-9,
+                "fast {fast} != brute {slow} (n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn sampled_estimator_close_to_exact() {
+        let t = tree_of_rounds(&[
+            vec![0, 1, 2, 3, 4, 5],
+            vec![0, 0, 1, 1, 2, 2],
+            vec![0, 0, 0, 0, 1, 1],
+            vec![0, 0, 0, 0, 0, 0],
+        ]);
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let exact = dendrogram_purity(&t, &labels);
+        let mut rng = Rng::new(5);
+        let est = sampled_dendrogram_purity(&t, &labels, 4000, &mut rng);
+        assert!((est - exact).abs() < 0.05, "est {est} exact {exact}");
+    }
+
+    #[test]
+    fn all_same_class_is_one() {
+        let t = tree_of_rounds(&[vec![0, 1, 2], vec![0, 0, 1], vec![0, 0, 0]]);
+        let labels = vec![7, 7, 7];
+        assert_eq!(dendrogram_purity(&t, &labels), 1.0);
+    }
+
+    #[test]
+    fn no_pairs_is_vacuously_one() {
+        let t = tree_of_rounds(&[vec![0, 1], vec![0, 0]]);
+        let labels = vec![0, 1];
+        assert_eq!(dendrogram_purity(&t, &labels), 1.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! DP-means objective (paper Def. 4 / Eq. 26) and the k-means cost term.
+//!
+//! Given a flat partition, centers are the empirical cluster means (this
+//! only improves the objective over exemplar centers — Prop. 1 discussion,
+//! App. C.1): `DP(X, λ, S) = Σ_l Σ_{x∈C_l} ‖x − c_l‖² + λ|S|`.
+
+use crate::core::{Dataset, Partition};
+
+/// Sum of squared distances of points to their cluster means
+/// (the k-means cost term of the DP-means objective).
+pub fn kmeans_cost(ds: &Dataset, part: &Partition) -> f64 {
+    assert_eq!(part.n(), ds.n);
+    let norm = part.normalized();
+    let k = norm.assign.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+    let mut sums = vec![0.0f64; k * ds.d];
+    let mut counts = vec![0u64; k];
+    for i in 0..ds.n {
+        let c = norm.assign[i] as usize;
+        counts[c] += 1;
+        let row = ds.row(i);
+        let s = &mut sums[c * ds.d..(c + 1) * ds.d];
+        for (sv, &x) in s.iter_mut().zip(row) {
+            *sv += x as f64;
+        }
+    }
+    // cost = Σ ||x||² − Σ_c ||sum_c||² / n_c  (standard identity)
+    let mut sq_total = 0.0f64;
+    for &x in &ds.data {
+        sq_total += (x as f64) * (x as f64);
+    }
+    let mut center_term = 0.0f64;
+    for c in 0..k {
+        if counts[c] == 0 {
+            continue;
+        }
+        let s = &sums[c * ds.d..(c + 1) * ds.d];
+        let ss: f64 = s.iter().map(|v| v * v).sum();
+        center_term += ss / counts[c] as f64;
+    }
+    (sq_total - center_term).max(0.0)
+}
+
+/// Full DP-means objective: k-means cost plus `λ · (#clusters)`.
+pub fn dp_means_cost(ds: &Dataset, part: &Partition, lambda: f64) -> f64 {
+    kmeans_cost(ds, part) + lambda * part.num_clusters() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brute_kmeans_cost(ds: &Dataset, part: &Partition) -> f64 {
+        let groups = part.members();
+        let mut total = 0.0;
+        for g in groups {
+            if g.is_empty() {
+                continue;
+            }
+            let mut mean = vec![0.0f64; ds.d];
+            for &i in &g {
+                for (m, &x) in mean.iter_mut().zip(ds.row(i as usize)) {
+                    *m += x as f64;
+                }
+            }
+            for m in &mut mean {
+                *m /= g.len() as f64;
+            }
+            for &i in &g {
+                for (m, &x) in mean.iter().zip(ds.row(i as usize)) {
+                    let dlt = x as f64 - m;
+                    total += dlt * dlt;
+                }
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn singleton_clusters_have_zero_kmeans_cost() {
+        let ds = Dataset::new("t", vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let p = Partition::singletons(2);
+        assert!(kmeans_cost(&ds, &p) < 1e-9);
+        assert!((dp_means_cost(&ds, &p, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_points_one_cluster() {
+        // points (0,0) and (2,0): mean (1,0), cost = 1 + 1 = 2
+        let ds = Dataset::new("t", vec![0.0, 0.0, 2.0, 0.0], 2, 2);
+        let p = Partition::single_cluster(2);
+        assert!((kmeans_cost(&ds, &p) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_cases() {
+        crate::util::prop::check("kmeans cost identity == brute", 80, |g| {
+            let n = g.usize_in(1..40);
+            let d = g.usize_in(1..6);
+            let data = g.vec_f32(-2.0, 2.0, n * d);
+            let data = if data.len() == n * d {
+                data
+            } else {
+                let mut v = data;
+                v.resize(n * d, 0.5);
+                v
+            };
+            let ds = Dataset::new("r", data, n, d);
+            let k = g.usize_in(1..6);
+            let p = Partition::new((0..n).map(|_| g.rng().index(k) as u32).collect());
+            let fast = kmeans_cost(&ds, &p);
+            let slow = brute_kmeans_cost(&ds, &p);
+            let tol = 1e-6 * (1.0 + slow.abs());
+            assert!((fast - slow).abs() < tol, "fast {fast} slow {slow}");
+        });
+    }
+
+    #[test]
+    fn lambda_term_counts_clusters() {
+        let ds = Dataset::new("t", vec![0.0; 8], 4, 2);
+        let p = Partition::new(vec![0, 0, 1, 1]);
+        assert!((dp_means_cost(&ds, &p, 2.0) - 4.0).abs() < 1e-9);
+    }
+}

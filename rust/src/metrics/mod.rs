@@ -1,0 +1,19 @@
+//! Evaluation metrics from the paper: pairwise precision/recall/F1
+//! (App. B.1.1), dendrogram purity (§3.4, App. B.1.2), flat cluster
+//! purity (App. B.4), and the DP-means objective (Def. 4).
+
+pub mod dendrogram_purity;
+pub mod dpcost;
+pub mod pairwise;
+
+pub use dendrogram_purity::{dendrogram_purity, sampled_dendrogram_purity};
+pub use dpcost::{dp_means_cost, kmeans_cost};
+pub use pairwise::{cluster_purity, pairwise_prf};
+
+/// Precision / recall / F1 triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prf {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}

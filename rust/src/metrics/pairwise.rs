@@ -1,0 +1,145 @@
+//! Pairwise precision / recall / F1 (paper App. B.1.1, Eqs. 21–23) and
+//! flat cluster purity (App. B.4).
+//!
+//! Computed from the contingency table in O(N + #nonzero cells) — never by
+//! enumerating pairs: with `n_ij` the number of points in predicted
+//! cluster `i` and true cluster `j`,
+//! `TP = Σ_ij C(n_ij,2)`, predicted pairs `= Σ_i C(n_i·,2)`, true pairs
+//! `= Σ_j C(n_·j,2)`.
+
+use super::Prf;
+use crate::core::Partition;
+use std::collections::HashMap;
+
+#[inline]
+fn choose2(n: u64) -> u64 {
+    n * n.saturating_sub(1) / 2
+}
+
+/// Pairwise precision/recall/F1 of `pred` against ground-truth `labels`.
+pub fn pairwise_prf(pred: &Partition, labels: &[u32]) -> Prf {
+    assert_eq!(pred.n(), labels.len());
+    let mut cell: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut pred_sz: HashMap<u32, u64> = HashMap::new();
+    let mut true_sz: HashMap<u32, u64> = HashMap::new();
+    for (i, &c) in pred.assign.iter().enumerate() {
+        let t = labels[i];
+        *cell.entry((c, t)).or_insert(0) += 1;
+        *pred_sz.entry(c).or_insert(0) += 1;
+        *true_sz.entry(t).or_insert(0) += 1;
+    }
+    let tp: u64 = cell.values().map(|&n| choose2(n)).sum();
+    let pred_pairs: u64 = pred_sz.values().map(|&n| choose2(n)).sum();
+    let true_pairs: u64 = true_sz.values().map(|&n| choose2(n)).sum();
+    let precision = if pred_pairs == 0 { 0.0 } else { tp as f64 / pred_pairs as f64 };
+    let recall = if true_pairs == 0 { 0.0 } else { tp as f64 / true_pairs as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    Prf { precision, recall, f1 }
+}
+
+/// Flat cluster purity: each predicted cluster votes its majority ground
+/// truth class; purity = (Σ majority counts) / N.
+pub fn cluster_purity(pred: &Partition, labels: &[u32]) -> f64 {
+    assert_eq!(pred.n(), labels.len());
+    let mut cell: HashMap<(u32, u32), u64> = HashMap::new();
+    for (i, &c) in pred.assign.iter().enumerate() {
+        *cell.entry((c, labels[i])).or_insert(0) += 1;
+    }
+    let mut best: HashMap<u32, u64> = HashMap::new();
+    for (&(c, _t), &n) in &cell {
+        let e = best.entry(c).or_insert(0);
+        if n > *e {
+            *e = n;
+        }
+    }
+    best.values().sum::<u64>() as f64 / pred.n() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force O(N²) oracle over explicit pairs.
+    fn brute_prf(pred: &Partition, labels: &[u32]) -> Prf {
+        let n = pred.n();
+        let (mut tp, mut pp, mut gp) = (0u64, 0u64, 0u64);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let same_pred = pred.assign[i] == pred.assign[j];
+                let same_true = labels[i] == labels[j];
+                if same_pred {
+                    pp += 1;
+                }
+                if same_true {
+                    gp += 1;
+                }
+                if same_pred && same_true {
+                    tp += 1;
+                }
+            }
+        }
+        let precision = if pp == 0 { 0.0 } else { tp as f64 / pp as f64 };
+        let recall = if gp == 0 { 0.0 } else { tp as f64 / gp as f64 };
+        let f1 = if precision + recall == 0.0 {
+            0.0
+        } else {
+            2.0 * precision * recall / (precision + recall)
+        };
+        Prf { precision, recall, f1 }
+    }
+
+    #[test]
+    fn perfect_prediction_scores_one() {
+        let labels = vec![0, 0, 1, 1, 2];
+        let pred = Partition::new(labels.clone());
+        let prf = pairwise_prf(&pred, &labels);
+        assert_eq!(prf.f1, 1.0);
+        assert_eq!(cluster_purity(&pred, &labels), 1.0);
+    }
+
+    #[test]
+    fn single_cluster_has_full_recall() {
+        let labels = vec![0, 0, 1, 1];
+        let pred = Partition::single_cluster(4);
+        let prf = pairwise_prf(&pred, &labels);
+        assert_eq!(prf.recall, 1.0);
+        assert!((prf.precision - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singletons_have_zero_f1() {
+        let labels = vec![0, 0, 1, 1];
+        let pred = Partition::singletons(4);
+        let prf = pairwise_prf(&pred, &labels);
+        assert_eq!(prf.f1, 0.0);
+        assert_eq!(cluster_purity(&pred, &labels), 1.0); // singletons are pure
+    }
+
+    #[test]
+    fn matches_bruteforce_oracle_on_random_cases() {
+        crate::util::prop::check("prf == brute force", 120, |g| {
+            let n = g.usize_in(1..60);
+            let kp = g.usize_in(1..8);
+            let kt = g.usize_in(1..8);
+            let pred = Partition::new((0..n).map(|_| g.rng().index(kp) as u32).collect());
+            let labels: Vec<u32> = (0..n).map(|_| g.rng().index(kt) as u32).collect();
+            let fast = pairwise_prf(&pred, &labels);
+            let slow = brute_prf(&pred, &labels);
+            assert!((fast.precision - slow.precision).abs() < 1e-12);
+            assert!((fast.recall - slow.recall).abs() < 1e-12);
+            assert!((fast.f1 - slow.f1).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn purity_of_mixed_cluster() {
+        // one cluster with 3 of class 0, 1 of class 1 -> purity 0.75
+        let pred = Partition::single_cluster(4);
+        let labels = vec![0, 0, 0, 1];
+        assert!((cluster_purity(&pred, &labels) - 0.75).abs() < 1e-12);
+    }
+}

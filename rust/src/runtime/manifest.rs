@@ -1,0 +1,155 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `artifacts/manifest.txt` has one line per compiled tile program:
+//!
+//! ```text
+//! kernel=knn measure=l2sq b=256 m=2048 d=64 k=32 file=knn_l2sq_d64.hlo.txt
+//! kernel=assign measure=dot b=512 c=256 d=128 file=assign_dot_d128.hlo.txt
+//! ```
+//!
+//! `b` is the query/point tile height, `m`/`c` the candidate/center tile
+//! width, `k` the top-k width, `d` the feature dimension, `measure` the
+//! dissimilarity baked into the graph. Lines starting with `#` are
+//! comments.
+
+use crate::linkage::Measure;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which tile program a manifest entry describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Pairwise top-k: `(queries[b,d], cands[m,d], valid) -> (dist[b,k], idx[b,k])`.
+    Knn,
+    /// Nearest center: `(points[b,d], centers[c,d], valid) -> (dist[b], idx[b])`.
+    Assign,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub kind: KernelKind,
+    pub measure: Measure,
+    pub b: usize,
+    /// Candidate tile width (`m` for knn, `c` for assign).
+    pub width: usize,
+    /// Top-k width (knn only; 1 for assign).
+    pub k: usize,
+    pub d: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`; artifact paths are resolved relative to
+    /// `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {path:?}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv = std::collections::HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k).copied().with_context(|| {
+                    format!("manifest line {}: missing key {k:?}", lineno + 1)
+                })
+            };
+            let kind = match get("kernel")? {
+                "knn" => KernelKind::Knn,
+                "assign" => KernelKind::Assign,
+                other => bail!("manifest line {}: unknown kernel {other:?}", lineno + 1),
+            };
+            let measure = match get("measure")? {
+                "l2sq" => Measure::L2Sq,
+                "dot" => Measure::CosineDist,
+                other => bail!("manifest line {}: unknown measure {other:?}", lineno + 1),
+            };
+            let b: usize = get("b")?.parse()?;
+            let d: usize = get("d")?.parse()?;
+            let width: usize = match kind {
+                KernelKind::Knn => get("m")?.parse()?,
+                KernelKind::Assign => get("c")?.parse()?,
+            };
+            let k: usize = match kind {
+                KernelKind::Knn => get("k")?.parse()?,
+                KernelKind::Assign => 1,
+            };
+            entries.push(Entry { kind, measure, b, width, k, d, path: dir.join(get("file")?) });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find the entry for `(kind, measure)` with dimension ≥ `d` (smallest
+    /// such; rust pads the feature dim with zeros, which changes neither
+    /// ℓ2² nor dot values) and top-k width ≥ `k`.
+    pub fn find(&self, kind: KernelKind, measure: Measure, d: usize, k: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.measure == measure && e.d >= d && e.k >= k)
+            .min_by_key(|e| e.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\n# comment\n\
+        kernel=knn measure=l2sq b=256 m=2048 d=64 k=32 file=knn_l2sq_d64.hlo.txt\n\
+        kernel=knn measure=dot b=256 m=2048 d=128 k=32 file=knn_dot_d128.hlo.txt\n\
+        kernel=assign measure=l2sq b=512 c=256 d=64 file=assign_l2sq_d64.hlo.txt\n";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = &m.entries[0];
+        assert_eq!(e.kind, KernelKind::Knn);
+        assert_eq!(e.measure, Measure::L2Sq);
+        assert_eq!((e.b, e.width, e.d, e.k), (256, 2048, 64, 32));
+        assert!(e.path.ends_with("knn_l2sq_d64.hlo.txt"));
+        assert_eq!(m.entries[2].k, 1);
+    }
+
+    #[test]
+    fn find_selects_smallest_covering_dim() {
+        let text = "\
+            kernel=knn measure=l2sq b=256 m=2048 d=64 k=32 file=a.hlo.txt\n\
+            kernel=knn measure=l2sq b=256 m=2048 d=128 k=32 file=b.hlo.txt\n";
+        let m = Manifest::parse(text, Path::new("/x")).unwrap();
+        assert!(m.find(KernelKind::Knn, Measure::L2Sq, 54, 8).unwrap().d == 64);
+        assert!(m.find(KernelKind::Knn, Measure::L2Sq, 100, 8).unwrap().d == 128);
+        assert!(m.find(KernelKind::Knn, Measure::L2Sq, 200, 8).is_none());
+        assert!(m.find(KernelKind::Knn, Measure::L2Sq, 54, 64).is_none());
+        assert!(m.find(KernelKind::Knn, Measure::CosineDist, 54, 8).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("kernel=knn nonsense", Path::new("/x")).is_err());
+        assert!(Manifest::parse("kernel=warp measure=l2sq b=1 m=1 d=1 k=1 file=f", Path::new("/x"))
+            .is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Execution backends for the dense tile computations (pairwise top-k and
+//! nearest-center assignment).
+//!
+//! Two implementations with **identical tile semantics**:
+//! * [`native::NativeBackend`] — pure rust, any shape; the correctness
+//!   oracle and the fallback when no artifacts are present.
+//! * [`pjrt::PjrtBackend`] — loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (Pallas kernel inside a JAX top-k graph,
+//!   lowered to HLO text) and executes them on the PJRT CPU client.
+//!   Queries/candidates are padded to the artifact's fixed tile shape;
+//!   padding rows/cols are masked with `+∞` sentinels (see
+//!   `python/compile/model.py` for the matching convention).
+//!
+//! The runtime chooses PJRT when `artifacts/manifest.txt` exists and
+//! covers the dimensionality, native otherwise ([`auto_backend`]).
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::knn::TopK;
+use crate::linkage::Measure;
+
+/// A tile-computation backend. Implementations must be `Sync`: the k-NN
+/// builder calls them from worker threads.
+pub trait Backend: Sync {
+    /// Exact top-`k` nearest candidates (by `measure`) for each query.
+    /// `queries` is `nq × d`, `cands` is `nc × d`, both row-major.
+    /// Returned indices are **local** to `cands` (caller adds tile
+    /// offsets). Rows are sorted ascending by dissimilarity with
+    /// `(u32::MAX, +∞)` padding when `nc < k`.
+    fn pairwise_topk(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        cands: &[f32],
+        nc: usize,
+        d: usize,
+        k: usize,
+        measure: Measure,
+    ) -> TopK;
+
+    /// Nearest center per point: returns `(argmin index, dissimilarity)`
+    /// per point.
+    fn assign(
+        &self,
+        points: &[f32],
+        np: usize,
+        centers: &[f32],
+        nc: usize,
+        d: usize,
+        measure: Measure,
+    ) -> (Vec<u32>, Vec<f32>);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pick the best available backend: PJRT if artifacts are loadable,
+/// otherwise native. `artifacts_dir` defaults to `artifacts/` under the
+/// current directory; override with the `SCC_ARTIFACTS` env var.
+pub fn auto_backend() -> Box<dyn Backend> {
+    let dir = std::env::var("SCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    match PjrtBackend::load(std::path::Path::new(&dir)) {
+        Ok(b) => Box::new(b),
+        Err(e) => {
+            if std::env::var("SCC_REQUIRE_PJRT").is_ok() {
+                panic!("SCC_REQUIRE_PJRT set but PJRT backend unavailable: {e}");
+            }
+            Box::new(NativeBackend::new())
+        }
+    }
+}

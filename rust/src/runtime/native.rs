@@ -1,0 +1,193 @@
+//! Pure-rust tile backend: the semantic reference for the PJRT path and
+//! the fallback when artifacts are absent.
+//!
+//! The inner loops mirror the L1 Pallas kernel's decomposition
+//! (‖x‖² + ‖y‖² − 2·x·y for ℓ2²; plain dot for cosine): distances are
+//! assembled from a blocked GEMM-like cross-term so the hot loop is
+//! d-contiguous and autovectorizes.
+
+use super::Backend;
+use crate::knn::{KSmallest, TopK};
+use crate::linkage::Measure;
+
+/// See module docs.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    _priv: (),
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { _priv: () }
+    }
+}
+
+/// Row squared norms.
+fn sq_norms(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        out[i] = row.iter().map(|v| v * v).sum();
+    }
+    out
+}
+
+impl Backend for NativeBackend {
+    fn pairwise_topk(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        cands: &[f32],
+        nc: usize,
+        d: usize,
+        k: usize,
+        measure: Measure,
+    ) -> TopK {
+        debug_assert_eq!(queries.len(), nq * d);
+        debug_assert_eq!(cands.len(), nc * d);
+        let mut topk = TopK::new(nq, k);
+        if nc == 0 {
+            return topk;
+        }
+        let qn = match measure {
+            Measure::L2Sq => sq_norms(queries, nq, d),
+            Measure::CosineDist => Vec::new(),
+        };
+        let cn = match measure {
+            Measure::L2Sq => sq_norms(cands, nc, d),
+            Measure::CosineDist => Vec::new(),
+        };
+        let mut dist_row = vec![0.0f32; nc];
+        for q in 0..nq {
+            let qrow = &queries[q * d..(q + 1) * d];
+            // cross term: dist_row[c] = qrow . cand_c
+            for (c, slot) in dist_row.iter_mut().enumerate() {
+                let crow = &cands[c * d..(c + 1) * d];
+                let mut s = 0.0f32;
+                for i in 0..d {
+                    s += qrow[i] * crow[i];
+                }
+                *slot = s;
+            }
+            let mut heap = KSmallest::new(k);
+            match measure {
+                Measure::L2Sq => {
+                    for c in 0..nc {
+                        // clamp tiny negative values from cancellation
+                        let dd = (qn[q] + cn[c] - 2.0 * dist_row[c]).max(0.0);
+                        heap.push(dd, c as u32);
+                    }
+                }
+                Measure::CosineDist => {
+                    for c in 0..nc {
+                        heap.push(1.0 - dist_row[c], c as u32);
+                    }
+                }
+            }
+            let lo = q * k;
+            let hi = lo + k;
+            heap.write_row(&mut topk.idx[lo..hi], &mut topk.dist[lo..hi]);
+        }
+        topk
+    }
+
+    fn assign(
+        &self,
+        points: &[f32],
+        np: usize,
+        centers: &[f32],
+        nc: usize,
+        d: usize,
+        measure: Measure,
+    ) -> (Vec<u32>, Vec<f32>) {
+        let topk = self.pairwise_topk(points, np, centers, nc, d, 1, measure);
+        let idx = (0..np).map(|p| topk.idx[p]).collect();
+        let dist = (0..np).map(|p| topk.dist[p]).collect();
+        (idx, dist)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_topk(
+        queries: &[f32],
+        nq: usize,
+        cands: &[f32],
+        nc: usize,
+        d: usize,
+        k: usize,
+        measure: Measure,
+    ) -> Vec<Vec<(f32, u32)>> {
+        (0..nq)
+            .map(|q| {
+                let mut all: Vec<(f32, u32)> = (0..nc)
+                    .map(|c| {
+                        (
+                            measure
+                                .dissim(&queries[q * d..(q + 1) * d], &cands[c * d..(c + 1) * d]),
+                            c as u32,
+                        )
+                    })
+                    .collect();
+                all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                all.truncate(k);
+                all
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_on_random_inputs() {
+        crate::util::prop::check("native topk == naive", 60, |g| {
+            let nq = g.usize_in(1..12);
+            let nc = g.usize_in(1..30);
+            let d = g.usize_in(1..8);
+            let k = g.usize_in(1..8);
+            let q: Vec<f32> = (0..nq * d).map(|_| g.rng().f32() * 2.0 - 1.0).collect();
+            let c: Vec<f32> = (0..nc * d).map(|_| g.rng().f32() * 2.0 - 1.0).collect();
+            for measure in [Measure::L2Sq, Measure::CosineDist] {
+                let got = NativeBackend::new().pairwise_topk(&q, nq, &c, nc, d, k, measure);
+                let want = naive_topk(&q, nq, &c, nc, d, k, measure);
+                for qi in 0..nq {
+                    let (gi, gd) = got.row(qi);
+                    for j in 0..k.min(nc) {
+                        // indices may differ on exact ties; distances must match
+                        assert!(
+                            (gd[j] - want[qi][j].0).abs() < 1e-4,
+                            "q{qi} j{j}: got {} want {}",
+                            gd[j],
+                            want[qi][j].0
+                        );
+                        assert!(gi[j] != u32::MAX);
+                    }
+                    if nc < k {
+                        assert_eq!(gi[nc], u32::MAX);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn l2_is_nonnegative_even_with_cancellation() {
+        let q = vec![1.0e3f32, 1.0e3];
+        let c = vec![1.0e3f32, 1.0e3];
+        let t = NativeBackend::new().pairwise_topk(&q, 1, &c, 1, 2, 1, Measure::L2Sq);
+        assert!(t.dist[0] >= 0.0);
+    }
+
+    #[test]
+    fn assign_returns_argmin() {
+        let points = vec![0.1f32, 0.0, 0.9, 0.0];
+        let centers = vec![0.0f32, 0.0, 1.0, 0.0];
+        let (idx, dist) = NativeBackend::new().assign(&points, 2, &centers, 2, 2, Measure::L2Sq);
+        assert_eq!(idx, vec![0, 1]);
+        assert!(dist[0] < 0.02 && dist[1] < 0.02);
+    }
+}

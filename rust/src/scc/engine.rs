@@ -1,0 +1,259 @@
+//! The cluster-graph round engine shared by sequential SCC and (shard by
+//! shard) the coordinator.
+//!
+//! State: a compact labeling of points into clusters plus an undirected
+//! cluster-pair edge list carrying average-linkage aggregates
+//! ([`crate::linkage::LinkAgg`], Eq. 25). A round is:
+//!
+//! 1. **argmin scan** — one pass over edges computes each cluster's best
+//!    (minimum average) neighbor, ties broken by `(avg, neighbor id)`;
+//! 2. **merge-edge selection** — edges with `avg ≤ τ` that are the argmin
+//!    of at least one endpoint (Def. 3);
+//! 3. **union + contraction** — connected components over merge edges,
+//!    relabel, re-aggregate edges by summing (exact for average linkage).
+
+use crate::core::Partition;
+use crate::graph::{CsrGraph, UnionFind};
+use crate::linkage::LinkAgg;
+
+/// One undirected cluster-pair edge (`a < b`).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterEdge {
+    pub a: u32,
+    pub b: u32,
+    pub agg: LinkAgg,
+}
+
+/// Result of one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// At least one merge happened; state was contracted.
+    Merged { merge_edges: usize },
+    /// No edge qualified at this threshold; state unchanged.
+    NoChange,
+}
+
+/// The contracted cluster graph.
+#[derive(Debug, Clone)]
+pub struct ClusterGraph {
+    /// Point -> current cluster id (compact, `0..num_clusters`).
+    labels: Vec<u32>,
+    num_clusters: usize,
+    edges: Vec<ClusterEdge>,
+}
+
+impl ClusterGraph {
+    /// Start state: every point its own cluster; edges from the
+    /// (symmetrized) k-NN graph, deduplicated to undirected pairs.
+    pub fn from_knn(g: &CsrGraph) -> ClusterGraph {
+        let mut edges = Vec::with_capacity(g.num_edges() / 2);
+        for u in 0..g.n as u32 {
+            for (v, w) in g.neighbors(u) {
+                if u < v {
+                    edges.push(ClusterEdge { a: u, b: v, agg: LinkAgg::new(w as f64) });
+                }
+            }
+        }
+        ClusterGraph { labels: (0..g.n as u32).collect(), num_clusters: g.n, edges }
+    }
+
+    /// Build directly from parts (used by the coordinator and tests).
+    pub fn from_parts(labels: Vec<u32>, num_clusters: usize, edges: Vec<ClusterEdge>) -> Self {
+        ClusterGraph { labels, num_clusters, edges }
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.num_clusters
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[ClusterEdge] {
+        &self.edges
+    }
+
+    /// Current point-level partition.
+    pub fn point_partition(&self) -> Partition {
+        Partition::new(self.labels.clone())
+    }
+
+    /// Best (minimum-average) neighbor per cluster: `(avg, neighbor)` with
+    /// deterministic `(avg, id)` tie-breaking; `None` for isolated
+    /// clusters. One O(E) pass.
+    pub fn argmin_neighbors(&self) -> Vec<Option<(f64, u32)>> {
+        let mut best: Vec<Option<(f64, u32)>> = vec![None; self.num_clusters];
+        for e in &self.edges {
+            let avg = e.agg.avg();
+            for (me, other) in [(e.a, e.b), (e.b, e.a)] {
+                let slot = &mut best[me as usize];
+                let cand = (avg, other);
+                match slot {
+                    None => *slot = Some(cand),
+                    Some(cur) => {
+                        if (cand.0, cand.1) < (cur.0, cur.1) {
+                            *slot = Some(cand);
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Execute one round at threshold `tau` (see module docs). Returns
+    /// whether anything merged.
+    pub fn round(&mut self, tau: f64) -> RoundOutcome {
+        let best = self.argmin_neighbors();
+        let mut uf = UnionFind::new(self.num_clusters);
+        let mut merge_edges = 0usize;
+        for e in &self.edges {
+            let avg = e.agg.avg();
+            if avg > tau {
+                continue;
+            }
+            let a_best = matches!(best[e.a as usize], Some((_, nb)) if nb == e.b);
+            let b_best = matches!(best[e.b as usize], Some((_, nb)) if nb == e.a);
+            if a_best || b_best {
+                uf.union(e.a, e.b);
+                merge_edges += 1;
+            }
+        }
+        if uf.components() == self.num_clusters {
+            return RoundOutcome::NoChange;
+        }
+        self.contract(&mut uf);
+        RoundOutcome::Merged { merge_edges }
+    }
+
+    /// Contract merged clusters: relabel points, re-aggregate edges.
+    fn contract(&mut self, uf: &mut UnionFind) {
+        let relabel = uf.labels(); // old cluster -> new compact id
+        let new_count = uf.components();
+        for l in self.labels.iter_mut() {
+            *l = relabel[*l as usize];
+        }
+        // re-aggregate: sort by (min,max) of relabeled endpoints, merge runs
+        let mut mapped: Vec<ClusterEdge> = Vec::with_capacity(self.edges.len());
+        for e in &self.edges {
+            let (na, nb) = (relabel[e.a as usize], relabel[e.b as usize]);
+            if na == nb {
+                continue; // interior edge disappears
+            }
+            let (a, b) = if na < nb { (na, nb) } else { (nb, na) };
+            mapped.push(ClusterEdge { a, b, agg: e.agg });
+        }
+        mapped.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
+        let mut out: Vec<ClusterEdge> = Vec::with_capacity(mapped.len());
+        for e in mapped {
+            match out.last_mut() {
+                Some(last) if last.a == e.a && last.b == e.b => last.agg.merge(&e.agg),
+                _ => out.push(e),
+            }
+        }
+        self.edges = out;
+        self.num_clusters = new_count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn knn_like(n: usize, pairs: &[(u32, u32, f32)]) -> CsrGraph {
+        let mut edges = Vec::new();
+        for &(a, b, w) in pairs {
+            edges.push(Edge { src: a, dst: b, w });
+            edges.push(Edge { src: b, dst: a, w });
+        }
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn round_merges_mutual_nn_below_threshold() {
+        // 0-1 at 1.0, 1-2 at 5.0, 2-3 at 1.0
+        let g = knn_like(4, &[(0, 1, 1.0), (1, 2, 5.0), (2, 3, 1.0)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        let out = cg.round(2.0);
+        assert!(matches!(out, RoundOutcome::Merged { merge_edges: 2 }));
+        assert_eq!(cg.num_clusters(), 2);
+        let p = cg.point_partition();
+        assert_eq!(p.assign[0], p.assign[1]);
+        assert_eq!(p.assign[2], p.assign[3]);
+        assert_ne!(p.assign[0], p.assign[2]);
+        // surviving edge aggregates the old 1-2 edge only
+        assert_eq!(cg.num_edges(), 1);
+        assert!((cg.edges()[0].agg.avg() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_gates_merges() {
+        let g = knn_like(2, &[(0, 1, 3.0)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        assert_eq!(cg.round(2.9), RoundOutcome::NoChange);
+        assert!(matches!(cg.round(3.0), RoundOutcome::Merged { .. }));
+    }
+
+    #[test]
+    fn one_sided_argmin_suffices() {
+        // Def 3 "and/or": 1's best is 0 (w=1) but 0's best is 2 (w=0.5).
+        // Edge (0,1) still qualifies because it is 1's argmin.
+        let g = knn_like(3, &[(0, 1, 1.0), (0, 2, 0.5)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        let out = cg.round(1.0);
+        assert!(matches!(out, RoundOutcome::Merged { .. }));
+        assert_eq!(cg.num_clusters(), 1); // both edges qualify -> one component
+    }
+
+    #[test]
+    fn non_argmin_edge_below_threshold_does_not_merge() {
+        // star: 0 close to 1 and 2; 1-2 far but below tau; 1 and 2's argmin
+        // is 0, and edge (1,2) is neither's argmin => only argmin edges used
+        let g = knn_like(3, &[(0, 1, 1.0), (0, 2, 1.0), (1, 2, 1.8)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        let best = cg.argmin_neighbors();
+        assert_eq!(best[1].unwrap().1, 0);
+        assert_eq!(best[2].unwrap().1, 0);
+        let out = cg.round(2.0);
+        assert!(matches!(out, RoundOutcome::Merged { .. }));
+        // all three end up together via 0, but through argmin edges only
+        assert_eq!(cg.num_clusters(), 1);
+    }
+
+    #[test]
+    fn average_linkage_aggregation_is_exact() {
+        // clusters {0,1} and {2,3} after first round; edges 1-2 (4.0) and
+        // 0-3 (6.0) must aggregate to avg 5.0 between the merged clusters
+        let g = knn_like(
+            4,
+            &[(0, 1, 1.0), (2, 3, 1.0), (1, 2, 4.0), (0, 3, 6.0)],
+        );
+        let mut cg = ClusterGraph::from_knn(&g);
+        cg.round(1.0);
+        assert_eq!(cg.num_clusters(), 2);
+        assert_eq!(cg.num_edges(), 1);
+        let e = cg.edges()[0];
+        assert_eq!(e.agg.count, 2);
+        assert!((e.agg.avg() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn isolated_clusters_have_no_argmin() {
+        let g = knn_like(3, &[(0, 1, 1.0)]);
+        let cg = ClusterGraph::from_knn(&g);
+        let best = cg.argmin_neighbors();
+        assert!(best[2].is_none());
+    }
+
+    #[test]
+    fn chain_merges_transitively_in_one_round() {
+        // mutual-NN chain: 0-1 (1.0), 1-2 (1.0), 2-3 (1.0): all edges are
+        // someone's argmin (ties by id), so one round collapses the chain
+        let g = knn_like(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        cg.round(1.0);
+        assert_eq!(cg.num_clusters(), 1);
+    }
+}

@@ -1,0 +1,278 @@
+//! The Sub-Cluster Component algorithm (paper Alg. 1, Defs. 3 & Eq. 2–3).
+//!
+//! SCC runs rounds over a cluster-level graph. In round *i* with threshold
+//! τᵢ every cluster computes its 1-nearest-neighbor cluster under the
+//! average linkage of observed k-NN edges (Eq. 25); the edges
+//! `(C_j, C_k)` with `d(C_j, C_k) ≤ τᵢ` **and** (`C_k = argmin_d(C_j)` or
+//! `C_j = argmin_d(C_k)`) define the sub-cluster components (Def. 3,
+//! conditions 1–2); each connected component merges into one cluster.
+//! The threshold index advances only on rounds that merge nothing
+//! (Alg. 1 lines 8–10) — or every round in the fixed-rounds variant
+//! (App. B.3, Table 4).
+//!
+//! This module is the **sequential reference engine**; the sharded
+//! parallel engine in [`crate::coordinator`] must produce bit-identical
+//! partitions (enforced by property tests).
+
+pub mod engine;
+pub mod thresholds;
+
+pub use engine::{ClusterGraph, RoundOutcome};
+pub use thresholds::Thresholds;
+
+use crate::core::{Partition, Tree};
+use crate::graph::CsrGraph;
+
+/// SCC configuration.
+#[derive(Debug, Clone)]
+pub struct SccConfig {
+    /// Increasing dissimilarity thresholds τ₁ … τ_L.
+    pub thresholds: Vec<f64>,
+    /// `true` = fixed-number-of-rounds variant: advance the threshold
+    /// index after every round regardless of merges (paper App. B.3 finds
+    /// this "nearly identical"; Table 4 compares both).
+    pub advance_each_round: bool,
+    /// Hard cap on total rounds (guards degenerate schedules).
+    pub max_rounds: usize,
+}
+
+impl SccConfig {
+    pub fn new(thresholds: Vec<f64>) -> Self {
+        SccConfig { thresholds, advance_each_round: false, max_rounds: 10_000 }
+    }
+
+    pub fn fixed_rounds(thresholds: Vec<f64>) -> Self {
+        SccConfig { thresholds, advance_each_round: true, max_rounds: 10_000 }
+    }
+}
+
+/// Per-round statistics.
+#[derive(Debug, Clone)]
+pub struct RoundStat {
+    pub round: usize,
+    pub threshold: f64,
+    pub clusters_before: usize,
+    pub clusters_after: usize,
+    pub merge_edges: usize,
+    pub live_edges: usize,
+    pub secs: f64,
+}
+
+/// The output of an SCC run: one partition per round (finest first,
+/// starting with singletons) plus per-round stats.
+#[derive(Debug, Clone)]
+pub struct SccResult {
+    pub rounds: Vec<Partition>,
+    pub stats: Vec<RoundStat>,
+}
+
+impl SccResult {
+    /// The hierarchy ⋃ SCC(X, d, τ) as a tree (paper §3.4).
+    pub fn tree(&self) -> Tree {
+        Tree::from_rounds(&self.rounds)
+    }
+
+    /// The round whose cluster count is closest to `k` (paper §4.2 flat
+    /// clustering protocol). Ties take the earlier (finer) round.
+    pub fn round_closest_to_k(&self, k: usize) -> &Partition {
+        self.rounds
+            .iter()
+            .min_by_key(|p| {
+                let c = p.num_clusters() as i64;
+                (c - k as i64).abs()
+            })
+            .expect("non-empty rounds")
+    }
+
+    pub fn final_partition(&self) -> &Partition {
+        self.rounds.last().expect("non-empty rounds")
+    }
+}
+
+/// Run SCC over a symmetrized k-NN graph whose weights are already the
+/// chosen dissimilarity. `n` is the number of points (== `graph.n`).
+pub fn run(graph: &CsrGraph, config: &SccConfig) -> SccResult {
+    let n = graph.n;
+    let mut cg = ClusterGraph::from_knn(graph);
+    let mut rounds = vec![Partition::singletons(n)];
+    let mut stats = Vec::new();
+    let mut idx = 0usize;
+    let mut round_no = 0usize;
+    while idx < config.thresholds.len() && round_no < config.max_rounds {
+        let tau = config.thresholds[idx];
+        let timer = crate::util::Timer::start();
+        let before = cg.num_clusters();
+        let outcome = cg.round(tau);
+        round_no += 1;
+        match outcome {
+            RoundOutcome::Merged { merge_edges } => {
+                rounds.push(cg.point_partition());
+                stats.push(RoundStat {
+                    round: round_no,
+                    threshold: tau,
+                    clusters_before: before,
+                    clusters_after: cg.num_clusters(),
+                    merge_edges,
+                    live_edges: cg.num_edges(),
+                    secs: timer.secs(),
+                });
+                if config.advance_each_round {
+                    idx += 1;
+                }
+                if cg.num_clusters() <= 1 {
+                    break;
+                }
+            }
+            RoundOutcome::NoChange => {
+                idx += 1; // Alg. 1: advance threshold when nothing merged
+            }
+        }
+    }
+    SccResult { rounds, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::metrics::{dendrogram_purity, pairwise_prf};
+
+    fn run_on_mixture(spec: &MixtureSpec, k: usize, l: usize) -> (SccResult, crate::core::Dataset) {
+        let ds = separated_mixture(spec);
+        let g = knn_graph(&ds, k, Measure::L2Sq);
+        let (lo, hi) = min_max_edge(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, l).taus);
+        (run(&g, &cfg), ds)
+    }
+
+    fn min_max_edge(g: &CsrGraph) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi: f64 = 0.0;
+        for &w in &g.w {
+            lo = lo.min(w as f64);
+            hi = hi.max(w as f64);
+        }
+        (lo.max(1e-9), hi.max(lo * 2.0))
+    }
+
+    #[test]
+    fn rounds_are_nested_and_terminate() {
+        let (res, _) = run_on_mixture(
+            &MixtureSpec { n: 300, d: 4, k: 6, sigma: 0.05, delta: 8.0, ..Default::default() },
+            8,
+            20,
+        );
+        assert!(res.rounds.len() >= 2);
+        for w in res.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]), "rounds must coarsen monotonically");
+        }
+    }
+
+    #[test]
+    fn recovers_separated_mixture_theorem1() {
+        // Theorem 1: δ-separated data + geometric thresholds => some round
+        // equals the target clustering, and dendrogram purity is 1
+        // (Corollary 4). δ=35 > 30 covers the ℓ2² case.
+        let spec = MixtureSpec {
+            n: 400,
+            d: 4,
+            k: 8,
+            sigma: 0.03,
+            delta: 35.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let ds = separated_mixture(&spec);
+        let g = knn_graph(&ds, 12, Measure::L2Sq);
+        let (lo, hi) = min_max_edge(&g);
+        let cfg = SccConfig::new(Thresholds::geometric_doubling(lo, hi).taus);
+        let res = run(&g, &cfg);
+        let labels = ds.labels.as_ref().unwrap();
+        let hit = res.rounds.iter().any(|p| {
+            p.num_clusters() == 8 && pairwise_prf(p, labels).f1 > 0.9999
+        });
+        assert!(hit, "no round recovered the target clustering");
+        let dp = dendrogram_purity(&res.tree(), labels);
+        assert!(dp > 0.9999, "dendrogram purity {dp}");
+    }
+
+    #[test]
+    fn final_round_reaches_one_cluster_per_graph_component() {
+        // the k-NN graph of well-separated clusters is disconnected across
+        // clusters, so SCC's final round has exactly one cluster per graph
+        // component — here, one per mixture component
+        let (res, ds) = run_on_mixture(
+            &MixtureSpec { n: 200, d: 3, k: 4, sigma: 0.05, delta: 6.0, ..Default::default() },
+            10,
+            25,
+        );
+        let g = knn_graph(&ds, 10, Measure::L2Sq);
+        let mut uf = crate::graph::UnionFind::new(ds.n);
+        for u in 0..ds.n as u32 {
+            for (v, _) in g.neighbors(u) {
+                uf.union(u, v);
+            }
+        }
+        assert_eq!(res.final_partition().num_clusters(), uf.components());
+    }
+
+    #[test]
+    fn fixed_rounds_variant_also_works() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 250,
+            d: 4,
+            k: 5,
+            sigma: 0.05,
+            delta: 10.0,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let (lo, hi) = min_max_edge(&g);
+        let cfg = SccConfig::fixed_rounds(Thresholds::geometric(lo, hi, 30).taus);
+        let res = run(&g, &cfg);
+        assert!(res.rounds.len() >= 2);
+        let labels = ds.labels.as_ref().unwrap();
+        let best = res
+            .rounds
+            .iter()
+            .map(|p| pairwise_prf(p, labels).f1)
+            .fold(0.0f64, f64::max);
+        assert!(best > 0.95, "best f1 {best}");
+    }
+
+    #[test]
+    fn round_closest_to_k_selects_reasonably() {
+        let (res, _) = run_on_mixture(
+            &MixtureSpec { n: 300, d: 4, k: 6, sigma: 0.04, delta: 10.0, ..Default::default() },
+            8,
+            25,
+        );
+        let p = res.round_closest_to_k(6);
+        let c = p.num_clusters();
+        // must be at least as close to 6 as both endpoints
+        let first = res.rounds.first().unwrap().num_clusters() as i64;
+        let last = res.rounds.last().unwrap().num_clusters() as i64;
+        let dist = (c as i64 - 6).abs();
+        assert!(dist <= (first - 6).abs());
+        assert!(dist <= (last - 6).abs());
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let (res, _) = run_on_mixture(
+            &MixtureSpec { n: 150, d: 3, k: 3, sigma: 0.05, delta: 8.0, ..Default::default() },
+            6,
+            15,
+        );
+        for s in &res.stats {
+            assert!(s.clusters_after < s.clusters_before);
+            assert!(s.merge_edges > 0);
+        }
+        // thresholds non-decreasing across stats
+        for w in res.stats.windows(2) {
+            assert!(w[0].threshold <= w[1].threshold);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Round-threshold schedules (paper App. B.3 & B.5, Table 3).
+//!
+//! * **geometric** — `τ_i = m · (M/m)^(i/L)` (the paper's default; the
+//!   doubling special case `τ_i = 2^i τ_0` is what Theorems 1/Cor. 3–4
+//!   analyze);
+//! * **linear** — `τ_i = m + i · (M−m)/L` (compared in Table 3);
+//! * **per-merge** — explicit list (used to emulate HAC, Prop. 2).
+
+/// A monotone non-decreasing threshold schedule.
+#[derive(Debug, Clone)]
+pub struct Thresholds {
+    pub taus: Vec<f64>,
+}
+
+impl Thresholds {
+    /// Geometric progression from `m` to `M` in `l` steps:
+    /// `m·(M/m)^(1/l), …, m·(M/m)^(l/l) = M`. Requires `0 < m ≤ M`.
+    pub fn geometric(m: f64, mm: f64, l: usize) -> Thresholds {
+        assert!(m > 0.0 && mm >= m, "need 0 < m <= M (got {m}, {mm})");
+        assert!(l >= 1);
+        let ratio = mm / m;
+        let taus = (1..=l).map(|i| m * ratio.powf(i as f64 / l as f64)).collect();
+        Thresholds { taus }
+    }
+
+    /// Doubling progression `τ_0·2, τ_0·4, …` until `M` is covered
+    /// (Theorem 1's schedule).
+    pub fn geometric_doubling(tau0: f64, mm: f64) -> Thresholds {
+        assert!(tau0 > 0.0);
+        let mut taus = Vec::new();
+        let mut t = tau0;
+        while t < mm {
+            t *= 2.0;
+            taus.push(t);
+        }
+        if taus.is_empty() {
+            taus.push(tau0 * 2.0);
+        }
+        Thresholds { taus }
+    }
+
+    /// Linear progression from `m` to `M` in `l` steps.
+    pub fn linear(m: f64, mm: f64, l: usize) -> Thresholds {
+        assert!(mm >= m && l >= 1);
+        let step = (mm - m) / l as f64;
+        let taus = (1..=l).map(|i| m + step * i as f64).collect();
+        Thresholds { taus }
+    }
+
+    /// Schedule for similarity measures: similarities decreasing
+    /// geometrically from `s_max` to `s_min` mapped into dissimilarity
+    /// space via `1 − s` (monotone increasing result). Matches the paper's
+    /// "comparable geometrically increasing progression" for dot products.
+    pub fn similarity_geometric(s_min: f64, s_max: f64, l: usize) -> Thresholds {
+        assert!(s_min > 0.0 && s_max >= s_min && l >= 1);
+        let ratio = s_max / s_min;
+        // s_i decreasing: s_max, ..., s_min  =>  1 - s_i increasing
+        let taus = (0..l)
+            .map(|i| 1.0 - s_max / ratio.powf(i as f64 / (l.max(2) - 1) as f64))
+            .map(|t| t.max(1e-9))
+            .collect();
+        Thresholds { taus }
+    }
+
+    /// Number of thresholds.
+    pub fn len(&self) -> usize {
+        self.taus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.taus.is_empty()
+    }
+
+    /// Verify monotone non-decreasing (property used by SCC's analysis).
+    pub fn is_monotone(&self) -> bool {
+        self.taus.windows(2).all(|w| w[0] <= w[1])
+    }
+}
+
+/// Scan a symmetrized k-NN graph for its (min, max) edge dissimilarity —
+/// the `m`/`M` the schedules anchor to (paper App. B.3: "m is the minimum
+/// allowed pairwise distance and M is the maximum").
+pub fn edge_range(g: &crate::graph::CsrGraph) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    for &w in &g.w {
+        let w = w as f64;
+        if w > 0.0 {
+            lo = lo.min(w);
+        }
+        hi = hi.max(w);
+    }
+    if !lo.is_finite() {
+        lo = 1e-6;
+    }
+    if hi <= lo {
+        hi = lo * 2.0;
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_endpoints_and_monotonicity() {
+        let t = Thresholds::geometric(0.01, 4.0, 30);
+        assert_eq!(t.len(), 30);
+        assert!(t.is_monotone());
+        assert!((t.taus[29] - 4.0).abs() < 1e-9);
+        assert!(t.taus[0] > 0.01);
+    }
+
+    #[test]
+    fn doubling_covers_range() {
+        let t = Thresholds::geometric_doubling(0.5, 10.0);
+        assert!(t.is_monotone());
+        assert!(*t.taus.last().unwrap() >= 10.0);
+        assert_eq!(t.taus[0], 1.0);
+    }
+
+    #[test]
+    fn linear_is_affine() {
+        let t = Thresholds::linear(0.0, 3.0, 3);
+        assert_eq!(t.taus, vec![1.0, 2.0, 3.0]);
+        assert!(t.is_monotone());
+    }
+
+    #[test]
+    fn similarity_schedule_is_monotone_dissim() {
+        let t = Thresholds::similarity_geometric(0.01, 1.0, 20);
+        assert!(t.is_monotone(), "taus {:?}", t.taus);
+        assert!(t.taus[0] < 0.01 + 1e-6); // starts near 1 - s_max = 0
+    }
+
+    #[test]
+    fn property_all_schedules_monotone() {
+        crate::util::prop::check("schedules monotone", 100, |g| {
+            let m = g.f64_in(1e-6, 1.0);
+            let mm = m + g.f64_in(1e-6, 10.0);
+            let l = g.usize_in(1..200);
+            assert!(Thresholds::geometric(m, mm, l).is_monotone());
+            assert!(Thresholds::linear(m, mm, l).is_monotone());
+            assert!(Thresholds::geometric_doubling(m, mm).is_monotone());
+        });
+    }
+
+    #[test]
+    fn edge_range_defaults_on_empty() {
+        let g = crate::graph::CsrGraph::from_edges(3, &[]);
+        let (lo, hi) = edge_range(&g);
+        assert!(lo > 0.0 && hi > lo);
+    }
+}

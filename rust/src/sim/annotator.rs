@@ -1,0 +1,214 @@
+//! Simulated human coherence annotation (paper §5, Fig. 4 substitution —
+//! DESIGN.md §4).
+//!
+//! The paper asked human raters to score ~1200 sampled query clusters from
+//! −1 (incoherent) to +1 (coherent). Our simulator rates a cluster from
+//! its ground-truth intent composition — what a careful human would
+//! perceive — plus rater noise:
+//!
+//! * **coherent** (+1): one intent dominates (purity ≥ `coherent_purity`),
+//!   or the cluster stays within one subtopic (a human reads "electric
+//!   piano price" / "digital piano sale" as one theme);
+//! * **incoherent** (−1): no intent reaches `incoherent_purity` **and**
+//!   the cluster spans multiple top-level topics — the chained clusters
+//!   Affinity produces;
+//! * **neutral** (0): everything in between;
+//! * each verdict flips to a uniform random one with probability
+//!   `noise` (rater disagreement).
+
+use crate::core::Partition;
+use crate::data::webqueries::QueryCorpus;
+use crate::util::Rng;
+
+/// One cluster's rating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rating {
+    Incoherent,
+    Neutral,
+    Coherent,
+}
+
+/// Aggregated rating counts (the bars of Fig. 4).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RatingCounts {
+    pub incoherent: usize,
+    pub neutral: usize,
+    pub coherent: usize,
+}
+
+impl RatingCounts {
+    pub fn total(&self) -> usize {
+        self.incoherent + self.neutral + self.coherent
+    }
+
+    pub fn pct(&self, r: Rating) -> f64 {
+        let n = self.total().max(1) as f64;
+        100.0
+            * match r {
+                Rating::Incoherent => self.incoherent as f64,
+                Rating::Neutral => self.neutral as f64,
+                Rating::Coherent => self.coherent as f64,
+            }
+            / n
+    }
+}
+
+/// Annotator parameters.
+#[derive(Debug, Clone)]
+pub struct Annotator {
+    pub coherent_purity: f64,
+    pub incoherent_purity: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for Annotator {
+    fn default() -> Self {
+        Annotator { coherent_purity: 0.75, incoherent_purity: 0.40, noise: 0.05, seed: 0 }
+    }
+}
+
+impl Annotator {
+    /// Rate one cluster given its member query indices.
+    pub fn rate(&self, corpus: &QueryCorpus, members: &[u32], rng: &mut Rng) -> Rating {
+        let labels = corpus.dataset.labels.as_ref().expect("corpus labeled");
+        // intent / subtopic / topic composition
+        let mut by_intent: std::collections::HashMap<u32, usize> = Default::default();
+        let mut by_sub: std::collections::HashMap<u32, usize> = Default::default();
+        let mut topics: std::collections::HashSet<u32> = Default::default();
+        for &m in members {
+            let intent = labels[m as usize];
+            *by_intent.entry(intent).or_insert(0) += 1;
+            let (topic, sub) = corpus.intent_parent[intent as usize];
+            *by_sub.entry(sub).or_insert(0) += 1;
+            topics.insert(topic);
+        }
+        let n = members.len().max(1) as f64;
+        let max_intent = *by_intent.values().max().unwrap_or(&0) as f64 / n;
+        let max_sub = *by_sub.values().max().unwrap_or(&0) as f64 / n;
+        let verdict = if max_intent >= self.coherent_purity || max_sub >= 0.9 {
+            Rating::Coherent
+        } else if max_intent < self.incoherent_purity && topics.len() > 1 {
+            Rating::Incoherent
+        } else {
+            Rating::Neutral
+        };
+        if rng.f64() < self.noise {
+            match rng.index(3) {
+                0 => Rating::Incoherent,
+                1 => Rating::Neutral,
+                _ => Rating::Coherent,
+            }
+        } else {
+            verdict
+        }
+    }
+}
+
+/// Sample up to `samples` clusters (size ≥ 2) from a partition and rate
+/// them. Mirrors the paper's protocol: clusters sampled uniformly.
+pub fn rate_clusters(
+    corpus: &QueryCorpus,
+    partition: &Partition,
+    annotator: &Annotator,
+    samples: usize,
+) -> RatingCounts {
+    let mut rng = Rng::new(annotator.seed ^ 0xFEED);
+    let groups: Vec<Vec<u32>> =
+        partition.members().into_iter().filter(|g| g.len() >= 2).collect();
+    let mut counts = RatingCounts::default();
+    if groups.is_empty() {
+        return counts;
+    }
+    let picks = if groups.len() <= samples {
+        (0..groups.len()).collect::<Vec<_>>()
+    } else {
+        rng.sample_indices(groups.len(), samples)
+    };
+    for gi in picks {
+        match annotator.rate(corpus, &groups[gi], &mut rng) {
+            Rating::Incoherent => counts.incoherent += 1,
+            Rating::Neutral => counts.neutral += 1,
+            Rating::Coherent => counts.coherent += 1,
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::webqueries::{generate, WebQuerySpec};
+
+    fn tiny_corpus() -> QueryCorpus {
+        generate(&WebQuerySpec {
+            n: 1000,
+            d: 16,
+            topics: 4,
+            subtopics: 3,
+            intents: 4,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn pure_cluster_is_coherent() {
+        let corpus = tiny_corpus();
+        let labels = corpus.dataset.labels.as_ref().unwrap();
+        let members: Vec<u32> =
+            (0..corpus.dataset.n as u32).filter(|&i| labels[i as usize] == labels[0]).collect();
+        let ann = Annotator { noise: 0.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        assert_eq!(ann.rate(&corpus, &members, &mut rng), Rating::Coherent);
+    }
+
+    #[test]
+    fn cross_topic_mixture_is_incoherent() {
+        let corpus = tiny_corpus();
+        let labels = corpus.dataset.labels.as_ref().unwrap();
+        // take a few points from many different topics
+        let mut members = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..corpus.dataset.n as u32 {
+            let intent = labels[i as usize];
+            let (topic, _) = corpus.intent_parent[intent as usize];
+            if seen.insert((topic, intent)) {
+                members.push(i);
+            }
+            if members.len() >= 12 {
+                break;
+            }
+        }
+        let ann = Annotator { noise: 0.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        assert_eq!(ann.rate(&corpus, &members, &mut rng), Rating::Incoherent);
+    }
+
+    #[test]
+    fn ground_truth_partition_rates_mostly_coherent() {
+        let corpus = tiny_corpus();
+        let part = Partition::new(corpus.dataset.labels.clone().unwrap());
+        let counts =
+            rate_clusters(&corpus, &part, &Annotator { noise: 0.0, ..Default::default() }, 500);
+        assert!(counts.pct(Rating::Coherent) > 95.0, "{counts:?}");
+    }
+
+    #[test]
+    fn single_giant_cluster_rates_incoherent() {
+        let corpus = tiny_corpus();
+        let part = Partition::single_cluster(corpus.dataset.n);
+        let counts =
+            rate_clusters(&corpus, &part, &Annotator { noise: 0.0, ..Default::default() }, 10);
+        assert_eq!(counts.incoherent, 1);
+    }
+
+    #[test]
+    fn noise_perturbs_but_preserves_majority() {
+        let corpus = tiny_corpus();
+        let part = Partition::new(corpus.dataset.labels.clone().unwrap());
+        let counts =
+            rate_clusters(&corpus, &part, &Annotator { noise: 0.3, seed: 4, ..Default::default() }, 400);
+        assert!(counts.pct(Rating::Coherent) > 60.0, "{counts:?}");
+        assert!(counts.incoherent > 0, "noise should add some incoherent votes");
+    }
+}

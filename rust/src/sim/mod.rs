@@ -1,0 +1,6 @@
+//! Simulation substrates for the web-scale study (paper §5):
+//! the coherence annotator standing in for the paper's human raters.
+
+pub mod annotator;
+
+pub use annotator::{rate_clusters, Annotator, Rating, RatingCounts};

@@ -1,0 +1,240 @@
+//! Scoped-thread data parallelism (a tiny rayon substitute).
+//!
+//! The environment provides no rayon; `std::thread::scope` plus static
+//! chunking covers every data-parallel pattern this crate needs: the
+//! workloads (k-NN tiles, per-cluster argmins, edge contraction) are
+//! regular, so static chunking loses little to work stealing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: the machine's available
+/// parallelism, overridable with the `SCC_THREADS` env var.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SCC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Split `n` items into at most `parts` contiguous ranges of near-equal
+/// size. Returns fewer ranges when `n < parts`. Empty when `n == 0`.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 || parts == 0 {
+        return vec![];
+    }
+    let parts = parts.min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f` over disjoint contiguous ranges of `[0, n)` on `threads`
+/// threads. `f` receives `(thread_index, range)`.
+pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let ranges = split_ranges(n, threads.max(1));
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(0, r);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for (i, r) in ranges.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, r));
+        }
+    });
+}
+
+/// Parallel map over `items`, preserving order. Static chunking.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send + Default + Clone,
+    F: Fn(&T) -> U + Sync,
+{
+    let mut out = vec![U::default(); items.len()];
+    {
+        let chunks: Vec<(&[T], &mut [U])> = {
+            // pair up matching input/output chunks
+            let ranges = split_ranges(items.len(), threads.max(1));
+            let mut outs: Vec<&mut [U]> = Vec::with_capacity(ranges.len());
+            let mut rest: &mut [U] = &mut out;
+            for r in &ranges {
+                let (a, b) = rest.split_at_mut(r.len());
+                outs.push(a);
+                rest = b;
+            }
+            ranges.iter().map(|r| &items[r.clone()]).zip(outs).collect()
+        };
+        std::thread::scope(|s| {
+            for (inp, outp) in chunks {
+                let f = &f;
+                s.spawn(move || {
+                    for (x, y) in inp.iter().zip(outp.iter_mut()) {
+                        *y = f(x);
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+/// Dynamic work queue: run `f(i)` for every `i in 0..n`, with threads
+/// pulling indices from a shared atomic counter in blocks of `grain`.
+/// Use when per-item cost is irregular (e.g. per-cluster work).
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let grain = grain.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel fold: each thread folds its range with `fold`, results merged
+/// with `merge` (order unspecified but deterministic inputs per chunk).
+pub fn par_fold<A, F, M>(n: usize, threads: usize, init: A, fold: F, merge: M) -> A
+where
+    A: Send + Clone,
+    F: Fn(A, std::ops::Range<usize>) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
+    let ranges = split_ranges(n, threads.max(1));
+    if ranges.len() <= 1 {
+        return match ranges.into_iter().next() {
+            Some(r) => fold(init, r),
+            None => init,
+        };
+    }
+    let mut partials: Vec<Option<A>> = vec![None; ranges.len()];
+    std::thread::scope(|s| {
+        for (slot, r) in partials.iter_mut().zip(ranges) {
+            let fold = &fold;
+            let init = init.clone();
+            s.spawn(move || {
+                *slot = Some(fold(init, r));
+            });
+        }
+    });
+    // merge in deterministic (chunk) order
+    let mut it = partials.into_iter().flatten();
+    let first = it.next().expect("non-empty partials");
+    it.fold(first, merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn split_covers_all() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8, 200] {
+                let rs = split_ranges(n, p);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                // contiguity
+                let mut expect = 0;
+                for r in &rs {
+                    assert_eq!(r.start, expect);
+                    assert!(!r.is_empty());
+                    expect = r.end;
+                }
+                // balance
+                if let (Some(min), Some(max)) =
+                    (rs.iter().map(|r| r.len()).min(), rs.iter().map(|r| r.len()).max())
+                {
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_visits_each_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(1000, 7, |_, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        let got = par_map(&xs, 5, |x| x * x);
+        let want: Vec<u64> = xs.iter().map(|x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dynamic_visits_each_once() {
+        let hits: Vec<AtomicU64> = (0..503).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(503, 4, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let got = par_fold(
+            1_000usize,
+            8,
+            0u64,
+            |acc, r| acc + r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(got, 499_500);
+    }
+
+    #[test]
+    fn single_thread_paths() {
+        let got = par_fold(10usize, 1, 0u64, |acc, r| acc + r.count() as u64, |a, b| a + b);
+        assert_eq!(got, 10);
+        let mapped = par_map(&[1, 2, 3], 1, |x| x + 1);
+        assert_eq!(mapped, vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Property-testing mini-framework (offline stand-in for `proptest`).
+//!
+//! Runs a property over many seeded random cases; on failure reports the
+//! seed and case index so the exact case replays deterministically:
+//!
+//! ```no_run
+//! use scc::util::prop::{check, Gen};
+//! check("vec reversal is involutive", 200, |g| {
+//!     let v = g.vec_u32(0..50, 1000);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+//!
+//! No shrinking — cases are kept small instead (the domain here is
+//! partitions/graphs of tens to hundreds of elements, already readable).
+
+use super::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint that grows across cases so later cases are larger.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, r: std::ops::Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.index(r.end - r.start)
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Vector of u32 drawn from `each` range, length `0..=max_len` scaled
+    /// by the growing size hint.
+    pub fn vec_u32(&mut self, each: std::ops::Range<u32>, max_len: usize) -> Vec<u32> {
+        let len = self.scaled_len(max_len);
+        (0..len)
+            .map(|_| each.start + (self.rng.below((each.end - each.start) as u64) as u32))
+            .collect()
+    }
+
+    /// Vector of f32 in `[lo, hi)`.
+    pub fn vec_f32(&mut self, lo: f32, hi: f32, max_len: usize) -> Vec<f32> {
+        let len = self.scaled_len(max_len);
+        (0..len).map(|_| lo + (hi - lo) * self.rng.f32()).collect()
+    }
+
+    /// A length in `[0, max_len]` biased by the current size hint.
+    pub fn scaled_len(&mut self, max_len: usize) -> usize {
+        let cap = (self.size).min(max_len);
+        if cap == 0 {
+            0
+        } else {
+            self.rng.index(cap + 1)
+        }
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Environment knob: override case count (e.g. `SCC_PROP_CASES=1000` for a
+/// deeper soak run).
+fn case_count(default_cases: usize) -> usize {
+    std::env::var("SCC_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(default_cases)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("SCC_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC1A0)
+}
+
+/// Run `property` for `cases` seeded cases, growing the size hint from 2 to
+/// 64. Panics (propagating the property's panic) with seed/case context on
+/// failure.
+pub fn check<F>(name: &str, cases: usize, property: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let cases = case_count(cases);
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0.wrapping_add(case as u64);
+        let size = 2 + (case * 62) / cases.max(1);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed), size };
+            property(&mut g);
+        });
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with SCC_PROP_SEED={seed0} — failing seed {seed}, size {size})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_obvious_property() {
+        check("addition commutes", 50, |g| {
+            let a = g.usize_in(0..1000);
+            let b = g.usize_in(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let x = g.usize_in(3..10);
+            assert!((3..10).contains(&x));
+            let v = g.vec_u32(5..9, 40);
+            assert!(v.len() <= 40);
+            assert!(v.iter().all(|&u| (5..9).contains(&u)));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always fails on size>4", 50, |g| {
+            assert!(g.size <= 4);
+        });
+    }
+}

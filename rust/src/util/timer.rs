@@ -1,0 +1,110 @@
+//! Wall-clock timing helpers and a named-phase stopwatch used by the
+//! coordinator and the experiment harness to attribute time per phase
+//! (graph build, per-round argmin, contraction, …).
+
+use std::time::Instant;
+
+/// Simple elapsed-time wrapper.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Accumulates wall-clock time under named phases.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and attribute it to `name` (accumulating).
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Add `secs` to phase `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(p) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            p.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Phases in insertion order.
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, secs) in &self.phases {
+            out.push_str(&format!("  {:<28} {}\n", name, super::stats::fmt_secs(*secs)));
+        }
+        out.push_str(&format!("  {:<28} {}\n", "total", super::stats::fmt_secs(self.total())));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", 1.0);
+        pt.add("b", 2.0);
+        pt.add("a", 0.5);
+        assert_eq!(pt.get("a"), 1.5);
+        assert_eq!(pt.get("b"), 2.0);
+        assert_eq!(pt.get("missing"), 0.0);
+        assert!((pt.total() - 3.5).abs() < 1e-12);
+        assert_eq!(pt.phases().len(), 2);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(pt.get("work") >= 0.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        assert!(t.secs() >= 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration-level property tests for the SCC theory claims:
+//!
+//! * **Prop. 2** — SCC with per-merge thresholds reproduces HAC's tree for
+//!   a reducible, injective linkage;
+//! * **Theorem 1 / Cor. 4** — geometric doubling schedules recover
+//!   δ-separated target clusterings with perfect dendrogram purity;
+//! * hierarchy invariants across the full pipeline.
+
+use scc::core::{Partition, Tree};
+use scc::data::mixture::{measured_delta, separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::metrics::dendrogram_purity;
+use scc::scc::{SccConfig, Thresholds};
+
+/// Prop. 2: run graph-HAC (exact greedy, one merge at a time) to get its
+/// merge heights; feed SCC those heights (+ε) as thresholds with the
+/// fixed-rounds variant; the resulting trees must encode the same
+/// clusterings at every HAC level.
+#[test]
+fn prop2_scc_reproduces_hac_with_per_merge_thresholds() {
+    scc::util::prop::check("prop2", 15, |g| {
+        let n = g.usize_in(8..40);
+        let d = g.usize_in(2..5);
+        let spec = MixtureSpec {
+            n,
+            d,
+            k: g.usize_in(2..5),
+            sigma: 0.1,
+            delta: 2.0,
+            seed: g.rng().next_u64(),
+            ..Default::default()
+        };
+        let ds = separated_mixture(&spec);
+        // complete graph => Eq. 25 linkage == classic UPGMA (injective on
+        // random data with probability 1; reducible)
+        let graph = knn_graph(&ds, n - 1, Measure::L2Sq);
+        let (_, merges) = scc::hac::graph::graph_hac(&graph);
+        if merges.is_empty() {
+            return;
+        }
+        // thresholds: each merge height + epsilon, ascending
+        let mut taus: Vec<f64> = merges.iter().map(|&(_, _, h)| h * (1.0 + 1e-9) + 1e-12).collect();
+        taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cfg = SccConfig::fixed_rounds(taus);
+        let res = scc::scc::run(&graph, &cfg);
+        // every HAC level partition must appear among SCC's rounds
+        for k_level in [2usize, 3, 4] {
+            if k_level >= n {
+                continue;
+            }
+            let hac_cut = scc::hac::graph::graph_hac_cut(n, &merges, k_level);
+            if hac_cut.num_clusters() != k_level {
+                continue; // forest: level not reachable
+            }
+            let found = res.rounds.iter().any(|p| p.same_clustering(&hac_cut));
+            assert!(
+                found,
+                "HAC level k={k_level} missing from SCC rounds (n={n}, seed case)"
+            );
+        }
+    });
+}
+
+/// Theorem 1 + Corollary 4 on freshly sampled δ-separated instances.
+#[test]
+fn theorem1_recovers_separated_clusterings() {
+    scc::util::prop::check("theorem1", 8, |g| {
+        let spec = MixtureSpec {
+            n: g.usize_in(100..300),
+            d: g.usize_in(2..6),
+            k: g.usize_in(2..8),
+            sigma: 0.03,
+            delta: 32.0, // > 30 covers the l2sq case
+            seed: g.rng().next_u64(),
+            imbalance: 0.0,
+        };
+        let ds = separated_mixture(&spec);
+        assert!(measured_delta(&ds) >= 30.0, "instance must certify separation");
+        let graph = knn_graph(&ds, 10, Measure::L2Sq);
+        let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
+        let cfg = SccConfig::new(Thresholds::geometric_doubling(lo, hi).taus);
+        let res = scc::scc::run(&graph, &cfg);
+        let labels = ds.labels.as_ref().unwrap();
+        let target = Partition::new(labels.clone());
+        let recovered = res.rounds.iter().any(|p| p.same_clustering(&target));
+        assert!(recovered, "no round equals the target clustering");
+        let dp = dendrogram_purity(&res.tree(), labels);
+        assert!(dp > 1.0 - 1e-9, "Cor. 4: dendrogram purity must be 1, got {dp}");
+    });
+}
+
+/// Full-pipeline hierarchy invariants: nested rounds, valid tree,
+/// cut-consistency.
+#[test]
+fn hierarchy_invariants_end_to_end() {
+    scc::util::prop::check("hierarchy invariants", 10, |g| {
+        let spec = MixtureSpec {
+            n: g.usize_in(50..250),
+            d: 4,
+            k: g.usize_in(2..10),
+            sigma: 0.1,
+            delta: g.f64_in(1.0, 8.0),
+            seed: g.rng().next_u64(),
+            imbalance: 0.0,
+        };
+        let ds = separated_mixture(&spec);
+        let graph = knn_graph(&ds, g.usize_in(3..12), Measure::L2Sq);
+        let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, g.usize_in(5..40)).taus);
+        let (res, stats) = scc::coordinator::run_parallel(&graph, &cfg, g.usize_in(1..6));
+        for w in res.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]), "rounds must nest");
+        }
+        let tree: Tree = res.tree();
+        tree.validate().expect("valid tree");
+        assert_eq!(tree.leaf_counts()[tree.root() as usize] as usize, ds.n);
+        // coordinator stats coherent
+        assert_eq!(stats.rounds.len(), res.rounds.len() - 1);
+        for s in &stats.rounds {
+            assert!(s.clusters_after < s.clusters_before);
+        }
+    });
+}

@@ -30,7 +30,7 @@ fn main() {
     let threads = par::default_threads();
     let mut timers = PhaseTimer::new();
 
-    let backend: Box<dyn Backend> = auto_backend();
+    let backend = auto_backend();
     if backend.name() != "pjrt" {
         eprintln!("WARNING: artifacts not found, using native backend (run `make artifacts`)");
     }

@@ -1,0 +1,129 @@
+//! Serving & incremental ingestion: build a hierarchy once, then treat it
+//! as a long-lived index — answer assignment queries through the worker
+//! pool, ingest a mini-batch, and re-query the updated structure.
+//!
+//! ```bash
+//! cargo run --release --example serving
+//! ```
+//!
+//! Pipeline: mixture → k-NN graph → SCC → `HierarchySnapshot` →
+//! `Service` (pooled queries) → `ServeIndex::ingest` (copy-on-write
+//! swap) → re-query + `cut_at(τ)` on the post-ingest snapshot.
+
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::runtime::NativeBackend;
+use scc::scc::{run, SccConfig, Thresholds};
+use scc::serve::{HierarchySnapshot, IngestConfig, ServeIndex, Service, ServiceConfig};
+use scc::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    // 1. batch phase: data, k-NN graph, SCC rounds
+    let ds = separated_mixture(&MixtureSpec {
+        n: 4000,
+        d: 8,
+        k: 12,
+        sigma: 0.04,
+        delta: 10.0,
+        imbalance: 0.0,
+        seed: 20260726,
+    });
+    println!("dataset: n={} d={} k*={}", ds.n, ds.d, ds.num_classes());
+    let graph = knn_graph(&ds, 10, Measure::L2Sq);
+    let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
+    let result = run(&graph, &SccConfig::new(Thresholds::geometric(lo, hi, 30).taus));
+
+    // 2. freeze into a snapshot and pick the serving cut
+    let snap = HierarchySnapshot::build(&ds, &result, Measure::L2Sq, 0);
+    let level = snap.coarsest();
+    let tau = snap.threshold(level);
+    println!("{}", snap.summary());
+    let truth = snap.level(level).partition.clone();
+
+    // 3. online phase: worker pool answering batched queries
+    let index = Arc::new(ServeIndex::new(snap));
+    let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+    let service = Service::start(
+        Arc::clone(&index),
+        backend.clone(),
+        ServiceConfig { workers: 4, level, max_batch: 128, ..Default::default() },
+    );
+
+    // ≥1k unseen queries: jittered copies of known points, so the right
+    // answer is the source point's own cluster
+    let mut rng = Rng::new(7);
+    let nq = 1200usize;
+    let mut queries = Vec::with_capacity(nq * ds.d);
+    let mut expect = Vec::with_capacity(nq);
+    for j in 0..nq {
+        let src = (j * 13) % ds.n;
+        expect.push(truth.assign[src]);
+        for &x in ds.row(src) {
+            queries.push(x + 0.005 * rng.normal_f32());
+        }
+    }
+    let mut answers = vec![u32::MAX; nq];
+    let mut q0 = 0usize;
+    for h in service.submit_chunked(&queries, nq) {
+        let r = h.recv().expect("service response");
+        answers[q0..q0 + r.result.len()].copy_from_slice(&r.result.cluster);
+        q0 += r.result.len();
+    }
+    assert_eq!(q0, nq);
+    let hits = answers.iter().zip(&expect).filter(|(a, e)| a == e).count();
+    println!("pooled queries: {hits}/{nq} matched the source point's cluster");
+    assert!(hits as f64 >= 0.99 * nq as f64, "assignment accuracy collapsed: {hits}/{nq}");
+    println!("{}", service.stats().report());
+
+    // 4. ingest a mini-batch: 24 near-duplicates (should attach) plus a
+    //    tight novel clump far away (should open a new cluster)
+    let n_before = index.snapshot().n;
+    let clusters_before = index.snapshot().num_clusters(level);
+    let mut batch = Vec::new();
+    for j in 0..24 {
+        for &x in ds.row((j * 31) % ds.n) {
+            batch.push(x + 0.005 * rng.normal_f32());
+        }
+    }
+    for _ in 0..8 {
+        for dim in 0..ds.d {
+            let center = if dim == 0 { 500.0 } else { 0.0 };
+            batch.push(center + 0.01 * rng.normal_f32());
+        }
+    }
+    let report = index.ingest(&batch, &IngestConfig::at_level(level), backend.as_ref());
+    println!(
+        "ingest: {} points — {} attached, {} new clusters, {} conflicts{}",
+        report.ingested,
+        report.attached,
+        report.new_clusters,
+        report.conflicts,
+        if report.rebuild_recommended { " (rebuild recommended)" } else { "" },
+    );
+    assert!(report.attached >= 24, "near-duplicates must attach to existing clusters");
+    assert!(report.new_clusters >= 1, "the novel clump must open a new cluster");
+
+    // 5. the post-ingest cut reflects the new points
+    let after = index.snapshot();
+    assert_eq!(after.n, n_before + 32);
+    let cut = after.cut_at(tau);
+    assert_eq!(cut.n(), after.n, "cut_at(τ) covers ingested points");
+    assert!(
+        after.num_clusters(level) > clusters_before,
+        "novel clump must be visible in the serving cut"
+    );
+    // the 8 novel points share one brand-new cluster id
+    let novel: std::collections::BTreeSet<u32> =
+        (after.n - 8..after.n).map(|i| cut.assign[i]).collect();
+    assert_eq!(novel.len(), 1, "novel clump fragmented: {novel:?}");
+
+    // 6. re-query through the (still running) service: ingested points
+    //    answer with their post-ingest clusters
+    let novel_again = service.query_blocking(after.point_row(after.n - 1).to_vec(), 1);
+    assert_eq!(novel_again.result.cluster[0], *novel.iter().next().unwrap());
+    let stats = service.shutdown();
+    println!("final: {}", stats.report());
+    println!("\nserving demo OK — query → ingest → re-query, no rebuild needed");
+}

@@ -6,10 +6,15 @@
 //! * `SCC_BENCH_SCALE`   — workload scale multiplier (default 1.0)
 //! * `SCC_BENCH_BACKEND` — auto|native|pjrt (default auto)
 
+// shared plumbing: each bench binary compiles its own copy and uses a
+// subset, so unused-item lints don't apply here
+#![allow(dead_code)]
+
 use scc::cli::BackendKind;
 use scc::eval::EvalConfig;
 use scc::runtime::Backend;
 use scc::util::Timer;
+use std::sync::Arc;
 
 pub fn config() -> EvalConfig {
     let scale = std::env::var("SCC_BENCH_SCALE")
@@ -19,7 +24,7 @@ pub fn config() -> EvalConfig {
     EvalConfig { scale, ..Default::default() }
 }
 
-pub fn backend() -> Box<dyn Backend> {
+pub fn backend() -> Arc<dyn Backend + Send + Sync> {
     let kind = match std::env::var("SCC_BENCH_BACKEND").as_deref() {
         Ok("native") => BackendKind::Native,
         Ok("pjrt") => BackendKind::Pjrt,

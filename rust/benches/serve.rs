@@ -1,0 +1,158 @@
+//! Bench: serving-layer assignment throughput (points/sec), serial vs
+//! pooled, at n ∈ {10k, 100k} query points against a frozen hierarchy.
+//!
+//! ```bash
+//! cargo bench --bench serve            # SCC_BENCH_SCALE / SCC_BENCH_BACKEND apply
+//! ```
+//!
+//! Writes machine-readable results to `BENCH_serve.json` at the repo
+//! root (schema documented there) in addition to the stdout report.
+
+mod bench_util;
+
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph_with_backend;
+use scc::linkage::Measure;
+use scc::scc::{run, SccConfig, Thresholds};
+use scc::serve::{assign_to_level, HierarchySnapshot, ServeIndex, Service, ServiceConfig};
+use scc::util::stats::{fmt_count, fmt_secs};
+use scc::util::{par, Rng, Timer};
+use std::sync::Arc;
+
+struct Row {
+    queries: usize,
+    path: &'static str,
+    secs: f64,
+    points_per_sec: f64,
+}
+
+fn main() {
+    let cfg = bench_util::config();
+    let backend = bench_util::backend();
+    let threads = par::default_threads();
+    let total = Timer::start();
+
+    // fixed build: the index is built once and then served
+    let build_n = (10_000.0 * cfg.scale).round().max(500.0) as usize;
+    let ds = separated_mixture(&MixtureSpec {
+        n: build_n,
+        d: 16,
+        k: 24,
+        sigma: 0.04,
+        delta: 10.0,
+        imbalance: 0.0,
+        seed: cfg.seed,
+    });
+    let g = knn_graph_with_backend(&ds, 10, Measure::L2Sq, backend.as_ref(), threads);
+    let (lo, hi) = scc::scc::thresholds::edge_range(&g);
+    let res = run(&g, &SccConfig::new(Thresholds::geometric(lo, hi, 25).taus));
+    let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, threads);
+    let level = snap.coarsest();
+    let clusters = snap.num_clusters(level);
+    println!(
+        "index: n={} d={} clusters@serving={} levels={} backend={} threads={}",
+        fmt_count(snap.n),
+        snap.d,
+        clusters,
+        snap.num_levels(),
+        backend.name(),
+        threads
+    );
+    let index = Arc::new(ServeIndex::new(snap));
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &base_q in &[10_000usize, 100_000] {
+        let nq = ((base_q as f64) * cfg.scale).round().max(1000.0) as usize;
+        // jittered known points as queries
+        let mut rng = Rng::new(cfg.seed ^ base_q as u64);
+        let mut queries = Vec::with_capacity(nq * ds.d);
+        for j in 0..nq {
+            for &x in ds.row((j * 17) % ds.n) {
+                queries.push(x + 0.01 * rng.normal_f32());
+            }
+        }
+
+        // serial path: one thread, direct tiled assignment
+        let snap_now = index.snapshot();
+        let t = Timer::start();
+        let serial = assign_to_level(&snap_now, level, &queries, nq, backend.as_ref(), 1);
+        let serial_secs = t.secs();
+        assert_eq!(serial.len(), nq);
+        rows.push(Row {
+            queries: nq,
+            path: "serial",
+            secs: serial_secs,
+            points_per_sec: nq as f64 / serial_secs,
+        });
+
+        // pooled path: worker pool + batched submission
+        let service = Service::start(
+            Arc::clone(&index),
+            Arc::clone(&backend),
+            ServiceConfig { workers: threads, level, max_batch: 1024, ..Default::default() },
+        );
+        let t = Timer::start();
+        let mut served = 0usize;
+        for h in service.submit_chunked(&queries, nq) {
+            served += h.recv().expect("response").result.len();
+        }
+        let pooled_secs = t.secs();
+        assert_eq!(served, nq);
+        service.shutdown();
+        rows.push(Row {
+            queries: nq,
+            path: "pooled",
+            secs: pooled_secs,
+            points_per_sec: nq as f64 / pooled_secs,
+        });
+
+        println!(
+            "n={:>9}  serial {:>10}  ({:>12.0} pts/s)   pooled {:>10}  ({:>12.0} pts/s)  speedup {:.2}x",
+            fmt_count(nq),
+            fmt_secs(serial_secs),
+            nq as f64 / serial_secs,
+            fmt_secs(pooled_secs),
+            nq as f64 / pooled_secs,
+            serial_secs / pooled_secs
+        );
+    }
+
+    write_json(&rows, build_n, ds.d, clusters, backend.name(), threads);
+    println!("[serve] total wall-clock: {}", fmt_secs(total.secs()));
+}
+
+/// Hand-rolled JSON (the offline registry has no serde).
+fn write_json(
+    rows: &[Row],
+    build_n: usize,
+    d: usize,
+    clusters: usize,
+    backend: &str,
+    threads: usize,
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_assign_throughput\",\n");
+    s.push_str("  \"unit\": \"points_per_sec\",\n");
+    s.push_str(&format!(
+        "  \"index\": {{\"build_n\": {build_n}, \"d\": {d}, \"serving_clusters\": {clusters}}},\n"
+    ));
+    s.push_str(&format!("  \"backend\": \"{backend}\",\n"));
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"queries\": {}, \"path\": \"{}\", \"secs\": {:.6}, \"points_per_sec\": {:.1}}}{}\n",
+            r.queries,
+            r.path,
+            r.secs,
+            r.points_per_sec,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve.json", &s) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -13,6 +13,7 @@ use crate::eval::EvalConfig;
 use crate::linkage::Measure;
 use crate::runtime::{auto_backend, Backend, NativeBackend, PjrtBackend};
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -20,8 +21,31 @@ pub struct Cli {
     pub command: String,
     pub cfg: EvalConfig,
     pub backend_kind: BackendKind,
-    /// Dataset name for single-dataset commands (`cluster`).
+    /// Dataset name for single-dataset commands (`cluster`, `serve`).
     pub dataset: String,
+    /// Options for the `serve`-family commands.
+    pub serve: ServeOpts,
+}
+
+/// Flags consumed by the `serve` / `serve-cut` commands.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Assignment queries to push through the worker pool.
+    pub queries: usize,
+    /// Worker threads in the pool (0 = use `--threads`).
+    pub workers: usize,
+    /// Points to ingest after the query phase (0 = skip ingest).
+    pub ingest: usize,
+    /// Serving cut as a dissimilarity threshold.
+    pub tau: Option<f64>,
+    /// Serving cut as an explicit level index (overrides `--tau`).
+    pub level: Option<usize>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { queries: 2000, workers: 0, ingest: 64, tau: None, level: None }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,6 +74,13 @@ COMMANDS (paper experiments; see DESIGN.md §6):
   all       run every experiment above
   cluster   run SCC once on one analog (--dataset) and print round stats
 
+SERVING (long-lived index over a frozen hierarchy; see README):
+  serve     build a hierarchy, snapshot it, answer --queries assignment
+            queries through a worker pool, then ingest --ingest points
+            and report drift + post-ingest structure
+  serve-cut build a hierarchy snapshot and print its level table (and
+            the flat cut at --tau, when given)
+
 OPTIONS:
   --scale F       workload scale multiplier (default 1.0 ~ 2.5k pts/dataset)
   --seed N        RNG seed (default 20210824)
@@ -58,7 +89,12 @@ OPTIONS:
   --rounds N      threshold schedule length L (default 30)
   --measure M     l2sq | dot (default dot)
   --backend B     auto | native | pjrt (default auto: pjrt when artifacts exist)
-  --dataset D     covtype|ilsvrc_sm|aloi|speaker|imagenet|ilsvrc_lg (cluster cmd)
+  --dataset D     covtype|ilsvrc_sm|aloi|speaker|imagenet|ilsvrc_lg (cluster/serve)
+  --queries N     serve: assignment queries to submit (default 2000)
+  --workers N     serve: pool worker threads (default: --threads)
+  --ingest N      serve: mini-batch size to ingest after querying (default 64)
+  --tau F         serve/serve-cut: serving cut as a dissimilarity threshold
+  --level N       serve: serving cut as a level index (overrides --tau)
 ";
 
 /// Parse argv (excluding the program name).
@@ -68,6 +104,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         cfg: EvalConfig::default(),
         backend_kind: BackendKind::Auto,
         dataset: "aloi".to_string(),
+        serve: ServeOpts::default(),
     };
     let mut it = args.iter();
     cli.command = it.next().cloned().unwrap_or_else(|| "help".into());
@@ -97,28 +134,40 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 }
             }
             "--dataset" => cli.dataset = val()?.clone(),
+            "--queries" => cli.serve.queries = val()?.parse().context("--queries")?,
+            "--workers" => cli.serve.workers = val()?.parse().context("--workers")?,
+            "--ingest" => cli.serve.ingest = val()?.parse().context("--ingest")?,
+            "--tau" => cli.serve.tau = Some(val()?.parse().context("--tau")?),
+            "--level" => cli.serve.level = Some(val()?.parse().context("--level")?),
             other => bail!("unknown flag {other:?}\n{USAGE}"),
         }
     }
     Ok(cli)
 }
 
-/// Instantiate the requested backend.
-pub fn make_backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+/// Instantiate the requested backend. Shared (`Arc`) so one instance
+/// serves both single-threaded harness calls and the serve worker pool;
+/// the `Auto` artifacts-dir/fallback policy lives in
+/// [`runtime::auto_backend`](crate::runtime::auto_backend).
+pub fn make_backend(kind: BackendKind) -> Result<Arc<dyn Backend + Send + Sync>> {
     Ok(match kind {
         BackendKind::Auto => auto_backend(),
-        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::Native => Arc::new(NativeBackend::new()),
         BackendKind::Pjrt => {
             let dir = std::env::var("SCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-            Box::new(PjrtBackend::load(std::path::Path::new(&dir))?)
+            Arc::new(PjrtBackend::load(std::path::Path::new(&dir))?)
         }
     })
 }
 
 /// Execute a parsed CLI; returns the report text.
 pub fn execute(cli: &Cli) -> Result<String> {
-    let backend = make_backend(cli.backend_kind)?;
     let cfg = &cli.cfg;
+    // `serve` owns its backend (shared with the worker pool)
+    if cli.command == "serve" {
+        return serve_cmd(&cli.dataset, cfg, &cli.serve, cli.backend_kind);
+    }
+    let backend = make_backend(cli.backend_kind)?;
     let out = match cli.command.as_str() {
         "table1" => crate::eval::table1::run(cfg, backend.as_ref()),
         "table2" => crate::eval::table2::run(cfg, backend.as_ref()),
@@ -132,9 +181,10 @@ pub fn execute(cli: &Cli) -> Result<String> {
         "fig9" => crate::eval::fig9::run(cfg, backend.as_ref()),
         "all" => {
             let mut s = String::new();
-            for c in
-                ["table1", "table2", "table3", "table4", "table5", "table7", "fig2", "fig4", "fig5", "fig9"]
-            {
+            for c in [
+                "table1", "table2", "table3", "table4", "table5", "table7", "fig2", "fig4",
+                "fig5", "fig9",
+            ] {
                 let sub = Cli { command: c.into(), ..cli.clone() };
                 s.push_str(&execute(&sub)?);
                 s.push('\n');
@@ -142,6 +192,7 @@ pub fn execute(cli: &Cli) -> Result<String> {
             s
         }
         "cluster" => cluster_once(&cli.dataset, cfg, backend.as_ref()),
+        "serve-cut" => serve_cut_cmd(&cli.dataset, cfg, &cli.serve, backend.as_ref()),
         "help" | "--help" | "-h" => USAGE.to_string(),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     };
@@ -177,6 +228,109 @@ fn cluster_once(dataset: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Strin
         ));
     }
     out.push_str(&format!("dendrogram purity {dp:.4}   F1@k* {f1:.4}\n"));
+    out
+}
+
+/// Pick the serving level from `--level` / `--tau` (default: coarsest).
+fn serving_level(snap: &crate::serve::HierarchySnapshot, opts: &ServeOpts) -> usize {
+    match (opts.level, opts.tau) {
+        (Some(l), _) => snap.resolve_level(l),
+        (None, Some(tau)) => snap.level_for_tau(tau),
+        (None, None) => snap.coarsest(),
+    }
+}
+
+/// `serve`: build → snapshot → pooled queries → ingest → report.
+fn serve_cmd(
+    dataset: &str,
+    cfg: &EvalConfig,
+    opts: &ServeOpts,
+    kind: BackendKind,
+) -> Result<String> {
+    use crate::serve::{HierarchySnapshot, IngestConfig, ServeIndex, Service, ServiceConfig};
+    let backend = make_backend(kind)?;
+    let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
+    let res = w.scc(cfg);
+    let snap = HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+    let level = serving_level(&snap, opts);
+    let d = snap.d;
+    let n = snap.n;
+    let mut out = snap.summary();
+    out.push_str(&format!("serving level {level} (threshold {:.4})\n", snap.threshold(level)));
+
+    // queries: jittered copies of dataset rows (unseen but realistic),
+    // synthesized before the service starts so QPS measures serving only
+    let mut rng = crate::util::Rng::new(cfg.seed ^ 0x5EB5E);
+    let nq = opts.queries;
+    let mut queries = Vec::with_capacity(nq * d);
+    for j in 0..nq {
+        for &x in w.ds.row(j % n) {
+            queries.push(x + 0.01 * rng.normal_f32());
+        }
+    }
+
+    let index = Arc::new(ServeIndex::new(snap));
+    let workers = if opts.workers == 0 { cfg.threads.max(1) } else { opts.workers };
+    let service = Service::start(
+        Arc::clone(&index),
+        Arc::clone(&backend),
+        ServiceConfig { workers, level, ..Default::default() },
+    );
+    let mut served = 0usize;
+    for h in service.submit_chunked(&queries, nq) {
+        let r = h.recv().context("service response")?;
+        served += r.result.len();
+    }
+    out.push_str(&format!("served {served} queries\n{}\n", service.stats().report()));
+
+    if opts.ingest > 0 {
+        let mut batch = Vec::with_capacity(opts.ingest * d);
+        for j in 0..opts.ingest {
+            for &x in w.ds.row((j * 7 + 3) % n) {
+                batch.push(x + 0.02 * rng.normal_f32());
+            }
+        }
+        let report =
+            index.ingest(&batch, &IngestConfig { level, ..Default::default() }, backend.as_ref());
+        let after = index.snapshot();
+        out.push_str(&format!(
+            "ingested {} points: {} attached, {} new clusters, {} conflicts, drift {:.3}{}\n",
+            report.ingested,
+            report.attached,
+            report.new_clusters,
+            report.conflicts,
+            after.drift(),
+            if report.rebuild_recommended { " — REBUILD RECOMMENDED" } else { "" },
+        ));
+        out.push_str(&format!(
+            "post-ingest: n={} clusters@level {}\n",
+            after.n,
+            after.num_clusters(level)
+        ));
+    }
+    service.shutdown();
+    Ok(out)
+}
+
+/// `serve-cut`: snapshot level table (+ one explicit cut).
+fn serve_cut_cmd(
+    dataset: &str,
+    cfg: &EvalConfig,
+    opts: &ServeOpts,
+    backend: &dyn Backend,
+) -> String {
+    let w = crate::eval::common::Workload::build(dataset, cfg, backend);
+    let res = w.scc(cfg);
+    let snap = crate::serve::HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+    let mut out = snap.summary();
+    if let Some(tau) = opts.tau {
+        let cut = snap.cut_at(tau);
+        out.push_str(&format!(
+            "cut_at({tau}) -> level {} with {} clusters\n",
+            snap.level_for_tau(tau),
+            cut.num_clusters()
+        ));
+    }
     out
 }
 
@@ -227,5 +381,44 @@ mod tests {
         let out = execute(&cli).unwrap();
         assert!(out.contains("dendrogram purity"), "{out}");
         assert!(out.contains("round"));
+    }
+
+    #[test]
+    fn parses_serve_flags() {
+        let cli = parse(&argv(
+            "serve --queries 500 --workers 3 --ingest 16 --tau 0.25 --level 4",
+        ))
+        .unwrap();
+        assert_eq!(cli.command, "serve");
+        assert_eq!(cli.serve.queries, 500);
+        assert_eq!(cli.serve.workers, 3);
+        assert_eq!(cli.serve.ingest, 16);
+        assert_eq!(cli.serve.tau, Some(0.25));
+        assert_eq!(cli.serve.level, Some(4));
+        assert!(parse(&argv("serve --queries nope")).is_err());
+    }
+
+    #[test]
+    fn serve_command_runs_end_to_end() {
+        let cli = parse(&argv(
+            "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+             --queries 120 --workers 2 --ingest 8",
+        ))
+        .unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("serving level"), "{out}");
+        assert!(out.contains("served 120 queries"), "{out}");
+        assert!(out.contains("ingested 8 points"), "{out}");
+    }
+
+    #[test]
+    fn serve_cut_command_prints_level_table() {
+        let cli = parse(&argv(
+            "serve-cut --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native --tau 0.5",
+        ))
+        .unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("level  threshold   clusters"), "{out}");
+        assert!(out.contains("cut_at(0.5)"), "{out}");
     }
 }

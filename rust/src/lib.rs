@@ -19,6 +19,15 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+// Tiled numeric kernels here favor explicit index loops and wide
+// argument lists (tile shapes travel unpacked); keep those style lints
+// quiet so CI can hold `clippy -D warnings` on the substantive classes.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
+
 pub mod affinity;
 pub mod baselines;
 pub mod coordinator;
@@ -32,6 +41,7 @@ pub mod knn;
 pub mod linkage;
 pub mod runtime;
 pub mod scc;
+pub mod serve;
 pub mod sim;
 pub mod data;
 pub mod graph;

@@ -76,8 +76,10 @@ impl Measure {
 /// Fixed-point scale for linkage sums: weights are stored as
 /// `round(w · 2³²)`. On normalized data dissimilarities are ≤ 4, so one
 /// edge contributes ≤ 2³⁴ and u128 holds > 2⁹⁰ edges — overflow-free.
-const FP_SHIFT: u32 = 32;
-const FP_ONE: f64 = (1u64 << FP_SHIFT) as f64;
+/// Shared by [`LinkAgg`] and [`CentroidAgg`] so every exact aggregate in
+/// the system lives on the same grid.
+pub const FP_SHIFT: u32 = 32;
+pub const FP_ONE: f64 = (1u64 << FP_SHIFT) as f64;
 
 /// An additive average-linkage aggregate between a pair of clusters: the
 /// sum and count of observed k-NN edge dissimilarities (Eq. 25).
@@ -123,6 +125,85 @@ impl LinkAgg {
     }
 }
 
+/// An exact per-dimension centroid aggregate: signed fixed-point
+/// coordinate sums (same `2³²` grid as [`LinkAgg`]) plus a point count.
+///
+/// Like [`LinkAgg`], addition is associative and commutative bit-for-bit,
+/// so aggregates built point-by-point, merged bottom-up along hierarchy
+/// levels, or combined across threads in any order are identical. The
+/// serving layer ([`crate::serve`]) relies on this for deterministic
+/// snapshots and for `ingest`-then-compare property tests.
+///
+/// Overflow headroom: coordinates on normalized data are ≤ 1 in magnitude
+/// (≤ ~10³ for raw analogs), so one point contributes ≤ ~2⁴², and i128
+/// holds > 2⁸⁰ points per cluster — far beyond any workload here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CentroidAgg {
+    /// Per-dimension Σ round(x · 2³²), exact.
+    pub sum_fp: Vec<i128>,
+    pub count: u64,
+}
+
+impl CentroidAgg {
+    /// The empty aggregate over `d` dimensions.
+    pub fn zero(d: usize) -> Self {
+        CentroidAgg { sum_fp: vec![0; d], count: 0 }
+    }
+
+    /// Aggregate of a single point.
+    pub fn of_point(row: &[f32]) -> Self {
+        let mut agg = CentroidAgg::zero(row.len());
+        agg.add_point(row);
+        agg
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sum_fp.len()
+    }
+
+    /// Add one point's coordinates.
+    #[inline]
+    pub fn add_point(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.sum_fp.len());
+        for (s, &x) in self.sum_fp.iter_mut().zip(row) {
+            debug_assert!(x.is_finite(), "coordinate must be finite, got {x}");
+            *s += (x as f64 * FP_ONE).round() as i128;
+        }
+        self.count += 1;
+    }
+
+    /// Merge another aggregate (exact, order-independent).
+    #[inline]
+    pub fn merge(&mut self, other: &CentroidAgg) {
+        debug_assert_eq!(other.sum_fp.len(), self.sum_fp.len());
+        for (s, o) in self.sum_fp.iter_mut().zip(&other.sum_fp) {
+            *s += o;
+        }
+        self.count += other.count;
+    }
+
+    /// Write the centroid (mean coordinates) into `out`; zeros when the
+    /// aggregate is empty.
+    pub fn write_centroid(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.sum_fp.len());
+        if self.count == 0 {
+            out.fill(0.0);
+            return;
+        }
+        let inv = 1.0 / self.count as f64;
+        for (o, &s) in out.iter_mut().zip(&self.sum_fp) {
+            *o = ((s as f64 / FP_ONE) * inv) as f32;
+        }
+    }
+
+    /// The centroid as an owned row.
+    pub fn centroid(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.sum_fp.len()];
+        self.write_centroid(&mut out);
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +246,40 @@ mod tests {
     fn empty_agg_is_infinite() {
         let z = LinkAgg { sum_fp: 0, count: 0 };
         assert!(z.avg().is_infinite());
+    }
+
+    #[test]
+    fn centroid_agg_matches_mean() {
+        let mut agg = CentroidAgg::zero(2);
+        agg.add_point(&[1.0, -2.0]);
+        agg.add_point(&[3.0, 4.0]);
+        let c = agg.centroid();
+        assert!((c[0] - 2.0).abs() < 1e-6);
+        assert!((c[1] - 1.0).abs() < 1e-6);
+        assert_eq!(agg.count, 2);
+    }
+
+    #[test]
+    fn centroid_agg_merge_is_order_independent() {
+        let points: Vec<[f32; 3]> =
+            vec![[0.5, -0.25, 1.0], [0.125, 0.75, -1.5], [2.0, 0.0, 0.25], [-0.375, 1.25, 0.5]];
+        // left-to-right accumulation
+        let mut forward = CentroidAgg::zero(3);
+        for p in &points {
+            forward.add_point(p);
+        }
+        // pairwise tree merge in a different order
+        let mut a = CentroidAgg::of_point(&points[3]);
+        a.merge(&CentroidAgg::of_point(&points[1]));
+        let mut b = CentroidAgg::of_point(&points[2]);
+        b.merge(&CentroidAgg::of_point(&points[0]));
+        b.merge(&a);
+        assert_eq!(forward, b, "fixed-point sums must be bit-identical in any order");
+    }
+
+    #[test]
+    fn centroid_agg_empty_is_zero() {
+        let agg = CentroidAgg::zero(4);
+        assert_eq!(agg.centroid(), vec![0.0; 4]);
     }
 }

@@ -62,15 +62,20 @@ pub trait Backend: Sync {
 /// Pick the best available backend: PJRT if artifacts are loadable,
 /// otherwise native. `artifacts_dir` defaults to `artifacts/` under the
 /// current directory; override with the `SCC_ARTIFACTS` env var.
-pub fn auto_backend() -> Box<dyn Backend> {
+///
+/// Returned behind an `Arc` so the same instance can be shared across
+/// threads (the serve worker pool holds one); single-threaded callers
+/// pay only the pointer indirection. This is the single home of the
+/// artifacts-dir/fallback policy — `cli::make_backend` builds on it.
+pub fn auto_backend() -> std::sync::Arc<dyn Backend + Send + Sync> {
     let dir = std::env::var("SCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     match PjrtBackend::load(std::path::Path::new(&dir)) {
-        Ok(b) => Box::new(b),
+        Ok(b) => std::sync::Arc::new(b),
         Err(e) => {
             if std::env::var("SCC_REQUIRE_PJRT").is_ok() {
                 panic!("SCC_REQUIRE_PJRT set but PJRT backend unavailable: {e}");
             }
-            Box::new(NativeBackend::new())
+            std::sync::Arc::new(NativeBackend::new())
         }
     }
 }

@@ -1,0 +1,179 @@
+//! Batched nearest-cluster assignment for unseen points.
+//!
+//! Mirrors the [`crate::knn::brute`] tiling exactly: query blocks of
+//! [`QUERY_TILE`] rows fan out across worker threads, and each block
+//! scans the level's centroid matrix in [`CAND_TILE`]-wide tiles through
+//! a [`crate::runtime::Backend`] — so the PJRT `assign` artifact serves
+//! this path unchanged, and per-tile argmins merge to the exact global
+//! argmin with deterministic `(dist, cluster id)` tie-breaking.
+
+use super::snapshot::HierarchySnapshot;
+use crate::knn::brute::{CAND_TILE, QUERY_TILE};
+use crate::runtime::Backend;
+use crate::util::par;
+
+/// Per-query nearest cluster and its dissimilarity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignResult {
+    /// Cluster id at the queried level (`u32::MAX` when the level is
+    /// empty).
+    pub cluster: Vec<u32>,
+    pub dist: Vec<f32>,
+}
+
+impl AssignResult {
+    pub fn len(&self) -> usize {
+        self.cluster.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cluster.is_empty()
+    }
+}
+
+/// Assign each of `nq` query rows to its nearest cluster centroid at
+/// `level` (clamped; `usize::MAX` = coarsest). Queries are row-major
+/// `nq × d` under the snapshot's measure.
+pub fn assign_to_level(
+    snap: &HierarchySnapshot,
+    level: usize,
+    queries: &[f32],
+    nq: usize,
+    backend: &dyn Backend,
+    threads: usize,
+) -> AssignResult {
+    let d = snap.d;
+    assert_eq!(queries.len(), nq * d, "queries must be nq*d row-major");
+    let level = snap.resolve_level(level);
+    let centers = snap.centroids(level);
+    let ncl = snap.num_clusters(level);
+    let mut out = AssignResult { cluster: vec![u32::MAX; nq], dist: vec![f32::INFINITY; nq] };
+    if nq == 0 || ncl == 0 {
+        return out;
+    }
+    let out_ptr =
+        SyncOut { idx: out.cluster.as_mut_ptr() as usize, dist: out.dist.as_mut_ptr() as usize };
+    par::parallel_ranges(nq.div_ceil(QUERY_TILE), threads.max(1), |_, block_range| {
+        for bi in block_range {
+            let q0 = bi * QUERY_TILE;
+            let q1 = (q0 + QUERY_TILE).min(nq);
+            let nb = q1 - q0;
+            let block = &queries[q0 * d..q1 * d];
+            let mut best_i = vec![u32::MAX; nb];
+            let mut best_d = vec![f32::INFINITY; nb];
+            let mut c0 = 0usize;
+            while c0 < ncl {
+                let c1 = (c0 + CAND_TILE).min(ncl);
+                let (ti, td) =
+                    backend.assign(block, nb, &centers[c0 * d..c1 * d], c1 - c0, d, snap.measure);
+                for q in 0..nb {
+                    if ti[q] == u32::MAX {
+                        continue;
+                    }
+                    let gi = ti[q] + c0 as u32;
+                    if td[q] < best_d[q] || (td[q] == best_d[q] && gi < best_i[q]) {
+                        best_d[q] = td[q];
+                        best_i[q] = gi;
+                    }
+                }
+                c0 = c1;
+            }
+            // each thread owns disjoint query rows, so the raw pointer
+            // writes are race-free (same contract as knn::brute)
+            unsafe {
+                let idx_slice =
+                    std::slice::from_raw_parts_mut((out_ptr.idx as *mut u32).add(q0), nb);
+                let dist_slice =
+                    std::slice::from_raw_parts_mut((out_ptr.dist as *mut f32).add(q0), nb);
+                idx_slice.copy_from_slice(&best_i);
+                dist_slice.copy_from_slice(&best_d);
+            }
+        }
+    });
+    out
+}
+
+/// Assign against the flat cut at dissimilarity threshold `tau`
+/// ([`HierarchySnapshot::level_for_tau`]).
+pub fn assign_at_tau(
+    snap: &HierarchySnapshot,
+    tau: f64,
+    queries: &[f32],
+    nq: usize,
+    backend: &dyn Backend,
+    threads: usize,
+) -> AssignResult {
+    assign_to_level(snap, snap.level_for_tau(tau), queries, nq, backend, threads)
+}
+
+/// Shared raw output pointers (see safety note at the write site).
+#[derive(Clone, Copy)]
+struct SyncOut {
+    idx: usize,
+    dist: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::runtime::NativeBackend;
+    use crate::scc::{run, SccConfig, Thresholds};
+
+    fn snapshot() -> (crate::core::Dataset, HierarchySnapshot) {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 300,
+            d: 4,
+            k: 6,
+            sigma: 0.04,
+            delta: 10.0,
+            seed: 3,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 25).taus);
+        let res = run(&g, &cfg);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        (ds, snap)
+    }
+
+    #[test]
+    fn known_points_assign_to_their_own_cluster() {
+        let (ds, snap) = snapshot();
+        let level = snap.coarsest();
+        let got = assign_to_level(&snap, level, &ds.data, ds.n, &NativeBackend::new(), 3);
+        let want = &snap.level(level).partition;
+        let hits = (0..ds.n).filter(|&i| got.cluster[i] == want.assign[i]).count();
+        // well-separated clusters: every point is closest to its own
+        // cluster's centroid
+        assert_eq!(hits, ds.n, "{hits}/{} points matched their cluster", ds.n);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_assignment() {
+        let (ds, snap) = snapshot();
+        let a = assign_to_level(&snap, snap.coarsest(), &ds.data, ds.n, &NativeBackend::new(), 1);
+        let b = assign_to_level(&snap, snap.coarsest(), &ds.data, ds.n, &NativeBackend::new(), 6);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn level_zero_assignment_is_nearest_point() {
+        let (ds, snap) = snapshot();
+        // querying a point against level 0 (centroids == points) must
+        // return the point itself at distance ~0
+        let got = assign_to_level(&snap, 0, ds.row(17), 1, &NativeBackend::new(), 1);
+        assert_eq!(got.cluster[0], 17);
+        assert!(got.dist[0] <= 1e-6);
+    }
+
+    #[test]
+    fn empty_query_batch_is_fine() {
+        let (_, snap) = snapshot();
+        let got = assign_to_level(&snap, 1, &[], 0, &NativeBackend::new(), 4);
+        assert!(got.is_empty());
+    }
+}

@@ -1,0 +1,409 @@
+//! Mini-batch incremental ingestion into a [`HierarchySnapshot`].
+//!
+//! New points attach by k-NN against the base level's cluster centroids;
+//! a **local** SCC re-clustering (the same round engine, via
+//! [`ClusterGraph::from_parts`]) runs over just the touched clusters plus
+//! the batch, at the base level's own merge threshold. Three outcomes per
+//! local sub-cluster component:
+//!
+//! * **one existing cluster** — its new points join that cluster (exact
+//!   centroid aggregates updated, centroid row rewritten);
+//! * **no existing cluster** — the component's points form a brand-new
+//!   cluster (appended at every level at and above the singletons);
+//! * **several existing clusters** — the local evidence wants to merge
+//!   frozen structure. Ingest never rewrites existing clusters, so this
+//!   is recorded as a *conflict*: each new point attaches to its nearest
+//!   member cluster and the merge is deferred to the next full rebuild.
+//!
+//! A drift counter (`ingested / built_n`, plus the conflict count
+//! surfaced on the snapshot) tells operators when to re-run the batch
+//! pipeline. Ingesting an empty batch touches nothing — snapshots are
+//! bit-identical before and after (property-tested).
+//!
+//! Edges into the local graph carry point→centroid and point→point
+//! dissimilarities; frozen clusters contribute no cluster↔cluster edges
+//! (their pairwise aggregates are not retained in the snapshot), so
+//! existing structure can only be bridged transitively through new
+//! points — which is exactly the conflict case above.
+
+use super::snapshot::HierarchySnapshot;
+use crate::linkage::{CentroidAgg, LinkAgg};
+use crate::runtime::Backend;
+use crate::scc::engine::{ClusterEdge, ClusterGraph, RoundOutcome};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Ingestion policy knobs.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Hierarchy level whose clusters absorb the batch (`usize::MAX` =
+    /// coarsest). The local re-clustering runs at this level's threshold.
+    pub level: usize,
+    /// Candidate clusters per new point (k of the centroid k-NN).
+    pub knn_k: usize,
+    /// Drift fraction (`ingested / built_n`) above which
+    /// [`IngestReport::rebuild_recommended`] turns on.
+    pub drift_limit: f64,
+    /// Safety cap on local re-clustering rounds (each merging round
+    /// strictly shrinks the local graph, so this is rarely binding).
+    pub max_local_rounds: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig { level: usize::MAX, knn_k: 4, drift_limit: 0.2, max_local_rounds: 64 }
+    }
+}
+
+impl IngestConfig {
+    /// Config targeting an explicit level.
+    pub fn at_level(level: usize) -> Self {
+        IngestConfig { level, ..Default::default() }
+    }
+}
+
+/// What one ingest call did.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IngestReport {
+    /// Points in the batch.
+    pub ingested: usize,
+    /// Points that joined an existing cluster.
+    pub attached: usize,
+    /// Brand-new clusters created from the batch.
+    pub new_clusters: usize,
+    /// Local components that spanned several existing clusters (merge
+    /// deferred to rebuild).
+    pub conflicts: usize,
+    /// Accumulated drift exceeds the configured limit; schedule a full
+    /// rebuild.
+    pub rebuild_recommended: bool,
+}
+
+/// Where a new point ends up at the base level.
+#[derive(Clone, Copy)]
+enum Target {
+    /// Join this existing base-level cluster id.
+    Existing(u32),
+    /// Join the i-th freshly created cluster group.
+    Fresh(usize),
+}
+
+/// Ingest `batch` (row-major, `len % d == 0`) into `snap`. See module
+/// docs for the policy; returns what happened.
+pub fn ingest_batch(
+    snap: &mut HierarchySnapshot,
+    batch: &[f32],
+    cfg: &IngestConfig,
+    backend: &dyn Backend,
+) -> IngestReport {
+    let d = snap.d;
+    assert!(d > 0, "snapshot has no dimensions");
+    assert_eq!(batch.len() % d, 0, "batch must be row-major with the snapshot's d");
+    let m = batch.len() / d;
+    let mut report = IngestReport { ingested: m, ..Default::default() };
+    if m == 0 {
+        report.rebuild_recommended = snap.needs_rebuild(cfg.drift_limit);
+        return report;
+    }
+    let base = snap.resolve_level(cfg.level);
+    let tau = snap.threshold(base);
+    let ncl = snap.num_clusters(base);
+
+    // --- 1. candidate clusters per new point (tiled centroid top-k) ---
+    let kk = cfg.knn_k.max(1).min(ncl.max(1));
+    let cand = backend.pairwise_topk(batch, m, snap.centroids(base), ncl, d, kk, snap.measure);
+
+    // --- 2. local sub-cluster component graph over touched clusters ---
+    let mut touched: Vec<u32> = Vec::new();
+    for p in 0..m {
+        let (idx, _) = cand.row(p);
+        for &c in idx.iter().take(kk) {
+            if c != u32::MAX {
+                touched.push(c);
+            }
+        }
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    let local_of: BTreeMap<u32, u32> =
+        touched.iter().enumerate().map(|(i, &c)| (c, i as u32)).collect();
+    let t = touched.len();
+
+    let mut edges: Vec<ClusterEdge> = Vec::new();
+    for p in 0..m {
+        let (idx, dist) = cand.row(p);
+        for j in 0..kk {
+            if idx[j] == u32::MAX {
+                break;
+            }
+            edges.push(ClusterEdge {
+                a: local_of[&idx[j]],
+                b: (t + p) as u32,
+                agg: LinkAgg::new(dist[j].max(0.0) as f64),
+            });
+        }
+    }
+    if m > 1 {
+        // batch-internal k-NN so arriving points can cluster together
+        let wk = (cfg.knn_k + 1).min(m);
+        let within = backend.pairwise_topk(batch, m, batch, m, d, wk, snap.measure);
+        let mut seen: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for p in 0..m {
+            let (idx, dist) = within.row(p);
+            for j in 0..wk {
+                if idx[j] == u32::MAX {
+                    break;
+                }
+                let q = idx[j] as usize;
+                if q == p {
+                    continue;
+                }
+                let key = (p.min(q), p.max(q));
+                if seen.insert(key) {
+                    edges.push(ClusterEdge {
+                        a: (t + key.0) as u32,
+                        b: (t + key.1) as u32,
+                        agg: LinkAgg::new(dist[j].max(0.0) as f64),
+                    });
+                }
+            }
+        }
+    }
+    let mut cg = ClusterGraph::from_parts((0..(t + m) as u32).collect(), t + m, edges);
+    for _ in 0..cfg.max_local_rounds {
+        if cg.round(tau) == RoundOutcome::NoChange {
+            break;
+        }
+    }
+
+    // --- 3. component outcomes -> per-point targets ---
+    let local = cg.point_partition();
+    let groups = local.members(); // first-appearance order: deterministic
+    let mut targets: Vec<Option<Target>> = vec![None; m];
+    let mut fresh_groups = 0usize;
+    for g in &groups {
+        let olds: Vec<u32> =
+            g.iter().filter(|&&id| (id as usize) < t).map(|&id| touched[id as usize]).collect();
+        let news: Vec<usize> =
+            g.iter().filter(|&&id| id as usize >= t).map(|&id| id as usize - t).collect();
+        if news.is_empty() {
+            continue;
+        }
+        match olds.len() {
+            0 => {
+                for &p in &news {
+                    targets[p] = Some(Target::Fresh(fresh_groups));
+                }
+                fresh_groups += 1;
+                report.new_clusters += 1;
+            }
+            1 => {
+                for &p in &news {
+                    targets[p] = Some(Target::Existing(olds[0]));
+                }
+                report.attached += news.len();
+            }
+            _ => {
+                // frozen structure wants to merge: defer, attach each
+                // point to its nearest member cluster (measured against
+                // the member centroids — a point bridged in via other
+                // new points may have none of them in its candidate set)
+                report.conflicts += 1;
+                let centers = snap.centroids(base);
+                for &p in &news {
+                    let row = &batch[p * d..(p + 1) * d];
+                    let mut best = (f32::INFINITY, u32::MAX);
+                    for &c in &olds {
+                        let lo = c as usize * d;
+                        let w = snap.measure.dissim(row, &centers[lo..lo + d]);
+                        if (w, c) < best {
+                            best = (w, c);
+                        }
+                    }
+                    targets[p] = Some(Target::Existing(best.1));
+                }
+                report.attached += news.len();
+            }
+        }
+    }
+
+    // --- 4. apply: append points, extend every level ---
+    let n_old = snap.n;
+    // representative old point per base cluster, for parent-chain lookups
+    let mut base_rep = vec![u32::MAX; ncl];
+    for i in 0..n_old {
+        let c = snap.levels[base].partition.assign[i] as usize;
+        if base_rep[c] == u32::MAX {
+            base_rep[c] = i as u32;
+        }
+    }
+    snap.points.extend_from_slice(batch);
+    snap.n = n_old + m;
+    // level 0 stays "one singleton per point": ids are point indices
+    snap.levels[0].partition.assign.extend(n_old as u32..(n_old + m) as u32);
+
+    let nlv = snap.levels.len();
+    let mut fresh_ids: Vec<Vec<Option<u32>>> = vec![vec![None; nlv]; fresh_groups];
+    for (p, &target) in targets.iter().enumerate() {
+        let row = &batch[p * d..(p + 1) * d];
+        let target = target.expect("every new point lies in some local component");
+        for l in 1..nlv {
+            let lv = &mut snap.levels[l];
+            let label = match target {
+                Target::Existing(c) => {
+                    if l < base {
+                        // no history below the attachment level: the
+                        // point rides as its own cluster (still nested)
+                        alloc_cluster(lv, d)
+                    } else if l == base {
+                        c
+                    } else {
+                        lv.partition.assign[base_rep[c as usize] as usize]
+                    }
+                }
+                Target::Fresh(g) => match fresh_ids[g][l] {
+                    Some(id) => id,
+                    None => {
+                        let id = alloc_cluster(lv, d);
+                        fresh_ids[g][l] = Some(id);
+                        id
+                    }
+                },
+            };
+            lv.partition.assign.push(label);
+            lv.aggs[label as usize].add_point(row);
+            let lo = label as usize * d;
+            lv.aggs[label as usize].write_centroid(&mut lv.centroids[lo..lo + d]);
+        }
+    }
+    snap.ingested += m;
+    snap.conflicts += report.conflicts;
+    report.rebuild_recommended = snap.needs_rebuild(cfg.drift_limit);
+    report
+}
+
+/// Append an empty cluster slot to a level, returning its id.
+fn alloc_cluster(lv: &mut super::snapshot::SnapshotLevel, d: usize) -> u32 {
+    let id = lv.aggs.len() as u32;
+    lv.aggs.push(CentroidAgg::zero(d));
+    lv.centroids.resize(lv.centroids.len() + d, 0.0);
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::runtime::NativeBackend;
+    use crate::scc::{run, SccConfig, Thresholds};
+    use crate::util::Rng;
+
+    fn snapshot(seed: u64) -> (crate::core::Dataset, HierarchySnapshot) {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 260,
+            d: 4,
+            k: 5,
+            sigma: 0.04,
+            delta: 10.0,
+            seed,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 25).taus);
+        let res = run(&g, &cfg);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        (ds, snap)
+    }
+
+    fn levels_nested(snap: &HierarchySnapshot) -> bool {
+        snap.levels.windows(2).all(|w| w[0].partition.refines(&w[1].partition))
+    }
+
+    #[test]
+    fn zero_point_ingest_is_bit_identical() {
+        let (_, mut snap) = snapshot(1);
+        let before = snap.clone();
+        let report =
+            ingest_batch(&mut snap, &[], &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(snap, before);
+        assert_eq!(report.ingested, 0);
+        assert_eq!(report.attached, 0);
+        assert_eq!(report.new_clusters, 0);
+    }
+
+    #[test]
+    fn near_duplicate_attaches_to_its_cluster() {
+        let (ds, mut snap) = snapshot(2);
+        let coarse = snap.coarsest();
+        let want = snap.level(coarse).partition.assign[0];
+        // jitter point 0 slightly: must join point 0's cluster
+        let batch: Vec<f32> = ds.row(0).iter().map(|x| x + 1e-3).collect();
+        let report =
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.attached, 1, "{report:?}");
+        assert_eq!(snap.n, ds.n + 1);
+        assert_eq!(snap.level(coarse).partition.assign[ds.n], want);
+        assert!(levels_nested(&snap), "ingest must preserve hierarchy nesting");
+        // the cluster's aggregate gained exactly one point
+        let agg = &snap.level(coarse).aggs[want as usize];
+        let members = snap
+            .level(coarse)
+            .partition
+            .assign
+            .iter()
+            .filter(|&&c| c == want)
+            .count() as u64;
+        assert_eq!(agg.count, members);
+    }
+
+    #[test]
+    fn distant_batch_forms_one_new_cluster() {
+        let (ds, mut snap) = snapshot(3);
+        let coarse = snap.coarsest();
+        let before_k = snap.num_clusters(coarse);
+        // a tight clump far from every training center
+        let mut rng = Rng::new(99);
+        let mut batch = Vec::new();
+        for _ in 0..6 {
+            for dim in 0..ds.d {
+                let center = if dim == 0 { 1.0e3 } else { 0.0 };
+                batch.push(center + 0.01 * rng.normal_f32());
+            }
+        }
+        let report =
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.new_clusters, 1, "{report:?}");
+        assert_eq!(snap.num_clusters(coarse), before_k + 1);
+        // all six land in the same (new) cluster at the coarsest cut
+        let cut = snap.cut_at(f64::INFINITY);
+        let ids: BTreeSet<u32> = (ds.n..snap.n).map(|i| cut.assign[i]).collect();
+        assert_eq!(ids.len(), 1);
+        assert!(!cut.assign[..ds.n].contains(ids.iter().next().unwrap()));
+        assert!(levels_nested(&snap));
+    }
+
+    #[test]
+    fn ingest_is_deterministic() {
+        let (ds, snap) = snapshot(4);
+        let batch: Vec<f32> = (0..8 * ds.d).map(|i| ds.data[i] + 2e-3).collect();
+        let mut a = snap.clone();
+        let mut b = snap.clone();
+        let ra = ingest_batch(&mut a, &batch, &IngestConfig::default(), &NativeBackend::new());
+        let rb = ingest_batch(&mut b, &batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(ra, rb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drift_counter_triggers_rebuild_recommendation() {
+        let (ds, mut snap) = snapshot(5);
+        let cfg = IngestConfig { drift_limit: 0.01, ..Default::default() };
+        let batch: Vec<f32> = ds.data[..4 * ds.d].to_vec();
+        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+        assert!(report.rebuild_recommended, "4/260 > 1% drift must recommend rebuild");
+        assert!(snap.needs_rebuild(0.01));
+        assert!(!snap.needs_rebuild(0.5));
+    }
+}

@@ -1,0 +1,45 @@
+//! Online serving over frozen SCC hierarchies.
+//!
+//! `scc::run` is batch: it consumes a k-NN graph and exits with a
+//! [`crate::scc::SccResult`]. This subsystem turns that result into a
+//! long-lived, queryable, incrementally updatable index — the paper's
+//! headline scenario (structure over billions of web queries, §5) framed
+//! as an *index to be served*, not a one-shot output:
+//!
+//! * [`snapshot`] — [`HierarchySnapshot`]: an immutable view of one SCC
+//!   run storing every round's partition, exact fixed-point per-cluster
+//!   centroid aggregates ([`crate::linkage::CentroidAgg`], same 2³² grid
+//!   as the engine's [`crate::linkage::LinkAgg`]), and a threshold→level
+//!   index so `cut_at(τ)` is a stored-partition lookup, not a
+//!   recomputation;
+//! * [`assign`] — batched nearest-cluster assignment for unseen points,
+//!   tiled exactly like [`crate::knn::brute`] (query blocks across
+//!   threads, centroid tiles through a [`crate::runtime::Backend`]) so
+//!   PJRT acceleration applies unchanged;
+//! * [`ingest`] — mini-batch insertion: new points attach by k-NN
+//!   against cluster centroids, a *local* SCC re-clustering (via
+//!   [`crate::scc::engine::ClusterGraph::from_parts`]) runs over only the
+//!   touched clusters, and a drift counter flags when accumulated change
+//!   warrants a full rebuild;
+//! * [`service`] — a multi-threaded request loop: worker pool, batched
+//!   query submission, per-request latency / QPS statistics through
+//!   [`crate::util::stats::Summary`], and copy-on-write snapshot swaps
+//!   so ingest never blocks readers.
+//!
+//! Update policy (documented invariant): ingest **never rewrites existing
+//! structure** — it only appends points to clusters (updating their exact
+//! aggregates) or creates new clusters. When the local re-clustering
+//! wants to merge *existing* clusters, that is counted as a conflict and
+//! deferred to the next full rebuild. This keeps every level of the
+//! hierarchy nested at all times and makes zero-point ingest a bit-exact
+//! no-op (property-tested in `rust/tests/serve_properties.rs`).
+
+pub mod assign;
+pub mod ingest;
+pub mod service;
+pub mod snapshot;
+
+pub use assign::{assign_at_tau, assign_to_level, AssignResult};
+pub use ingest::{ingest_batch, IngestConfig, IngestReport};
+pub use service::{ServeIndex, Service, ServiceConfig, ServiceStats};
+pub use snapshot::{HierarchySnapshot, SnapshotLevel};

@@ -1,0 +1,430 @@
+//! The online request loop: a worker pool serving batched assignment
+//! queries over a shared, swappable snapshot.
+//!
+//! * [`ServeIndex`] — the mutable cell: readers grab an `Arc` to the
+//!   current frozen [`HierarchySnapshot`] (brief `RwLock` read);
+//!   [`ServeIndex::ingest`] is copy-on-write — it clones the snapshot,
+//!   applies the batch, and swaps the `Arc`, so in-flight queries keep
+//!   serving the old snapshot and never block;
+//! * [`Service`] — `workers` threads pulling jobs from a shared
+//!   queue. Requests are *batches* of queries; responses return through
+//!   per-request channels. Latency lands in a
+//!   [`crate::util::stats::Summary`] (p50/p95/p99 via its interpolated
+//!   percentiles) and throughput is queries served over wall-clock.
+//!
+//! Threading model: request-level parallelism across workers, plus
+//! optional intra-request tiling parallelism
+//! ([`ServiceConfig::threads_per_request`]) through
+//! [`crate::util::par::parallel_ranges`] inside
+//! [`super::assign::assign_to_level`].
+
+use super::assign::{assign_to_level, AssignResult};
+use super::ingest::{ingest_batch, IngestConfig, IngestReport};
+use super::snapshot::HierarchySnapshot;
+use crate::runtime::Backend;
+use crate::util::stats::Summary;
+use crate::util::Timer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// The swappable snapshot cell shared by the service and ingesters.
+pub struct ServeIndex {
+    current: RwLock<Arc<HierarchySnapshot>>,
+    /// Serializes ingests (copy-on-write: clone → mutate → swap).
+    ingest_gate: Mutex<()>,
+}
+
+impl ServeIndex {
+    pub fn new(snapshot: HierarchySnapshot) -> ServeIndex {
+        ServeIndex {
+            current: RwLock::new(Arc::new(snapshot)),
+            ingest_gate: Mutex::new(()),
+        }
+    }
+
+    /// The current frozen snapshot (cheap: one `Arc` clone).
+    pub fn snapshot(&self) -> Arc<HierarchySnapshot> {
+        self.current.read().expect("index lock").clone()
+    }
+
+    /// Swap in a freshly built snapshot (e.g. after a full rebuild).
+    pub fn replace(&self, snapshot: HierarchySnapshot) {
+        *self.current.write().expect("index lock") = Arc::new(snapshot);
+    }
+
+    /// Copy-on-write ingest: readers keep the old snapshot until the
+    /// atomic swap. Concurrent ingests serialize on an internal gate.
+    pub fn ingest(
+        &self,
+        batch: &[f32],
+        cfg: &IngestConfig,
+        backend: &dyn Backend,
+    ) -> IngestReport {
+        let _gate = self.ingest_gate.lock().expect("ingest gate");
+        let mut next = (*self.snapshot()).clone();
+        let report = ingest_batch(&mut next, batch, cfg, backend);
+        self.replace(next);
+        report
+    }
+}
+
+/// Worker-pool configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads pulling request batches.
+    pub workers: usize,
+    /// Serving level (`usize::MAX` = coarsest; resolved per request so
+    /// snapshot swaps with different depths stay safe).
+    pub level: usize,
+    /// Threads used *inside* one batch's tiled assignment.
+    pub threads_per_request: usize,
+    /// [`Service::submit_chunked`] splits bigger submissions into
+    /// batches of this many queries.
+    pub max_batch: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 4, level: usize::MAX, threads_per_request: 1, max_batch: 512 }
+    }
+}
+
+/// One answered request batch.
+#[derive(Debug)]
+pub struct QueryResponse {
+    pub result: AssignResult,
+    /// Level the batch was served at.
+    pub level: usize,
+    /// Wall-clock the batch spent in a worker.
+    pub latency_secs: f64,
+}
+
+enum Job {
+    Batch { queries: Vec<f32>, nq: usize, resp: mpsc::Sender<QueryResponse> },
+}
+
+/// Samples kept for percentile reporting. Percentiles describe the last
+/// `LATENCY_WINDOW` requests; lifetime totals (count/QPS) are exact.
+/// Bounded so a long-lived service's stats stay O(1) in memory and
+/// `stats()` cost.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-size ring of recent per-request latencies.
+struct LatencyWindow {
+    ring: Vec<f64>,
+    next: usize,
+    filled: usize,
+}
+
+impl LatencyWindow {
+    fn new() -> Self {
+        LatencyWindow { ring: vec![0.0; LATENCY_WINDOW], next: 0, filled: 0 }
+    }
+
+    fn add(&mut self, x: f64) {
+        self.ring[self.next] = x;
+        self.next = (self.next + 1) % self.ring.len();
+        self.filled = (self.filled + 1).min(self.ring.len());
+    }
+
+    fn summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for &x in &self.ring[..self.filled] {
+            s.add(x);
+        }
+        s
+    }
+}
+
+struct Shared {
+    index: Arc<ServeIndex>,
+    backend: Arc<dyn Backend + Send + Sync>,
+    cfg: ServiceConfig,
+    rx: Mutex<mpsc::Receiver<Job>>,
+    latencies: Mutex<LatencyWindow>,
+    queries_served: AtomicU64,
+    requests_served: AtomicU64,
+    started: Instant,
+}
+
+/// A running worker pool. Dropping (or [`Service::shutdown`]) closes the
+/// queue and joins the workers.
+pub struct Service {
+    shared: Arc<Shared>,
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Spawn `cfg.workers` threads serving `index` through `backend`.
+    pub fn start(
+        index: Arc<ServeIndex>,
+        backend: Arc<dyn Backend + Send + Sync>,
+        cfg: ServiceConfig,
+    ) -> Service {
+        let (tx, rx) = mpsc::channel();
+        let shared = Arc::new(Shared {
+            index,
+            backend,
+            cfg,
+            rx: Mutex::new(rx),
+            latencies: Mutex::new(LatencyWindow::new()),
+            queries_served: AtomicU64::new(0),
+            requests_served: AtomicU64::new(0),
+            started: Instant::now(),
+        });
+        let workers = (0..shared.cfg.workers.max(1))
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Service { shared, tx: Some(tx), workers }
+    }
+
+    /// Enqueue one batch of `nq` row-major queries; the response arrives
+    /// on the returned channel.
+    pub fn submit(&self, queries: Vec<f32>, nq: usize) -> mpsc::Receiver<QueryResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service is live")
+            .send(Job::Batch { queries, nq, resp: rtx })
+            .expect("worker pool alive");
+        rrx
+    }
+
+    /// Split a large query set into `cfg.max_batch`-sized requests and
+    /// enqueue them all (batched submission; responses arrive per chunk).
+    pub fn submit_chunked(&self, queries: &[f32], nq: usize) -> Vec<mpsc::Receiver<QueryResponse>> {
+        let d = if nq == 0 { 0 } else { queries.len() / nq };
+        assert_eq!(queries.len(), nq * d, "queries must be nq*d row-major");
+        let chunk = self.shared.cfg.max_batch.max(1);
+        let mut handles = Vec::new();
+        let mut q0 = 0usize;
+        while q0 < nq {
+            let q1 = (q0 + chunk).min(nq);
+            handles.push(self.submit(queries[q0 * d..q1 * d].to_vec(), q1 - q0));
+            q0 = q1;
+        }
+        handles
+    }
+
+    /// Submit one batch and wait for its response.
+    pub fn query_blocking(&self, queries: Vec<f32>, nq: usize) -> QueryResponse {
+        self.submit(queries, nq).recv().expect("service response")
+    }
+
+    /// The index this service reads from.
+    pub fn index(&self) -> Arc<ServeIndex> {
+        Arc::clone(&self.shared.index)
+    }
+
+    /// Point-in-time latency / throughput statistics. Percentiles cover
+    /// the most recent requests (a bounded 4096-sample window, so stats
+    /// stay O(1) on a long-lived service); counts and QPS are lifetime.
+    pub fn stats(&self) -> ServiceStats {
+        let lat = self.shared.latencies.lock().expect("latency lock").summary();
+        let elapsed = self.shared.started.elapsed().as_secs_f64();
+        let queries = self.shared.queries_served.load(Ordering::Relaxed);
+        ServiceStats {
+            requests: self.shared.requests_served.load(Ordering::Relaxed),
+            queries,
+            elapsed_secs: elapsed,
+            qps: if elapsed > 0.0 { queries as f64 / elapsed } else { 0.0 },
+            mean_latency: zero_if_nan(lat.mean()),
+            p50: zero_if_nan(lat.percentile(50.0)),
+            p95: zero_if_nan(lat.percentile(95.0)),
+            p99: zero_if_nan(lat.percentile(99.0)),
+            max_latency: if lat.is_empty() { 0.0 } else { lat.max() },
+        }
+    }
+
+    /// Drain the queue, stop the workers, and return final stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.tx = None; // closes the channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.tx = None;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        // only one worker parks in recv(); the rest queue on the mutex
+        let job = { shared.rx.lock().expect("rx lock").recv() };
+        let Ok(Job::Batch { queries, nq, resp }) = job else { break };
+        let timer = Timer::start();
+        let snap = shared.index.snapshot();
+        let level = snap.resolve_level(shared.cfg.level);
+        let result = assign_to_level(
+            &snap,
+            level,
+            &queries,
+            nq,
+            shared.backend.as_ref(),
+            shared.cfg.threads_per_request.max(1),
+        );
+        let secs = timer.secs();
+        shared.latencies.lock().expect("latency lock").add(secs);
+        shared.queries_served.fetch_add(nq as u64, Ordering::Relaxed);
+        shared.requests_served.fetch_add(1, Ordering::Relaxed);
+        // receiver may have given up; that's fine
+        let _ = resp.send(QueryResponse { result, level, latency_secs: secs });
+    }
+}
+
+fn zero_if_nan(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// Point-in-time service statistics (latencies in seconds). Counts,
+/// elapsed time and QPS are lifetime; the latency fields summarize the
+/// most recent bounded window of requests.
+#[derive(Debug, Clone)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub queries: u64,
+    pub elapsed_secs: f64,
+    pub qps: f64,
+    pub mean_latency: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max_latency: f64,
+}
+
+impl ServiceStats {
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        use crate::util::stats::fmt_secs;
+        format!(
+            "{} queries in {} requests over {} ({:.0} qps) — \
+             batch latency mean {} p50 {} p95 {} p99 {} max {}",
+            self.queries,
+            self.requests,
+            fmt_secs(self.elapsed_secs),
+            self.qps,
+            fmt_secs(self.mean_latency),
+            fmt_secs(self.p50),
+            fmt_secs(self.p95),
+            fmt_secs(self.p99),
+            fmt_secs(self.max_latency),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::runtime::NativeBackend;
+    use crate::scc::{run, SccConfig, Thresholds};
+
+    fn index() -> (crate::core::Dataset, Arc<ServeIndex>) {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 220,
+            d: 4,
+            k: 5,
+            sigma: 0.04,
+            delta: 10.0,
+            seed: 11,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 20).taus);
+        let res = run(&g, &cfg);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        (ds, Arc::new(ServeIndex::new(snap)))
+    }
+
+    #[test]
+    fn pooled_queries_match_direct_assignment() {
+        let (ds, index) = index();
+        let snap = index.snapshot();
+        let service = Service::start(
+            Arc::clone(&index),
+            Arc::new(NativeBackend::new()),
+            ServiceConfig { workers: 3, max_batch: 64, ..Default::default() },
+        );
+        let handles = service.submit_chunked(&ds.data, ds.n);
+        let mut pooled = vec![u32::MAX; ds.n];
+        let mut q0 = 0usize;
+        for h in handles {
+            let r = h.recv().expect("response");
+            let nb = r.result.len();
+            pooled[q0..q0 + nb].copy_from_slice(&r.result.cluster);
+            q0 += nb;
+        }
+        assert_eq!(q0, ds.n);
+        let direct = assign_to_level(
+            &snap,
+            snap.coarsest(),
+            &ds.data,
+            ds.n,
+            &NativeBackend::new(),
+            1,
+        );
+        assert_eq!(pooled, direct.cluster, "pool must not change answers");
+        let stats = service.shutdown();
+        assert_eq!(stats.queries, ds.n as u64);
+        assert!(stats.requests >= 1);
+        assert!(stats.p50 >= 0.0 && stats.p99 >= stats.p50);
+    }
+
+    #[test]
+    fn ingest_swaps_snapshot_without_stopping_service() {
+        let (ds, index) = index();
+        let service = Service::start(
+            Arc::clone(&index),
+            Arc::new(NativeBackend::new()),
+            ServiceConfig { workers: 2, ..Default::default() },
+        );
+        let before = index.snapshot();
+        let batch: Vec<f32> = ds.row(3).iter().map(|x| x + 1e-3).collect();
+        let report = index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.ingested, 1);
+        let after = index.snapshot();
+        assert_eq!(after.n, before.n + 1, "new snapshot swapped in");
+        assert_eq!(before.n, ds.n, "old snapshot untouched (copy-on-write)");
+        // queries keep flowing against the new snapshot
+        let r = service.query_blocking(ds.row(3).to_vec(), 1);
+        assert_eq!(
+            r.result.cluster[0],
+            after.level(after.coarsest()).partition.assign[3]
+        );
+        service.shutdown();
+    }
+
+    #[test]
+    fn stats_empty_service_is_zeroed() {
+        let (_, index) = index();
+        let service =
+            Service::start(index, Arc::new(NativeBackend::new()), ServiceConfig::default());
+        let stats = service.stats();
+        assert_eq!(stats.queries, 0);
+        assert_eq!(stats.p99, 0.0);
+        service.shutdown();
+    }
+}

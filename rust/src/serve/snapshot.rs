@@ -1,0 +1,390 @@
+//! Immutable, queryable snapshots of an SCC run.
+//!
+//! A [`HierarchySnapshot`] freezes one [`crate::scc::SccResult`] together
+//! with its dataset: every round's partition, the threshold that produced
+//! it, and exact per-cluster centroid aggregates
+//! ([`crate::linkage::CentroidAgg`]). Because the aggregates are
+//! fixed-point integers on the same 2³² grid as the engine's
+//! [`crate::linkage::LinkAgg`], snapshot construction is deterministic —
+//! independent of thread count and accumulation order — and two snapshots
+//! of the same run compare bit-equal (`PartialEq`).
+//!
+//! Construction cost: level 1 aggregates one pass over the points
+//! (parallel, order-independent merge); every coarser level folds the
+//! previous level's aggregates through the nested-partition mapping, so
+//! the whole build is `O(n·d + L·n)` rather than `O(L·n·d)`.
+//!
+//! Level indexing: level 0 is the singleton round (threshold 0); level
+//! `i ≥ 1` stores the partition after the i-th merging round and the
+//! threshold `τ` that drove it. Thresholds are non-decreasing, so
+//! `cut_at(τ)` resolves to *the coarsest level whose threshold is ≤ τ*
+//! and returns the stored partition — an O(log L) lookup over at most a
+//! few dozen levels, with no tree traversal or re-clustering.
+
+use crate::core::{Dataset, Partition};
+use crate::linkage::{CentroidAgg, Measure};
+use crate::scc::SccResult;
+use crate::util::par;
+
+/// One frozen hierarchy level: the partition after a merging round, the
+/// threshold that produced it, and per-cluster centroid state.
+///
+/// Level 0 (singletons) stores empty `aggs`/`centroids`: its centroids
+/// *are* the points, served directly from
+/// [`HierarchySnapshot::centroids`] without duplication.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotLevel {
+    /// The τ of the round that produced this partition (0 for level 0).
+    pub threshold: f64,
+    /// Point → cluster id (compact, `0..num_clusters`).
+    pub partition: Partition,
+    /// Exact per-cluster centroid aggregates (empty at level 0).
+    pub aggs: Vec<CentroidAgg>,
+    /// Row-major `num_clusters × d` centroid matrix derived from `aggs`
+    /// (empty at level 0).
+    pub centroids: Vec<f32>,
+}
+
+/// An immutable hierarchy index built from one SCC run. See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierarchySnapshot {
+    /// Dataset name the hierarchy was built on.
+    pub name: String,
+    /// Dimensionality of points and centroids.
+    pub d: usize,
+    /// Dissimilarity the hierarchy was built under (assignment queries
+    /// use the same measure).
+    pub measure: Measure,
+    /// Row-major `n × d` point matrix; grows at the tail on ingest.
+    pub points: Vec<f32>,
+    /// Current number of points (build + ingested).
+    pub n: usize,
+    /// Hierarchy levels, finest (singletons) first.
+    pub levels: Vec<SnapshotLevel>,
+    /// `n` at build time — the drift baseline.
+    pub built_n: usize,
+    /// Points ingested since build.
+    pub ingested: usize,
+    /// Local re-clusterings that wanted to merge existing clusters
+    /// (deferred to rebuild; see `serve` module docs).
+    pub conflicts: usize,
+}
+
+impl HierarchySnapshot {
+    /// Freeze `result` (produced on `ds`) into a snapshot. `threads`
+    /// parallelizes the level-1 aggregation; the output is bit-identical
+    /// for every thread count.
+    pub fn build(
+        ds: &Dataset,
+        result: &SccResult,
+        measure: Measure,
+        threads: usize,
+    ) -> HierarchySnapshot {
+        assert!(!result.rounds.is_empty(), "SccResult must hold at least the singleton round");
+        assert_eq!(result.rounds[0].n(), ds.n, "rounds must cover the dataset");
+        assert_eq!(
+            result.stats.len() + 1,
+            result.rounds.len(),
+            "each post-singleton round must carry a RoundStat"
+        );
+        let mut levels = Vec::with_capacity(result.rounds.len());
+        levels.push(SnapshotLevel {
+            threshold: 0.0,
+            partition: result.rounds[0].clone(),
+            aggs: Vec::new(),
+            centroids: Vec::new(),
+        });
+        for r in 1..result.rounds.len() {
+            let part = &result.rounds[r];
+            let k = compact_cluster_count(part);
+            let aggs = if r == 1 {
+                aggregate_points(ds, part, k, threads)
+            } else {
+                fold_level(&result.rounds[r - 1], &levels[r - 1].aggs, part, k)
+            };
+            let centroids = centroid_matrix(&aggs, ds.d);
+            levels.push(SnapshotLevel {
+                threshold: result.stats[r - 1].threshold,
+                partition: part.clone(),
+                aggs,
+                centroids,
+            });
+        }
+        HierarchySnapshot {
+            name: ds.name.clone(),
+            d: ds.d,
+            measure,
+            points: ds.data.clone(),
+            n: ds.n,
+            levels,
+            built_n: ds.n,
+            ingested: 0,
+            conflicts: 0,
+        }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Index of the coarsest level.
+    pub fn coarsest(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    /// Clamp a requested level (`usize::MAX` = "coarsest") into range.
+    pub fn resolve_level(&self, level: usize) -> usize {
+        level.min(self.coarsest())
+    }
+
+    pub fn level(&self, level: usize) -> &SnapshotLevel {
+        &self.levels[level]
+    }
+
+    /// Threshold that produced `level` (0 for the singleton level).
+    pub fn threshold(&self, level: usize) -> f64 {
+        self.levels[level].threshold
+    }
+
+    /// Number of clusters at `level`.
+    pub fn num_clusters(&self, level: usize) -> usize {
+        if level == 0 {
+            self.n
+        } else {
+            self.levels[level].aggs.len()
+        }
+    }
+
+    /// Row-major centroid matrix at `level` (`num_clusters × d`). Level
+    /// 0's centroids are the points themselves.
+    pub fn centroids(&self, level: usize) -> &[f32] {
+        if level == 0 {
+            &self.points
+        } else {
+            &self.levels[level].centroids
+        }
+    }
+
+    /// The `i`-th point.
+    #[inline]
+    pub fn point_row(&self, i: usize) -> &[f32] {
+        &self.points[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The coarsest level whose threshold is ≤ `tau` (level 0 for `tau`
+    /// below every merge threshold). Thresholds are non-decreasing, so
+    /// this is a binary search over ≤ a few dozen levels.
+    pub fn level_for_tau(&self, tau: f64) -> usize {
+        let first_above = self.levels.partition_point(|lv| lv.threshold <= tau);
+        first_above.saturating_sub(1)
+    }
+
+    /// The flat clustering at dissimilarity threshold `tau`: a clone of
+    /// the stored partition of [`Self::level_for_tau`]`(tau)` — no
+    /// re-clustering, no tree traversal.
+    pub fn cut_at(&self, tau: f64) -> Partition {
+        self.levels[self.level_for_tau(tau)].partition.clone()
+    }
+
+    /// The flat clustering at an explicit level index.
+    pub fn cut_at_level(&self, level: usize) -> Partition {
+        self.levels[self.resolve_level(level)].partition.clone()
+    }
+
+    /// Fraction of the index that arrived after the build.
+    pub fn drift(&self) -> f64 {
+        if self.built_n == 0 {
+            0.0
+        } else {
+            self.ingested as f64 / self.built_n as f64
+        }
+    }
+
+    /// `true` once accumulated ingest exceeds `limit` (a fraction of the
+    /// built size) — the signal to re-run the full batch pipeline.
+    pub fn needs_rebuild(&self, limit: f64) -> bool {
+        self.drift() > limit
+    }
+
+    /// Human-readable level table for CLI reports.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "snapshot '{}': n={} d={} measure={} levels={} (ingested {} / drift {:.3})\n",
+            self.name,
+            self.n,
+            self.d,
+            self.measure.name(),
+            self.num_levels(),
+            self.ingested,
+            self.drift()
+        );
+        out.push_str("level  threshold   clusters\n");
+        for (i, lv) in self.levels.iter().enumerate() {
+            out.push_str(&format!(
+                "{:>5} {:>10.4} {:>10}\n",
+                i,
+                lv.threshold,
+                self.num_clusters(i)
+            ));
+        }
+        out
+    }
+}
+
+/// `max(label)+1` with a debug check that ids are engine-compact.
+fn compact_cluster_count(part: &Partition) -> usize {
+    let k = part.assign.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+    debug_assert_eq!(k, part.num_clusters(), "engine partitions must use compact ids");
+    k
+}
+
+/// Level-1 aggregates straight from the points: one parallel pass with
+/// per-chunk partials merged in chunk order (exact, so any order gives
+/// the same bits).
+fn aggregate_points(ds: &Dataset, part: &Partition, k: usize, threads: usize) -> Vec<CentroidAgg> {
+    par::par_fold(
+        ds.n,
+        threads.max(1),
+        Vec::new(),
+        |mut acc: Vec<CentroidAgg>, range| {
+            if acc.is_empty() {
+                acc = vec![CentroidAgg::zero(ds.d); k];
+            }
+            for i in range {
+                acc[part.assign[i] as usize].add_point(ds.row(i));
+            }
+            acc
+        },
+        |mut a, b| {
+            if a.is_empty() {
+                return b;
+            }
+            if b.is_empty() {
+                return a;
+            }
+            for (x, y) in a.iter_mut().zip(&b) {
+                x.merge(y);
+            }
+            a
+        },
+    )
+}
+
+/// Coarser-level aggregates by folding the previous level's through the
+/// nested-partition mapping (each previous cluster contributes once, via
+/// its first member point).
+fn fold_level(
+    prev: &Partition,
+    prev_aggs: &[CentroidAgg],
+    part: &Partition,
+    k: usize,
+) -> Vec<CentroidAgg> {
+    let d = prev_aggs.first().map_or(0, CentroidAgg::dim);
+    let mut out = vec![CentroidAgg::zero(d); k];
+    let mut seen = vec![false; prev_aggs.len()];
+    for i in 0..prev.n() {
+        let pc = prev.assign[i] as usize;
+        if !seen[pc] {
+            seen[pc] = true;
+            out[part.assign[i] as usize].merge(&prev_aggs[pc]);
+        }
+    }
+    out
+}
+
+/// Materialize the `k × d` centroid matrix from aggregates.
+fn centroid_matrix(aggs: &[CentroidAgg], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; aggs.len() * d];
+    for (c, agg) in aggs.iter().enumerate() {
+        agg.write_centroid(&mut out[c * d..(c + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::scc::{run, SccConfig, Thresholds};
+
+    fn small_run() -> (Dataset, crate::scc::SccResult) {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 240,
+            d: 4,
+            k: 6,
+            sigma: 0.05,
+            delta: 8.0,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 8, Measure::L2Sq);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 20).taus);
+        let res = run(&g, &cfg);
+        (ds, res)
+    }
+
+    #[test]
+    fn levels_mirror_rounds() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 3);
+        assert_eq!(snap.num_levels(), res.rounds.len());
+        for (r, round) in res.rounds.iter().enumerate() {
+            assert_eq!(&snap.levels[r].partition, round);
+            assert_eq!(snap.num_clusters(r), round.num_clusters());
+        }
+    }
+
+    #[test]
+    fn build_is_thread_count_invariant() {
+        let (ds, res) = small_run();
+        let a = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 1);
+        let b = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 7);
+        assert_eq!(a, b, "fixed-point aggregation must not depend on threads");
+    }
+
+    #[test]
+    fn folded_aggregates_match_direct_accumulation() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 4);
+        // recompute every level's aggregates directly from the points and
+        // compare bit-for-bit with the folded construction
+        for (l, lv) in snap.levels.iter().enumerate().skip(1) {
+            let k = lv.aggs.len();
+            let mut direct = vec![CentroidAgg::zero(ds.d); k];
+            for i in 0..ds.n {
+                direct[lv.partition.assign[i] as usize].add_point(ds.row(i));
+            }
+            assert_eq!(direct, lv.aggs, "level {l} fold diverged from direct accumulation");
+        }
+    }
+
+    #[test]
+    fn cut_at_threshold_selects_coarsest_at_or_below() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        // far below the first merge threshold: singletons
+        assert_eq!(snap.level_for_tau(0.0), 0);
+        assert_eq!(snap.cut_at(0.0), res.rounds[0]);
+        // far above every threshold: coarsest round
+        let top = snap.cut_at(f64::INFINITY);
+        assert_eq!(&top, res.rounds.last().unwrap());
+        // midpoints between distinct consecutive thresholds select the
+        // lower level
+        for l in 1..snap.num_levels() - 1 {
+            let (a, b) = (snap.threshold(l), snap.threshold(l + 1));
+            if a < b {
+                let mid = 0.5 * (a + b);
+                assert_eq!(snap.level_for_tau(mid), l, "mid of ({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn centroids_at_level_zero_are_the_points() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        assert_eq!(snap.centroids(0), &ds.data[..]);
+        assert_eq!(snap.num_clusters(0), ds.n);
+    }
+}

@@ -134,6 +134,40 @@ mod tests {
         assert!(s.percentile(50.0).is_nan());
     }
 
+    /// Pins the interpolation behaviour at the edges — the serving
+    /// layer's latency reporting (`serve::service`) depends on these
+    /// exact semantics.
+    #[test]
+    fn percentile_edges_are_pinned() {
+        // single sample: every q returns that sample, including the
+        // extremes and interior quantiles
+        let mut one = Summary::new();
+        one.add(42.0);
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(one.percentile(q), 42.0, "q={q}");
+        }
+        assert_eq!(one.median(), 42.0);
+
+        // q=0 is the minimum and q=100 the maximum, regardless of
+        // insertion order
+        let mut s = Summary::new();
+        for x in [7.0, -3.0, 5.0, 11.0] {
+            s.add(x);
+        }
+        assert_eq!(s.percentile(0.0), -3.0);
+        assert_eq!(s.percentile(100.0), 11.0);
+        assert_eq!(s.percentile(0.0), s.min());
+        assert_eq!(s.percentile(100.0), s.max());
+
+        // tiny q interpolates linearly just above the minimum:
+        // pos = (1/100)·(n−1) = 0.03 ⇒ min + 0.03·(next − min)
+        let q1 = s.percentile(1.0);
+        assert!((q1 - (-3.0 + 0.03 * 8.0)).abs() < 1e-12, "q=1 gave {q1}");
+
+        // median of an even count is the midpoint of the middle pair
+        assert_eq!(s.median(), 6.0);
+    }
+
     #[test]
     fn formatting() {
         assert_eq!(fmt_count(1234567), "1_234_567");

@@ -1,0 +1,132 @@
+//! Property tests for the serving layer (ISSUE acceptance criteria):
+//!
+//! 1. for every round `r` of an SCC run, the snapshot's cut at that
+//!    round's threshold is *identical* to the partition the engine
+//!    produced at that round;
+//! 2. ingesting zero points is a no-op — the snapshot is bit-identical
+//!    (full structural equality, including fixed-point aggregates);
+//! 3. ingest preserves the hierarchical-nesting invariant at every level.
+
+use scc::core::Dataset;
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::runtime::NativeBackend;
+use scc::scc::{run, thresholds::edge_range, SccConfig, SccResult, Thresholds};
+use scc::serve::{ingest_batch, HierarchySnapshot, IngestConfig};
+use scc::util::prop::{check, Gen};
+
+/// A randomized small workload: mixture + SCC run (sometimes the
+/// fixed-rounds variant, whose thresholds are strictly increasing).
+fn random_run(g: &mut Gen) -> (Dataset, SccResult) {
+    let n = g.usize_in(60..220);
+    let k = g.usize_in(2..7);
+    let ds = separated_mixture(&MixtureSpec {
+        n,
+        d: g.usize_in(2..5),
+        k,
+        sigma: 0.05,
+        delta: g.f64_in(6.0, 12.0),
+        imbalance: 0.0,
+        seed: g.rng().next_u64(),
+    });
+    let graph = knn_graph(&ds, g.usize_in(3..9), Measure::L2Sq);
+    let (lo, hi) = edge_range(&graph);
+    let taus = Thresholds::geometric(lo, hi, g.usize_in(8..30)).taus;
+    let cfg = if g.bool() { SccConfig::fixed_rounds(taus) } else { SccConfig::new(taus) };
+    (ds, run(&graph, &cfg))
+}
+
+#[test]
+fn cut_at_each_round_threshold_reproduces_engine_partition() {
+    check("cut_at(τ_r) == engine round r", 30, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        assert_eq!(snap.num_levels(), res.rounds.len());
+        // by explicit level index: always identical
+        for (r, round) in res.rounds.iter().enumerate() {
+            assert_eq!(&snap.cut_at_level(r), round, "level {r}");
+        }
+        // by threshold: τ_r resolves to the *last* round run at that
+        // threshold (consecutive merging rounds can share a τ when the
+        // schedule only advances on no-change rounds)
+        for r in 1..res.rounds.len() {
+            let tau = res.stats[r - 1].threshold;
+            let last_with_tau = (1..res.rounds.len())
+                .filter(|&s| res.stats[s - 1].threshold <= tau)
+                .max()
+                .unwrap();
+            assert_eq!(
+                snap.cut_at(tau),
+                res.rounds[last_with_tau],
+                "round {r} (τ={tau}) must cut to the coarsest partition at ≤ τ"
+            );
+        }
+        // below every threshold: singletons; above: the final round
+        assert_eq!(snap.cut_at(0.0), res.rounds[0]);
+        assert_eq!(&snap.cut_at(f64::INFINITY), res.rounds.last().unwrap());
+    });
+}
+
+#[test]
+fn ingest_of_zero_points_is_bit_identical_noop() {
+    check("ingest([]) is a no-op", 20, |g| {
+        let (ds, res) = random_run(g);
+        let mut snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 1);
+        let before = snap.clone();
+        let cfg = IngestConfig {
+            level: g.usize_in(0..snap.num_levels() + 2), // may exceed: clamped
+            ..Default::default()
+        };
+        let report = ingest_batch(&mut snap, &[], &cfg, &NativeBackend::new());
+        assert_eq!(report.ingested, 0);
+        assert_eq!(report.attached + report.new_clusters + report.conflicts, 0);
+        assert_eq!(snap, before, "zero-point ingest must leave the snapshot bit-identical");
+    });
+}
+
+#[test]
+fn ingest_preserves_nesting_and_counts() {
+    check("ingest keeps levels nested", 15, |g| {
+        let (ds, res) = random_run(g);
+        let mut snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        // random batch: jittered known points plus a few far outliers
+        let m = g.usize_in(1..12);
+        let mut batch = Vec::with_capacity(m * ds.d);
+        for _ in 0..m {
+            if g.bool() {
+                let src = g.usize_in(0..ds.n);
+                for &x in ds.row(src) {
+                    batch.push(x + 0.002 * (g.rng().f32() - 0.5));
+                }
+            } else {
+                let offset = 100.0 + 50.0 * g.rng().f32();
+                for dim in 0..ds.d {
+                    batch.push(if dim == 0 { offset } else { g.rng().f32() });
+                }
+            }
+        }
+        let report =
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.ingested, m);
+        assert_eq!(snap.n, ds.n + m);
+        for (l, w) in snap.levels.windows(2).enumerate() {
+            assert!(
+                w[0].partition.refines(&w[1].partition),
+                "levels {l}/{} lost nesting after ingest",
+                l + 1
+            );
+        }
+        // every level's partition covers every point, aggregates count
+        // every point exactly once at every level ≥ 1
+        for l in 1..snap.num_levels() {
+            let lv = snap.level(l);
+            assert_eq!(lv.partition.n(), snap.n);
+            let total: u64 = lv.aggs.iter().map(|a| a.count).sum();
+            assert_eq!(total, snap.n as u64, "level {l} aggregate counts");
+            assert_eq!(lv.centroids.len(), lv.aggs.len() * snap.d);
+        }
+        // level-0 stays one singleton per point
+        assert_eq!(snap.num_clusters(0), snap.n);
+    });
+}

@@ -1,6 +1,8 @@
 //! Serving & incremental ingestion: build a hierarchy once, then treat it
 //! as a long-lived index — answer assignment queries through the worker
-//! pool, ingest a mini-batch, and re-query the updated structure.
+//! pool, ingest mini-batches (including an **online cross-cluster
+//! merge**), and let the **automatic rebuild worker** refresh the index
+//! once drift crosses its limit, all without stopping the service.
 //!
 //! ```bash
 //! cargo run --release --example serving
@@ -8,14 +10,19 @@
 //!
 //! Pipeline: mixture → k-NN graph → SCC → `HierarchySnapshot` →
 //! `Service` (pooled queries) → `ServeIndex::ingest` (copy-on-write
-//! swap) → re-query + `cut_at(τ)` on the post-ingest snapshot.
+//! swap) → re-query → bridge-batch ingest with `online_merges`
+//! (conflict merge applied via scoped contraction + splice) →
+//! drift-triggered `RebuildWorker` swap → final queries.
 
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph;
 use scc::linkage::Measure;
 use scc::runtime::NativeBackend;
 use scc::scc::{run, SccConfig, Thresholds};
-use scc::serve::{HierarchySnapshot, IngestConfig, ServeIndex, Service, ServiceConfig};
+use scc::serve::{
+    HierarchySnapshot, IngestConfig, RebuildConfig, RebuildWorker, ServeIndex, Service,
+    ServiceConfig,
+};
 use scc::util::Rng;
 use std::sync::Arc;
 
@@ -123,7 +130,78 @@ fn main() {
     //    answer with their post-ingest clusters
     let novel_again = service.query_blocking(after.point_row(after.n - 1).to_vec(), 1);
     assert_eq!(novel_again.result.cluster[0], *novel.iter().next().unwrap());
+
+    // 7. online conflict merge: a dense chain of points bridging the two
+    //    nearest cluster centroids. With `online_merges` the local
+    //    contraction merges the two frozen clusters in place (spliced,
+    //    with a recorded approximation bound) instead of deferring.
+    let before_merge = index.snapshot();
+    let serving = before_merge.resolve_level(level);
+    let centers = before_merge.centroids(serving);
+    let d = before_merge.d;
+    let (na, nb, _) = before_merge
+        .nearest_cluster_pair(serving)
+        .expect("serving level holds at least two clusters");
+    let (na, nb) = (na as usize, nb as usize);
+    let bridge_tau = before_merge.threshold(serving);
+    let bridge = scc::data::bridge_chain(
+        &centers[na * d..na * d + d],
+        &centers[nb * d..nb * d + d],
+        bridge_tau,
+    );
+    let merge_report = index.ingest(
+        &bridge,
+        &IngestConfig { level: serving, online_merges: true, workers: 4, ..Default::default() },
+        backend.as_ref(),
+    );
+    let merged = index.snapshot();
+    println!(
+        "bridge ingest: {} points — {} conflict merges applied online (splice bound {:.4})",
+        merge_report.ingested,
+        merge_report.online_merges,
+        merged.splice_bound()
+    );
+    assert!(merge_report.online_merges >= 1, "the bridge must merge frozen clusters online");
+    assert_eq!(merge_report.conflicts, 0, "online policy defers nothing");
+    assert!(merged.num_clusters(merged.resolve_level(level)) < before_merge.num_clusters(serving));
+    assert!(!merged.is_exact(), "spliced clusters are marked approximate");
+
+    // 8. automatic rebuild: accumulated drift has crossed the limit, so
+    //    the background worker re-runs the batch pipeline off the hot
+    //    path and swaps a fresh, exact snapshot in — queries never stop.
+    let worker = RebuildWorker::start(
+        Arc::clone(&index),
+        backend.clone(),
+        RebuildConfig {
+            drift_limit: 0.01, // already exceeded by the batches above
+            knn_k: 10,
+            schedule_len: 30,
+            threads: 0,
+            poll: std::time::Duration::from_millis(10),
+        },
+    );
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    while worker.rebuilds() == 0 && std::time::Instant::now() < deadline {
+        // the service keeps answering while the rebuild runs
+        let r = service.query_blocking(ds.row(0).to_vec(), 1);
+        assert_eq!(r.result.len(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(worker.stop(), 1, "one drift crossing, one swap");
+    let rebuilt = index.snapshot();
+    println!(
+        "automatic rebuild swapped in generation {}: n={} levels={} exact={}",
+        rebuilt.generation,
+        rebuilt.n,
+        rebuilt.num_levels(),
+        rebuilt.is_exact()
+    );
+    assert!(rebuilt.generation > merged.generation, "swap must advance the generation");
+    assert_eq!(rebuilt.n, merged.n, "rebuild keeps every ingested point");
+    assert!(rebuilt.is_exact(), "a from-scratch build resolves all splices");
+    assert_eq!(rebuilt.ingested, 0, "drift resets after the rebuild");
+
     let stats = service.shutdown();
     println!("final: {}", stats.report());
-    println!("\nserving demo OK — query → ingest → re-query, no rebuild needed");
+    println!("\nserving demo OK — query → ingest → online merge → automatic rebuild");
 }

@@ -1,5 +1,7 @@
 //! Bench: serving-layer assignment throughput (points/sec), serial vs
-//! pooled, at n ∈ {10k, 100k} query points against a frozen hierarchy.
+//! pooled, at n ∈ {10k, 100k} query points against a frozen hierarchy —
+//! plus the ingest arm: absorbing a conflict-merge batch by
+//! defer-to-full-rebuild vs applying the merge online.
 //!
 //! ```bash
 //! cargo bench --bench serve            # SCC_BENCH_SCALE / SCC_BENCH_BACKEND apply
@@ -14,7 +16,10 @@ use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph_with_backend;
 use scc::linkage::Measure;
 use scc::scc::{run, SccConfig, Thresholds};
-use scc::serve::{assign_to_level, HierarchySnapshot, ServeIndex, Service, ServiceConfig};
+use scc::serve::{
+    assign_to_level, ingest_batch, rebuild_snapshot, HierarchySnapshot, IngestConfig,
+    RebuildConfig, ServeIndex, Service, ServiceConfig,
+};
 use scc::util::stats::{fmt_count, fmt_secs};
 use scc::util::{par, Rng, Timer};
 use std::sync::Arc;
@@ -116,6 +121,77 @@ fn main() {
             serial_secs / pooled_secs
         );
     }
+
+    // --- ingest arm: defer-to-rebuild vs online merge ---------------
+    // the batch is the conflict-merge scenario: jittered duplicates plus
+    // a dense chain bridging the two nearest serving clusters, so the
+    // local re-clustering finds a cross-cluster merge component
+    let snap_now = index.snapshot();
+    let d = snap_now.d;
+    let tau_b = snap_now.threshold(level);
+    let centers = snap_now.centroids(level);
+    let (na, nb, _) = snap_now
+        .nearest_cluster_pair(level)
+        .expect("serving level holds at least two clusters");
+    let (na, nb) = (na as usize, nb as usize);
+    let mut batch = scc::data::bridge_chain(
+        &centers[na * d..na * d + d],
+        &centers[nb * d..nb * d + d],
+        tau_b,
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0x1A6E57);
+    for j in 0..64 {
+        for &x in ds.row((j * 131) % ds.n) {
+            batch.push(x + 0.01 * rng.normal_f32());
+        }
+    }
+    let m = batch.len() / d;
+
+    // baseline: conservative defer policy + the full rebuild it requires
+    let rcfg = RebuildConfig { knn_k: 10, schedule_len: 25, threads, ..Default::default() };
+    let mut defer_snap = (*snap_now).clone();
+    let t = Timer::start();
+    let defer_report = ingest_batch(
+        &mut defer_snap,
+        &batch,
+        &IngestConfig { level, ..Default::default() },
+        backend.as_ref(),
+    );
+    let rebuilt = rebuild_snapshot(&defer_snap, &rcfg, backend.as_ref());
+    let defer_secs = t.secs();
+    assert_eq!(rebuilt.n, snap_now.n + m);
+    rows.push(Row {
+        queries: m,
+        path: "ingest_defer_rebuild",
+        secs: defer_secs,
+        points_per_sec: m as f64 / defer_secs,
+    });
+
+    // online merge: the same batch absorbed in place, no rebuild
+    let mut online_snap = (*snap_now).clone();
+    let t = Timer::start();
+    let online_report = ingest_batch(
+        &mut online_snap,
+        &batch,
+        &IngestConfig { level, online_merges: true, workers: threads, ..Default::default() },
+        backend.as_ref(),
+    );
+    let online_secs = t.secs();
+    rows.push(Row {
+        queries: m,
+        path: "ingest_online_merge",
+        secs: online_secs,
+        points_per_sec: m as f64 / online_secs,
+    });
+    println!(
+        "ingest n={:>6}  defer+rebuild {:>10} ({} conflicts)   online {:>10} ({} merges applied)  speedup {:.1}x",
+        fmt_count(m),
+        fmt_secs(defer_secs),
+        defer_report.conflicts,
+        fmt_secs(online_secs),
+        online_report.online_merges,
+        defer_secs / online_secs
+    );
 
     write_json(&rows, build_n, ds.d, clusters, backend.name(), threads);
     println!("[serve] total wall-clock: {}", fmt_secs(total.secs()));

@@ -40,11 +40,24 @@ pub struct ServeOpts {
     pub tau: Option<f64>,
     /// Serving cut as an explicit level index (overrides `--tau`).
     pub level: Option<usize>,
+    /// Drift fraction that triggers the automatic rebuild worker.
+    pub drift_limit: f64,
+    /// Apply cross-cluster conflict merges online during ingest
+    /// (scoped contraction + splice) instead of deferring to rebuild.
+    pub online_merges: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { queries: 2000, workers: 0, ingest: 64, tau: None, level: None }
+        ServeOpts {
+            queries: 2000,
+            workers: 0,
+            ingest: 64,
+            tau: None,
+            level: None,
+            drift_limit: 0.2,
+            online_merges: false,
+        }
     }
 }
 
@@ -95,6 +108,11 @@ OPTIONS:
   --ingest N      serve: mini-batch size to ingest after querying (default 64)
   --tau F         serve/serve-cut: serving cut as a dissimilarity threshold
   --level N       serve: serving cut as a level index (overrides --tau)
+  --drift-limit F serve: drift fraction that triggers the automatic
+                  background rebuild worker (default 0.2)
+  --online-merges serve: apply cross-cluster conflict merges online during
+                  ingest (scoped contraction + splice) instead of
+                  deferring them to the next rebuild
 ";
 
 /// Parse argv (excluding the program name).
@@ -139,6 +157,10 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--ingest" => cli.serve.ingest = val()?.parse().context("--ingest")?,
             "--tau" => cli.serve.tau = Some(val()?.parse().context("--tau")?),
             "--level" => cli.serve.level = Some(val()?.parse().context("--level")?),
+            "--drift-limit" => {
+                cli.serve.drift_limit = val()?.parse().context("--drift-limit")?
+            }
+            "--online-merges" => cli.serve.online_merges = true,
             other => bail!("unknown flag {other:?}\n{USAGE}"),
         }
     }
@@ -240,14 +262,18 @@ fn serving_level(snap: &crate::serve::HierarchySnapshot, opts: &ServeOpts) -> us
     }
 }
 
-/// `serve`: build → snapshot → pooled queries → ingest → report.
+/// `serve`: build → snapshot → pooled queries → ingest (online merges
+/// when requested) → automatic drift-triggered rebuild → report.
 fn serve_cmd(
     dataset: &str,
     cfg: &EvalConfig,
     opts: &ServeOpts,
     kind: BackendKind,
 ) -> Result<String> {
-    use crate::serve::{HierarchySnapshot, IngestConfig, ServeIndex, Service, ServiceConfig};
+    use crate::serve::{
+        HierarchySnapshot, IngestConfig, RebuildConfig, RebuildWorker, ServeIndex, Service,
+        ServiceConfig,
+    };
     let backend = make_backend(kind)?;
     let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
     let res = w.scc(cfg);
@@ -276,6 +302,19 @@ fn serve_cmd(
         Arc::clone(&backend),
         ServiceConfig { workers, level, ..Default::default() },
     );
+    // automatic rebuild: watches the drift counter off the hot path and
+    // swaps a fresh snapshot in without blocking queries
+    let rebuild_worker = RebuildWorker::start(
+        Arc::clone(&index),
+        Arc::clone(&backend),
+        RebuildConfig {
+            drift_limit: opts.drift_limit,
+            knn_k: cfg.knn_k,
+            schedule_len: cfg.rounds,
+            threads: cfg.threads,
+            poll: std::time::Duration::from_millis(25),
+        },
+    );
     let mut served = 0usize;
     for h in service.submit_chunked(&queries, nq) {
         let r = h.recv().context("service response")?;
@@ -290,24 +329,54 @@ fn serve_cmd(
                 batch.push(x + 0.02 * rng.normal_f32());
             }
         }
-        let report =
-            index.ingest(&batch, &IngestConfig { level, ..Default::default() }, backend.as_ref());
+        let icfg = IngestConfig {
+            level,
+            drift_limit: opts.drift_limit,
+            online_merges: opts.online_merges,
+            workers: cfg.threads.max(1),
+            ..Default::default()
+        };
+        let report = index.ingest(&batch, &icfg, backend.as_ref());
         let after = index.snapshot();
         out.push_str(&format!(
-            "ingested {} points: {} attached, {} new clusters, {} conflicts, drift {:.3}{}\n",
+            "ingested {} points: {} attached, {} new clusters, {} conflicts deferred, \
+             {} merged online, drift {:.3}{}\n",
             report.ingested,
             report.attached,
             report.new_clusters,
             report.conflicts,
+            report.online_merges,
             after.drift(),
-            if report.rebuild_recommended { " — REBUILD RECOMMENDED" } else { "" },
+            if report.rebuild_recommended { " — rebuild pending" } else { "" },
         ));
         out.push_str(&format!(
-            "post-ingest: n={} clusters@level {}\n",
+            "post-ingest: n={} clusters@level {} (snapshot generation {})\n",
             after.n,
-            after.num_clusters(level)
+            after.num_clusters(after.resolve_level(level)),
+            after.generation
         ));
+        if report.rebuild_recommended {
+            // the worker rebuilds off the hot path; wait (bounded) for
+            // the swap so the report can show the refreshed index
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+            while rebuild_worker.rebuilds() == 0 && std::time::Instant::now() < deadline {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            let rebuilt = index.snapshot();
+            if rebuild_worker.rebuilds() > 0 {
+                out.push_str(&format!(
+                    "automatic rebuild swapped in generation {}: n={} levels={} drift {:.3}\n",
+                    rebuilt.generation,
+                    rebuilt.n,
+                    rebuilt.num_levels(),
+                    rebuilt.drift()
+                ));
+            } else {
+                out.push_str("automatic rebuild still running at report time\n");
+            }
+        }
     }
+    rebuild_worker.stop();
     service.shutdown();
     Ok(out)
 }
@@ -386,7 +455,8 @@ mod tests {
     #[test]
     fn parses_serve_flags() {
         let cli = parse(&argv(
-            "serve --queries 500 --workers 3 --ingest 16 --tau 0.25 --level 4",
+            "serve --queries 500 --workers 3 --ingest 16 --tau 0.25 --level 4 \
+             --drift-limit 0.05 --online-merges",
         ))
         .unwrap();
         assert_eq!(cli.command, "serve");
@@ -395,7 +465,13 @@ mod tests {
         assert_eq!(cli.serve.ingest, 16);
         assert_eq!(cli.serve.tau, Some(0.25));
         assert_eq!(cli.serve.level, Some(4));
+        assert_eq!(cli.serve.drift_limit, 0.05);
+        assert!(cli.serve.online_merges);
+        let defaults = parse(&argv("serve")).unwrap();
+        assert_eq!(defaults.serve.drift_limit, 0.2);
+        assert!(!defaults.serve.online_merges);
         assert!(parse(&argv("serve --queries nope")).is_err());
+        assert!(parse(&argv("serve --drift-limit nope")).is_err());
     }
 
     #[test]
@@ -409,6 +485,22 @@ mod tests {
         assert!(out.contains("serving level"), "{out}");
         assert!(out.contains("served 120 queries"), "{out}");
         assert!(out.contains("ingested 8 points"), "{out}");
+    }
+
+    #[test]
+    fn serve_command_auto_rebuilds_past_the_drift_limit() {
+        let cli = parse(&argv(
+            "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+             --queries 60 --workers 2 --ingest 30 --drift-limit 0.1 --online-merges",
+        ))
+        .unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("merged online"), "{out}");
+        assert!(out.contains("rebuild pending"), "{out}");
+        assert!(
+            out.contains("automatic rebuild swapped in generation"),
+            "worker must swap within the report window: {out}"
+        );
     }
 
     #[test]

@@ -59,24 +59,16 @@ pub fn run_parallel(graph: &CsrGraph, config: &SccConfig, workers: usize) -> (Sc
     let workers = workers.max(1);
     let n = graph.n;
 
-    // initial shards: undirected edges once, routed by hash
-    let mut shards: Vec<Vec<ClusterEdge>> = vec![Vec::new(); workers];
+    // initial distribution: undirected edges once, routed by hash
+    let mut edges = Vec::with_capacity(graph.num_edges() / 2);
     for u in 0..n as u32 {
         for (v, w) in graph.neighbors(u) {
             if u < v {
-                shards[shard_of(u, v, workers)].push(ClusterEdge {
-                    a: u,
-                    b: v,
-                    agg: LinkAgg::new(w as f64),
-                });
+                edges.push(ClusterEdge { a: u, b: v, agg: LinkAgg::new(w as f64) });
             }
         }
     }
-    for s in &mut shards {
-        s.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
-    }
-
-    let mut leader = Leader::spawn(shards);
+    let mut leader = Leader::spawn_sharded(edges, workers);
     let mut labels: Vec<u32> = (0..n as u32).collect();
     let mut num_clusters = n;
     let mut rounds = vec![Partition::singletons(n)];
@@ -135,6 +127,56 @@ pub fn run_parallel(graph: &CsrGraph, config: &SccConfig, workers: usize) -> (Sc
     }
     leader.shutdown();
     (SccResult { rounds, stats: stats.rounds.clone() }, stats)
+}
+
+/// Scoped sharded contraction at a **fixed** threshold: run coordinator
+/// rounds (argmin scan → merge selection → union/relabel → contract +
+/// shuffle) over an explicit cluster-edge multiset until nothing merges,
+/// updating `labels` (element → cluster id, compact) in place. Returns
+/// the surviving cluster count.
+///
+/// This is the serving layer's online conflict-merge engine
+/// ([`crate::serve::ingest`]): ingest hands it the *local* graph over
+/// touched clusters plus a mini-batch, and gets back the same partition
+/// the sequential [`crate::scc::engine::ClusterGraph::run_to_fixpoint`]
+/// would produce — **bit-identical for every worker count**, because
+/// merge-edge selection is a set union over shards and the fixed-point
+/// [`LinkAgg`] shuffle reduction is exact (property-tested below and in
+/// `rust/tests/online_merge_properties.rs`).
+pub fn contract_fixpoint(
+    labels: &mut [u32],
+    num_clusters: usize,
+    edges: Vec<ClusterEdge>,
+    tau: f64,
+    workers: usize,
+    max_rounds: usize,
+) -> usize {
+    let mut leader = Leader::spawn_sharded(edges, workers);
+    let mut clusters = num_clusters;
+    let mut rounds = 0usize;
+    while rounds < max_rounds {
+        let best = leader.argmin_reduce(clusters);
+        let merge_edges = leader.select_merges(tau, &best);
+        if merge_edges.is_empty() {
+            break;
+        }
+        let mut uf = UnionFind::new(clusters);
+        for &(a, b) in &merge_edges {
+            uf.union(a, b);
+        }
+        if uf.components() == clusters {
+            break;
+        }
+        let relabel = uf.labels();
+        leader.contract(&relabel);
+        for l in labels.iter_mut() {
+            *l = relabel[*l as usize];
+        }
+        clusters = uf.components();
+        rounds += 1;
+    }
+    leader.shutdown();
+    clusters
 }
 
 #[cfg(test)]
@@ -239,6 +281,36 @@ mod tests {
                 "imbalanced shards: {counts:?}"
             );
         }
+    }
+
+    #[test]
+    fn contract_fixpoint_matches_sequential_engine_bit_exact() {
+        use crate::scc::engine::ClusterGraph;
+        crate::util::prop::check("contract_fixpoint == sequential fixpoint", 15, |g| {
+            let n = g.usize_in(10..120);
+            let graph = graph_for(n, g.usize_in(2..6), 3, g.usize_in(2..5), g.rng().next_u64());
+            // the same undirected edge multiset both engines start from
+            let mut edges = Vec::new();
+            for u in 0..graph.n as u32 {
+                for (v, w) in graph.neighbors(u) {
+                    if u < v {
+                        edges.push(ClusterEdge { a: u, b: v, agg: LinkAgg::new(w as f64) });
+                    }
+                }
+            }
+            let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
+            let tau = g.f64_in(lo, hi * 1.1);
+            let mut cg = ClusterGraph::from_parts((0..n as u32).collect(), n, edges.clone());
+            cg.run_to_fixpoint(tau, 64);
+            let seq = cg.point_partition();
+            for workers in [1usize, 2, 4, 8] {
+                let mut labels: Vec<u32> = (0..n as u32).collect();
+                let clusters =
+                    contract_fixpoint(&mut labels, n, edges.clone(), tau, workers, 64);
+                assert_eq!(labels, seq.assign, "labels differ at W={workers} (n={n}, τ={tau})");
+                assert_eq!(clusters, cg.num_clusters(), "count differs at W={workers}");
+            }
+        });
     }
 
     #[test]

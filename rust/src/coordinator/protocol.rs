@@ -77,6 +77,25 @@ impl Leader {
         Leader { workers }
     }
 
+    /// Shard an undirected cluster-edge list by [`super::shard_of`] and
+    /// spawn one worker per shard — the coordinator's initial
+    /// distribution, shared by full runs ([`super::run_parallel`]) and
+    /// the serving layer's scoped ingest-time contractions
+    /// ([`super::contract_fixpoint`]). Shards are sorted by endpoint pair
+    /// so the distribution is a deterministic function of the edge
+    /// multiset.
+    pub fn spawn_sharded(edges: Vec<ClusterEdge>, workers: usize) -> Leader {
+        let workers = workers.max(1);
+        let mut shards: Vec<Vec<ClusterEdge>> = vec![Vec::new(); workers];
+        for e in edges {
+            shards[super::shard_of(e.a, e.b, workers)].push(e);
+        }
+        for s in &mut shards {
+            s.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
+        }
+        Leader::spawn(shards)
+    }
+
     pub fn num_workers(&self) -> usize {
         self.workers.len()
     }
@@ -312,6 +331,22 @@ mod tests {
         let (avg, nbr) = best[0].unwrap();
         assert_eq!(nbr, 1);
         assert!((avg - 5.0).abs() < 1e-9, "avg of 4 and 6 is 5, got {avg}");
+        leader.shutdown();
+    }
+
+    #[test]
+    fn spawn_sharded_covers_every_edge_once() {
+        // 4 edges over 4 workers: whatever the routing, a global argmin
+        // scan must see the full multiset exactly once
+        let edges =
+            vec![edge(0, 1, 1.0), edge(0, 2, 2.0), edge(1, 2, 3.0), edge(2, 3, 0.5)];
+        let mut leader = Leader::spawn_sharded(edges, 4);
+        assert_eq!(leader.num_workers(), 4);
+        let best = leader.argmin_reduce(4);
+        assert_eq!(best[0], Some((1.0, 1)));
+        assert_eq!(best[1], Some((1.0, 0)));
+        assert_eq!(best[2], Some((0.5, 3)));
+        assert_eq!(best[3], Some((0.5, 2)));
         leader.shutdown();
     }
 

@@ -86,6 +86,34 @@ pub fn separated_mixture(spec: &MixtureSpec) -> Dataset {
         .with_labels(labels)
 }
 
+/// A straight chain of points from `from` to `to` (inclusive) whose
+/// spacing keeps adjacent and next-adjacent ℓ2² dissimilarities well
+/// under `tau` (`spacing = √tau / 3`, so 1-step = τ/9 and 2-step =
+/// 4τ/9) — dense enough to merge transitively at threshold `tau` in an
+/// SCC round engine. This is the serving layer's *bridge* workload: a
+/// batch engineered to present cross-cluster merge evidence to
+/// [`crate::serve::ingest`] (exercised by the online-merge property
+/// tests, the serving example, and the ingest bench).
+///
+/// Requires `tau > 0`; degenerate endpoints (`from == to`) still yield a
+/// two-point chain.
+pub fn bridge_chain(from: &[f32], to: &[f32], tau: f64) -> Vec<f32> {
+    assert_eq!(from.len(), to.len(), "endpoints must share a dimension");
+    assert!(tau > 0.0, "bridge_chain needs a positive merge threshold");
+    let d = from.len();
+    let dist2: f32 = from.iter().zip(to).map(|(x, y)| (x - y) * (x - y)).sum();
+    let spacing = (tau.sqrt() / 3.0) as f32;
+    let steps = (dist2.sqrt() / spacing).ceil().max(1.0) as usize;
+    let mut out = Vec::with_capacity((steps + 1) * d);
+    for s in 0..=steps {
+        let f = s as f32 / steps as f32;
+        for j in 0..d {
+            out.push(from[j] + f * (to[j] - from[j]));
+        }
+    }
+    out
+}
+
 /// Split `n` points over `k` clusters; `imbalance` is the Zipf exponent
 /// (0 = equal sizes). Every cluster gets at least one point.
 pub fn cluster_sizes(n: usize, k: usize, imbalance: f64, rng: &mut Rng) -> Vec<usize> {

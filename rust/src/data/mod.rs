@@ -10,5 +10,5 @@ pub mod mixture;
 pub mod webqueries;
 
 pub use analogs::{bench_analog, AnalogSpec, ANALOGS};
-pub use mixture::{separated_mixture, MixtureSpec};
+pub use mixture::{bridge_chain, separated_mixture, MixtureSpec};
 pub use webqueries::{QueryCorpus, WebQuerySpec};

@@ -127,6 +127,22 @@ impl ClusterGraph {
         RoundOutcome::Merged { merge_edges }
     }
 
+    /// Run rounds at a *fixed* threshold until nothing merges (or
+    /// `max_rounds` merging rounds have run). This is the scoped
+    /// contraction primitive the serving layer's online conflict-merge
+    /// path uses: a single-τ fixpoint over a small cluster graph.
+    /// Returns the number of merging rounds executed.
+    pub fn run_to_fixpoint(&mut self, tau: f64, max_rounds: usize) -> usize {
+        let mut rounds = 0usize;
+        while rounds < max_rounds {
+            if self.round(tau) == RoundOutcome::NoChange {
+                break;
+            }
+            rounds += 1;
+        }
+        rounds
+    }
+
     /// Contract merged clusters: relabel points, re-aggregate edges.
     fn contract(&mut self, uf: &mut UnionFind) {
         let relabel = uf.labels(); // old cluster -> new compact id
@@ -237,6 +253,28 @@ mod tests {
         let e = cg.edges()[0];
         assert_eq!(e.agg.count, 2);
         assert!((e.agg.avg() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixpoint_exhausts_a_threshold() {
+        // two mutual-NN pairs at 1.0 joined by a 1.5 edge: τ=2 collapses
+        // everything, but it takes two rounds (pairs first, then the
+        // contracted pair-clusters merge through the aggregated edge)
+        let g = knn_like(4, &[(0, 1, 1.0), (2, 3, 1.0), (1, 2, 1.5)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        let rounds = cg.run_to_fixpoint(2.0, 64);
+        assert_eq!(rounds, 2);
+        assert_eq!(cg.num_clusters(), 1);
+        // a fixpoint is a fixpoint: running again does nothing
+        assert_eq!(cg.run_to_fixpoint(2.0, 64), 0);
+    }
+
+    #[test]
+    fn fixpoint_respects_round_cap() {
+        let g = knn_like(4, &[(0, 1, 1.0), (2, 3, 1.0), (1, 2, 1.5)]);
+        let mut cg = ClusterGraph::from_knn(&g);
+        assert_eq!(cg.run_to_fixpoint(2.0, 1), 1);
+        assert_eq!(cg.num_clusters(), 2, "cap must stop after one merging round");
     }
 
     #[test]

@@ -2,34 +2,47 @@
 //!
 //! New points attach by k-NN against the base level's cluster centroids;
 //! a **local** SCC re-clustering (the same round engine, via
-//! [`ClusterGraph::from_parts`]) runs over just the touched clusters plus
-//! the batch, at the base level's own merge threshold. Three outcomes per
-//! local sub-cluster component:
+//! [`ClusterGraph::from_parts`], or the sharded coordinator via
+//! [`crate::coordinator::contract_fixpoint`] when
+//! [`IngestConfig::workers`] > 1 — bit-identical either way) runs over
+//! just the touched clusters plus the batch, at the base level's own
+//! merge threshold. Three outcomes per local sub-cluster component:
 //!
 //! * **one existing cluster** — its new points join that cluster (exact
 //!   centroid aggregates updated, centroid row rewritten);
 //! * **no existing cluster** — the component's points form a brand-new
 //!   cluster (appended at every level at and above the singletons);
 //! * **several existing clusters** — the local evidence wants to merge
-//!   frozen structure. Ingest never rewrites existing clusters, so this
-//!   is recorded as a *conflict*: each new point attaches to its nearest
-//!   member cluster and the merge is deferred to the next full rebuild.
+//!   frozen structure. With [`IngestConfig::online_merges`] **off**
+//!   (the conservative default) this is recorded as a *conflict*: each
+//!   new point attaches to its nearest member cluster and the merge is
+//!   deferred to the next full rebuild. With it **on**, the merge is
+//!   **applied online**: the member clusters are contracted into one at
+//!   the base level and the merge cascades through every coarser level
+//!   (splicing — see `apply_splices`), so nesting is preserved and the
+//!   spliced clusters carry an explicit approximation bound
+//!   ([`super::snapshot::SnapshotLevel::splice_bound`]) — the τ whose
+//!   local linkage evidence drove the merge. Untouched clusters keep
+//!   exact `cut_at` semantics.
 //!
-//! A drift counter (`ingested / built_n`, plus the conflict count
+//! A drift counter (`ingested / built_n`, plus the conflict counters
 //! surfaced on the snapshot) tells operators when to re-run the batch
-//! pipeline. Ingesting an empty batch touches nothing — snapshots are
-//! bit-identical before and after (property-tested).
+//! pipeline; [`super::service::RebuildWorker`] automates that. Ingesting
+//! an empty batch touches nothing — snapshots are bit-identical before
+//! and after (property-tested).
 //!
 //! Edges into the local graph carry point→centroid and point→point
 //! dissimilarities; frozen clusters contribute no cluster↔cluster edges
 //! (their pairwise aggregates are not retained in the snapshot), so
 //! existing structure can only be bridged transitively through new
-//! points — which is exactly the conflict case above.
+//! points — which is exactly the conflict-merge case above.
 
 use super::snapshot::HierarchySnapshot;
+use crate::core::Partition;
+use crate::graph::UnionFind;
 use crate::linkage::{CentroidAgg, LinkAgg};
 use crate::runtime::Backend;
-use crate::scc::engine::{ClusterEdge, ClusterGraph, RoundOutcome};
+use crate::scc::engine::{ClusterEdge, ClusterGraph};
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Ingestion policy knobs.
@@ -46,11 +59,27 @@ pub struct IngestConfig {
     /// Safety cap on local re-clustering rounds (each merging round
     /// strictly shrinks the local graph, so this is rarely binding).
     pub max_local_rounds: usize,
+    /// Apply cross-cluster conflict merges online (scoped contraction +
+    /// splice) instead of deferring them to a full rebuild. Level-0
+    /// singletons are never spliced: a base level of 0 always defers.
+    pub online_merges: bool,
+    /// Worker shards for the local contraction: 1 = sequential round
+    /// engine, >1 = the coordinator's sharded protocol
+    /// ([`crate::coordinator::contract_fixpoint`]). The outcome is
+    /// bit-identical for every value (property-tested).
+    pub workers: usize,
 }
 
 impl Default for IngestConfig {
     fn default() -> Self {
-        IngestConfig { level: usize::MAX, knn_k: 4, drift_limit: 0.2, max_local_rounds: 64 }
+        IngestConfig {
+            level: usize::MAX,
+            knn_k: 4,
+            drift_limit: 0.2,
+            max_local_rounds: 64,
+            online_merges: false,
+            workers: 1,
+        }
     }
 }
 
@@ -70,9 +99,12 @@ pub struct IngestReport {
     pub attached: usize,
     /// Brand-new clusters created from the batch.
     pub new_clusters: usize,
-    /// Local components that spanned several existing clusters (merge
-    /// deferred to rebuild).
+    /// Local components that spanned several existing clusters whose
+    /// merge was **deferred** to rebuild (online merges disabled).
     pub conflicts: usize,
+    /// Local components that spanned several existing clusters whose
+    /// merge was **applied online** via a scoped contraction + splice.
+    pub online_merges: usize,
     /// Accumulated drift exceeds the configured limit; schedule a full
     /// rebuild.
     pub rebuild_recommended: bool,
@@ -113,12 +145,22 @@ pub fn ingest_batch(
     let cand = backend.pairwise_topk(batch, m, snap.centroids(base), ncl, d, kk, snap.measure);
 
     // --- 2. local sub-cluster component graph over touched clusters ---
+    // Candidate and batch-internal edges above the contraction threshold
+    // are dropped: they can never qualify for a merge at τ, and keeping
+    // them would dilute average-linkage aggregates (blocking legitimate
+    // transitive merges) and pull unreachable clusters into the local
+    // graph. What remains mirrors the near edges a from-scratch k-NN
+    // graph would hold locally.
+    let near = |w: f32| (w.max(0.0) as f64) <= tau;
     let mut touched: Vec<u32> = Vec::new();
     for p in 0..m {
-        let (idx, _) = cand.row(p);
-        for &c in idx.iter().take(kk) {
-            if c != u32::MAX {
-                touched.push(c);
+        let (idx, dist) = cand.row(p);
+        for j in 0..kk {
+            if idx[j] == u32::MAX {
+                break;
+            }
+            if near(dist[j]) {
+                touched.push(idx[j]);
             }
         }
     }
@@ -134,6 +176,9 @@ pub fn ingest_batch(
         for j in 0..kk {
             if idx[j] == u32::MAX {
                 break;
+            }
+            if !near(dist[j]) {
+                continue;
             }
             edges.push(ClusterEdge {
                 a: local_of[&idx[j]],
@@ -154,7 +199,7 @@ pub fn ingest_batch(
                     break;
                 }
                 let q = idx[j] as usize;
-                if q == p {
+                if q == p || !near(dist[j]) {
                     continue;
                 }
                 let key = (p.min(q), p.max(q));
@@ -168,18 +213,32 @@ pub fn ingest_batch(
             }
         }
     }
-    let mut cg = ClusterGraph::from_parts((0..(t + m) as u32).collect(), t + m, edges);
-    for _ in 0..cfg.max_local_rounds {
-        if cg.round(tau) == RoundOutcome::NoChange {
-            break;
-        }
-    }
+    let local = if cfg.workers > 1 {
+        // the coordinator's sharded protocol: bit-identical to the
+        // sequential engine below for any worker count
+        let mut labels: Vec<u32> = (0..(t + m) as u32).collect();
+        crate::coordinator::contract_fixpoint(
+            &mut labels,
+            t + m,
+            edges,
+            tau,
+            cfg.workers,
+            cfg.max_local_rounds,
+        );
+        Partition::new(labels)
+    } else {
+        let mut cg = ClusterGraph::from_parts((0..(t + m) as u32).collect(), t + m, edges);
+        cg.run_to_fixpoint(tau, cfg.max_local_rounds);
+        cg.point_partition()
+    };
 
     // --- 3. component outcomes -> per-point targets ---
-    let local = cg.point_partition();
+    // level-0 "clusters" are singleton points: never spliced
+    let online = cfg.online_merges && base >= 1;
     let groups = local.members(); // first-appearance order: deterministic
     let mut targets: Vec<Option<Target>> = vec![None; m];
     let mut fresh_groups = 0usize;
+    let mut merge_groups: Vec<Vec<u32>> = Vec::new();
     for g in &groups {
         let olds: Vec<u32> =
             g.iter().filter(|&&id| (id as usize) < t).map(|&id| touched[id as usize]).collect();
@@ -202,11 +261,25 @@ pub fn ingest_batch(
                 }
                 report.attached += news.len();
             }
+            _ if online => {
+                // frozen structure wants to merge and the policy allows
+                // it: splice the member clusters into one (applied below,
+                // once all groups are known); the batch's points attach
+                // to the merged survivor. `olds` is ascending (members()
+                // yields point ids in order, `touched` is sorted), so
+                // olds[0] is the smallest — the survivor after relabel.
+                report.online_merges += 1;
+                for &p in &news {
+                    targets[p] = Some(Target::Existing(olds[0]));
+                }
+                report.attached += news.len();
+                merge_groups.push(olds);
+            }
             _ => {
-                // frozen structure wants to merge: defer, attach each
-                // point to its nearest member cluster (measured against
-                // the member centroids — a point bridged in via other
-                // new points may have none of them in its candidate set)
+                // merge deferred to rebuild: attach each point to its
+                // nearest member cluster (measured against the member
+                // centroids — a point bridged in via other new points
+                // may have none of them in its candidate set)
                 report.conflicts += 1;
                 let centers = snap.centroids(base);
                 for &p in &news {
@@ -226,10 +299,24 @@ pub fn ingest_batch(
         }
     }
 
+    // --- 3b. splice: apply online merges to level `base` and cascade
+    //     through every coarser level, then point targets at the
+    //     post-splice compact ids ---
+    if !merge_groups.is_empty() {
+        let base_relabel = apply_splices(snap, base, &merge_groups, tau);
+        for target in targets.iter_mut().flatten() {
+            if let Target::Existing(c) = target {
+                *c = base_relabel[*c as usize];
+            }
+        }
+    }
+
     // --- 4. apply: append points, extend every level ---
     let n_old = snap.n;
-    // representative old point per base cluster, for parent-chain lookups
-    let mut base_rep = vec![u32::MAX; ncl];
+    // representative old point per base cluster (post-splice ids), for
+    // parent-chain lookups
+    let ncl_now = snap.num_clusters(base);
+    let mut base_rep = vec![u32::MAX; ncl_now];
     for i in 0..n_old {
         let c = snap.levels[base].partition.assign[i] as usize;
         if base_rep[c] == u32::MAX {
@@ -277,8 +364,98 @@ pub fn ingest_batch(
     }
     snap.ingested += m;
     snap.conflicts += report.conflicts;
+    snap.online_merges += report.online_merges;
     report.rebuild_recommended = snap.needs_rebuild(cfg.drift_limit);
     report
+}
+
+/// Merge each group of base-level clusters into one and cascade the
+/// merge through every coarser level, so the hierarchy stays nested:
+/// merging clusters `{c₁…c_k}` at level `l` forces their parents to
+/// merge at level `l+1` (a parent of `cᵢ` contains `cᵢ`, so the union of
+/// the merged clusters must sit inside one `l+1` cluster). Levels finer
+/// than `base` are untouched — merging coarser partitions cannot break
+/// the refinement of finer ones.
+///
+/// Each affected level is relabeled to compact ids (`UnionFind::labels`,
+/// deterministic first-appearance order), its exact fixed-point centroid
+/// aggregates merged (order-independent bit-for-bit), its centroid
+/// matrix rebuilt, and its splice bookkeeping updated: clusters that
+/// absorbed ≥ 2 previous clusters are recorded in
+/// [`super::snapshot::SnapshotLevel::spliced`] with approximation bound
+/// `tau` — the threshold whose local linkage evidence drove the merge.
+///
+/// Returns the base level's relabel map (old id → new compact id).
+fn apply_splices(
+    snap: &mut HierarchySnapshot,
+    base: usize,
+    merge_groups: &[Vec<u32>],
+    tau: f64,
+) -> Vec<u32> {
+    debug_assert!(base >= 1, "level-0 singletons are never spliced");
+    let d = snap.d;
+    let nlv = snap.levels.len();
+    // representative point per (pre-splice) base cluster, to read parent
+    // chains at coarser levels
+    let base_k = snap.levels[base].aggs.len();
+    let mut rep = vec![u32::MAX; base_k];
+    for (i, &c) in snap.levels[base].partition.assign.iter().enumerate() {
+        if rep[c as usize] == u32::MAX {
+            rep[c as usize] = i as u32;
+        }
+    }
+    let mut base_relabel: Vec<u32> = (0..base_k as u32).collect();
+    for l in base..nlv {
+        let k = snap.levels[l].aggs.len();
+        let mut uf = UnionFind::new(k);
+        for grp in merge_groups {
+            let mut first: Option<u32> = None;
+            for &c in grp {
+                // this level's cluster containing base cluster `c`
+                let id = if l == base {
+                    c
+                } else {
+                    snap.levels[l].partition.assign[rep[c as usize] as usize]
+                };
+                match first {
+                    None => first = Some(id),
+                    Some(f) => {
+                        uf.union(f, id);
+                    }
+                }
+            }
+        }
+        let new_k = uf.components();
+        if new_k == k {
+            // parents already share a cluster here — and, by nesting, at
+            // every coarser level too; nothing above can change either,
+            // but the loop is cheap and keeps the invariant local
+            continue;
+        }
+        let relabel = uf.labels();
+        let lv = &mut snap.levels[l];
+        for a in lv.partition.assign.iter_mut() {
+            *a = relabel[*a as usize];
+        }
+        let mut aggs = vec![CentroidAgg::zero(d); new_k];
+        let mut fanin = vec![0u32; new_k];
+        for (old, agg) in lv.aggs.iter().enumerate() {
+            aggs[relabel[old] as usize].merge(agg);
+            fanin[relabel[old] as usize] += 1;
+        }
+        lv.centroids = super::snapshot::centroid_matrix(&aggs, d);
+        lv.aggs = aggs;
+        let mut spliced: Vec<u32> = lv.spliced.iter().map(|&c| relabel[c as usize]).collect();
+        spliced.extend((0..new_k as u32).filter(|&c| fanin[c as usize] >= 2));
+        spliced.sort_unstable();
+        spliced.dedup();
+        lv.spliced = spliced;
+        lv.splice_bound = lv.splice_bound.max(tau);
+        if l == base {
+            base_relabel = relabel;
+        }
+    }
+    base_relabel
 }
 
 /// Append an empty cluster slot to a level, returning its id.
@@ -394,6 +571,177 @@ mod tests {
         let rb = ingest_batch(&mut b, &batch, &IngestConfig::default(), &NativeBackend::new());
         assert_eq!(ra, rb);
         assert_eq!(a, b);
+    }
+
+    /// Two tight 6-point clumps on a line at 0 and 1: the k-NN graph (k=4)
+    /// is disconnected across clumps, so SCC's coarsest round has exactly
+    /// two clusters.
+    fn two_clumps() -> crate::core::Dataset {
+        let mut data = Vec::new();
+        for c in [0.0f32, 1.0] {
+            for i in 0..6 {
+                data.push(c + 0.01 * i as f32);
+                data.push(0.0);
+            }
+        }
+        crate::core::Dataset::new("two_clumps", data, 12, 2)
+    }
+
+    /// Four 3-point clumps at 0, 1, 10, 11 on a line (k-NN k=4 bridges the
+    /// near pairs but not the far gap): the hierarchy passes through a
+    /// 4-cluster round and ends with two clusters {A∪B}, {C∪D}.
+    fn four_clumps() -> crate::core::Dataset {
+        let mut data = Vec::new();
+        for c in [0.0f32, 1.0, 10.0, 11.0] {
+            for i in 0..3 {
+                data.push(c + 0.1 * i as f32);
+                data.push(0.0);
+            }
+        }
+        crate::core::Dataset::new("four_clumps", data, 12, 2)
+    }
+
+    fn snap_of(ds: &crate::core::Dataset, knn: usize, levels: usize) -> HierarchySnapshot {
+        let g = knn_graph(ds, knn, Measure::L2Sq);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, levels).taus);
+        HierarchySnapshot::build(ds, &run(&g, &cfg), Measure::L2Sq, 2)
+    }
+
+    fn levels_nested_and_counted(snap: &HierarchySnapshot) {
+        for w in snap.levels.windows(2) {
+            assert!(w[0].partition.refines(&w[1].partition), "levels lost nesting");
+        }
+        for l in 1..snap.num_levels() {
+            let lv = snap.level(l);
+            assert_eq!(lv.partition.n(), snap.n);
+            let total: u64 = lv.aggs.iter().map(|a| a.count).sum();
+            assert_eq!(total, snap.n as u64, "level {l} aggregate counts");
+            assert_eq!(lv.centroids.len(), lv.aggs.len() * snap.d);
+        }
+        assert_eq!(snap.num_clusters(0), snap.n);
+    }
+
+    #[test]
+    fn bridge_defers_conflict_when_online_merges_off() {
+        let ds = two_clumps();
+        let mut snap = snap_of(&ds, 4, 10);
+        let coarse = snap.coarsest();
+        assert_eq!(snap.num_clusters(coarse), 2, "{}", snap.summary());
+        let tau = snap.threshold(coarse);
+        let ca = snap.centroids(coarse)[0..2].to_vec();
+        let cb = snap.centroids(coarse)[2..4].to_vec();
+        let batch = crate::data::mixture::bridge_chain(&ca, &cb, tau);
+        let report =
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.conflicts, 1, "{report:?}");
+        assert_eq!(report.online_merges, 0);
+        assert_eq!(snap.num_clusters(coarse), 2, "frozen structure must stay frozen");
+        assert!(snap.is_exact());
+        assert_eq!(snap.conflicts, 1);
+        assert_eq!(snap.online_merges, 0);
+        levels_nested_and_counted(&snap);
+    }
+
+    #[test]
+    fn bridge_merges_frozen_clusters_when_online_merges_on() {
+        let ds = two_clumps();
+        let mut snap = snap_of(&ds, 4, 10);
+        let coarse = snap.coarsest();
+        assert_eq!(snap.num_clusters(coarse), 2, "{}", snap.summary());
+        let tau = snap.threshold(coarse);
+        let ca = snap.centroids(coarse)[0..2].to_vec();
+        let cb = snap.centroids(coarse)[2..4].to_vec();
+        let batch = crate::data::mixture::bridge_chain(&ca, &cb, tau);
+        let m = batch.len() / 2;
+        let cfg = IngestConfig { online_merges: true, ..Default::default() };
+        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+        assert_eq!(report.online_merges, 1, "{report:?}");
+        assert_eq!(report.conflicts, 0);
+        assert_eq!(report.attached, m, "every chain point joins the merged cluster");
+        assert_eq!(snap.num_clusters(coarse), 1, "A and B must merge online");
+        assert_eq!(snap.online_merges, 1);
+        assert_eq!(snap.conflicts, 0);
+        // splice bookkeeping: the merged cluster is marked approximate
+        // with the contraction threshold as its bound
+        assert!(!snap.is_exact());
+        let lv = snap.level(coarse);
+        assert_eq!(lv.spliced, vec![0], "the single surviving cluster is spliced");
+        assert_eq!(lv.splice_bound, tau);
+        assert_eq!(snap.splice_bound(), tau);
+        // finer levels keep exact semantics
+        for l in 0..coarse {
+            assert!(snap.level(l).is_exact(), "level {l} must stay exact");
+        }
+        // the whole dataset now cuts to one cluster at the top
+        let cut = snap.cut_at(f64::INFINITY);
+        assert_eq!(cut.num_clusters(), 1);
+        levels_nested_and_counted(&snap);
+    }
+
+    #[test]
+    fn online_merge_cascades_through_coarser_levels() {
+        let ds = four_clumps();
+        let snap0 = snap_of(&ds, 4, 12);
+        // find the stored 4-cluster round (all clumps separate)
+        let base = (1..snap0.num_levels())
+            .find(|&l| snap0.num_clusters(l) == 4)
+            .expect("a 4-cluster round must be stored");
+        assert_eq!(
+            snap0.num_clusters(snap0.coarsest()),
+            2,
+            "near pairs must merge at the top\n{}",
+            snap0.summary()
+        );
+        let tau = snap0.threshold(base);
+        // bridge clump B (center 1) and clump C (center 10): their parents
+        // at the top ({A,B} and {C,D}) must merge too
+        let pb = snap0.level(base).partition.assign[3] as usize; // point 3 ∈ B
+        let pc = snap0.level(base).partition.assign[6] as usize; // point 6 ∈ C
+        let cb = snap0.centroids(base)[pb * 2..pb * 2 + 2].to_vec();
+        let cc = snap0.centroids(base)[pc * 2..pc * 2 + 2].to_vec();
+        let batch = crate::data::mixture::bridge_chain(&cb, &cc, tau);
+        let mut snap = snap0.clone();
+        let cfg = IngestConfig { level: base, online_merges: true, ..Default::default() };
+        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+        assert_eq!(report.online_merges, 1, "{report:?}\n{}", snap.summary());
+        assert_eq!(snap.num_clusters(base), 3, "B and C merge at the base level");
+        assert_eq!(snap.num_clusters(snap.coarsest()), 1, "parents must cascade-merge");
+        assert!(!snap.level(base).is_exact());
+        assert!(!snap.level(snap.coarsest()).is_exact());
+        assert_eq!(snap.level(base).splice_bound, tau);
+        assert_eq!(snap.level(snap.coarsest()).splice_bound, tau);
+        // levels below the base stay exact
+        for l in 0..base {
+            assert!(snap.level(l).is_exact(), "level {l} must stay exact");
+        }
+        levels_nested_and_counted(&snap);
+    }
+
+    #[test]
+    fn online_merge_is_bit_identical_across_worker_counts() {
+        let ds = two_clumps();
+        let snap0 = snap_of(&ds, 4, 10);
+        let coarse = snap0.coarsest();
+        let tau = snap0.threshold(coarse);
+        let ca = snap0.centroids(coarse)[0..2].to_vec();
+        let cb = snap0.centroids(coarse)[2..4].to_vec();
+        let batch = crate::data::mixture::bridge_chain(&ca, &cb, tau);
+        let mut reference = snap0.clone();
+        let r1 = ingest_batch(
+            &mut reference,
+            &batch,
+            &IngestConfig { online_merges: true, workers: 1, ..Default::default() },
+            &NativeBackend::new(),
+        );
+        assert_eq!(r1.online_merges, 1);
+        for workers in [2usize, 4, 8] {
+            let mut snap = snap0.clone();
+            let cfg = IngestConfig { online_merges: true, workers, ..Default::default() };
+            let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+            assert_eq!(report, r1, "report differs at workers={workers}");
+            assert_eq!(snap, reference, "snapshot differs at workers={workers}");
+        }
     }
 
     #[test]

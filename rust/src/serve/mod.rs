@@ -17,22 +17,46 @@
 //!   threads, centroid tiles through a [`crate::runtime::Backend`]) so
 //!   PJRT acceleration applies unchanged;
 //! * [`ingest`] — mini-batch insertion: new points attach by k-NN
-//!   against cluster centroids, a *local* SCC re-clustering (via
-//!   [`crate::scc::engine::ClusterGraph::from_parts`]) runs over only the
-//!   touched clusters, and a drift counter flags when accumulated change
+//!   against cluster centroids, a *local* SCC re-clustering (the
+//!   sequential round engine via
+//!   [`crate::scc::engine::ClusterGraph::from_parts`], or the sharded
+//!   coordinator via [`crate::coordinator::contract_fixpoint`] —
+//!   bit-identical for every worker count) runs over only the touched
+//!   clusters, and a drift counter flags when accumulated change
 //!   warrants a full rebuild;
 //! * [`service`] — a multi-threaded request loop: worker pool, batched
 //!   query submission, per-request latency / QPS statistics through
-//!   [`crate::util::stats::Summary`], and copy-on-write snapshot swaps
-//!   so ingest never blocks readers.
+//!   [`crate::util::stats::Summary`], copy-on-write snapshot swaps so
+//!   ingest never blocks readers, and the automatic
+//!   [`RebuildWorker`] that re-runs the batch pipeline off the hot path
+//!   once drift crosses its limit.
 //!
-//! Update policy (documented invariant): ingest **never rewrites existing
-//! structure** — it only appends points to clusters (updating their exact
-//! aggregates) or creates new clusters. When the local re-clustering
-//! wants to merge *existing* clusters, that is counted as a conflict and
-//! deferred to the next full rebuild. This keeps every level of the
-//! hierarchy nested at all times and makes zero-point ingest a bit-exact
-//! no-op (property-tested in `rust/tests/serve_properties.rs`).
+//! Update policy (documented invariant): ingest appends points to
+//! clusters (updating their exact aggregates) or creates new clusters;
+//! level partitions stay **nested at all times** and zero-point ingest
+//! is a bit-exact no-op (property-tested in
+//! `rust/tests/serve_properties.rs`). When the local re-clustering finds
+//! that *existing* clusters should merge, the policy forks on
+//! [`IngestConfig::online_merges`]:
+//!
+//! * **off** (default) — the component is counted as a conflict and the
+//!   merge deferred to the next full rebuild; frozen structure is never
+//!   rewritten;
+//! * **on** — the merge is applied **online**: a scoped coordinator-style
+//!   contraction runs over the touched clusters and the merge is spliced
+//!   into the copy-on-write snapshot, cascading through every coarser
+//!   level so nesting is preserved. Spliced clusters are recorded per
+//!   level ([`SnapshotLevel::spliced`]) with an explicit approximation
+//!   bound ([`SnapshotLevel::splice_bound`]): `cut_at(τ)` stays *exact*
+//!   for untouched clusters, while a spliced cluster is merged on local
+//!   linkage evidence at dissimilarity ≤ the bound rather than a full
+//!   re-clustering (cross-engine property tests in
+//!   `rust/tests/online_merge_properties.rs` pin both claims).
+//!
+//! Either way the drift counter keeps rising as points arrive; the
+//! [`RebuildWorker`] (or a manual [`ServeIndex::rebuild_if_needed`])
+//! eventually re-runs the batch pipeline, which resolves all splices
+//! exactly and resets drift — queries never block on the swap.
 
 pub mod assign;
 pub mod ingest;
@@ -41,5 +65,8 @@ pub mod snapshot;
 
 pub use assign::{assign_at_tau, assign_to_level, AssignResult};
 pub use ingest::{ingest_batch, IngestConfig, IngestReport};
-pub use service::{ServeIndex, Service, ServiceConfig, ServiceStats};
+pub use service::{
+    rebuild_snapshot, QueryResponse, RebuildConfig, RebuildWorker, ServeIndex, Service,
+    ServiceConfig, ServiceStats,
+};
 pub use snapshot::{HierarchySnapshot, SnapshotLevel};

@@ -1,16 +1,30 @@
 //! The online request loop: a worker pool serving batched assignment
-//! queries over a shared, swappable snapshot.
+//! queries over a shared, swappable snapshot, plus the background
+//! rebuild worker that keeps the index fresh under drift.
 //!
 //! * [`ServeIndex`] — the mutable cell: readers grab an `Arc` to the
 //!   current frozen [`HierarchySnapshot`] (brief `RwLock` read);
 //!   [`ServeIndex::ingest`] is copy-on-write — it clones the snapshot,
 //!   applies the batch, and swaps the `Arc`, so in-flight queries keep
-//!   serving the old snapshot and never block;
+//!   serving the old snapshot and never block. Every swap stamps a
+//!   strictly increasing [`HierarchySnapshot::generation`], so readers
+//!   can order the snapshots they observe;
 //! * [`Service`] — `workers` threads pulling jobs from a shared
 //!   queue. Requests are *batches* of queries; responses return through
-//!   per-request channels. Latency lands in a
-//!   [`crate::util::stats::Summary`] (p50/p95/p99 via its interpolated
-//!   percentiles) and throughput is queries served over wall-clock.
+//!   per-request channels and carry the generation they were served
+//!   from. Latency lands in a [`crate::util::stats::Summary`]
+//!   (p50/p95/p99 via its interpolated percentiles) and throughput is
+//!   queries served over wall-clock;
+//! * [`RebuildWorker`] — a background thread polling the index's drift
+//!   counter against [`RebuildConfig::drift_limit`]; when crossed it
+//!   re-runs the full batch pipeline (k-NN graph → SCC → snapshot) *off
+//!   the hot path* and swaps the result in through the same
+//!   copy-on-write [`ServeIndex::replace`], so queries never block.
+//!   Rebuilds hold the ingest gate (ingest and rebuild serialize with
+//!   each other — never with readers), which makes the swap lossless:
+//!   no concurrently ingested point can be dropped by the rebuild. A
+//!   fresh rebuild resets drift to zero, so each limit crossing
+//!   produces exactly one swap.
 //!
 //! Threading model: request-level parallelism across workers, plus
 //! optional intra-request tiling parallelism
@@ -21,17 +35,21 @@
 use super::assign::{assign_to_level, AssignResult};
 use super::ingest::{ingest_batch, IngestConfig, IngestReport};
 use super::snapshot::HierarchySnapshot;
+use crate::core::Dataset;
 use crate::runtime::Backend;
 use crate::util::stats::Summary;
-use crate::util::Timer;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::{par, Timer};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// The swappable snapshot cell shared by the service and ingesters.
+/// The swappable snapshot cell shared by the service, ingesters, and the
+/// rebuild worker.
 pub struct ServeIndex {
     current: RwLock<Arc<HierarchySnapshot>>,
-    /// Serializes ingests (copy-on-write: clone → mutate → swap).
+    /// Serializes structural writers — ingests and rebuilds — against
+    /// each other (copy-on-write: clone → mutate → swap). Readers never
+    /// take it.
     ingest_gate: Mutex<()>,
 }
 
@@ -48,9 +66,18 @@ impl ServeIndex {
         self.current.read().expect("index lock").clone()
     }
 
-    /// Swap in a freshly built snapshot (e.g. after a full rebuild).
-    pub fn replace(&self, snapshot: HierarchySnapshot) {
-        *self.current.write().expect("index lock") = Arc::new(snapshot);
+    /// The current snapshot's swap generation.
+    pub fn generation(&self) -> u64 {
+        self.current.read().expect("index lock").generation
+    }
+
+    /// Swap in a freshly built snapshot (e.g. after a full rebuild),
+    /// stamping the next generation. Readers holding the old `Arc` keep
+    /// serving it untouched.
+    pub fn replace(&self, mut snapshot: HierarchySnapshot) {
+        let mut cur = self.current.write().expect("index lock");
+        snapshot.generation = cur.generation + 1;
+        *cur = Arc::new(snapshot);
     }
 
     /// Copy-on-write ingest: readers keep the old snapshot until the
@@ -66,6 +93,21 @@ impl ServeIndex {
         let report = ingest_batch(&mut next, batch, cfg, backend);
         self.replace(next);
         report
+    }
+
+    /// Run one drift check, rebuilding and swapping when the limit is
+    /// crossed. Holds the ingest gate for the duration of the rebuild so
+    /// no concurrently ingested point can be lost; queries are never
+    /// blocked (they only read the `RwLock`, briefly). Returns `true`
+    /// when a rebuilt snapshot was swapped in.
+    pub fn rebuild_if_needed(&self, cfg: &RebuildConfig, backend: &dyn Backend) -> bool {
+        let _gate = self.ingest_gate.lock().expect("ingest gate");
+        let cur = self.snapshot();
+        if !cur.needs_rebuild(cfg.drift_limit) {
+            return false;
+        }
+        self.replace(rebuild_snapshot(&cur, cfg, backend));
+        true
     }
 }
 
@@ -96,6 +138,12 @@ pub struct QueryResponse {
     pub result: AssignResult,
     /// Level the batch was served at.
     pub level: usize,
+    /// Swap generation of the snapshot that answered the batch. A client
+    /// issuing sequential requests observes non-decreasing generations —
+    /// snapshot swaps are atomic, so a "torn" mix of old and new
+    /// structure is unobservable (asserted by the rebuild concurrency
+    /// tests).
+    pub generation: u64,
     /// Wall-clock the batch spent in a worker.
     pub latency_secs: f64,
 }
@@ -284,7 +332,12 @@ fn worker_loop(shared: &Shared) {
         shared.queries_served.fetch_add(nq as u64, Ordering::Relaxed);
         shared.requests_served.fetch_add(1, Ordering::Relaxed);
         // receiver may have given up; that's fine
-        let _ = resp.send(QueryResponse { result, level, latency_secs: secs });
+        let _ = resp.send(QueryResponse {
+            result,
+            level,
+            generation: snap.generation,
+            latency_secs: secs,
+        });
     }
 }
 
@@ -293,6 +346,120 @@ fn zero_if_nan(x: f64) -> f64 {
         0.0
     } else {
         x
+    }
+}
+
+/// Batch-pipeline parameters for automatic (and manual) full rebuilds.
+#[derive(Debug, Clone)]
+pub struct RebuildConfig {
+    /// Drift fraction (`ingested / built_n`) that triggers a rebuild.
+    pub drift_limit: f64,
+    /// k of the k-NN graph the rebuild constructs.
+    pub knn_k: usize,
+    /// Length of the geometric threshold schedule (anchored to the fresh
+    /// graph's edge range).
+    pub schedule_len: usize,
+    /// Threads for graph construction and snapshot aggregation
+    /// (0 = all cores).
+    pub threads: usize,
+    /// How often the background worker re-checks the drift counter.
+    pub poll: Duration,
+}
+
+impl Default for RebuildConfig {
+    fn default() -> Self {
+        RebuildConfig {
+            drift_limit: 0.2,
+            knn_k: 10,
+            schedule_len: 25,
+            threads: 0,
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Re-run the full batch pipeline over a snapshot's current points:
+/// k-NN graph (through the same tiled backend the serve path uses) →
+/// SCC rounds → a fresh [`HierarchySnapshot`]. The result starts with
+/// zero drift and exact `cut_at` semantics at every level — online
+/// splices are resolved by re-clustering from scratch.
+pub fn rebuild_snapshot(
+    snap: &HierarchySnapshot,
+    cfg: &RebuildConfig,
+    backend: &dyn Backend,
+) -> HierarchySnapshot {
+    let threads = if cfg.threads == 0 { par::default_threads() } else { cfg.threads };
+    let ds = Dataset::new(snap.name.clone(), snap.points.clone(), snap.n, snap.d);
+    let k = cfg.knn_k.min(snap.n.saturating_sub(1)).max(1);
+    let g = crate::knn::knn_graph_with_backend(&ds, k, snap.measure, backend, threads);
+    let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+    let taus = crate::scc::Thresholds::geometric(lo, hi, cfg.schedule_len.max(1)).taus;
+    let res = crate::scc::run(&g, &crate::scc::SccConfig::new(taus));
+    HierarchySnapshot::build(&ds, &res, snap.measure, threads)
+}
+
+/// The automatic rebuild worker: a background thread that wakes every
+/// [`RebuildConfig::poll`], checks the index's drift against
+/// [`RebuildConfig::drift_limit`], and runs
+/// [`ServeIndex::rebuild_if_needed`] when crossed. The rebuild runs off
+/// the query hot path — readers keep the old `Arc` until the atomic
+/// swap — and a rebuilt snapshot starts at zero drift, so each limit
+/// crossing swaps exactly once.
+///
+/// Dropping the worker (or calling [`RebuildWorker::stop`]) signals the
+/// thread and joins it.
+pub struct RebuildWorker {
+    stop: Arc<AtomicBool>,
+    rebuilds: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RebuildWorker {
+    /// Spawn the watcher thread over `index`.
+    pub fn start(
+        index: Arc<ServeIndex>,
+        backend: Arc<dyn Backend + Send + Sync>,
+        cfg: RebuildConfig,
+    ) -> RebuildWorker {
+        let stop = Arc::new(AtomicBool::new(false));
+        let rebuilds = Arc::new(AtomicU64::new(0));
+        let (stop2, rebuilds2) = (Arc::clone(&stop), Arc::clone(&rebuilds));
+        let handle = std::thread::Builder::new()
+            .name("serve-rebuild".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    if index.rebuild_if_needed(&cfg, backend.as_ref()) {
+                        rebuilds2.fetch_add(1, Ordering::AcqRel);
+                    }
+                    std::thread::sleep(cfg.poll);
+                }
+            })
+            .expect("spawn rebuild worker");
+        RebuildWorker { stop, rebuilds, handle: Some(handle) }
+    }
+
+    /// Completed rebuild swaps so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Acquire)
+    }
+
+    /// Signal the thread, join it, and return the final swap count.
+    pub fn stop(mut self) -> u64 {
+        self.shutdown();
+        self.rebuilds()
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RebuildWorker {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -415,6 +582,74 @@ mod tests {
             after.level(after.coarsest()).partition.assign[3]
         );
         service.shutdown();
+    }
+
+    #[test]
+    fn replace_stamps_increasing_generations() {
+        let (ds, index) = index();
+        assert_eq!(index.generation(), 0);
+        let batch: Vec<f32> = ds.row(0).to_vec();
+        index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(index.generation(), 1, "ingest swap bumps the generation");
+        index.replace((*index.snapshot()).clone());
+        assert_eq!(index.generation(), 2, "every swap bumps, monotone");
+    }
+
+    #[test]
+    fn rebuild_if_needed_is_a_noop_below_the_limit() {
+        let (_, index) = index();
+        let swapped =
+            index.rebuild_if_needed(&RebuildConfig::default(), &NativeBackend::new());
+        assert!(!swapped, "zero drift must not rebuild");
+        assert_eq!(index.generation(), 0);
+    }
+
+    #[test]
+    fn rebuild_resets_drift_and_restores_exactness() {
+        let (ds, index) = index();
+        // push past a tiny drift limit
+        let batch: Vec<f32> = ds.data[..8 * ds.d].to_vec();
+        let cfg = IngestConfig { drift_limit: 0.01, ..Default::default() };
+        let report = index.ingest(&batch, &cfg, &NativeBackend::new());
+        assert!(report.rebuild_recommended);
+        let rcfg = RebuildConfig { drift_limit: 0.01, knn_k: 8, ..Default::default() };
+        assert!(index.rebuild_if_needed(&rcfg, &NativeBackend::new()));
+        let after = index.snapshot();
+        assert_eq!(after.n, ds.n + 8, "rebuild keeps every ingested point");
+        assert_eq!(after.ingested, 0, "fresh build: drift resets");
+        assert!(after.is_exact());
+        assert_eq!(after.generation, 2, "ingest swap + rebuild swap");
+        // crossing consumed: a second check must not swap again
+        assert!(!index.rebuild_if_needed(&rcfg, &NativeBackend::new()));
+    }
+
+    #[test]
+    fn rebuild_worker_swaps_once_per_crossing() {
+        let (ds, index) = index();
+        let worker = RebuildWorker::start(
+            Arc::clone(&index),
+            Arc::new(NativeBackend::new()),
+            RebuildConfig {
+                drift_limit: 0.02,
+                knn_k: 8,
+                poll: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        assert_eq!(worker.rebuilds(), 0);
+        let batch: Vec<f32> = ds.data[..8 * ds.d].to_vec();
+        let cfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
+        index.ingest(&batch, &cfg, &NativeBackend::new());
+        // 8/220 > 2%: the worker must notice and swap exactly once
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while worker.rebuilds() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(worker.rebuilds(), 1, "drift crossing must trigger one rebuild");
+        // give the worker several more polls: drift is reset, no re-swap
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(worker.stop(), 1, "exactly one swap per limit crossing");
+        assert_eq!(index.snapshot().ingested, 0);
     }
 
     #[test]

@@ -43,6 +43,24 @@ pub struct SnapshotLevel {
     /// Row-major `num_clusters × d` centroid matrix derived from `aggs`
     /// (empty at level 0).
     pub centroids: Vec<f32>,
+    /// Cluster ids produced by *online* conflict-merge splices (sorted,
+    /// deduplicated). Empty on a fresh build. `cut_at` is exact for every
+    /// cluster **not** listed here; spliced clusters are merged on local
+    /// linkage evidence at dissimilarity ≤ [`Self::splice_bound`] rather
+    /// than a full re-clustering (see `serve` module docs).
+    pub spliced: Vec<u32>,
+    /// Largest threshold at which an online splice modified this level
+    /// (0 when `spliced` is empty): the level's approximation bound.
+    pub splice_bound: f64,
+}
+
+impl SnapshotLevel {
+    /// `true` when no online splice has touched this level — its stored
+    /// partition is exactly what the batch engine produced (plus appended
+    /// points).
+    pub fn is_exact(&self) -> bool {
+        self.spliced.is_empty()
+    }
 }
 
 /// An immutable hierarchy index built from one SCC run. See module docs.
@@ -65,9 +83,16 @@ pub struct HierarchySnapshot {
     pub built_n: usize,
     /// Points ingested since build.
     pub ingested: usize,
-    /// Local re-clusterings that wanted to merge existing clusters
-    /// (deferred to rebuild; see `serve` module docs).
+    /// Conflict components whose existing-cluster merge was **deferred**
+    /// to the next full rebuild (online merges disabled when detected).
     pub conflicts: usize,
+    /// Conflict components whose merge was **applied online** via a
+    /// scoped coordinator-style contraction (see `serve` module docs).
+    pub online_merges: usize,
+    /// Swap counter stamped by [`crate::serve::ServeIndex::replace`]:
+    /// strictly increases with every copy-on-write swap, so readers can
+    /// order the snapshots they observe. A fresh build is generation 0.
+    pub generation: u64,
 }
 
 impl HierarchySnapshot {
@@ -93,6 +118,8 @@ impl HierarchySnapshot {
             partition: result.rounds[0].clone(),
             aggs: Vec::new(),
             centroids: Vec::new(),
+            spliced: Vec::new(),
+            splice_bound: 0.0,
         });
         for r in 1..result.rounds.len() {
             let part = &result.rounds[r];
@@ -108,6 +135,8 @@ impl HierarchySnapshot {
                 partition: part.clone(),
                 aggs,
                 centroids,
+                spliced: Vec::new(),
+                splice_bound: 0.0,
             });
         }
         HierarchySnapshot {
@@ -120,6 +149,8 @@ impl HierarchySnapshot {
             built_n: ds.n,
             ingested: 0,
             conflicts: 0,
+            online_merges: 0,
+            generation: 0,
         }
     }
 
@@ -191,6 +222,50 @@ impl HierarchySnapshot {
         self.levels[self.resolve_level(level)].partition.clone()
     }
 
+    /// The two closest distinct cluster centroids at `level` under the
+    /// snapshot's measure, with their dissimilarity — `None` when the
+    /// level has fewer than two clusters. O(k²·d): meant for operator
+    /// tooling and merge-evidence probes, not hot paths.
+    pub fn nearest_cluster_pair(&self, level: usize) -> Option<(u32, u32, f32)> {
+        let level = self.resolve_level(level);
+        let k = self.num_clusters(level);
+        if k < 2 {
+            return None;
+        }
+        let d = self.d;
+        let centers = self.centroids(level);
+        // k ≥ 2: the loop always sees at least one pair
+        let mut best = (f32::INFINITY, 0u32, 1u32);
+        for a in 0..k {
+            for b in (a + 1)..k {
+                let w = self
+                    .measure
+                    .dissim(&centers[a * d..a * d + d], &centers[b * d..b * d + d]);
+                if w < best.0 {
+                    best = (w, a as u32, b as u32);
+                }
+            }
+        }
+        Some((best.1, best.2, best.0))
+    }
+
+    /// `true` when **no** level carries an online splice: every stored
+    /// partition is exactly what a batch engine run produced (plus
+    /// appended points).
+    pub fn is_exact(&self) -> bool {
+        self.levels.iter().all(SnapshotLevel::is_exact)
+    }
+
+    /// The snapshot-wide approximation bound: the largest threshold at
+    /// which any level was spliced by an online conflict merge (0 when
+    /// the snapshot is exact). For a cut at `tau`, clusters listed in the
+    /// selected level's [`SnapshotLevel::spliced`] are merged on local
+    /// linkage evidence at dissimilarity ≤ this bound; all other
+    /// clusters are exact.
+    pub fn splice_bound(&self) -> f64 {
+        self.levels.iter().fold(0.0, |b, lv| b.max(lv.splice_bound))
+    }
+
     /// Fraction of the index that arrived after the build.
     pub fn drift(&self) -> f64 {
         if self.built_n == 0 {
@@ -218,13 +293,22 @@ impl HierarchySnapshot {
             self.ingested,
             self.drift()
         );
-        out.push_str("level  threshold   clusters\n");
+        if self.online_merges > 0 {
+            out.push_str(&format!(
+                "{} online merges applied (splice bound {:.4}); {} conflicts deferred\n",
+                self.online_merges,
+                self.splice_bound(),
+                self.conflicts
+            ));
+        }
+        out.push_str("level  threshold   clusters  spliced\n");
         for (i, lv) in self.levels.iter().enumerate() {
             out.push_str(&format!(
-                "{:>5} {:>10.4} {:>10}\n",
+                "{:>5} {:>10.4} {:>10} {:>8}\n",
                 i,
                 lv.threshold,
-                self.num_clusters(i)
+                self.num_clusters(i),
+                lv.spliced.len()
             ));
         }
         out
@@ -292,8 +376,9 @@ fn fold_level(
     out
 }
 
-/// Materialize the `k × d` centroid matrix from aggregates.
-fn centroid_matrix(aggs: &[CentroidAgg], d: usize) -> Vec<f32> {
+/// Materialize the `k × d` centroid matrix from aggregates (shared with
+/// the ingest splice path, which rebuilds whole levels after a merge).
+pub(crate) fn centroid_matrix(aggs: &[CentroidAgg], d: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; aggs.len() * d];
     for (c, agg) in aggs.iter().enumerate() {
         agg.write_centroid(&mut out[c * d..(c + 1) * d]);
@@ -377,6 +462,44 @@ mod tests {
                 let mid = 0.5 * (a + b);
                 assert_eq!(snap.level_for_tau(mid), l, "mid of ({a},{b})");
             }
+        }
+    }
+
+    #[test]
+    fn nearest_cluster_pair_finds_the_closest_centroids() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let level = snap.coarsest();
+        let (a, b, w) = snap.nearest_cluster_pair(level).expect("≥ 2 clusters");
+        assert!(a < b);
+        // exhaustive check against every pair
+        let k = snap.num_clusters(level);
+        let c = snap.centroids(level);
+        for x in 0..k {
+            for y in (x + 1)..k {
+                let d2 = Measure::L2Sq
+                    .dissim(&c[x * snap.d..(x + 1) * snap.d], &c[y * snap.d..(y + 1) * snap.d]);
+                assert!(w <= d2, "pair ({x},{y}) at {d2} beats reported {w}");
+            }
+        }
+        // fewer than two clusters: no pair (the callers' saturation guard)
+        let one_pt = Dataset::new("one", vec![0.0, 0.0], 1, 2);
+        let res1 = SccResult { rounds: vec![Partition::singletons(1)], stats: Vec::new() };
+        let lone = HierarchySnapshot::build(&one_pt, &res1, Measure::L2Sq, 1);
+        assert_eq!(lone.nearest_cluster_pair(0), None);
+    }
+
+    #[test]
+    fn fresh_build_is_exact_with_zero_bound() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        assert!(snap.is_exact());
+        assert_eq!(snap.splice_bound(), 0.0);
+        assert_eq!(snap.online_merges, 0);
+        assert_eq!(snap.generation, 0);
+        for lv in &snap.levels {
+            assert!(lv.is_exact());
+            assert!(lv.spliced.is_empty());
         }
     }
 

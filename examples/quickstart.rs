@@ -1,15 +1,16 @@
-//! Quickstart: cluster a small synthetic dataset with SCC through the
-//! public API and inspect the hierarchy.
+//! Quickstart: cluster a small synthetic dataset through the typed
+//! pipeline API — dataset → graph → clusterer → cut — and inspect the
+//! hierarchy. Swapping the algorithm is one builder call.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use scc::data::mixture::{separated_mixture, MixtureSpec};
-use scc::knn::knn_graph;
 use scc::linkage::Measure;
 use scc::metrics::{dendrogram_purity, pairwise_prf};
-use scc::scc::{run, SccConfig, Thresholds};
+use scc::pipeline::{AffinityClusterer, BruteKnn, Cut, Pipeline, SccClusterer};
+use scc::runtime::NativeBackend;
 
 fn main() {
     // 1. data: 1000 points in 8-d, 20 well-separated Gaussian clusters
@@ -23,34 +24,50 @@ fn main() {
         seed: 42,
     });
     println!("dataset: n={} d={} k*={}", ds.n, ds.d, ds.num_classes());
+    let backend = NativeBackend::new();
 
-    // 2. k-NN graph (the only dense computation; App. B.2)
-    let graph = knn_graph(&ds, 10, Measure::L2Sq);
-    println!("k-NN graph: {} undirected edges", graph.num_undirected());
-
-    // 3. SCC with a geometric threshold schedule (paper Alg. 1 + App. B.3)
-    let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
-    let config = SccConfig::new(Thresholds::geometric(lo, hi, 30).taus);
-    let result = run(&graph, &config);
+    // 2. the pipeline: brute k-NN graph (App. B.2) → SCC with a 30-step
+    //    geometric schedule (Alg. 1 + App. B.3)
+    let pipeline = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .graph(BruteKnn::new(10))
+        .clusterer(SccClusterer::geometric(30))
+        .build();
+    let run = pipeline.run(&ds, &backend);
+    println!("k-NN graph: {} undirected edges", run.graph.num_undirected());
 
     println!("\nround  threshold  clusters");
-    for s in &result.stats {
+    for s in &run.hierarchy.stats {
         println!("{:>5} {:>10.4} {:>9}", s.round, s.threshold, s.clusters_after);
     }
 
-    // 4. evaluate: the hierarchy and the flat round closest to k*
+    // 3. evaluate: the hierarchy and the flat cut at k*
     let labels = ds.labels.as_ref().unwrap();
-    let tree = result.tree();
-    let dp = dendrogram_purity(&tree, labels);
-    let flat = result.round_closest_to_k(20);
-    let prf = pairwise_prf(flat, labels);
+    let dp = dendrogram_purity(&run.hierarchy.tree(), labels);
+    let report = run.hierarchy.cut(Cut::K(20));
+    let prf = pairwise_prf(&report.partition, labels);
     println!("\ndendrogram purity: {dp:.4} (separated data => 1.0, Cor. 4)");
     println!(
-        "flat @ k*: {} clusters, F1 {:.4} (P {:.4} / R {:.4})",
-        flat.num_clusters(),
+        "flat cut: {} — F1 {:.4} (P {:.4} / R {:.4})",
+        report.summary(),
         prf.f1,
         prf.precision,
         prf.recall
     );
     assert!(dp > 0.999, "separated data must yield perfect dendrogram purity");
+    assert!(report.is_exact(), "batch hierarchies carry no online splices");
+
+    // 4. one builder call swaps the algorithm; everything downstream —
+    //    cuts, metrics, serving — consumes the same Hierarchy type
+    let affinity = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .graph(BruteKnn::new(10))
+        .clusterer(AffinityClusterer::default())
+        .build()
+        .run(&ds, &backend);
+    let aff_dp = dendrogram_purity(&affinity.hierarchy.tree(), labels);
+    println!(
+        "affinity on the same graph: {} rounds, dendrogram purity {aff_dp:.4}",
+        affinity.hierarchy.num_rounds()
+    );
 }

@@ -15,19 +15,18 @@
 //! drift-triggered `RebuildWorker` swap → final queries.
 
 use scc::data::mixture::{separated_mixture, MixtureSpec};
-use scc::knn::knn_graph;
 use scc::linkage::Measure;
+use scc::pipeline::{BruteKnn, Pipeline, SccClusterer};
 use scc::runtime::NativeBackend;
-use scc::scc::{run, SccConfig, Thresholds};
 use scc::serve::{
-    HierarchySnapshot, IngestConfig, RebuildConfig, RebuildWorker, ServeIndex, Service,
-    ServiceConfig,
+    IngestConfig, RebuildConfig, RebuildWorker, ServeIndex, Service, ServiceConfig,
 };
 use scc::util::Rng;
 use std::sync::Arc;
 
 fn main() {
-    // 1. batch phase: data, k-NN graph, SCC rounds
+    // 1. batch phase: data → k-NN graph → SCC rounds, composed by the
+    //    typed pipeline (any other Clusterer slots in the same way)
     let ds = separated_mixture(&MixtureSpec {
         n: 4000,
         d: 8,
@@ -38,12 +37,14 @@ fn main() {
         seed: 20260726,
     });
     println!("dataset: n={} d={} k*={}", ds.n, ds.d, ds.num_classes());
-    let graph = knn_graph(&ds, 10, Measure::L2Sq);
-    let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
-    let result = run(&graph, &SccConfig::new(Thresholds::geometric(lo, hi, 30).taus));
+    let pipeline = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .graph(BruteKnn::new(10))
+        .clusterer(SccClusterer::geometric(30))
+        .build();
 
     // 2. freeze into a snapshot and pick the serving cut
-    let snap = HierarchySnapshot::build(&ds, &result, Measure::L2Sq, 0);
+    let snap = pipeline.snapshot(&ds, &NativeBackend::new());
     let level = snap.coarsest();
     let tau = snap.threshold(level);
     println!("{}", snap.summary());
@@ -165,6 +166,15 @@ fn main() {
     assert_eq!(merge_report.conflicts, 0, "online policy defers nothing");
     assert!(merged.num_clusters(merged.resolve_level(level)) < before_merge.num_clusters(serving));
     assert!(!merged.is_exact(), "spliced clusters are marked approximate");
+    // per-cluster exactness, surfaced: the CutReport names which
+    // clusters of the serving cut are exact vs merged-within-bound
+    let cut_report = merged.cut_report_at_level(merged.resolve_level(level));
+    println!("serving cut: {}", cut_report.summary());
+    assert!(cut_report.num_spliced() >= 1, "the merged survivor must be flagged");
+    assert!(
+        cut_report.num_exact() + cut_report.num_spliced() == cut_report.num_clusters(),
+        "every cluster is either exact or spliced"
+    );
 
     // 8. automatic rebuild: accumulated drift has crossed the limit, so
     //    the background worker re-runs the batch pipeline off the hot
@@ -178,6 +188,9 @@ fn main() {
             schedule_len: 30,
             threads: 0,
             poll: std::time::Duration::from_millis(10),
+            // default graph/clusterer = brute k-NN + SCC, matching the
+            // build pipeline above; any Clusterer can be plugged in
+            ..Default::default()
         },
     );
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);

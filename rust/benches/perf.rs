@@ -76,6 +76,7 @@ fn main() {
     let graph = knn_graph_with_backend(&ds, 25, Measure::L2Sq, &native, 8);
     let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
     let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 30).taus);
+    #[allow(deprecated)] // micro-bench pins the legacy entry point's cost
     bench("scc sequential n=4k", 5, || scc::scc::run(&graph, &cfg));
     for threads in [2usize, 4, 8] {
         bench(&format!("scc coordinator n=4k workers={threads}"), 5, || {
@@ -97,5 +98,6 @@ fn main() {
     });
 
     // --- affinity (boruvka) for comparison
+    #[allow(deprecated)] // micro-bench pins the legacy entry point's cost
     bench("affinity (boruvka rounds) n=4k", 5, || scc::affinity::run(&graph));
 }

@@ -15,7 +15,7 @@ mod bench_util;
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph_with_backend;
 use scc::linkage::Measure;
-use scc::scc::{run, SccConfig, Thresholds};
+use scc::pipeline::SccClusterer;
 use scc::serve::{
     assign_to_level, ingest_batch, rebuild_snapshot, HierarchySnapshot, IngestConfig,
     RebuildConfig, ServeIndex, Service, ServiceConfig,
@@ -49,8 +49,7 @@ fn main() {
         seed: cfg.seed,
     });
     let g = knn_graph_with_backend(&ds, 10, Measure::L2Sq, backend.as_ref(), threads);
-    let (lo, hi) = scc::scc::thresholds::edge_range(&g);
-    let res = run(&g, &SccConfig::new(Thresholds::geometric(lo, hi, 25).taus));
+    let res = SccClusterer::geometric(25).cluster_csr(&g);
     let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, threads);
     let level = snap.coarsest();
     let clusters = snap.num_clusters(level);

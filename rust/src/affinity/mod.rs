@@ -24,12 +24,11 @@ impl AffinityResult {
         Tree::from_rounds(&self.rounds)
     }
 
-    /// The round whose cluster count is closest to `k` (ties: finer round).
+    /// The round whose cluster count is closest to `k` (ties: finer
+    /// round) — selection shared with every other hierarchy type through
+    /// [`crate::pipeline::closest_to_k_index`].
     pub fn round_closest_to_k(&self, k: usize) -> &Partition {
-        self.rounds
-            .iter()
-            .min_by_key(|p| (p.num_clusters() as i64 - k as i64).abs())
-            .expect("non-empty rounds")
+        &self.rounds[crate::pipeline::closest_to_k_index(&self.rounds, k)]
     }
 
     pub fn final_partition(&self) -> &Partition {
@@ -38,9 +37,21 @@ impl AffinityResult {
 }
 
 /// Run Affinity clustering on a symmetrized k-NN graph.
+#[deprecated(
+    note = "dispatch through the trait API instead: \
+            `pipeline::AffinityClusterer` (a `pipeline::Clusterer`), \
+            composed via `pipeline::Pipeline`"
+)]
 pub fn run(graph: &CsrGraph) -> AffinityResult {
+    run_impl(graph, 64)
+}
+
+/// The engine behind [`run`] and [`crate::pipeline::AffinityClusterer`]
+/// (crate-internal so the deprecated shim stays the only free public
+/// entry point).
+pub(crate) fn run_impl(graph: &CsrGraph, max_rounds: usize) -> AffinityResult {
     let mut rounds = vec![Partition::singletons(graph.n)];
-    rounds.extend(boruvka_rounds(graph, 64));
+    rounds.extend(boruvka_rounds(graph, max_rounds));
     AffinityResult { rounds }
 }
 
@@ -63,7 +74,7 @@ mod tests {
             ..Default::default()
         });
         let g = knn_graph(&ds, 8, Measure::L2Sq);
-        let res = run(&g);
+        let res = run_impl(&g, 64);
         let labels = ds.labels.as_ref().unwrap();
         let best = res.rounds.iter().map(|p| pairwise_prf(p, labels).f1).fold(0.0f64, f64::max);
         assert!(best > 0.999, "best f1 {best}");
@@ -75,7 +86,7 @@ mod tests {
     fn rounds_nested_and_logarithmic() {
         let ds = separated_mixture(&MixtureSpec { n: 256, d: 3, k: 4, ..Default::default() });
         let g = knn_graph(&ds, 6, Measure::L2Sq);
-        let res = run(&g);
+        let res = run_impl(&g, 64);
         assert!(res.rounds.len() <= 10, "boruvka needs <= log2(n) rounds");
         for w in res.rounds.windows(2) {
             assert!(w[0].refines(&w[1]));
@@ -105,7 +116,7 @@ mod tests {
         let ds = crate::core::Dataset::new("bridge", data, n, 1);
         let g = knn_graph(&ds, 4, Measure::L2Sq);
 
-        let aff = run(&g);
+        let aff = run_impl(&g, 64);
         // find earliest affinity round where the blob cores merge
         let blob_merge_round = aff
             .rounds
@@ -123,7 +134,7 @@ mod tests {
         let cfg = crate::scc::SccConfig::new(
             crate::scc::Thresholds::geometric(lo, hi, 30).taus,
         );
-        let scc_res = crate::scc::run(&g, &cfg);
+        let scc_res = crate::scc::run_impl(&g, &cfg);
         let scc_merge_round = scc_res
             .rounds
             .iter()

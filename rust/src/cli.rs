@@ -11,6 +11,10 @@
 
 use crate::eval::EvalConfig;
 use crate::linkage::Measure;
+use crate::pipeline::{
+    AffinityClusterer, Clusterer, DpMeansClusterer, DpVariant, GrinchClusterer, HacClusterer,
+    KMeansClusterer, PerchClusterer, SccClusterer,
+};
 use crate::runtime::{auto_backend, Backend, NativeBackend, PjrtBackend};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -23,8 +27,41 @@ pub struct Cli {
     pub backend_kind: BackendKind,
     /// Dataset name for single-dataset commands (`cluster`, `serve`).
     pub dataset: String,
+    /// Hierarchy algorithm for `cluster` / `serve` / `serve-cut`,
+    /// dispatched through [`Clusterer`] (see [`make_clusterer`]).
+    pub algo: String,
     /// Options for the `serve`-family commands.
     pub serve: ServeOpts,
+}
+
+/// Resolve an `--algo` value into its pipeline clusterer. One match arm
+/// per algorithm — this is the only place the CLI names concrete types;
+/// everything downstream is `dyn Clusterer`.
+pub fn make_clusterer(
+    algo: &str,
+    cfg: &EvalConfig,
+    k_true: usize,
+) -> Result<Arc<dyn Clusterer>> {
+    Ok(match algo {
+        "scc" => Arc::new(SccClusterer::geometric(cfg.rounds).workers(cfg.threads)),
+        "scc-fixed" => Arc::new(
+            SccClusterer::geometric(cfg.rounds).fixed_rounds(true).workers(cfg.threads),
+        ),
+        "affinity" => Arc::new(AffinityClusterer::default()),
+        "hac" => Arc::new(HacClusterer::default()),
+        "perch" => Arc::new(PerchClusterer::default()),
+        "grinch" => Arc::new(GrinchClusterer::default()),
+        "kmeans" => Arc::new(KMeansClusterer { k: k_true.max(1), seed: cfg.seed }),
+        "dpmeans" => Arc::new(DpMeansClusterer {
+            lambda: 1.0,
+            seed: cfg.seed,
+            variant: DpVariant::Serial,
+        }),
+        other => bail!(
+            "unknown algorithm {other:?} \
+             (scc|scc-fixed|affinity|hac|perch|grinch|kmeans|dpmeans)"
+        ),
+    })
 }
 
 /// Flags consumed by the `serve` / `serve-cut` commands.
@@ -85,14 +122,16 @@ COMMANDS (paper experiments; see DESIGN.md §6):
   fig5      SCC vs HAC on synthetic (Figure 5)
   fig9      number-of-rounds ablation (Figures 8/9)
   all       run every experiment above
-  cluster   run SCC once on one analog (--dataset) and print round stats
+  cluster   run one algorithm (--algo) on one analog (--dataset) and
+            print round stats
 
 SERVING (long-lived index over a frozen hierarchy; see README):
-  serve     build a hierarchy, snapshot it, answer --queries assignment
-            queries through a worker pool, then ingest --ingest points
-            and report drift + post-ingest structure
-  serve-cut build a hierarchy snapshot and print its level table (and
-            the flat cut at --tau, when given)
+  serve     build a hierarchy with --algo, snapshot it, answer --queries
+            assignment queries through a worker pool, then ingest
+            --ingest points and report drift + post-ingest structure
+  serve-cut build a hierarchy snapshot with --algo and print its level
+            table (and the flat cut at --tau, when given, with
+            per-cluster exactness)
 
 OPTIONS:
   --scale F       workload scale multiplier (default 1.0 ~ 2.5k pts/dataset)
@@ -103,6 +142,10 @@ OPTIONS:
   --measure M     l2sq | dot (default dot)
   --backend B     auto | native | pjrt (default auto: pjrt when artifacts exist)
   --dataset D     covtype|ilsvrc_sm|aloi|speaker|imagenet|ilsvrc_lg (cluster/serve)
+  --algo A        hierarchy algorithm for cluster/serve/serve-cut:
+                  scc | scc-fixed | affinity | hac | perch | grinch |
+                  kmeans | dpmeans (default scc; all dispatch through
+                  the pipeline Clusterer trait)
   --queries N     serve: assignment queries to submit (default 2000)
   --workers N     serve: pool worker threads (default: --threads)
   --ingest N      serve: mini-batch size to ingest after querying (default 64)
@@ -122,6 +165,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         cfg: EvalConfig::default(),
         backend_kind: BackendKind::Auto,
         dataset: "aloi".to_string(),
+        algo: "scc".to_string(),
         serve: ServeOpts::default(),
     };
     let mut it = args.iter();
@@ -152,6 +196,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 }
             }
             "--dataset" => cli.dataset = val()?.clone(),
+            "--algo" => cli.algo = val()?.clone(),
             "--queries" => cli.serve.queries = val()?.parse().context("--queries")?,
             "--workers" => cli.serve.workers = val()?.parse().context("--workers")?,
             "--ingest" => cli.serve.ingest = val()?.parse().context("--ingest")?,
@@ -187,7 +232,7 @@ pub fn execute(cli: &Cli) -> Result<String> {
     let cfg = &cli.cfg;
     // `serve` owns its backend (shared with the worker pool)
     if cli.command == "serve" {
-        return serve_cmd(&cli.dataset, cfg, &cli.serve, cli.backend_kind);
+        return serve_cmd(&cli.dataset, &cli.algo, cfg, &cli.serve, cli.backend_kind);
     }
     let backend = make_backend(cli.backend_kind)?;
     let out = match cli.command.as_str() {
@@ -213,23 +258,30 @@ pub fn execute(cli: &Cli) -> Result<String> {
             }
             s
         }
-        "cluster" => cluster_once(&cli.dataset, cfg, backend.as_ref()),
-        "serve-cut" => serve_cut_cmd(&cli.dataset, cfg, &cli.serve, backend.as_ref()),
+        "cluster" => cluster_once(&cli.dataset, &cli.algo, cfg, backend.as_ref())?,
+        "serve-cut" => serve_cut_cmd(&cli.dataset, &cli.algo, cfg, &cli.serve, backend.as_ref())?,
         "help" | "--help" | "-h" => USAGE.to_string(),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     };
     Ok(out)
 }
 
-fn cluster_once(dataset: &str, cfg: &EvalConfig, backend: &dyn Backend) -> String {
+fn cluster_once(
+    dataset: &str,
+    algo: &str,
+    cfg: &EvalConfig,
+    backend: &dyn Backend,
+) -> Result<String> {
     let w = crate::eval::common::Workload::build(dataset, cfg, backend);
-    let res = w.scc(cfg);
+    let clusterer = make_clusterer(algo, cfg, w.k_true)?;
+    let res = w.cluster(clusterer.as_ref(), backend);
     let labels = w.labels();
     let tree = res.tree();
     let dp = crate::metrics::dendrogram_purity(&tree, labels);
     let f1 = crate::eval::common::f1_at_k(&res.rounds, labels, w.k_true);
     let mut out = format!(
-        "SCC on {} (n={}, d={}, k*={}, backend={}, {} threads)\n{}",
+        "{} on {} (n={}, d={}, k*={}, backend={}, {} threads)\n{}",
+        clusterer.name(),
         w.ds.name,
         w.ds.n,
         w.ds.d,
@@ -239,18 +291,31 @@ fn cluster_once(dataset: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Strin
         w.timers.report()
     );
     out.push_str("round  threshold   clusters   merges  time\n");
-    for s in &res.stats {
-        out.push_str(&format!(
-            "{:>5} {:>10.4} {:>10} {:>8}  {}\n",
-            s.round,
-            s.threshold,
-            s.clusters_after,
-            s.merge_edges,
-            crate::util::stats::fmt_secs(s.secs)
-        ));
+    if res.stats.is_empty() {
+        // algorithms without engine stats: report the hierarchy itself
+        for (r, part) in res.rounds.iter().enumerate().skip(1) {
+            out.push_str(&format!(
+                "{:>5} {:>10.4} {:>10} {:>8}  -\n",
+                r,
+                res.heights[r],
+                part.num_clusters(),
+                "-",
+            ));
+        }
+    } else {
+        for s in &res.stats {
+            out.push_str(&format!(
+                "{:>5} {:>10.4} {:>10} {:>8}  {}\n",
+                s.round,
+                s.threshold,
+                s.clusters_after,
+                s.merge_edges,
+                crate::util::stats::fmt_secs(s.secs)
+            ));
+        }
     }
     out.push_str(&format!("dendrogram purity {dp:.4}   F1@k* {f1:.4}\n"));
-    out
+    Ok(out)
 }
 
 /// Pick the serving level from `--level` / `--tau` (default: coarsest).
@@ -262,10 +327,12 @@ fn serving_level(snap: &crate::serve::HierarchySnapshot, opts: &ServeOpts) -> us
     }
 }
 
-/// `serve`: build → snapshot → pooled queries → ingest (online merges
-/// when requested) → automatic drift-triggered rebuild → report.
+/// `serve`: build (any `--algo`, through the trait) → snapshot → pooled
+/// queries → ingest (online merges when requested) → automatic
+/// drift-triggered rebuild (same clusterer) → report.
 fn serve_cmd(
     dataset: &str,
+    algo: &str,
     cfg: &EvalConfig,
     opts: &ServeOpts,
     kind: BackendKind,
@@ -276,7 +343,8 @@ fn serve_cmd(
     };
     let backend = make_backend(kind)?;
     let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
-    let res = w.scc(cfg);
+    let clusterer = make_clusterer(algo, cfg, w.k_true)?;
+    let res = w.cluster(clusterer.as_ref(), backend.as_ref());
     let snap = HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
     let level = serving_level(&snap, opts);
     let d = snap.d;
@@ -313,6 +381,10 @@ fn serve_cmd(
             schedule_len: cfg.rounds,
             threads: cfg.threads,
             poll: std::time::Duration::from_millis(25),
+            // rebuild with the same algorithm that built the index, so
+            // serving over affinity/HAC hierarchies stays consistent
+            clusterer: Some(Arc::clone(&clusterer)),
+            ..Default::default()
         },
     );
     let mut served = 0usize;
@@ -381,26 +453,25 @@ fn serve_cmd(
     Ok(out)
 }
 
-/// `serve-cut`: snapshot level table (+ one explicit cut).
+/// `serve-cut`: snapshot level table (+ one explicit cut with
+/// per-cluster exactness).
 fn serve_cut_cmd(
     dataset: &str,
+    algo: &str,
     cfg: &EvalConfig,
     opts: &ServeOpts,
     backend: &dyn Backend,
-) -> String {
+) -> Result<String> {
     let w = crate::eval::common::Workload::build(dataset, cfg, backend);
-    let res = w.scc(cfg);
+    let clusterer = make_clusterer(algo, cfg, w.k_true)?;
+    let res = w.cluster(clusterer.as_ref(), backend);
     let snap = crate::serve::HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
     let mut out = snap.summary();
     if let Some(tau) = opts.tau {
-        let cut = snap.cut_at(tau);
-        out.push_str(&format!(
-            "cut_at({tau}) -> level {} with {} clusters\n",
-            snap.level_for_tau(tau),
-            cut.num_clusters()
-        ));
+        let report = snap.cut_report(tau);
+        out.push_str(&format!("cut_at({tau}) -> {}\n", report.summary()));
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -450,6 +521,46 @@ mod tests {
         let out = execute(&cli).unwrap();
         assert!(out.contains("dendrogram purity"), "{out}");
         assert!(out.contains("round"));
+    }
+
+    #[test]
+    fn parses_algo_flag_and_rejects_unknown_algos() {
+        let cli = parse(&argv("cluster --algo affinity")).unwrap();
+        assert_eq!(cli.algo, "affinity");
+        assert_eq!(parse(&argv("cluster")).unwrap().algo, "scc");
+        // unknown algorithms surface when the clusterer is resolved
+        let bad = parse(&argv(
+            "cluster --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native --algo bogus",
+        ))
+        .unwrap();
+        assert!(execute(&bad).is_err());
+    }
+
+    #[test]
+    fn cluster_command_dispatches_any_algo_through_the_trait() {
+        for algo in ["affinity", "hac", "kmeans"] {
+            let cli = parse(&argv(&format!(
+                "cluster --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                 --algo {algo}"
+            )))
+            .unwrap();
+            let out = execute(&cli).unwrap();
+            assert!(out.contains("dendrogram purity"), "{algo}: {out}");
+            assert!(out.contains(algo), "report must name the algorithm: {out}");
+        }
+    }
+
+    #[test]
+    fn serve_command_works_over_affinity_hierarchies() {
+        let cli = parse(&argv(
+            "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+             --queries 60 --workers 2 --ingest 4 --algo affinity",
+        ))
+        .unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("serving level"), "{out}");
+        assert!(out.contains("served 60 queries"), "{out}");
+        assert!(out.contains("ingested 4 points"), "{out}");
     }
 
     #[test]

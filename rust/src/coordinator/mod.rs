@@ -211,7 +211,7 @@ mod tests {
             let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
             let l = g.usize_in(3..25);
             let cfg = SccConfig::new(Thresholds::geometric(lo, hi, l).taus);
-            let seq = crate::scc::run(&graph, &cfg);
+            let seq = crate::scc::run_impl(&graph, &cfg);
             for workers in [1usize, 2, 5] {
                 let (par, _) = run_parallel(&graph, &cfg, workers);
                 assert_eq!(
@@ -231,7 +231,7 @@ mod tests {
         let graph = graph_for(150, 5, 4, 5, 9);
         let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
         let cfg = SccConfig::fixed_rounds(Thresholds::geometric(lo, hi, 20).taus);
-        let seq = crate::scc::run(&graph, &cfg);
+        let seq = crate::scc::run_impl(&graph, &cfg);
         let (par, _) = run_parallel(&graph, &cfg, 4);
         assert_eq!(par.rounds.len(), seq.rounds.len());
         for (a, b) in par.rounds.iter().zip(&seq.rounds) {

@@ -104,7 +104,7 @@ mod tests {
         let g = crate::knn::knn_graph(&ds, 8, crate::linkage::Measure::L2Sq);
         let (lo, hi) = crate::scc::thresholds::edge_range(&g);
         let cfg = crate::scc::SccConfig::new(crate::scc::Thresholds::geometric(lo, hi, 20).taus);
-        let res = crate::scc::run(&g, &cfg);
+        let res = crate::scc::run_impl(&g, &cfg);
         (ds, res.rounds)
     }
 

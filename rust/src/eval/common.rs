@@ -1,14 +1,15 @@
 //! Shared harness plumbing: workload generation at benchable scales, the
-//! standard SCC/Affinity/baseline pipelines, and row formatting.
+//! single `dyn Clusterer` funnel every runner dispatches through, and
+//! row formatting.
 
-use crate::affinity::AffinityResult;
 use crate::core::Dataset;
 use crate::data::analogs::{bench_analog, spec_by_name, AnalogSpec};
 use crate::graph::CsrGraph;
 use crate::knn::knn_graph_with_backend;
 use crate::linkage::Measure;
+use crate::pipeline::{AffinityClusterer, Clusterer, GraphContext, Hierarchy, SccClusterer};
 use crate::runtime::Backend;
-use crate::scc::{SccConfig, SccResult, Thresholds};
+use crate::scc::SccConfig;
 use crate::util::{par, timer::PhaseTimer};
 
 /// Harness configuration (CLI flags map 1:1).
@@ -72,6 +73,10 @@ pub struct Workload {
     pub ds: Dataset,
     pub graph: CsrGraph,
     pub k_true: usize,
+    /// Dissimilarity the graph was built under (from the build config).
+    pub measure: Measure,
+    /// Worker threads (from the build config).
+    pub threads: usize,
     pub timers: PhaseTimer,
 }
 
@@ -86,26 +91,59 @@ impl Workload {
             knn_graph_with_backend(&ds, cfg.knn_k, cfg.measure, backend, cfg.threads)
         });
         let k_true = ds.num_classes();
-        Workload { spec, ds, graph, k_true, timers }
+        Workload {
+            spec,
+            ds,
+            graph,
+            k_true,
+            measure: cfg.measure,
+            threads: cfg.threads,
+            timers,
+        }
     }
 
-    /// Standard SCC run (geometric schedule anchored to the graph's edge
-    /// range, paper App. B.3) through the sharded coordinator.
-    pub fn scc(&self, cfg: &EvalConfig) -> SccResult {
-        let (lo, hi) = crate::scc::thresholds::edge_range(&self.graph);
-        let sc = SccConfig::new(Thresholds::geometric(lo, hi, cfg.rounds).taus);
-        let (res, _) = crate::coordinator::run_parallel(&self.graph, &sc, cfg.threads);
-        res
+    /// The pipeline context over this workload's shared graph — every
+    /// method clusters the same graph, so comparisons stay
+    /// apples-to-apples.
+    pub fn context(&self) -> GraphContext<'_> {
+        GraphContext {
+            ds: &self.ds,
+            graph: &self.graph,
+            measure: self.measure,
+            threads: self.threads,
+        }
+    }
+
+    /// Run any clusterer over this workload — the single dispatch funnel
+    /// every table/figure runner goes through.
+    pub fn cluster(&self, clusterer: &dyn Clusterer, backend: &dyn Backend) -> Hierarchy {
+        clusterer.cluster(&self.context(), backend)
+    }
+
+    /// The standard SCC configuration (geometric schedule anchored to
+    /// the graph's edge range, paper App. B.3; sharded coordinator).
+    pub fn scc_clusterer(&self, cfg: &EvalConfig) -> SccClusterer {
+        SccClusterer::geometric(cfg.rounds).workers(cfg.threads)
+    }
+
+    /// Standard SCC run — [`Workload::cluster`] with
+    /// [`Workload::scc_clusterer`].
+    pub fn scc(&self, cfg: &EvalConfig, backend: &dyn Backend) -> Hierarchy {
+        self.cluster(&self.scc_clusterer(cfg), backend)
     }
 
     /// SCC with an explicit config (schedule ablations).
-    pub fn scc_with(&self, sc: &SccConfig, threads: usize) -> SccResult {
-        let (res, _) = crate::coordinator::run_parallel(&self.graph, sc, threads);
-        res
+    pub fn scc_with(
+        &self,
+        sc: &SccConfig,
+        threads: usize,
+        backend: &dyn Backend,
+    ) -> Hierarchy {
+        self.cluster(&SccClusterer::from_config(sc).workers(threads), backend)
     }
 
-    pub fn affinity(&self) -> AffinityResult {
-        crate::affinity::run(&self.graph)
+    pub fn affinity(&self, backend: &dyn Backend) -> Hierarchy {
+        self.cluster(&AffinityClusterer::default(), backend)
     }
 
     pub fn labels(&self) -> &[u32] {
@@ -180,14 +218,32 @@ mod tests {
     #[test]
     fn workload_builds_and_runs_scc() {
         let cfg = tiny_cfg();
-        let w = Workload::build("aloi", &cfg, &NativeBackend::new());
+        let backend = NativeBackend::new();
+        let w = Workload::build("aloi", &cfg, &backend);
         assert!(w.ds.n >= 16);
         assert_eq!(w.graph.n, w.ds.n);
-        let res = w.scc(&cfg);
+        let res = w.scc(&cfg, &backend);
         assert!(res.rounds.len() >= 2);
         let f1 = f1_at_k(&res.rounds, w.labels(), w.k_true);
         assert!(f1 > 0.0);
         assert!(best_f1(&res.rounds, w.labels()) >= f1);
+    }
+
+    #[test]
+    fn scc_funnel_matches_legacy_engine_bit_exact() {
+        // the trait funnel must reproduce the pre-pipeline harness path
+        // (coordinator run over the shared graph) bit-for-bit
+        let cfg = tiny_cfg();
+        let backend = NativeBackend::new();
+        let w = Workload::build("aloi", &cfg, &backend);
+        let via_trait = w.scc(&cfg, &backend);
+        let (lo, hi) = crate::scc::thresholds::edge_range(&w.graph);
+        let sc = SccConfig::new(crate::scc::Thresholds::geometric(lo, hi, cfg.rounds).taus);
+        let (legacy, _) = crate::coordinator::run_parallel(&w.graph, &sc, cfg.threads);
+        assert_eq!(via_trait.rounds.len(), legacy.rounds.len());
+        for (a, b) in via_trait.rounds.iter().zip(&legacy.rounds) {
+            assert_eq!(a.assign, b.assign);
+        }
     }
 
     #[test]

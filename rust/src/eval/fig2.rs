@@ -38,7 +38,7 @@ pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Vec<S
     let mcfg = EvalConfig { measure: crate::linkage::Measure::L2Sq, ..cfg.clone() };
     let w = Workload::build(name, &mcfg, backend);
     let labels = w.labels();
-    let scc = w.scc(&mcfg);
+    let scc = w.scc(&mcfg, backend);
     let sweep = SccSweep::new(&w.ds, &scc.rounds);
 
     LAMBDAS

@@ -9,7 +9,8 @@
 use super::common::EvalConfig;
 use crate::data::webqueries::{generate, QueryCorpus, WebQuerySpec};
 use crate::knn::{lsh_knn_graph, LshParams};
-use crate::scc::{SccConfig, Thresholds};
+use crate::pipeline::{AffinityClusterer, Clusterer, GraphContext, SccClusterer};
+use crate::runtime::NativeBackend;
 use crate::sim::{rate_clusters, Annotator, Rating, RatingCounts};
 
 /// Outcome of the study.
@@ -54,12 +55,17 @@ pub fn run_study(cfg: &EvalConfig) -> (Fig4Result, QueryCorpus) {
         }
         by_intent.values().filter(|&&c| c >= 2).count()
     };
-    let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
-    let sc = SccConfig::new(Thresholds::geometric(lo, hi, cfg.rounds).taus);
-    let (scc_res, _) = crate::coordinator::run_parallel(&graph, &sc, cfg.threads);
+    // both methods dispatch through the pipeline trait over the shared
+    // LSH graph (the study is CPU-bound; the native backend suffices)
+    let backend = NativeBackend::new();
+    let cx = GraphContext { ds, graph: &graph, measure: cfg.measure, threads: cfg.threads };
+    let scc_c: &dyn Clusterer =
+        &SccClusterer::geometric(cfg.rounds).workers(cfg.threads);
+    let scc_res = scc_c.cluster(&cx, &backend);
     let scc_flat = fine_grained(&scc_res.rounds, target).clone();
 
-    let aff = crate::affinity::run(&graph);
+    let aff_c: &dyn Clusterer = &AffinityClusterer::default();
+    let aff = aff_c.cluster(&cx, &backend);
     let aff_flat = fine_grained(&aff.rounds, target).clone();
 
     let annotator = Annotator { seed: cfg.seed, ..Default::default() };

@@ -11,8 +11,8 @@ use super::common::EvalConfig;
 use crate::data::mixture::{separated_mixture, MixtureSpec};
 use crate::knn::knn_graph_with_backend;
 use crate::metrics::{cluster_purity, pairwise_prf};
+use crate::pipeline::{Clusterer, GraphContext, SccClusterer};
 use crate::runtime::Backend;
-use crate::scc::{SccConfig, Thresholds};
 use crate::util::Timer;
 
 pub const NEIGHBORS: &[usize] = &[3, 5, 10, 25, 50, 100];
@@ -51,11 +51,17 @@ pub fn run_points(cfg: &EvalConfig, backend: &dyn Backend) -> Vec<Fig5Point> {
         .map(|&k| {
             let graph =
                 knn_graph_with_backend(&ds, k, crate::linkage::Measure::L2Sq, backend, cfg.threads);
-            let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
+            let cx = GraphContext {
+                ds: &ds,
+                graph: &graph,
+                measure: crate::linkage::Measure::L2Sq,
+                threads: cfg.threads,
+            };
 
             let t = Timer::start();
-            let sc = SccConfig::new(Thresholds::geometric(lo, hi, cfg.rounds).taus);
-            let (scc, _) = crate::coordinator::run_parallel(&graph, &sc, cfg.threads);
+            let scc_c: &dyn Clusterer =
+                &SccClusterer::geometric(cfg.rounds).workers(cfg.threads);
+            let scc = scc_c.cluster(&cx, backend);
             let scc_secs = t.secs();
             let scc_flat = scc.round_closest_to_k(100);
 
@@ -122,9 +128,13 @@ mod tests {
             &NativeBackend::new(),
             4,
         );
-        let (lo, hi) = crate::scc::thresholds::edge_range(&graph);
-        let sc = SccConfig::new(Thresholds::geometric(lo, hi, 30).taus);
-        let (scc, _) = crate::coordinator::run_parallel(&graph, &sc, 4);
+        let cx = GraphContext {
+            ds: &ds,
+            graph: &graph,
+            measure: crate::linkage::Measure::L2Sq,
+            threads: 4,
+        };
+        let scc = SccClusterer::geometric(30).workers(4).cluster(&cx, &NativeBackend::new());
         let scc_f1 = pairwise_prf(scc.round_closest_to_k(100), labels).f1;
         let (_, merges) = crate::hac::graph::graph_hac(&graph);
         let hac_f1 =

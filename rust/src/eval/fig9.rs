@@ -9,6 +9,7 @@
 use super::common::EvalConfig;
 use crate::dpmeans::SccSweep;
 use crate::metrics::pairwise_prf;
+use crate::pipeline::{Clusterer, SccClusterer};
 use crate::runtime::Backend;
 use crate::scc::{SccConfig, Thresholds};
 use crate::util::Timer;
@@ -34,7 +35,8 @@ pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Vec<F
         .map(|&l| {
             let t = Timer::start();
             let sc = SccConfig::new(Thresholds::geometric(lo, hi, l).taus);
-            let (res, _) = crate::coordinator::run_parallel(&w.graph, &sc, cfg.threads);
+            let c: &dyn Clusterer = &SccClusterer::from_config(&sc).workers(cfg.threads);
+            let res = c.cluster(&w.context(), backend);
             let secs = t.secs();
             let sweep = SccSweep::new(&w.ds, &res.rounds);
             let per_lambda = LAMBDAS

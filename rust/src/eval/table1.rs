@@ -35,15 +35,19 @@ pub struct Table1Row {
     pub scc: f64,
 }
 
-/// Run Table 1 on one dataset.
+/// Run Table 1 on one dataset. The round-based methods dispatch through
+/// the pipeline's `dyn Clusterer` funnel ([`Workload::cluster`]); the
+/// online-tree baselines are evaluated on their native binary trees
+/// (dendrogram purity is LCA-sensitive, so the tree is the honest
+/// artifact to score).
 pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table1Row {
     let w = Workload::build(name, cfg, backend);
     let labels = w.labels();
 
-    let scc_tree = w.scc(cfg).tree();
+    let scc_tree = w.scc(cfg, backend).tree();
     let scc_dp = dendrogram_purity(&scc_tree, labels);
 
-    let aff_tree = w.affinity().tree();
+    let aff_tree = w.affinity(backend).tree();
     let aff_dp = dendrogram_purity(&aff_tree, labels);
 
     let perch_tree = perch(&w.ds, cfg.measure, &PerchConfig::default());

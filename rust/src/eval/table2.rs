@@ -35,8 +35,8 @@ pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table
     let labels = w.labels();
     let k = w.k_true;
 
-    let scc = f1_at_k(&w.scc(cfg).rounds, labels, k);
-    let affinity = f1_at_k(&w.affinity().rounds, labels, k);
+    let scc = f1_at_k(&w.scc(cfg, backend).rounds, labels, k);
+    let affinity = f1_at_k(&w.affinity(backend).rounds, labels, k);
 
     let km = kmeans::run(&w.ds, &KMeansConfig { k, seed: cfg.seed, ..KMeansConfig::new(k) }, backend);
     let kmeans_f1 = pairwise_prf(&km.partition, labels).f1;

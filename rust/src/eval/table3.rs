@@ -20,8 +20,10 @@ pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table
 
     let exp_cfg = SccConfig::new(Thresholds::geometric(lo, hi, cfg.rounds).taus);
     let lin_cfg = SccConfig::new(Thresholds::linear(lo, hi, cfg.rounds).taus);
-    let exp_dp = dendrogram_purity(&w.scc_with(&exp_cfg, cfg.threads).tree(), labels);
-    let lin_dp = dendrogram_purity(&w.scc_with(&lin_cfg, cfg.threads).tree(), labels);
+    let exp_dp =
+        dendrogram_purity(&w.scc_with(&exp_cfg, cfg.threads, backend).tree(), labels);
+    let lin_dp =
+        dendrogram_purity(&w.scc_with(&lin_cfg, cfg.threads, backend).tree(), labels);
     Table3Row { dataset: w.spec.name, exponential: exp_dp, linear: lin_dp }
 }
 

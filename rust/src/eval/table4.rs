@@ -29,7 +29,8 @@ pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table
             } else {
                 SccConfig::new(taus.clone())
             };
-            let dp = dendrogram_purity(&w.scc_with(&sc, cfg.threads).tree(), labels);
+            let dp =
+                dendrogram_purity(&w.scc_with(&sc, cfg.threads, backend).tree(), labels);
             cells[mi * 2 + fi] = dp;
         }
     }

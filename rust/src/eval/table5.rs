@@ -15,8 +15,8 @@ pub struct Table5Row {
 pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table5Row {
     let w = Workload::build(name, cfg, backend);
     let labels = w.labels();
-    let scc = best_f1(&w.scc(cfg).rounds, labels);
-    let affinity = best_f1(&w.affinity().rounds, labels);
+    let scc = best_f1(&w.scc(cfg, backend).rounds, labels);
+    let affinity = best_f1(&w.affinity(backend).rounds, labels);
     Table5Row { dataset: w.spec.name, affinity, scc }
 }
 

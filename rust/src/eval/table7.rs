@@ -36,7 +36,7 @@ pub fn run_dataset(name: &str, cfg: &EvalConfig, backend: &dyn Backend) -> Table
 
     // SCC: one run serves every lambda
     let t = Timer::start();
-    let scc = w.scc(&mcfg);
+    let scc = w.scc(&mcfg, backend);
     let scc_alg_secs = t.secs();
     let sweep = SccSweep::new(&w.ds, &scc.rounds);
     let scc_best_f1 = LAMBDAS

@@ -18,6 +18,53 @@
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
+//!
+//! ## One pipeline, many clusterers
+//!
+//! Every algorithm in the crate answers the same question — *build a
+//! hierarchy, cut it flat* — so they all plug into one typed
+//! [`pipeline`]: a [`pipeline::GraphBuilder`] turns the dataset into a
+//! dissimilarity graph, a [`pipeline::Clusterer`] grows a
+//! [`pipeline::Hierarchy`] over it, and [`pipeline::Hierarchy::cut`]
+//! returns a [`pipeline::CutReport`] whose per-cluster exactness tells
+//! you which clusters are exact and which were merged online by the
+//! serving layer (within a recorded bound). The CLI (`--algo`), the
+//! experiment harness, and the serve rebuild worker all dispatch
+//! through these traits; the legacy free entry points (`scc::run`,
+//! `affinity::run`) are deprecated shims.
+//!
+//! ```
+//! use scc::data::mixture::{separated_mixture, MixtureSpec};
+//! use scc::linkage::Measure;
+//! use scc::pipeline::{AffinityClusterer, BruteKnn, Cut, Pipeline, SccClusterer};
+//! use scc::runtime::NativeBackend;
+//!
+//! let ds = separated_mixture(&MixtureSpec {
+//!     n: 150, d: 3, k: 5, sigma: 0.05, delta: 8.0, ..Default::default()
+//! });
+//! let backend = NativeBackend::new();
+//!
+//! // dataset → graph → clusterer → cut, all swappable
+//! let pipeline = Pipeline::builder()
+//!     .measure(Measure::L2Sq)
+//!     .threads(2)
+//!     .graph(BruteKnn::new(8))
+//!     .clusterer(SccClusterer::geometric(20))
+//!     .build();
+//! let run = pipeline.run(&ds, &backend);
+//! let report = run.hierarchy.cut(Cut::K(5));
+//! assert!(report.is_exact(), "batch hierarchies carry no online splices");
+//!
+//! // swap the algorithm, keep everything else
+//! let affinity = Pipeline::builder()
+//!     .measure(Measure::L2Sq)
+//!     .threads(2)
+//!     .graph(BruteKnn::new(8))
+//!     .clusterer(AffinityClusterer::default())
+//!     .build()
+//!     .run(&ds, &backend);
+//! assert_eq!(affinity.hierarchy.n(), ds.n);
+//! ```
 
 // Tiled numeric kernels here favor explicit index loops and wide
 // argument lists (tile shapes travel unpacked); keep those style lints
@@ -39,6 +86,7 @@ pub mod hac;
 pub mod kmeans;
 pub mod knn;
 pub mod linkage;
+pub mod pipeline;
 pub mod runtime;
 pub mod scc;
 pub mod serve;

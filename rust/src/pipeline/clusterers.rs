@@ -1,0 +1,412 @@
+//! [`Clusterer`] implementations wrapping every hierarchy algorithm in
+//! the crate. Graph methods (SCC, Affinity, graph-HAC) read
+//! [`GraphContext::graph`]; point methods (Perch, Grinch, k-means,
+//! DP-means) read [`GraphContext::ds`]. All return the one
+//! [`Hierarchy`] type.
+
+use super::{Clusterer, GraphContext, Hierarchy};
+use crate::graph::CsrGraph;
+use crate::runtime::Backend;
+use crate::scc::{SccConfig, Thresholds};
+
+/// How an [`SccClusterer`] obtains its threshold schedule.
+#[derive(Debug, Clone)]
+enum Schedule {
+    /// Geometric schedule of this length, anchored to the graph's edge
+    /// range (paper App. B.3 — the standard configuration).
+    Geometric { rounds: usize },
+    /// An explicit τ list (schedule ablations).
+    Explicit(Vec<f64>),
+}
+
+/// The Sub-Cluster Component algorithm (paper Alg. 1) as a pipeline
+/// clusterer. `workers ≤ 1` runs the sequential reference engine;
+/// `workers > 1` the sharded coordinator — **bit-identical** partitions
+/// either way (enforced by `rust/tests/pipeline_properties.rs` and the
+/// coordinator property suite).
+#[derive(Debug, Clone)]
+pub struct SccClusterer {
+    schedule: Schedule,
+    advance_each_round: bool,
+    max_rounds: usize,
+    workers: usize,
+}
+
+impl SccClusterer {
+    /// Geometric schedule of `rounds` thresholds anchored to the graph's
+    /// edge range — the paper's standard setup.
+    pub fn geometric(rounds: usize) -> SccClusterer {
+        SccClusterer {
+            schedule: Schedule::Geometric { rounds: rounds.max(1) },
+            advance_each_round: false,
+            max_rounds: 10_000,
+            workers: 0,
+        }
+    }
+
+    /// Explicit threshold schedule (ablations, reproducing a prior run).
+    pub fn with_schedule(taus: Vec<f64>) -> SccClusterer {
+        SccClusterer {
+            schedule: Schedule::Explicit(taus),
+            advance_each_round: false,
+            max_rounds: 10_000,
+            workers: 0,
+        }
+    }
+
+    /// Adopt every knob of a legacy [`SccConfig`].
+    pub fn from_config(cfg: &SccConfig) -> SccClusterer {
+        SccClusterer {
+            schedule: Schedule::Explicit(cfg.thresholds.clone()),
+            advance_each_round: cfg.advance_each_round,
+            max_rounds: cfg.max_rounds,
+            workers: 0,
+        }
+    }
+
+    /// Fixed-number-of-rounds variant (paper App. B.3): advance the
+    /// threshold index every round.
+    pub fn fixed_rounds(mut self, yes: bool) -> SccClusterer {
+        self.advance_each_round = yes;
+        self
+    }
+
+    /// Worker shards for the coordinator (≤ 1 = sequential engine).
+    pub fn workers(mut self, workers: usize) -> SccClusterer {
+        self.workers = workers;
+        self
+    }
+
+    fn config_for(&self, graph: &CsrGraph) -> SccConfig {
+        let taus = match &self.schedule {
+            Schedule::Geometric { rounds } => {
+                let (lo, hi) = crate::scc::thresholds::edge_range(graph);
+                Thresholds::geometric(lo, hi, *rounds).taus
+            }
+            Schedule::Explicit(taus) => taus.clone(),
+        };
+        SccConfig {
+            thresholds: taus,
+            advance_each_round: self.advance_each_round,
+            max_rounds: self.max_rounds,
+        }
+    }
+
+    /// Cluster a CSR graph directly (no dataset context needed — SCC is
+    /// purely graph-based). The trait impl delegates here.
+    pub fn cluster_csr(&self, graph: &CsrGraph) -> Hierarchy {
+        let cfg = self.config_for(graph);
+        let res = if self.workers > 1 {
+            crate::coordinator::run_parallel(graph, &cfg, self.workers).0
+        } else {
+            crate::scc::run_impl(graph, &cfg)
+        };
+        Hierarchy::from(res)
+    }
+}
+
+impl Clusterer for SccClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        self.cluster_csr(cx.graph)
+    }
+
+    fn name(&self) -> &'static str {
+        "scc"
+    }
+}
+
+/// Affinity clustering (Bateni et al. 2017): Borůvka MST rounds — the
+/// paper's main scalable competitor.
+///
+/// Borůvka rounds carry no dissimilarity thresholds, so the produced
+/// [`Hierarchy`] stores **round indices** as heights: `cut_tau(τ)`
+/// means "after round ⌊τ⌋", and a serve ingest over an affinity
+/// snapshot should set [`crate::serve::IngestConfig::attach_tau`] to a
+/// real dissimilarity radius instead of relying on the level height.
+#[derive(Debug, Clone)]
+pub struct AffinityClusterer {
+    /// Safety cap on Borůvka rounds (components at least halve per
+    /// round, so ≥ log₂ n suffices).
+    pub max_rounds: usize,
+}
+
+impl Default for AffinityClusterer {
+    fn default() -> Self {
+        AffinityClusterer { max_rounds: 64 }
+    }
+}
+
+impl AffinityClusterer {
+    /// Cluster a CSR graph directly. The trait impl delegates here.
+    pub fn cluster_csr(&self, graph: &CsrGraph) -> Hierarchy {
+        Hierarchy::from(crate::affinity::run_impl(graph, self.max_rounds))
+    }
+}
+
+impl Clusterer for AffinityClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        self.cluster_csr(cx.graph)
+    }
+
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+}
+
+/// Exact graph-restricted average-linkage HAC (paper App. B.4): one
+/// greedy merge at a time over the shared k-NN graph. The merge list is
+/// folded into at most `levels` nested rounds (prefixes of the merge
+/// sequence, evenly spaced; 0 = one round per merge).
+#[derive(Debug, Clone)]
+pub struct HacClusterer {
+    pub levels: usize,
+}
+
+impl Default for HacClusterer {
+    fn default() -> Self {
+        HacClusterer { levels: 64 }
+    }
+}
+
+impl Clusterer for HacClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        let (_, merges) = crate::hac::graph::graph_hac(cx.graph);
+        Hierarchy::from_merge_prefixes(cx.ds.n, &merges, self.levels)
+    }
+
+    fn name(&self) -> &'static str {
+        "hac"
+    }
+}
+
+/// PERCH (Kobren et al. 2017): online insertion + rotations. The binary
+/// tree is sliced into at most `levels` nested rounds by cutting at its
+/// distinct internal heights.
+#[derive(Debug, Clone)]
+pub struct PerchClusterer {
+    pub config: crate::baselines::perch::PerchConfig,
+    /// Round cap for the tree → hierarchy conversion (0 = every
+    /// distinct height; default 64).
+    pub levels: usize,
+}
+
+impl Default for PerchClusterer {
+    fn default() -> Self {
+        PerchClusterer { config: Default::default(), levels: 64 }
+    }
+}
+
+impl Clusterer for PerchClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        let tree = crate::baselines::perch(cx.ds, cx.measure, &self.config);
+        Hierarchy::from_tree(&tree, self.levels)
+    }
+
+    fn name(&self) -> &'static str {
+        "perch"
+    }
+}
+
+/// GRINCH (Monath et al. 2019a): PERCH plus grafts.
+#[derive(Debug, Clone)]
+pub struct GrinchClusterer {
+    pub config: crate::baselines::grinch::GrinchConfig,
+    /// Round cap for the tree → hierarchy conversion (0 = every
+    /// distinct height; default 64).
+    pub levels: usize,
+}
+
+impl Default for GrinchClusterer {
+    fn default() -> Self {
+        GrinchClusterer { config: Default::default(), levels: 64 }
+    }
+}
+
+impl Clusterer for GrinchClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        let tree = crate::baselines::grinch(cx.ds, cx.measure, &self.config);
+        Hierarchy::from_tree(&tree, self.levels)
+    }
+
+    fn name(&self) -> &'static str {
+        "grinch"
+    }
+}
+
+/// Lloyd's k-means with k-means++ seeding (paper Table 2 baseline),
+/// lifted into a two-round hierarchy (singletons → the flat partition).
+#[derive(Debug, Clone)]
+pub struct KMeansClusterer {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl KMeansClusterer {
+    pub fn new(k: usize) -> KMeansClusterer {
+        KMeansClusterer { k, seed: 0 }
+    }
+}
+
+impl Clusterer for KMeansClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, backend: &dyn Backend) -> Hierarchy {
+        let cfg = crate::kmeans::KMeansConfig { seed: self.seed, ..crate::kmeans::KMeansConfig::new(self.k) };
+        Hierarchy::from(crate::kmeans::run(cx.ds, &cfg, backend))
+    }
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+}
+
+/// Which DP-means solver a [`DpMeansClusterer`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpVariant {
+    /// SerialDPMeans (Kulis & Jordan 2012).
+    Serial,
+    /// DPMeans++ seeding (Bachem et al. 2015).
+    Pp,
+    /// OCC DP-means (Pan et al. 2013) — uses [`GraphContext::threads`].
+    Occ,
+}
+
+/// The DP-means family (paper §4.3), lifted into a two-round hierarchy.
+#[derive(Debug, Clone)]
+pub struct DpMeansClusterer {
+    pub lambda: f64,
+    pub seed: u64,
+    pub variant: DpVariant,
+}
+
+impl DpMeansClusterer {
+    pub fn new(lambda: f64) -> DpMeansClusterer {
+        DpMeansClusterer { lambda, seed: 0, variant: DpVariant::Serial }
+    }
+}
+
+impl Clusterer for DpMeansClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        let flat = match self.variant {
+            DpVariant::Serial => crate::dpmeans::serial::run(
+                cx.ds,
+                &crate::dpmeans::serial::SerialConfig {
+                    lambda: self.lambda,
+                    max_iters: 20,
+                    seed: self.seed,
+                },
+            ),
+            DpVariant::Pp => crate::dpmeans::pp::run(
+                cx.ds,
+                &crate::dpmeans::pp::PpConfig {
+                    lambda: self.lambda,
+                    max_centers: cx.ds.n,
+                    seed: self.seed,
+                },
+            ),
+            DpVariant::Occ => crate::dpmeans::occ::run(
+                cx.ds,
+                &crate::dpmeans::occ::OccConfig {
+                    lambda: self.lambda,
+                    iters: 50,
+                    threads: cx.threads.max(1),
+                    seed: self.seed,
+                },
+            ),
+        };
+        Hierarchy::from(flat)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.variant {
+            DpVariant::Serial => "dpmeans",
+            DpVariant::Pp => "dpmeans-pp",
+            DpVariant::Occ => "dpmeans-occ",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dataset;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::runtime::NativeBackend;
+
+    fn workload() -> (Dataset, CsrGraph) {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 180,
+            d: 3,
+            k: 4,
+            sigma: 0.05,
+            delta: 8.0,
+            ..Default::default()
+        });
+        let g = knn_graph(&ds, 6, Measure::L2Sq);
+        (ds, g)
+    }
+
+    fn cx<'a>(ds: &'a Dataset, g: &'a CsrGraph) -> GraphContext<'a> {
+        GraphContext { ds, graph: g, measure: Measure::L2Sq, threads: 2 }
+    }
+
+    #[test]
+    fn scc_clusterer_workers_are_bit_identical() {
+        let (ds, g) = workload();
+        let seq = SccClusterer::geometric(15).cluster(&cx(&ds, &g), &NativeBackend::new());
+        for workers in [2usize, 4] {
+            let par = SccClusterer::geometric(15)
+                .workers(workers)
+                .cluster(&cx(&ds, &g), &NativeBackend::new());
+            assert_eq!(seq.rounds.len(), par.rounds.len());
+            for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+                assert_eq!(a.assign, b.assign, "workers={workers}");
+            }
+            assert_eq!(seq.heights, par.heights, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn every_clusterer_yields_a_nested_hierarchy() {
+        let (ds, g) = workload();
+        let b = NativeBackend::new();
+        let clusterers: Vec<Box<dyn Clusterer>> = vec![
+            Box::new(SccClusterer::geometric(12)),
+            Box::new(AffinityClusterer::default()),
+            Box::new(HacClusterer::default()),
+            Box::new(PerchClusterer::default()),
+            Box::new(GrinchClusterer::default()),
+            Box::new(KMeansClusterer::new(4)),
+            Box::new(DpMeansClusterer::new(0.5)),
+        ];
+        for c in &clusterers {
+            let h = c.cluster(&cx(&ds, &g), &b);
+            assert!(h.num_rounds() >= 1, "{} produced no rounds", c.name());
+            assert_eq!(h.n(), ds.n, "{} must cover the dataset", c.name());
+            for w in h.rounds.windows(2) {
+                assert!(w[0].refines(&w[1]), "{} rounds must nest", c.name());
+            }
+            assert!(
+                h.heights.windows(2).all(|w| w[0] <= w[1]),
+                "{} heights must be monotone",
+                c.name()
+            );
+            assert!(h.is_exact(), "batch hierarchies carry no splices");
+            h.tree().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn from_config_preserves_ablation_knobs() {
+        let (ds, g) = workload();
+        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
+        let sc = SccConfig::fixed_rounds(Thresholds::geometric(lo, hi, 10).taus);
+        let via_trait =
+            SccClusterer::from_config(&sc).cluster(&cx(&ds, &g), &NativeBackend::new());
+        let direct = crate::scc::run_impl(&g, &sc);
+        assert_eq!(via_trait.rounds.len(), direct.rounds.len());
+        for (a, b) in via_trait.rounds.iter().zip(&direct.rounds) {
+            assert_eq!(a.assign, b.assign);
+        }
+    }
+}

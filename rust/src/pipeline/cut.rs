@@ -1,0 +1,153 @@
+//! Flat cuts with per-cluster exactness.
+//!
+//! [`CutReport`] is what [`crate::pipeline::Hierarchy::cut`] and
+//! [`crate::serve::HierarchySnapshot::cut_report`] return: the selected
+//! partition plus, per cluster, whether it is **exact** (precisely what
+//! the batch engine produced) or **spliced** (merged online by the
+//! serving layer on local linkage evidence, at dissimilarity ≤ the
+//! recorded [`CutReport::splice_bound`]). Before this type the
+//! bookkeeping existed only inside `serve::snapshot`; callers cutting a
+//! hierarchy had no way to see which clusters were approximate.
+
+use crate::core::Partition;
+
+/// Where to cut a hierarchy flat.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Cut {
+    /// The round whose cluster count is closest to `k` (ties: finer
+    /// round — paper §4.2 protocol).
+    K(usize),
+    /// The coarsest round whose height is ≤ τ.
+    Tau(f64),
+}
+
+/// One cluster of a flat cut.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterCut {
+    /// Cluster id as it appears in [`CutReport::partition`].
+    pub id: u32,
+    /// Member count.
+    pub size: usize,
+    /// `false` when the cluster was produced by an online conflict-merge
+    /// splice rather than the batch engine.
+    pub exact: bool,
+}
+
+/// A flat clustering plus its per-cluster exactness. See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CutReport {
+    /// Index of the selected round/level in the source hierarchy.
+    pub round: usize,
+    /// Height (dissimilarity threshold) of that round.
+    pub threshold: f64,
+    /// The flat clustering.
+    pub partition: Partition,
+    /// Per-cluster records, in first-appearance order of
+    /// [`CutReport::partition`]'s ids.
+    pub clusters: Vec<ClusterCut>,
+    /// Largest threshold at which an online splice modified the selected
+    /// round (0 when every cluster is exact): non-exact clusters merged
+    /// on local linkage evidence at dissimilarity ≤ this bound.
+    pub splice_bound: f64,
+}
+
+impl CutReport {
+    /// Assemble a report. `spliced` holds the round's spliced cluster
+    /// ids, sorted ascending (the invariant `serve::ingest` maintains).
+    pub(crate) fn build(
+        round: usize,
+        threshold: f64,
+        partition: Partition,
+        spliced: &[u32],
+        splice_bound: f64,
+    ) -> CutReport {
+        debug_assert!(spliced.windows(2).all(|w| w[0] < w[1]), "spliced ids sorted+unique");
+        let mut order: Vec<u32> = Vec::new();
+        let mut size_of: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+        for &c in &partition.assign {
+            let e = size_of.entry(c).or_insert(0);
+            if *e == 0 {
+                order.push(c);
+            }
+            *e += 1;
+        }
+        let clusters = order
+            .into_iter()
+            .map(|id| ClusterCut {
+                id,
+                size: size_of[&id],
+                exact: spliced.binary_search(&id).is_err(),
+            })
+            .collect();
+        CutReport { round, threshold, partition, clusters, splice_bound }
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Clusters the batch engine produced exactly.
+    pub fn num_exact(&self) -> usize {
+        self.clusters.iter().filter(|c| c.exact).count()
+    }
+
+    /// Clusters merged online within [`CutReport::splice_bound`].
+    pub fn num_spliced(&self) -> usize {
+        self.clusters.len() - self.num_exact()
+    }
+
+    /// `true` when every cluster is exact.
+    pub fn is_exact(&self) -> bool {
+        self.clusters.iter().all(|c| c.exact)
+    }
+
+    /// One-line human-readable summary for CLI reports.
+    pub fn summary(&self) -> String {
+        if self.is_exact() {
+            format!(
+                "round {}: {} clusters (all exact) at threshold {:.4}",
+                self.round,
+                self.num_clusters(),
+                self.threshold
+            )
+        } else {
+            format!(
+                "round {}: {} clusters ({} exact, {} spliced within bound {:.4}) at threshold {:.4}",
+                self.round,
+                self.num_clusters(),
+                self.num_exact(),
+                self.num_spliced(),
+                self.splice_bound,
+                self.threshold
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counts_sizes_and_exactness() {
+        let p = Partition::new(vec![2, 2, 0, 1, 1, 1]);
+        let r = CutReport::build(3, 0.5, p, &[1], 0.5);
+        assert_eq!(r.num_clusters(), 3);
+        // first-appearance order: 2, 0, 1
+        assert_eq!(r.clusters[0], ClusterCut { id: 2, size: 2, exact: true });
+        assert_eq!(r.clusters[1], ClusterCut { id: 0, size: 1, exact: true });
+        assert_eq!(r.clusters[2], ClusterCut { id: 1, size: 3, exact: false });
+        assert_eq!(r.num_exact(), 2);
+        assert_eq!(r.num_spliced(), 1);
+        assert!(!r.is_exact());
+        assert!(r.summary().contains("1 spliced"));
+    }
+
+    #[test]
+    fn exact_report_summary() {
+        let r = CutReport::build(0, 0.0, Partition::singletons(3), &[], 0.0);
+        assert!(r.is_exact());
+        assert_eq!(r.splice_bound, 0.0);
+        assert!(r.summary().contains("all exact"));
+    }
+}

@@ -1,0 +1,157 @@
+//! [`GraphBuilder`] implementations: exact brute-force k-NN, LSH
+//! approximate k-NN, and a precomputed CSR pass-through.
+
+use super::GraphBuilder;
+use crate::core::Dataset;
+use crate::graph::CsrGraph;
+use crate::knn::{knn_graph_with_backend, lsh_knn_graph, LshParams};
+use crate::linkage::Measure;
+use crate::runtime::Backend;
+
+/// Exact tiled brute-force k-NN (paper App. B.2), through whatever
+/// [`Backend`] the pipeline runs on — the PJRT tile kernels accelerate
+/// it unchanged. `k` is clamped to `n - 1` on small datasets.
+#[derive(Debug, Clone)]
+pub struct BruteKnn {
+    pub k: usize,
+}
+
+impl BruteKnn {
+    pub fn new(k: usize) -> BruteKnn {
+        BruteKnn { k }
+    }
+}
+
+impl GraphBuilder for BruteKnn {
+    fn build(
+        &self,
+        ds: &Dataset,
+        measure: Measure,
+        backend: &dyn Backend,
+        threads: usize,
+    ) -> CsrGraph {
+        let k = self.k.min(ds.n.saturating_sub(1)).max(1);
+        knn_graph_with_backend(ds, k, measure, backend, threads)
+    }
+
+    fn name(&self) -> &'static str {
+        "brute-knn"
+    }
+}
+
+/// Approximate k-NN via random-hyperplane LSH banding (the paper's
+/// "hashing techniques" at web scale, §5).
+#[derive(Debug, Clone)]
+pub struct LshKnn {
+    pub k: usize,
+    pub params: LshParams,
+}
+
+impl LshKnn {
+    pub fn new(k: usize) -> LshKnn {
+        LshKnn { k, params: LshParams::default() }
+    }
+
+    pub fn with_params(k: usize, params: LshParams) -> LshKnn {
+        LshKnn { k, params }
+    }
+}
+
+impl GraphBuilder for LshKnn {
+    fn build(
+        &self,
+        ds: &Dataset,
+        measure: Measure,
+        _backend: &dyn Backend,
+        threads: usize,
+    ) -> CsrGraph {
+        let k = self.k.min(ds.n.saturating_sub(1)).max(1);
+        lsh_knn_graph(ds, k, measure, &self.params, threads)
+    }
+
+    fn name(&self) -> &'static str {
+        "lsh-knn"
+    }
+}
+
+/// A graph computed elsewhere (custom dissimilarities, loaded edge
+/// lists): the builder hands out clones and asserts the node count
+/// matches the dataset.
+#[derive(Debug, Clone)]
+pub struct Precomputed {
+    pub graph: CsrGraph,
+}
+
+impl Precomputed {
+    pub fn new(graph: CsrGraph) -> Precomputed {
+        Precomputed { graph }
+    }
+}
+
+impl GraphBuilder for Precomputed {
+    fn build(
+        &self,
+        ds: &Dataset,
+        _measure: Measure,
+        _backend: &dyn Backend,
+        _threads: usize,
+    ) -> CsrGraph {
+        assert_eq!(
+            self.graph.n, ds.n,
+            "precomputed graph covers {} nodes but the dataset has {}",
+            self.graph.n, ds.n
+        );
+        self.graph.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "precomputed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::runtime::NativeBackend;
+
+    fn tiny() -> Dataset {
+        separated_mixture(&MixtureSpec { n: 60, d: 3, k: 3, ..Default::default() })
+    }
+
+    #[test]
+    fn brute_matches_direct_construction() {
+        let ds = tiny();
+        let b = BruteKnn::new(5).build(&ds, Measure::L2Sq, &NativeBackend::new(), 2);
+        let direct = knn_graph(&ds, 5, Measure::L2Sq);
+        assert_eq!(b.n, direct.n);
+        assert_eq!(b.num_edges(), direct.num_edges());
+    }
+
+    #[test]
+    fn brute_clamps_k_on_tiny_datasets() {
+        let ds = Dataset::new("three", vec![0.0, 1.0, 2.0], 3, 1);
+        let g = BruteKnn::new(100).build(&ds, Measure::L2Sq, &NativeBackend::new(), 1);
+        assert_eq!(g.n, 3);
+        assert!(g.num_edges() > 0);
+    }
+
+    #[test]
+    fn precomputed_hands_out_the_same_graph() {
+        let ds = tiny();
+        let g = knn_graph(&ds, 4, Measure::L2Sq);
+        let b = Precomputed::new(g.clone());
+        let out = b.build(&ds, Measure::L2Sq, &NativeBackend::new(), 1);
+        assert_eq!(out.num_edges(), g.num_edges());
+        assert_eq!(b.name(), "precomputed");
+    }
+
+    #[test]
+    fn lsh_builds_a_graph_over_every_point() {
+        let ds = tiny();
+        let g = LshKnn::new(4).build(&ds, Measure::L2Sq, &NativeBackend::new(), 2);
+        assert_eq!(g.n, ds.n);
+        assert!(g.num_edges() > 0);
+    }
+}

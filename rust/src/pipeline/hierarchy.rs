@@ -1,0 +1,380 @@
+//! [`Hierarchy`] — the one result type every clusterer produces.
+//!
+//! A hierarchy is a sequence of nested partitions, finest first (round 0
+//! is conventionally the singleton partition), each annotated with the
+//! monotone dissimilarity height that produced it. [`crate::scc::SccResult`],
+//! [`crate::affinity::AffinityResult`], HAC merge lists, online-tree
+//! baselines and flat one-shot partitions all convert into it, so
+//! downstream consumers — metrics, the serve snapshot, the CLI, the eval
+//! harness — are written once against this type.
+//!
+//! `spliced` / `splice_bounds` carry the serving layer's online-merge
+//! bookkeeping (see [`crate::serve::SnapshotLevel`]): a hierarchy
+//! extracted from a live snapshot marks which clusters of which rounds
+//! were merged online on local linkage evidence, and
+//! [`Hierarchy::cut`] surfaces that per-cluster exactness in its
+//! [`CutReport`]. Fresh batch hierarchies are fully exact.
+
+use super::cut::{Cut, CutReport};
+use crate::core::{Partition, Tree};
+use crate::scc::RoundStat;
+
+/// Index of the round whose cluster count is closest to `k`.
+///
+/// Tie-break: equal distance picks the **earlier (finer) round** — the
+/// shared rule formerly duplicated (and divergence-prone) across
+/// `SccResult` and `AffinityResult`, pinned by a unit test below.
+pub fn closest_to_k_index(rounds: &[Partition], k: usize) -> usize {
+    assert!(!rounds.is_empty(), "hierarchy holds at least one round");
+    let mut best = 0usize;
+    let mut best_d = i64::MAX;
+    for (i, p) in rounds.iter().enumerate() {
+        let d = (p.num_clusters() as i64 - k as i64).abs();
+        if d < best_d {
+            best = i;
+            best_d = d;
+        }
+    }
+    best
+}
+
+/// A hierarchical clustering: nested rounds, finest first, plus the
+/// heights that produced them. See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hierarchy {
+    /// Nested partitions, finest first (round 0 = singletons for every
+    /// built-in clusterer).
+    pub rounds: Vec<Partition>,
+    /// Monotone non-decreasing height per round (`heights[0] == 0`).
+    /// SCC stores its merge thresholds τ here; Affinity its round
+    /// indices; HAC the running maximum of merge linkages.
+    pub heights: Vec<f64>,
+    /// Per-round engine statistics when the producing algorithm tracks
+    /// them (SCC does); empty otherwise.
+    pub stats: Vec<RoundStat>,
+    /// Per-round ids of clusters produced by online conflict-merge
+    /// splices (sorted, deduplicated; compact ids of that round's
+    /// partition). Empty everywhere for a fresh batch hierarchy.
+    pub spliced: Vec<Vec<u32>>,
+    /// Per-round largest threshold at which an online splice modified
+    /// the round (0 when its `spliced` list is empty).
+    pub splice_bounds: Vec<f64>,
+}
+
+impl Hierarchy {
+    /// Wrap nested rounds and their heights. `heights` must be parallel
+    /// to `rounds` and non-decreasing, with `heights[0]` the finest
+    /// round's height (0 for singleton round 0).
+    pub fn from_rounds(rounds: Vec<Partition>, heights: Vec<f64>) -> Hierarchy {
+        assert!(!rounds.is_empty(), "need at least one round");
+        assert_eq!(rounds.len(), heights.len(), "heights must be parallel to rounds");
+        debug_assert!(
+            heights.windows(2).all(|w| w[0] <= w[1]),
+            "heights must be non-decreasing"
+        );
+        debug_assert!(
+            rounds.windows(2).all(|w| w[0].refines(&w[1])),
+            "rounds must coarsen monotonically"
+        );
+        let n = rounds.len();
+        Hierarchy {
+            rounds,
+            heights,
+            stats: Vec::new(),
+            spliced: vec![Vec::new(); n],
+            splice_bounds: vec![0.0; n],
+        }
+    }
+
+    /// Lift a flat one-shot clustering (k-means, DP-means) into a
+    /// two-round hierarchy: singletons, then the partition.
+    pub fn from_flat(flat: Partition) -> Hierarchy {
+        let n = flat.n();
+        assert!(n > 0, "flat partition must cover at least one point");
+        // compact first-appearance ids: the serve snapshot (and splice
+        // bookkeeping) require engine-compact cluster ids per round
+        let flat = flat.normalized();
+        if flat.num_clusters() == n {
+            return Hierarchy::from_rounds(vec![flat], vec![0.0]);
+        }
+        Hierarchy::from_rounds(vec![Partition::singletons(n), flat], vec![0.0, 1.0])
+    }
+
+    /// Hierarchy from a binary merge list (`(a, b, height)` in
+    /// [`Tree::from_merges`] node numbering, execution order): rounds are
+    /// snapshots after prefixes of the merge sequence — always nested,
+    /// whatever the height order. At most `levels` merge rounds are
+    /// emitted (evenly spaced in merge count, final state always
+    /// included; `levels == 0` emits one round per merge). Heights are
+    /// the running maximum of merge linkages, so they stay monotone.
+    pub fn from_merge_prefixes(
+        n: usize,
+        merges: &[(u32, u32, f64)],
+        levels: usize,
+    ) -> Hierarchy {
+        let m = merges.len();
+        let mut rounds = vec![Partition::singletons(n)];
+        let mut heights = vec![0.0f64];
+        if m == 0 {
+            return Hierarchy::from_rounds(rounds, heights);
+        }
+        let waves = if levels == 0 { m } else { levels.min(m) };
+        let mut running_max = 0.0f64;
+        let mut applied = 0usize;
+        for w in 1..=waves {
+            let upto = w * m / waves; // last wave covers every merge
+            for &(_, _, h) in &merges[applied..upto] {
+                running_max = running_max.max(h);
+            }
+            applied = upto;
+            // each binary merge reduces the component count by exactly
+            // one, so the prefix of `upto` merges leaves n - upto
+            // clusters — cut the full list down to that count
+            rounds.push(crate::hac::graph::graph_hac_cut(n, merges, n - upto));
+            heights.push(running_max);
+        }
+        Hierarchy::from_rounds(rounds, heights)
+    }
+
+    /// Hierarchy from a cluster tree (Perch/Grinch baselines): rounds are
+    /// cuts of the tree at its distinct internal heights, ascending — at
+    /// most `levels` of them (evenly subsampled, coarsest cut always
+    /// included; `levels == 0` keeps every distinct height). Cuts of one
+    /// tree at increasing heights are nested by construction.
+    pub fn from_tree(tree: &Tree, levels: usize) -> Hierarchy {
+        let n = tree.n_leaves;
+        let mut hs: Vec<f64> = tree.height[n..].to_vec();
+        hs.sort_by(|a, b| a.partial_cmp(b).expect("finite heights"));
+        hs.dedup();
+        if levels != 0 && hs.len() > levels {
+            let total = hs.len();
+            hs = (1..=levels).map(|i| hs[i * total / levels - 1]).collect();
+            hs.dedup();
+        }
+        let mut rounds = vec![Partition::singletons(n)];
+        let mut heights = vec![0.0f64];
+        for &h in &hs {
+            let cut = tree.cut_at(h);
+            if cut.same_clustering(rounds.last().expect("non-empty")) {
+                continue;
+            }
+            rounds.push(cut);
+            heights.push(h);
+        }
+        Hierarchy::from_rounds(rounds, heights)
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Number of points the hierarchy covers.
+    pub fn n(&self) -> usize {
+        self.rounds[0].n()
+    }
+
+    /// The hierarchy ⋃ rounds as a tree (paper §3.4).
+    pub fn tree(&self) -> Tree {
+        Tree::from_rounds(&self.rounds)
+    }
+
+    /// The round whose cluster count is closest to `k` (paper §4.2 flat
+    /// clustering protocol). Ties take the earlier (finer) round — see
+    /// [`closest_to_k_index`].
+    pub fn round_closest_to_k(&self, k: usize) -> &Partition {
+        &self.rounds[closest_to_k_index(&self.rounds, k)]
+    }
+
+    pub fn final_partition(&self) -> &Partition {
+        self.rounds.last().expect("non-empty rounds")
+    }
+
+    /// `true` when no round carries an online splice.
+    pub fn is_exact(&self) -> bool {
+        self.spliced.iter().all(Vec::is_empty)
+    }
+
+    /// The round a cut resolves to: closest-to-k for [`Cut::K`], the
+    /// coarsest round whose height is ≤ τ for [`Cut::Tau`] (round 0 when
+    /// τ lies below every merge height).
+    pub fn round_for(&self, at: Cut) -> usize {
+        match at {
+            Cut::K(k) => closest_to_k_index(&self.rounds, k),
+            Cut::Tau(tau) => {
+                let first_above = self.heights.partition_point(|&h| h <= tau);
+                first_above.saturating_sub(1)
+            }
+        }
+    }
+
+    /// Flat clustering at `at`, with per-cluster exactness: clusters the
+    /// serving layer merged online (within the recorded bound) are
+    /// flagged, everything else is exact. Fresh batch hierarchies report
+    /// every cluster exact.
+    pub fn cut(&self, at: Cut) -> CutReport {
+        let r = self.round_for(at);
+        CutReport::build(
+            r,
+            self.heights[r],
+            self.rounds[r].clone(),
+            &self.spliced[r],
+            self.splice_bounds[r],
+        )
+    }
+
+    /// Convenience: [`Hierarchy::cut`] at a target cluster count.
+    pub fn cut_k(&self, k: usize) -> CutReport {
+        self.cut(Cut::K(k))
+    }
+
+    /// Convenience: [`Hierarchy::cut`] at a dissimilarity threshold.
+    pub fn cut_tau(&self, tau: f64) -> CutReport {
+        self.cut(Cut::Tau(tau))
+    }
+}
+
+impl From<crate::scc::SccResult> for Hierarchy {
+    fn from(res: crate::scc::SccResult) -> Hierarchy {
+        assert_eq!(
+            res.stats.len() + 1,
+            res.rounds.len(),
+            "each post-singleton SCC round carries a RoundStat"
+        );
+        let heights: Vec<f64> =
+            std::iter::once(0.0).chain(res.stats.iter().map(|s| s.threshold)).collect();
+        let n = res.rounds.len();
+        Hierarchy {
+            rounds: res.rounds,
+            heights,
+            stats: res.stats,
+            spliced: vec![Vec::new(); n],
+            splice_bounds: vec![0.0; n],
+        }
+    }
+}
+
+impl From<&crate::scc::SccResult> for Hierarchy {
+    fn from(res: &crate::scc::SccResult) -> Hierarchy {
+        Hierarchy::from(res.clone())
+    }
+}
+
+impl From<crate::affinity::AffinityResult> for Hierarchy {
+    fn from(res: crate::affinity::AffinityResult) -> Hierarchy {
+        // Borůvka rounds have no dissimilarity thresholds: heights are
+        // round indices (a cut at τ selects "after round ⌊τ⌋").
+        let heights: Vec<f64> = (0..res.rounds.len()).map(|i| i as f64).collect();
+        Hierarchy::from_rounds(res.rounds, heights)
+    }
+}
+
+impl From<&crate::affinity::AffinityResult> for Hierarchy {
+    fn from(res: &crate::affinity::AffinityResult) -> Hierarchy {
+        Hierarchy::from(res.clone())
+    }
+}
+
+impl From<crate::dpmeans::DpResult> for Hierarchy {
+    fn from(res: crate::dpmeans::DpResult) -> Hierarchy {
+        Hierarchy::from_flat(res.partition)
+    }
+}
+
+impl From<crate::kmeans::KMeansResult> for Hierarchy {
+    fn from(res: crate::kmeans::KMeansResult) -> Hierarchy {
+        Hierarchy::from_flat(res.partition)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_round() -> Hierarchy {
+        Hierarchy::from_rounds(
+            vec![
+                Partition::singletons(4),
+                Partition::new(vec![0, 0, 1, 1]),
+                Partition::new(vec![0, 0, 0, 0]),
+            ],
+            vec![0.0, 0.5, 2.0],
+        )
+    }
+
+    #[test]
+    fn closest_to_k_ties_pick_the_finer_round() {
+        // counts are [4, 2, 1]; k = 3 is equidistant from 4 and 2 — the
+        // tie must resolve to the earlier (finer) round with 4 clusters
+        let h = three_round();
+        assert_eq!(closest_to_k_index(&h.rounds, 3), 0, "tie must pick the finer round");
+        assert_eq!(h.round_closest_to_k(3).num_clusters(), 4);
+        // non-tie selections stay exact
+        assert_eq!(h.round_closest_to_k(2).num_clusters(), 2);
+        assert_eq!(h.round_closest_to_k(1).num_clusters(), 1);
+        assert_eq!(h.round_closest_to_k(100).num_clusters(), 4);
+    }
+
+    #[test]
+    fn cut_tau_selects_coarsest_at_or_below() {
+        let h = three_round();
+        assert_eq!(h.round_for(Cut::Tau(0.0)), 0);
+        assert_eq!(h.round_for(Cut::Tau(0.49)), 0);
+        assert_eq!(h.round_for(Cut::Tau(0.5)), 1);
+        assert_eq!(h.round_for(Cut::Tau(1.99)), 1);
+        assert_eq!(h.round_for(Cut::Tau(f64::INFINITY)), 2);
+        let report = h.cut_tau(0.7);
+        assert_eq!(report.num_clusters(), 2);
+        assert_eq!(report.round, 1);
+        assert!(report.is_exact());
+    }
+
+    #[test]
+    fn cut_k_monotone_in_k() {
+        let h = three_round();
+        let mut prev = 0usize;
+        for k in 1..=6 {
+            let c = h.cut_k(k).num_clusters();
+            assert!(c >= prev, "cut(k) cluster count must be monotone in k");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn from_flat_nests() {
+        let h = Hierarchy::from_flat(Partition::new(vec![0, 0, 1]));
+        assert_eq!(h.num_rounds(), 2);
+        assert!(h.rounds[0].refines(&h.rounds[1]));
+        assert_eq!(h.final_partition().num_clusters(), 2);
+        // a flat partition that is already singletons stays one round
+        let s = Hierarchy::from_flat(Partition::singletons(3));
+        assert_eq!(s.num_rounds(), 1);
+    }
+
+    #[test]
+    fn from_merge_prefixes_is_nested_and_capped() {
+        // chain merges over 5 points: (0,1)@1 -> node 5, (5,2)@2 -> 6,
+        // (6,3)@3 -> 7, (7,4)@4 -> 8
+        let merges = vec![(0u32, 1u32, 1.0), (5, 2, 2.0), (6, 3, 3.0), (7, 4, 4.0)];
+        let full = Hierarchy::from_merge_prefixes(5, &merges, 0);
+        assert_eq!(full.num_rounds(), 5);
+        for w in full.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]));
+        }
+        assert_eq!(full.final_partition().num_clusters(), 1);
+        let capped = Hierarchy::from_merge_prefixes(5, &merges, 2);
+        assert_eq!(capped.num_rounds(), 3); // singletons + 2 waves
+        assert_eq!(capped.final_partition().num_clusters(), 1);
+        assert!(capped.heights.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn from_tree_round_trips_cuts() {
+        let t = Tree::from_merges(4, &[(0, 1, 1.0), (2, 3, 2.0), (4, 5, 3.0)]);
+        let h = Hierarchy::from_tree(&t, 0);
+        assert_eq!(h.rounds[0].num_clusters(), 4);
+        assert_eq!(h.final_partition().num_clusters(), 1);
+        for w in h.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]));
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! One pipeline, many clusterers — the typed composition layer over
+//! every hierarchy algorithm in the crate.
+//!
+//! The paper frames SCC, HAC, Affinity and the DP-means family as
+//! interchangeable answers to a single problem: *build a hierarchy, cut
+//! it flat* (§2, §4). This module turns that framing into an API:
+//!
+//! * [`GraphBuilder`] — dataset → dissimilarity graph. Implementations:
+//!   exact tiled brute force ([`BruteKnn`]), random-hyperplane LSH
+//!   ([`LshKnn`]), and a precomputed CSR pass-through ([`Precomputed`]).
+//! * [`Clusterer`] — graph (+ dataset context) → [`Hierarchy`], one
+//!   result type for every algorithm: [`SccClusterer`] (sequential
+//!   engine or the sharded coordinator — bit-identical),
+//!   [`AffinityClusterer`] (Borůvka rounds), [`HacClusterer`]
+//!   (graph-restricted exact HAC), [`PerchClusterer`] /
+//!   [`GrinchClusterer`] (online tree baselines), [`KMeansClusterer`]
+//!   and [`DpMeansClusterer`] (flat one-shot partitions lifted into a
+//!   two-level hierarchy).
+//! * [`Hierarchy`] — nested rounds + heights + per-round splice
+//!   bookkeeping; `tree()` for dendrogram metrics and
+//!   [`Hierarchy::cut`] for flat clusterings with a [`CutReport`] that
+//!   exposes **per-cluster exactness** (exact vs merged-online within a
+//!   recorded bound — the `spliced` / `splice_bound` machinery of
+//!   [`crate::serve::SnapshotLevel`], surfaced to callers at last).
+//! * [`Pipeline`] — the builder composing dataset → graph → clusterer →
+//!   cut/serve. [`Pipeline::snapshot`] freezes the hierarchy into a
+//!   [`crate::serve::HierarchySnapshot`], so serving works over *any*
+//!   clusterer's output, not just SCC's.
+//!
+//! Legacy free functions (`scc::run`, `affinity::run`) remain as
+//! deprecated shims; the CLI (`--algo`), the eval harness, and the
+//! serve rebuild path all dispatch through `dyn Clusterer`.
+
+pub mod clusterers;
+pub mod cut;
+pub mod graphs;
+pub mod hierarchy;
+
+pub use clusterers::{
+    AffinityClusterer, DpMeansClusterer, DpVariant, GrinchClusterer, HacClusterer,
+    KMeansClusterer, PerchClusterer, SccClusterer,
+};
+pub use cut::{ClusterCut, Cut, CutReport};
+pub use graphs::{BruteKnn, LshKnn, Precomputed};
+pub use hierarchy::{closest_to_k_index, Hierarchy};
+
+use crate::core::Dataset;
+use crate::graph::CsrGraph;
+use crate::linkage::Measure;
+use crate::runtime::Backend;
+use crate::serve::HierarchySnapshot;
+
+/// Everything a [`Clusterer`] may consult: the dissimilarity graph it
+/// clusters plus the dataset it was built from (point-based methods —
+/// k-means, DP-means, Perch/Grinch — read the points; graph methods
+/// read only [`GraphContext::graph`]).
+pub struct GraphContext<'a> {
+    pub ds: &'a Dataset,
+    pub graph: &'a CsrGraph,
+    /// Dissimilarity the graph's weights were computed under.
+    pub measure: Measure,
+    /// Worker threads available to the algorithm.
+    pub threads: usize,
+}
+
+/// Dataset → dissimilarity graph. Implementations must emit a
+/// **symmetrized** graph whose weights are the chosen dissimilarity
+/// (what [`crate::knn::topk_to_graph`] produces).
+pub trait GraphBuilder: Send + Sync {
+    fn build(
+        &self,
+        ds: &Dataset,
+        measure: Measure,
+        backend: &dyn Backend,
+        threads: usize,
+    ) -> CsrGraph;
+
+    /// Short human-readable strategy name (reports, CLI).
+    fn name(&self) -> &'static str;
+}
+
+/// Graph (+ dataset context) → [`Hierarchy`]. The single dispatch point
+/// the CLI, the eval harness and the serve rebuild worker all share:
+/// adding an algorithm to every surface of the crate is one impl.
+pub trait Clusterer: Send + Sync {
+    fn cluster(&self, cx: &GraphContext<'_>, backend: &dyn Backend) -> Hierarchy;
+
+    /// Short human-readable algorithm name (reports, CLI).
+    fn name(&self) -> &'static str;
+}
+
+/// The composed run: the graph that was built and the hierarchy grown
+/// over it.
+pub struct PipelineRun {
+    pub graph: CsrGraph,
+    pub hierarchy: Hierarchy,
+}
+
+/// Dataset → graph → clusterer → cut/serve, as a value.
+///
+/// ```
+/// use scc::data::mixture::{separated_mixture, MixtureSpec};
+/// use scc::linkage::Measure;
+/// use scc::pipeline::{BruteKnn, Cut, Pipeline, SccClusterer};
+/// use scc::runtime::NativeBackend;
+///
+/// let ds = separated_mixture(&MixtureSpec {
+///     n: 120, d: 3, k: 4, sigma: 0.05, delta: 8.0, ..Default::default()
+/// });
+/// let run = Pipeline::builder()
+///     .measure(Measure::L2Sq)
+///     .graph(BruteKnn::new(8))
+///     .clusterer(SccClusterer::geometric(15))
+///     .build()
+///     .run(&ds, &NativeBackend::new());
+/// let report = run.hierarchy.cut(Cut::K(4));
+/// assert_eq!(report.partition.n(), ds.n);
+/// assert!(report.is_exact(), "a fresh batch hierarchy has no spliced clusters");
+/// ```
+pub struct Pipeline {
+    measure: Measure,
+    threads: usize,
+    graph: Box<dyn GraphBuilder>,
+    clusterer: Box<dyn Clusterer>,
+}
+
+impl Pipeline {
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+
+    pub fn measure(&self) -> Measure {
+        self.measure
+    }
+
+    /// Build the graph and cluster it.
+    pub fn run(&self, ds: &Dataset, backend: &dyn Backend) -> PipelineRun {
+        let graph = self.graph.build(ds, self.measure, backend, self.threads);
+        let cx = GraphContext { ds, graph: &graph, measure: self.measure, threads: self.threads };
+        let hierarchy = self.clusterer.cluster(&cx, backend);
+        PipelineRun { graph, hierarchy }
+    }
+
+    /// Run and freeze the hierarchy into a serveable snapshot
+    /// (dataset → graph → clusterer → serve).
+    pub fn snapshot(&self, ds: &Dataset, backend: &dyn Backend) -> HierarchySnapshot {
+        let run = self.run(ds, backend);
+        HierarchySnapshot::build(ds, &run.hierarchy, self.measure, self.threads)
+    }
+}
+
+/// Builder for [`Pipeline`]. Defaults mirror the paper's headline setup:
+/// brute-force k-NN with k = 25, SCC with a 30-step geometric schedule,
+/// cosine dissimilarity.
+pub struct PipelineBuilder {
+    measure: Measure,
+    threads: usize,
+    graph: Option<Box<dyn GraphBuilder>>,
+    clusterer: Option<Box<dyn Clusterer>>,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        PipelineBuilder {
+            measure: Measure::CosineDist,
+            threads: crate::util::par::default_threads(),
+            graph: None,
+            clusterer: None,
+        }
+    }
+}
+
+impl PipelineBuilder {
+    pub fn measure(mut self, measure: Measure) -> Self {
+        self.measure = measure;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn graph(mut self, builder: impl GraphBuilder + 'static) -> Self {
+        self.graph = Some(Box::new(builder));
+        self
+    }
+
+    pub fn clusterer(mut self, clusterer: impl Clusterer + 'static) -> Self {
+        self.clusterer = Some(Box::new(clusterer));
+        self
+    }
+
+    pub fn build(self) -> Pipeline {
+        Pipeline {
+            measure: self.measure,
+            threads: self.threads,
+            graph: self.graph.unwrap_or_else(|| Box::new(BruteKnn::new(25))),
+            clusterer: self
+                .clusterer
+                .unwrap_or_else(|| Box::new(SccClusterer::geometric(30))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::runtime::NativeBackend;
+
+    fn mixture() -> Dataset {
+        separated_mixture(&MixtureSpec {
+            n: 200,
+            d: 3,
+            k: 4,
+            sigma: 0.05,
+            delta: 8.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn default_pipeline_runs_end_to_end() {
+        let ds = mixture();
+        let p = Pipeline::builder().measure(Measure::L2Sq).threads(2).build();
+        let run = p.run(&ds, &NativeBackend::new());
+        assert_eq!(run.graph.n, ds.n);
+        assert!(run.hierarchy.num_rounds() >= 2);
+        run.hierarchy.tree().validate().unwrap();
+    }
+
+    #[test]
+    fn snapshot_composes_with_serving() {
+        let ds = mixture();
+        let p = Pipeline::builder()
+            .measure(Measure::L2Sq)
+            .threads(2)
+            .graph(BruteKnn::new(8))
+            .clusterer(SccClusterer::geometric(15))
+            .build();
+        let snap = p.snapshot(&ds, &NativeBackend::new());
+        assert_eq!(snap.n, ds.n);
+        let report = snap.cut_report(f64::INFINITY);
+        assert!(report.is_exact());
+        assert_eq!(report.partition.n(), ds.n);
+    }
+
+    #[test]
+    fn clusterers_are_swappable_through_the_trait() {
+        let ds = mixture();
+        let b = NativeBackend::new();
+        for c in [
+            Box::new(SccClusterer::geometric(12)) as Box<dyn Clusterer>,
+            Box::new(AffinityClusterer::default()),
+            Box::new(HacClusterer::default()),
+        ] {
+            let p = Pipeline::builder()
+                .measure(Measure::L2Sq)
+                .threads(2)
+                .graph(BruteKnn::new(6))
+                .clusterer(ClustererRef(c))
+                .build();
+            let run = p.run(&ds, &b);
+            for w in run.hierarchy.rounds.windows(2) {
+                assert!(w[0].refines(&w[1]), "rounds must nest");
+            }
+        }
+    }
+
+    /// Adapter so the loop above can move boxed clusterers into the
+    /// builder (which takes `impl Clusterer`).
+    struct ClustererRef(Box<dyn Clusterer>);
+
+    impl Clusterer for ClustererRef {
+        fn cluster(&self, cx: &GraphContext<'_>, backend: &dyn Backend) -> Hierarchy {
+            self.0.cluster(cx, backend)
+        }
+
+        fn name(&self) -> &'static str {
+            self.0.name()
+        }
+    }
+}

@@ -47,7 +47,7 @@ impl SccConfig {
 }
 
 /// Per-round statistics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundStat {
     pub round: usize,
     pub threshold: f64,
@@ -73,15 +73,11 @@ impl SccResult {
     }
 
     /// The round whose cluster count is closest to `k` (paper §4.2 flat
-    /// clustering protocol). Ties take the earlier (finer) round.
+    /// clustering protocol). Ties take the earlier (finer) round —
+    /// selection shared with every other hierarchy type through
+    /// [`crate::pipeline::closest_to_k_index`].
     pub fn round_closest_to_k(&self, k: usize) -> &Partition {
-        self.rounds
-            .iter()
-            .min_by_key(|p| {
-                let c = p.num_clusters() as i64;
-                (c - k as i64).abs()
-            })
-            .expect("non-empty rounds")
+        &self.rounds[crate::pipeline::closest_to_k_index(&self.rounds, k)]
     }
 
     pub fn final_partition(&self) -> &Partition {
@@ -91,7 +87,19 @@ impl SccResult {
 
 /// Run SCC over a symmetrized k-NN graph whose weights are already the
 /// chosen dissimilarity. `n` is the number of points (== `graph.n`).
+#[deprecated(
+    note = "dispatch through the trait API instead: \
+            `pipeline::SccClusterer` (a `pipeline::Clusterer`), composed \
+            via `pipeline::Pipeline`"
+)]
 pub fn run(graph: &CsrGraph, config: &SccConfig) -> SccResult {
+    run_impl(graph, config)
+}
+
+/// The engine behind [`run`] and [`crate::pipeline::SccClusterer`]
+/// (crate-internal so the deprecated shim stays the only free public
+/// entry point).
+pub(crate) fn run_impl(graph: &CsrGraph, config: &SccConfig) -> SccResult {
     let n = graph.n;
     let mut cg = ClusterGraph::from_knn(graph);
     let mut rounds = vec![Partition::singletons(n)];
@@ -144,7 +152,7 @@ mod tests {
         let g = knn_graph(&ds, k, Measure::L2Sq);
         let (lo, hi) = min_max_edge(&g);
         let cfg = SccConfig::new(Thresholds::geometric(lo, hi, l).taus);
-        (run(&g, &cfg), ds)
+        (run_impl(&g, &cfg), ds)
     }
 
     fn min_max_edge(g: &CsrGraph) -> (f64, f64) {
@@ -188,7 +196,7 @@ mod tests {
         let g = knn_graph(&ds, 12, Measure::L2Sq);
         let (lo, hi) = min_max_edge(&g);
         let cfg = SccConfig::new(Thresholds::geometric_doubling(lo, hi).taus);
-        let res = run(&g, &cfg);
+        let res = run_impl(&g, &cfg);
         let labels = ds.labels.as_ref().unwrap();
         let hit = res.rounds.iter().any(|p| {
             p.num_clusters() == 8 && pairwise_prf(p, labels).f1 > 0.9999
@@ -231,7 +239,7 @@ mod tests {
         let g = knn_graph(&ds, 8, Measure::L2Sq);
         let (lo, hi) = min_max_edge(&g);
         let cfg = SccConfig::fixed_rounds(Thresholds::geometric(lo, hi, 30).taus);
-        let res = run(&g, &cfg);
+        let res = run_impl(&g, &cfg);
         assert!(res.rounds.len() >= 2);
         let labels = ds.labels.as_ref().unwrap();
         let best = res

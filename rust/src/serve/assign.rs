@@ -119,8 +119,8 @@ mod tests {
     use crate::data::mixture::{separated_mixture, MixtureSpec};
     use crate::knn::knn_graph;
     use crate::linkage::Measure;
+    use crate::pipeline::SccClusterer;
     use crate::runtime::NativeBackend;
-    use crate::scc::{run, SccConfig, Thresholds};
 
     fn snapshot() -> (crate::core::Dataset, HierarchySnapshot) {
         let ds = separated_mixture(&MixtureSpec {
@@ -133,9 +133,7 @@ mod tests {
             ..Default::default()
         });
         let g = knn_graph(&ds, 8, Measure::L2Sq);
-        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
-        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 25).taus);
-        let res = run(&g, &cfg);
+        let res = SccClusterer::geometric(25).cluster_csr(&g);
         let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
         (ds, snap)
     }

@@ -49,8 +49,15 @@ use std::collections::{BTreeMap, BTreeSet};
 #[derive(Debug, Clone)]
 pub struct IngestConfig {
     /// Hierarchy level whose clusters absorb the batch (`usize::MAX` =
-    /// coarsest). The local re-clustering runs at this level's threshold.
+    /// coarsest). The local re-clustering runs at this level's threshold
+    /// unless [`IngestConfig::attach_tau`] overrides it.
     pub level: usize,
+    /// Dissimilarity threshold for the local re-clustering (`None` = the
+    /// base level's stored threshold). Set this when serving a hierarchy
+    /// whose heights are **not** dissimilarities — Affinity stores round
+    /// indices, flat k-means/DP-means hierarchies store {0, 1} — so the
+    /// level threshold would be meaningless as an attach radius.
+    pub attach_tau: Option<f64>,
     /// Candidate clusters per new point (k of the centroid k-NN).
     pub knn_k: usize,
     /// Drift fraction (`ingested / built_n`) above which
@@ -74,6 +81,7 @@ impl Default for IngestConfig {
     fn default() -> Self {
         IngestConfig {
             level: usize::MAX,
+            attach_tau: None,
             knn_k: 4,
             drift_limit: 0.2,
             max_local_rounds: 64,
@@ -108,6 +116,14 @@ pub struct IngestReport {
     /// Accumulated drift exceeds the configured limit; schedule a full
     /// rebuild.
     pub rebuild_recommended: bool,
+    /// The batch arrived while a rebuild was in flight and was queued
+    /// for catch-up replay onto the fresh snapshot instead of applied
+    /// here (see [`crate::serve::ServeIndex::ingest`]). All outcome
+    /// counts above are zero in that case; the replay's outcomes are
+    /// observable on the post-rebuild snapshot's counters
+    /// ([`HierarchySnapshot::ingested`] / `conflicts` /
+    /// `online_merges`), which `ingest_batch` updates during replay.
+    pub queued: bool,
 }
 
 /// Where a new point ends up at the base level.
@@ -137,7 +153,7 @@ pub fn ingest_batch(
         return report;
     }
     let base = snap.resolve_level(cfg.level);
-    let tau = snap.threshold(base);
+    let tau = cfg.attach_tau.unwrap_or_else(|| snap.threshold(base));
     let ncl = snap.num_clusters(base);
 
     // --- 1. candidate clusters per new point (tiled centroid top-k) ---
@@ -472,8 +488,8 @@ mod tests {
     use crate::data::mixture::{separated_mixture, MixtureSpec};
     use crate::knn::knn_graph;
     use crate::linkage::Measure;
+    use crate::pipeline::SccClusterer;
     use crate::runtime::NativeBackend;
-    use crate::scc::{run, SccConfig, Thresholds};
     use crate::util::Rng;
 
     fn snapshot(seed: u64) -> (crate::core::Dataset, HierarchySnapshot) {
@@ -487,9 +503,7 @@ mod tests {
             ..Default::default()
         });
         let g = knn_graph(&ds, 8, Measure::L2Sq);
-        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
-        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 25).taus);
-        let res = run(&g, &cfg);
+        let res = SccClusterer::geometric(25).cluster_csr(&g);
         let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
         (ds, snap)
     }
@@ -603,9 +617,8 @@ mod tests {
 
     fn snap_of(ds: &crate::core::Dataset, knn: usize, levels: usize) -> HierarchySnapshot {
         let g = knn_graph(ds, knn, Measure::L2Sq);
-        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
-        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, levels).taus);
-        HierarchySnapshot::build(ds, &run(&g, &cfg), Measure::L2Sq, 2)
+        let res = SccClusterer::geometric(levels).cluster_csr(&g);
+        HierarchySnapshot::build(ds, &res, Measure::L2Sq, 2)
     }
 
     fn levels_nested_and_counted(snap: &HierarchySnapshot) {

@@ -1,7 +1,9 @@
-//! Online serving over frozen SCC hierarchies.
+//! Online serving over frozen hierarchies.
 //!
-//! `scc::run` is batch: it consumes a k-NN graph and exits with a
-//! [`crate::scc::SccResult`]. This subsystem turns that result into a
+//! The batch pipeline ([`crate::pipeline::Pipeline`]) consumes a graph
+//! and exits with a [`crate::pipeline::Hierarchy`] — from SCC, Affinity,
+//! graph-HAC, or any other [`crate::pipeline::Clusterer`]. This
+//! subsystem turns that result into a
 //! long-lived, queryable, incrementally updatable index — the paper's
 //! headline scenario (structure over billions of web queries, §5) framed
 //! as an *index to be served*, not a one-shot output:
@@ -53,10 +55,24 @@
 //!   re-clustering (cross-engine property tests in
 //!   `rust/tests/online_merge_properties.rs` pin both claims).
 //!
+//! Height caveat: the local re-clustering attaches at the serving
+//! level's stored threshold by default, which is only meaningful when
+//! the hierarchy's heights are dissimilarities (SCC, HAC). Serving a
+//! hierarchy with ordinal heights — Affinity's round indices, flat
+//! k-means/DP-means levels — works for queries and cuts, but ingest
+//! should set [`IngestConfig::attach_tau`] to an explicit radius.
+//!
 //! Either way the drift counter keeps rising as points arrive; the
 //! [`RebuildWorker`] (or a manual [`ServeIndex::rebuild_if_needed`])
-//! eventually re-runs the batch pipeline, which resolves all splices
-//! exactly and resets drift — queries never block on the swap.
+//! eventually re-runs the batch pipeline — through whatever
+//! [`crate::pipeline::Clusterer`] the [`RebuildConfig`] carries — which
+//! resolves all splices exactly and resets drift. Queries never block
+//! on the swap, and ingests arriving mid-rebuild are queued and
+//! replayed onto the fresh snapshot before it goes live (catch-up), so
+//! the swap is lossless without gating ingest for the rebuild's
+//! duration. Callers that need to know which clusters of a cut are
+//! exact vs spliced read [`HierarchySnapshot::cut_report`] (a
+//! [`crate::pipeline::CutReport`]).
 
 pub mod assign;
 pub mod ingest;

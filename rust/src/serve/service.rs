@@ -17,14 +17,15 @@
 //!   queries served over wall-clock;
 //! * [`RebuildWorker`] — a background thread polling the index's drift
 //!   counter against [`RebuildConfig::drift_limit`]; when crossed it
-//!   re-runs the full batch pipeline (k-NN graph → SCC → snapshot) *off
-//!   the hot path* and swaps the result in through the same
-//!   copy-on-write [`ServeIndex::replace`], so queries never block.
-//!   Rebuilds hold the ingest gate (ingest and rebuild serialize with
-//!   each other — never with readers), which makes the swap lossless:
-//!   no concurrently ingested point can be dropped by the rebuild. A
-//!   fresh rebuild resets drift to zero, so each limit crossing
-//!   produces exactly one swap.
+//!   re-runs the full batch pipeline (graph → the configured
+//!   [`Clusterer`] → snapshot) *off the hot path* and swaps the result
+//!   in through the same copy-on-write [`ServeIndex::replace`], so
+//!   queries never block. The slow build also runs off the ingest gate:
+//!   ingests arriving mid-rebuild are **queued** and replayed onto the
+//!   fresh snapshot before the swap (catch-up), which keeps the swap
+//!   lossless — no concurrently ingested point can be dropped — without
+//!   gating ingest for the rebuild's duration. A fresh rebuild resets
+//!   drift to zero, so each limit crossing produces exactly one swap.
 //!
 //! Threading model: request-level parallelism across workers, plus
 //! optional intra-request tiling parallelism
@@ -36,6 +37,7 @@ use super::assign::{assign_to_level, AssignResult};
 use super::ingest::{ingest_batch, IngestConfig, IngestReport};
 use super::snapshot::HierarchySnapshot;
 use crate::core::Dataset;
+use crate::pipeline::{BruteKnn, Clusterer, GraphBuilder, GraphContext, SccClusterer};
 use crate::runtime::Backend;
 use crate::util::stats::Summary;
 use crate::util::{par, Timer};
@@ -43,14 +45,28 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+/// Ingest batches that arrived while a rebuild was in flight, waiting to
+/// be replayed onto the fresh snapshot before its swap.
+struct PendingIngests {
+    /// `true` between a rebuild's decision point and its swap: ingests
+    /// enqueue here instead of mutating the snapshot the rebuild is
+    /// consuming (they would be lost at the swap otherwise).
+    rebuilding: bool,
+    batches: Vec<(Vec<f32>, IngestConfig)>,
+}
+
 /// The swappable snapshot cell shared by the service, ingesters, and the
 /// rebuild worker.
 pub struct ServeIndex {
     current: RwLock<Arc<HierarchySnapshot>>,
     /// Serializes structural writers — ingests and rebuilds — against
     /// each other (copy-on-write: clone → mutate → swap). Readers never
-    /// take it.
+    /// take it. Lock order: `ingest_gate` before `pending`.
     ingest_gate: Mutex<()>,
+    /// Catch-up queue for ingests that arrive mid-rebuild (the rebuild
+    /// itself runs *off* the gate, so ingest calls return immediately
+    /// instead of blocking for its whole duration).
+    pending: Mutex<PendingIngests>,
 }
 
 impl ServeIndex {
@@ -58,6 +74,7 @@ impl ServeIndex {
         ServeIndex {
             current: RwLock::new(Arc::new(snapshot)),
             ingest_gate: Mutex::new(()),
+            pending: Mutex::new(PendingIngests { rebuilding: false, batches: Vec::new() }),
         }
     }
 
@@ -82,32 +99,128 @@ impl ServeIndex {
 
     /// Copy-on-write ingest: readers keep the old snapshot until the
     /// atomic swap. Concurrent ingests serialize on an internal gate.
+    ///
+    /// When a rebuild is in flight the batch is **queued** instead (the
+    /// returned report has [`IngestReport::queued`] set and zero
+    /// outcome counts): the rebuild replays every queued batch onto its
+    /// fresh snapshot before the swap, so nothing is lost and ingest
+    /// never blocks for the rebuild's duration.
     pub fn ingest(
         &self,
         batch: &[f32],
         cfg: &IngestConfig,
         backend: &dyn Backend,
     ) -> IngestReport {
-        let _gate = self.ingest_gate.lock().expect("ingest gate");
-        let mut next = (*self.snapshot()).clone();
-        let report = ingest_batch(&mut next, batch, cfg, backend);
-        self.replace(next);
-        report
+        let d = self.snapshot().d.max(1);
+        loop {
+            {
+                let mut q = self.pending.lock().expect("pending queue");
+                if q.rebuilding {
+                    q.batches.push((batch.to_vec(), cfg.clone()));
+                    return IngestReport {
+                        ingested: batch.len() / d,
+                        queued: true,
+                        ..Default::default()
+                    };
+                }
+            }
+            let _gate = self.ingest_gate.lock().expect("ingest gate");
+            // a rebuild may have reached its decision point while we
+            // waited on the gate; re-check under the gate (the rebuild
+            // sets the flag with the gate held, so this read is racefree)
+            if self.pending.lock().expect("pending queue").rebuilding {
+                continue; // enqueue on the next iteration
+            }
+            let mut next = (*self.snapshot()).clone();
+            let report = ingest_batch(&mut next, batch, cfg, backend);
+            self.replace(next);
+            return report;
+        }
     }
 
     /// Run one drift check, rebuilding and swapping when the limit is
-    /// crossed. Holds the ingest gate for the duration of the rebuild so
-    /// no concurrently ingested point can be lost; queries are never
-    /// blocked (they only read the `RwLock`, briefly). Returns `true`
-    /// when a rebuilt snapshot was swapped in.
+    /// crossed. The slow build runs **off** the ingest gate: concurrent
+    /// ingests queue (see [`ServeIndex::ingest`]) and are replayed onto
+    /// the fresh snapshot before the swap, so the swap is lossless and
+    /// ingest latency stays flat. Queries are never blocked (they only
+    /// read the `RwLock`, briefly). Returns `true` when a rebuilt
+    /// snapshot was swapped in.
     pub fn rebuild_if_needed(&self, cfg: &RebuildConfig, backend: &dyn Backend) -> bool {
+        self.rebuild_with(backend, cfg.drift_limit, |cur| rebuild_snapshot(cur, cfg, backend))
+    }
+
+    /// The rebuild protocol with a pluggable builder (the seam the
+    /// catch-up tests drive): decide + open the catch-up queue under the
+    /// gate, build off it, then drain + swap under the gate again.
+    ///
+    /// Panic safety: `build` runs pluggable trait objects
+    /// ([`RebuildConfig::graph`] / [`RebuildConfig::clusterer`]); if it
+    /// unwinds, a drop guard replays every queued batch onto the
+    /// **current** snapshot and closes the queue, so the index keeps
+    /// accepting ingests and no queued point is lost — the rebuild is
+    /// simply abandoned (drift stays high; the next poll retries).
+    pub(crate) fn rebuild_with(
+        &self,
+        backend: &dyn Backend,
+        drift_limit: f64,
+        build: impl FnOnce(&HierarchySnapshot) -> HierarchySnapshot,
+    ) -> bool {
+        // phase 1 (gate held briefly): decide, open the catch-up queue
+        let cur = {
+            let _gate = self.ingest_gate.lock().expect("ingest gate");
+            let mut q = self.pending.lock().expect("pending queue");
+            let cur = self.snapshot();
+            if q.rebuilding || !cur.needs_rebuild(drift_limit) {
+                return false; // another rebuild is in flight, or no drift
+            }
+            q.rebuilding = true;
+            cur
+        };
+        // phase 2 (no locks): the slow batch pipeline — ingests queue.
+        // The guard un-wedges the queue if the pluggable builder panics.
+        let guard = RebuildAbortGuard { index: self, backend };
+        let mut fresh = build(cur.as_ref());
+        std::mem::forget(guard);
+        // phase 3 (gate held): replay queued batches onto the fresh
+        // snapshot, close the queue, swap
         let _gate = self.ingest_gate.lock().expect("ingest gate");
-        let cur = self.snapshot();
-        if !cur.needs_rebuild(cfg.drift_limit) {
-            return false;
+        let mut q = self.pending.lock().expect("pending queue");
+        for (batch, icfg) in q.batches.drain(..) {
+            // outcome counts fold into `fresh`'s own counters
+            // (ingested / conflicts / online_merges), so replayed
+            // batches stay observable on the post-rebuild snapshot
+            ingest_batch(&mut fresh, &batch, &icfg, backend);
         }
-        self.replace(rebuild_snapshot(&cur, cfg, backend));
+        q.rebuilding = false;
+        drop(q);
+        self.replace(fresh);
         true
+    }
+}
+
+/// Unwind guard for the lock-free phase of [`ServeIndex::rebuild_with`]:
+/// on panic, drains the catch-up queue onto the *current* snapshot
+/// (normal copy-on-write apply) and clears the `rebuilding` flag, so a
+/// panicking pluggable builder cannot black-hole future ingests.
+struct RebuildAbortGuard<'a> {
+    index: &'a ServeIndex,
+    backend: &'a dyn Backend,
+}
+
+impl Drop for RebuildAbortGuard<'_> {
+    fn drop(&mut self) {
+        let _gate = self.index.ingest_gate.lock().expect("ingest gate");
+        let mut q = self.index.pending.lock().expect("pending queue");
+        let batches: Vec<_> = q.batches.drain(..).collect();
+        q.rebuilding = false;
+        drop(q);
+        if !batches.is_empty() {
+            let mut next = (*self.index.snapshot()).clone();
+            for (batch, icfg) in &batches {
+                ingest_batch(&mut next, batch, icfg, self.backend);
+            }
+            self.index.replace(next);
+        }
     }
 }
 
@@ -350,20 +463,30 @@ fn zero_if_nan(x: f64) -> f64 {
 }
 
 /// Batch-pipeline parameters for automatic (and manual) full rebuilds.
-#[derive(Debug, Clone)]
+/// The graph strategy and the algorithm are pluggable trait objects, so
+/// the rebuild worker serves *any* clusterer's hierarchy — SCC is only
+/// the default.
+#[derive(Clone)]
 pub struct RebuildConfig {
     /// Drift fraction (`ingested / built_n`) that triggers a rebuild.
     pub drift_limit: f64,
-    /// k of the k-NN graph the rebuild constructs.
+    /// k of the default brute-force k-NN graph (ignored when
+    /// [`RebuildConfig::graph`] is set).
     pub knn_k: usize,
-    /// Length of the geometric threshold schedule (anchored to the fresh
-    /// graph's edge range).
+    /// Length of the default SCC geometric threshold schedule (anchored
+    /// to the fresh graph's edge range; ignored when
+    /// [`RebuildConfig::clusterer`] is set).
     pub schedule_len: usize,
     /// Threads for graph construction and snapshot aggregation
     /// (0 = all cores).
     pub threads: usize,
     /// How often the background worker re-checks the drift counter.
     pub poll: Duration,
+    /// Graph construction strategy (`None` = brute k-NN with `knn_k`).
+    pub graph: Option<Arc<dyn GraphBuilder>>,
+    /// Hierarchy algorithm (`None` = sequential SCC with a
+    /// `schedule_len`-step geometric schedule).
+    pub clusterer: Option<Arc<dyn Clusterer>>,
 }
 
 impl Default for RebuildConfig {
@@ -374,15 +497,32 @@ impl Default for RebuildConfig {
             schedule_len: 25,
             threads: 0,
             poll: Duration::from_millis(50),
+            graph: None,
+            clusterer: None,
         }
     }
 }
 
+impl std::fmt::Debug for RebuildConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RebuildConfig")
+            .field("drift_limit", &self.drift_limit)
+            .field("knn_k", &self.knn_k)
+            .field("schedule_len", &self.schedule_len)
+            .field("threads", &self.threads)
+            .field("poll", &self.poll)
+            .field("graph", &self.graph.as_ref().map(|g| g.name()))
+            .field("clusterer", &self.clusterer.as_ref().map(|c| c.name()))
+            .finish()
+    }
+}
+
 /// Re-run the full batch pipeline over a snapshot's current points:
-/// k-NN graph (through the same tiled backend the serve path uses) →
-/// SCC rounds → a fresh [`HierarchySnapshot`]. The result starts with
-/// zero drift and exact `cut_at` semantics at every level — online
-/// splices are resolved by re-clustering from scratch.
+/// graph construction (through the same tiled backend the serve path
+/// uses) → the configured [`Clusterer`] → a fresh [`HierarchySnapshot`].
+/// The result starts with zero drift and exact `cut_at` semantics at
+/// every level — online splices are resolved by re-clustering from
+/// scratch.
 pub fn rebuild_snapshot(
     snap: &HierarchySnapshot,
     cfg: &RebuildConfig,
@@ -390,12 +530,16 @@ pub fn rebuild_snapshot(
 ) -> HierarchySnapshot {
     let threads = if cfg.threads == 0 { par::default_threads() } else { cfg.threads };
     let ds = Dataset::new(snap.name.clone(), snap.points.clone(), snap.n, snap.d);
-    let k = cfg.knn_k.min(snap.n.saturating_sub(1)).max(1);
-    let g = crate::knn::knn_graph_with_backend(&ds, k, snap.measure, backend, threads);
-    let (lo, hi) = crate::scc::thresholds::edge_range(&g);
-    let taus = crate::scc::Thresholds::geometric(lo, hi, cfg.schedule_len.max(1)).taus;
-    let res = crate::scc::run(&g, &crate::scc::SccConfig::new(taus));
-    HierarchySnapshot::build(&ds, &res, snap.measure, threads)
+    let graph = match &cfg.graph {
+        Some(g) => g.build(&ds, snap.measure, backend, threads),
+        None => BruteKnn::new(cfg.knn_k).build(&ds, snap.measure, backend, threads),
+    };
+    let cx = GraphContext { ds: &ds, graph: &graph, measure: snap.measure, threads };
+    let hierarchy = match &cfg.clusterer {
+        Some(c) => c.cluster(&cx, backend),
+        None => SccClusterer::geometric(cfg.schedule_len.max(1)).cluster(&cx, backend),
+    };
+    HierarchySnapshot::build(&ds, &hierarchy, snap.measure, threads)
 }
 
 /// The automatic rebuild worker: a background thread that wakes every
@@ -506,7 +650,6 @@ mod tests {
     use crate::knn::knn_graph;
     use crate::linkage::Measure;
     use crate::runtime::NativeBackend;
-    use crate::scc::{run, SccConfig, Thresholds};
 
     fn index() -> (crate::core::Dataset, Arc<ServeIndex>) {
         let ds = separated_mixture(&MixtureSpec {
@@ -519,9 +662,7 @@ mod tests {
             ..Default::default()
         });
         let g = knn_graph(&ds, 8, Measure::L2Sq);
-        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
-        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 20).taus);
-        let res = run(&g, &cfg);
+        let res = SccClusterer::geometric(20).cluster_csr(&g);
         let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
         (ds, Arc::new(ServeIndex::new(snap)))
     }
@@ -650,6 +791,139 @@ mod tests {
         std::thread::sleep(Duration::from_millis(100));
         assert_eq!(worker.stop(), 1, "exactly one swap per limit crossing");
         assert_eq!(index.snapshot().ingested, 0);
+    }
+
+    /// A clusterer that announces when the rebuild has entered its slow
+    /// phase and then blocks until released — the deterministic hook the
+    /// ingest catch-up test drives.
+    struct GatedClusterer {
+        inner: SccClusterer,
+        // Mutex-wrapped: `Clusterer: Sync`, but mpsc endpoints are not
+        started: Mutex<mpsc::Sender<()>>,
+        release: Mutex<mpsc::Receiver<()>>,
+    }
+
+    impl Clusterer for GatedClusterer {
+        fn cluster(
+            &self,
+            cx: &crate::pipeline::GraphContext<'_>,
+            backend: &dyn Backend,
+        ) -> crate::pipeline::Hierarchy {
+            self.started.lock().expect("started").send(()).expect("test alive");
+            self.release.lock().expect("release").recv().expect("released");
+            self.inner.cluster(cx, backend)
+        }
+
+        fn name(&self) -> &'static str {
+            "gated-scc"
+        }
+    }
+
+    #[test]
+    fn ingest_during_rebuild_is_queued_and_replayed_before_the_swap() {
+        let (ds, index) = index();
+        // push past the drift limit so the rebuild fires
+        let primer: Vec<f32> = ds.data[..8 * ds.d].to_vec();
+        let icfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
+        let r = index.ingest(&primer, &icfg, &NativeBackend::new());
+        assert!(r.rebuild_recommended);
+        assert!(!r.queued, "no rebuild in flight yet: ingest applies directly");
+        let n_at_rebuild = index.snapshot().n;
+
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let rcfg = RebuildConfig {
+            drift_limit: 0.02,
+            knn_k: 8,
+            clusterer: Some(Arc::new(GatedClusterer {
+                inner: SccClusterer::geometric(20),
+                started: Mutex::new(started_tx),
+                release: Mutex::new(release_rx),
+            })),
+            ..Default::default()
+        };
+        let rebuild = {
+            let index = Arc::clone(&index);
+            std::thread::spawn(move || index.rebuild_if_needed(&rcfg, &NativeBackend::new()))
+        };
+        started_rx.recv().expect("rebuild reached its slow phase");
+
+        // mid-rebuild ingest: returns immediately as queued, no swap
+        let gen_before = index.generation();
+        let batch: Vec<f32> = ds.row(5).iter().map(|x| x + 1e-3).collect();
+        let queued = index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        assert!(queued.queued, "{queued:?}");
+        assert_eq!(queued.ingested, 1);
+        assert_eq!(queued.attached + queued.new_clusters + queued.conflicts, 0);
+        assert_eq!(index.generation(), gen_before, "queued ingest must not swap");
+        assert_eq!(index.snapshot().n, n_at_rebuild, "snapshot untouched while queued");
+
+        release_tx.send(()).expect("release the rebuild");
+        assert!(rebuild.join().expect("rebuild thread"), "rebuild must swap");
+        let after = index.snapshot();
+        assert_eq!(
+            after.n,
+            n_at_rebuild + 1,
+            "the queued batch must be replayed onto the fresh snapshot"
+        );
+        assert_eq!(after.ingested, 1, "replayed points count as post-rebuild drift");
+        assert_eq!(
+            after.generation,
+            gen_before + 1,
+            "replay + swap land in one generation bump"
+        );
+        // the replayed near-duplicate attached next to its source point
+        let coarse = after.coarsest();
+        assert_eq!(
+            after.level(coarse).partition.assign[after.n - 1],
+            after.level(coarse).partition.assign[5]
+        );
+    }
+
+    #[test]
+    fn rebuild_panic_unwedges_the_catch_up_queue() {
+        struct PanickingClusterer;
+        impl Clusterer for PanickingClusterer {
+            fn cluster(
+                &self,
+                _cx: &crate::pipeline::GraphContext<'_>,
+                _backend: &dyn Backend,
+            ) -> crate::pipeline::Hierarchy {
+                panic!("pluggable builder exploded");
+            }
+
+            fn name(&self) -> &'static str {
+                "panic"
+            }
+        }
+
+        let (ds, index) = index();
+        let primer: Vec<f32> = ds.data[..8 * ds.d].to_vec();
+        let icfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
+        index.ingest(&primer, &icfg, &NativeBackend::new());
+        let bad = RebuildConfig {
+            drift_limit: 0.02,
+            knn_k: 8,
+            clusterer: Some(Arc::new(PanickingClusterer)),
+            ..Default::default()
+        };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            index.rebuild_if_needed(&bad, &NativeBackend::new())
+        }));
+        assert!(outcome.is_err(), "the builder panic must propagate");
+        // the guard closed the queue: ingests apply directly again …
+        let r = index.ingest(
+            &ds.row(0).to_vec(),
+            &IngestConfig::default(),
+            &NativeBackend::new(),
+        );
+        assert!(!r.queued, "{r:?}");
+        assert_eq!(r.attached + r.new_clusters + r.conflicts, 1);
+        // … and a healthy rebuild still goes through afterwards
+        let good = RebuildConfig { drift_limit: 0.02, knn_k: 8, ..Default::default() };
+        assert!(index.rebuild_if_needed(&good, &NativeBackend::new()));
+        assert!(index.snapshot().is_exact());
+        assert_eq!(index.snapshot().ingested, 0, "rebuild resets drift");
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Immutable, queryable snapshots of an SCC run.
+//! Immutable, queryable snapshots of a hierarchy run.
 //!
-//! A [`HierarchySnapshot`] freezes one [`crate::scc::SccResult`] together
+//! A [`HierarchySnapshot`] freezes one [`crate::pipeline::Hierarchy`] —
+//! whatever [`crate::pipeline::Clusterer`] produced it: SCC, Affinity,
+//! graph-HAC, or any future algorithm — together
 //! with its dataset: every round's partition, the threshold that produced
 //! it, and exact per-cluster centroid aggregates
 //! ([`crate::linkage::CentroidAgg`]). Because the aggregates are
@@ -23,7 +25,7 @@
 
 use crate::core::{Dataset, Partition};
 use crate::linkage::{CentroidAgg, Measure};
-use crate::scc::SccResult;
+use crate::pipeline::{CutReport, Hierarchy};
 use crate::util::par;
 
 /// One frozen hierarchy level: the partition after a merging round, the
@@ -96,47 +98,52 @@ pub struct HierarchySnapshot {
 }
 
 impl HierarchySnapshot {
-    /// Freeze `result` (produced on `ds`) into a snapshot. `threads`
+    /// Freeze `hierarchy` (produced on `ds` by any
+    /// [`crate::pipeline::Clusterer`]) into a snapshot. `threads`
     /// parallelizes the level-1 aggregation; the output is bit-identical
-    /// for every thread count.
+    /// for every thread count. Legacy results convert via
+    /// `Hierarchy::from(&scc_result)` / the pipeline clusterers.
     pub fn build(
         ds: &Dataset,
-        result: &SccResult,
+        hierarchy: &Hierarchy,
         measure: Measure,
         threads: usize,
     ) -> HierarchySnapshot {
-        assert!(!result.rounds.is_empty(), "SccResult must hold at least the singleton round");
-        assert_eq!(result.rounds[0].n(), ds.n, "rounds must cover the dataset");
-        assert_eq!(
-            result.stats.len() + 1,
-            result.rounds.len(),
-            "each post-singleton round must carry a RoundStat"
+        assert!(
+            !hierarchy.rounds.is_empty(),
+            "hierarchy must hold at least the singleton round"
         );
-        let mut levels = Vec::with_capacity(result.rounds.len());
+        assert_eq!(hierarchy.rounds[0].n(), ds.n, "rounds must cover the dataset");
+        assert_eq!(
+            hierarchy.heights.len(),
+            hierarchy.rounds.len(),
+            "each round must carry its height"
+        );
+        let mut levels = Vec::with_capacity(hierarchy.rounds.len());
         levels.push(SnapshotLevel {
             threshold: 0.0,
-            partition: result.rounds[0].clone(),
+            partition: hierarchy.rounds[0].clone(),
             aggs: Vec::new(),
             centroids: Vec::new(),
-            spliced: Vec::new(),
-            splice_bound: 0.0,
+            spliced: hierarchy.spliced[0].clone(),
+            splice_bound: hierarchy.splice_bounds[0],
         });
-        for r in 1..result.rounds.len() {
-            let part = &result.rounds[r];
+        for r in 1..hierarchy.rounds.len() {
+            let part = &hierarchy.rounds[r];
             let k = compact_cluster_count(part);
             let aggs = if r == 1 {
                 aggregate_points(ds, part, k, threads)
             } else {
-                fold_level(&result.rounds[r - 1], &levels[r - 1].aggs, part, k)
+                fold_level(&hierarchy.rounds[r - 1], &levels[r - 1].aggs, part, k)
             };
             let centroids = centroid_matrix(&aggs, ds.d);
             levels.push(SnapshotLevel {
-                threshold: result.stats[r - 1].threshold,
+                threshold: hierarchy.heights[r],
                 partition: part.clone(),
                 aggs,
                 centroids,
-                spliced: Vec::new(),
-                splice_bound: 0.0,
+                spliced: hierarchy.spliced[r].clone(),
+                splice_bound: hierarchy.splice_bounds[r],
             });
         }
         HierarchySnapshot {
@@ -220,6 +227,40 @@ impl HierarchySnapshot {
     /// The flat clustering at an explicit level index.
     pub fn cut_at_level(&self, level: usize) -> Partition {
         self.levels[self.resolve_level(level)].partition.clone()
+    }
+
+    /// [`Self::cut_at`] with the splice bookkeeping surfaced: a
+    /// [`CutReport`] that flags, per cluster, whether it is exact or was
+    /// merged online within [`SnapshotLevel::splice_bound`].
+    pub fn cut_report(&self, tau: f64) -> CutReport {
+        self.cut_report_at_level(self.level_for_tau(tau))
+    }
+
+    /// [`Self::cut_report`] at an explicit level index.
+    pub fn cut_report_at_level(&self, level: usize) -> CutReport {
+        let level = self.resolve_level(level);
+        let lv = &self.levels[level];
+        CutReport::build(
+            level,
+            lv.threshold,
+            lv.partition.clone(),
+            &lv.spliced,
+            lv.splice_bound,
+        )
+    }
+
+    /// Extract the stored hierarchy — rounds, thresholds, and splice
+    /// bookkeeping — as a [`Hierarchy`], the same type every
+    /// [`crate::pipeline::Clusterer`] produces. `hierarchy().cut(...)`
+    /// and [`Self::cut_report`] agree by construction.
+    pub fn hierarchy(&self) -> Hierarchy {
+        let mut h = Hierarchy::from_rounds(
+            self.levels.iter().map(|lv| lv.partition.clone()).collect(),
+            self.levels.iter().map(|lv| lv.threshold).collect(),
+        );
+        h.spliced = self.levels.iter().map(|lv| lv.spliced.clone()).collect();
+        h.splice_bounds = self.levels.iter().map(|lv| lv.splice_bound).collect();
+        h
     }
 
     /// The two closest distinct cluster centroids at `level` under the
@@ -391,9 +432,9 @@ mod tests {
     use super::*;
     use crate::data::mixture::{separated_mixture, MixtureSpec};
     use crate::knn::knn_graph;
-    use crate::scc::{run, SccConfig, Thresholds};
+    use crate::pipeline::SccClusterer;
 
-    fn small_run() -> (Dataset, crate::scc::SccResult) {
+    fn small_run() -> (Dataset, Hierarchy) {
         let ds = separated_mixture(&MixtureSpec {
             n: 240,
             d: 4,
@@ -403,9 +444,7 @@ mod tests {
             ..Default::default()
         });
         let g = knn_graph(&ds, 8, Measure::L2Sq);
-        let (lo, hi) = crate::scc::thresholds::edge_range(&g);
-        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 20).taus);
-        let res = run(&g, &cfg);
+        let res = SccClusterer::geometric(20).cluster_csr(&g);
         (ds, res)
     }
 
@@ -484,7 +523,7 @@ mod tests {
         }
         // fewer than two clusters: no pair (the callers' saturation guard)
         let one_pt = Dataset::new("one", vec![0.0, 0.0], 1, 2);
-        let res1 = SccResult { rounds: vec![Partition::singletons(1)], stats: Vec::new() };
+        let res1 = Hierarchy::from_rounds(vec![Partition::singletons(1)], vec![0.0]);
         let lone = HierarchySnapshot::build(&one_pt, &res1, Measure::L2Sq, 1);
         assert_eq!(lone.nearest_cluster_pair(0), None);
     }
@@ -509,5 +548,25 @@ mod tests {
         let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
         assert_eq!(snap.centroids(0), &ds.data[..]);
         assert_eq!(snap.num_clusters(0), ds.n);
+    }
+
+    #[test]
+    fn hierarchy_round_trips_and_cut_report_agrees() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let h = snap.hierarchy();
+        assert_eq!(h.rounds, res.rounds);
+        assert!(h.is_exact());
+        // freezing the extracted hierarchy again reproduces the levels
+        let again = HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 2);
+        assert_eq!(again, snap);
+        // cut_report mirrors cut_at and hierarchy().cut_tau
+        for tau in [0.0, snap.threshold(snap.coarsest()), f64::INFINITY] {
+            let report = snap.cut_report(tau);
+            assert_eq!(report.partition, snap.cut_at(tau));
+            assert_eq!(report.round, snap.level_for_tau(tau));
+            assert!(report.is_exact(), "fresh build is exact everywhere");
+            assert_eq!(report, h.cut_tau(tau));
+        }
     }
 }

@@ -33,8 +33,9 @@ use scc::core::{Dataset, Partition};
 use scc::data::bridge_chain;
 use scc::knn::knn_graph;
 use scc::linkage::Measure;
+use scc::pipeline::SccClusterer;
 use scc::runtime::NativeBackend;
-use scc::scc::{run, thresholds::edge_range, SccConfig, Thresholds};
+use scc::scc::{thresholds::edge_range, Thresholds};
 use scc::serve::{
     ingest_batch, HierarchySnapshot, IngestConfig, RebuildConfig, RebuildWorker, ServeIndex,
     Service, ServiceConfig,
@@ -82,7 +83,7 @@ fn snapshot_with_taus(ds: &Dataset, levels: usize) -> (HierarchySnapshot, Vec<f6
     let g = knn_graph(ds, KNN_K, Measure::L2Sq);
     let (lo, hi) = edge_range(&g);
     let taus = Thresholds::geometric(lo, hi, levels).taus;
-    let res = run(&g, &SccConfig::new(taus.clone()));
+    let res = SccClusterer::with_schedule(taus.clone()).cluster_csr(&g);
     (HierarchySnapshot::build(ds, &res, Measure::L2Sq, 2), taus)
 }
 
@@ -179,7 +180,7 @@ fn online_merge_cut_matches_from_scratch_within_recorded_bound() {
         union_data.extend_from_slice(&batch);
         let union_ds = Dataset::new("union", union_data, ds.n + m, d);
         let union_g = knn_graph(&union_ds, KNN_K, Measure::L2Sq);
-        let scratch_res = run(&union_g, &SccConfig::new(taus.clone()));
+        let scratch_res = SccClusterer::with_schedule(taus.clone()).cluster_csr(&union_g);
         let scratch = HierarchySnapshot::build(&union_ds, &scratch_res, Measure::L2Sq, 2);
 
         // original points whose union-graph k-NN rows involve the batch

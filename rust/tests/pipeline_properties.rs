@@ -1,0 +1,264 @@
+//! Cross-algorithm property tests for the typed pipeline API (ISSUE 3
+//! acceptance criteria):
+//!
+//! 1. **bit-identity** — SCC dispatched through
+//!    [`scc::pipeline::Pipeline`] reproduces the legacy `scc::run` free
+//!    function exactly: same rounds, same partitions, same thresholds,
+//!    for both the sequential engine and the sharded coordinator;
+//! 2. **nesting** — every [`scc::pipeline::Clusterer`] (SCC, Affinity,
+//!    graph-HAC, and the point-based ones) yields a
+//!    [`scc::pipeline::Hierarchy`] whose rounds coarsen monotonically
+//!    with monotone heights;
+//! 3. **cut(k) monotonicity** — the flat cut's cluster count is
+//!    non-decreasing in the requested `k`, for every algorithm;
+//! 4. **CutReport exactness** — `cut()` exposes per-cluster exactness:
+//!    all-exact on fresh batch hierarchies, and exactly the spliced
+//!    clusters flagged (with the recorded bound) after an online
+//!    conflict-merge ingest into a served snapshot.
+
+// The bit-identity property compares the trait path against the legacy
+// free entry point by construction.
+#![allow(deprecated)]
+
+use scc::core::Dataset;
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::pipeline::{
+    AffinityClusterer, BruteKnn, Clusterer, Cut, GraphContext, HacClusterer, Pipeline,
+    SccClusterer,
+};
+use scc::runtime::NativeBackend;
+use scc::scc::{thresholds::edge_range, SccConfig, Thresholds};
+use scc::serve::{ingest_batch, IngestConfig};
+use scc::util::prop::{check, Gen};
+
+fn mixture(g: &mut Gen) -> Dataset {
+    separated_mixture(&MixtureSpec {
+        n: g.usize_in(60..240),
+        d: g.usize_in(2..5),
+        k: g.usize_in(2..7),
+        sigma: 0.05,
+        delta: g.f64_in(6.0, 12.0),
+        imbalance: 0.0,
+        seed: g.rng().next_u64(),
+    })
+}
+
+/// Acceptance criterion: SCC-via-`Pipeline` is bit-identical to the
+/// legacy `scc::run` path — rounds, assignments, and thresholds — for
+/// the sequential engine and every coordinator worker count.
+#[test]
+fn scc_via_pipeline_is_bit_identical_to_legacy_run() {
+    check("Pipeline(SCC) == scc::run", 12, |g| {
+        let ds = mixture(g);
+        let knn_k = g.usize_in(3..9);
+        let rounds = g.usize_in(8..25);
+        let graph = knn_graph(&ds, knn_k, Measure::L2Sq);
+        let (lo, hi) = edge_range(&graph);
+        let taus = Thresholds::geometric(lo, hi, rounds).taus;
+        let legacy = scc::scc::run(&graph, &SccConfig::new(taus.clone()));
+
+        for workers in [0usize, 1, 2, 5] {
+            let run = Pipeline::builder()
+                .measure(Measure::L2Sq)
+                .threads(2)
+                .graph(BruteKnn::new(knn_k))
+                .clusterer(SccClusterer::with_schedule(taus.clone()).workers(workers))
+                .build()
+                .run(&ds, &NativeBackend::new());
+            assert_eq!(
+                run.hierarchy.rounds.len(),
+                legacy.rounds.len(),
+                "round count differs at workers={workers}"
+            );
+            for (r, (a, b)) in run.hierarchy.rounds.iter().zip(&legacy.rounds).enumerate() {
+                assert_eq!(a.assign, b.assign, "round {r} differs at workers={workers}");
+            }
+            for (r, s) in legacy.stats.iter().enumerate() {
+                assert_eq!(
+                    run.hierarchy.heights[r + 1],
+                    s.threshold,
+                    "height {r} differs at workers={workers}"
+                );
+            }
+            // the pipeline's graph is the same graph
+            assert_eq!(run.graph.num_edges(), graph.num_edges());
+        }
+    });
+}
+
+/// Every hierarchy algorithm, one trait: nested rounds, monotone
+/// heights, and a monotone cut(k) — on the same shared k-NN graph.
+#[test]
+fn all_clusterers_nest_and_cut_monotonically() {
+    check("nesting + cut(k) monotone across algorithms", 10, |g| {
+        let ds = mixture(g);
+        let graph = knn_graph(&ds, g.usize_in(3..9), Measure::L2Sq);
+        let cx = GraphContext { ds: &ds, graph: &graph, measure: Measure::L2Sq, threads: 2 };
+        let backend = NativeBackend::new();
+        let clusterers: Vec<Box<dyn Clusterer>> = vec![
+            Box::new(SccClusterer::geometric(g.usize_in(8..20))),
+            Box::new(AffinityClusterer::default()),
+            Box::new(HacClusterer { levels: g.usize_in(0..40) }),
+        ];
+        for c in &clusterers {
+            let h = c.cluster(&cx, &backend);
+            assert_eq!(h.n(), ds.n, "{}", c.name());
+            assert_eq!(h.rounds[0].num_clusters(), ds.n, "{} starts at singletons", c.name());
+            for (r, w) in h.rounds.windows(2).enumerate() {
+                assert!(w[0].refines(&w[1]), "{} rounds {r}/{} not nested", c.name(), r + 1);
+            }
+            assert!(
+                h.heights.windows(2).all(|w| w[0] <= w[1]),
+                "{} heights not monotone",
+                c.name()
+            );
+            h.tree().validate().unwrap();
+
+            // cut(k): cluster count non-decreasing in k, reports exact
+            let mut prev = 0usize;
+            for k in [1usize, 2, 3, 5, 8, 13, ds.n / 2, ds.n] {
+                let report = h.cut(Cut::K(k));
+                assert!(
+                    report.num_clusters() >= prev,
+                    "{}: cut({k}) gave {} clusters after {}",
+                    c.name(),
+                    report.num_clusters(),
+                    prev
+                );
+                prev = report.num_clusters();
+                assert!(report.is_exact(), "{}: fresh hierarchies are exact", c.name());
+                assert_eq!(report.partition.n(), ds.n);
+                // per-cluster records tile the point set
+                let total: usize = report.clusters.iter().map(|cc| cc.size).sum();
+                assert_eq!(total, ds.n, "{}: cluster sizes must tile", c.name());
+            }
+
+            // cut(τ) at every stored height reproduces the stored round
+            for (r, &tau) in h.heights.iter().enumerate() {
+                let report = h.cut_tau(tau);
+                // coarsest round at ≤ τ: never finer than r
+                assert!(report.round >= r || h.heights[report.round] == tau);
+                assert_eq!(report.partition, h.rounds[report.round]);
+            }
+        }
+    });
+}
+
+/// Two tight clumps on a line: the k-NN graph is disconnected across
+/// them, so the coarsest round has one cluster per clump.
+fn two_clumps() -> Dataset {
+    let mut data = Vec::new();
+    for c in [0.0f32, 1.0] {
+        for i in 0..6 {
+            data.push(c + 0.01 * i as f32);
+            data.push(0.0);
+        }
+    }
+    Dataset::new("two_clumps", data, 12, 2)
+}
+
+/// Acceptance criterion: after an online conflict-merge, the cut exposes
+/// per-cluster exactness — the spliced cluster flagged with the recorded
+/// bound, everything else exact — through both the snapshot's
+/// `cut_report` and the extracted `Hierarchy::cut`.
+#[test]
+fn cut_report_flags_spliced_clusters_after_online_merge() {
+    let ds = two_clumps();
+    let snap = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .threads(2)
+        .graph(BruteKnn::new(4))
+        .clusterer(SccClusterer::geometric(10))
+        .build()
+        .snapshot(&ds, &NativeBackend::new());
+    let coarse = snap.coarsest();
+    assert_eq!(snap.num_clusters(coarse), 2, "{}", snap.summary());
+    let fresh = snap.cut_report(f64::INFINITY);
+    assert!(fresh.is_exact());
+    assert_eq!(fresh.num_clusters(), 2);
+
+    // bridge the two clusters: the online merge splices them into one
+    let tau = snap.threshold(coarse);
+    let centers = snap.centroids(coarse);
+    let batch = scc::data::bridge_chain(&centers[0..2], &centers[2..4], tau);
+    let mut spliced = snap.clone();
+    let report = ingest_batch(
+        &mut spliced,
+        &batch,
+        &IngestConfig { online_merges: true, ..Default::default() },
+        &NativeBackend::new(),
+    );
+    assert_eq!(report.online_merges, 1, "{report:?}");
+
+    let cut = spliced.cut_report(f64::INFINITY);
+    assert_eq!(cut.num_clusters(), 1);
+    assert_eq!(cut.num_spliced(), 1, "the merged survivor must be flagged");
+    assert_eq!(cut.num_exact(), 0);
+    assert!(!cut.is_exact());
+    assert_eq!(cut.splice_bound, tau, "bound is the contraction threshold");
+
+    // the extracted hierarchy carries the same bookkeeping
+    let h = spliced.hierarchy();
+    assert!(!h.is_exact());
+    assert_eq!(h.cut_tau(f64::INFINITY), cut);
+
+    // finer levels stay exact
+    for l in 0..coarse {
+        assert!(spliced.cut_report_at_level(l).is_exact(), "level {l} must stay exact");
+    }
+}
+
+/// Serving composes with any clusterer: an Affinity hierarchy frozen via
+/// `Pipeline::snapshot` serves cuts and rebuilds consistently.
+#[test]
+fn snapshot_serves_affinity_hierarchies() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 200,
+        d: 3,
+        k: 4,
+        sigma: 0.04,
+        delta: 10.0,
+        seed: 9,
+        ..Default::default()
+    });
+    let snap = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .threads(2)
+        .graph(BruteKnn::new(6))
+        .clusterer(AffinityClusterer::default())
+        .build()
+        .snapshot(&ds, &NativeBackend::new());
+    assert_eq!(snap.n, ds.n);
+    assert!(snap.num_levels() >= 2, "{}", snap.summary());
+    // affinity heights are round indices: the top cut is the last round
+    let top = snap.cut_report(f64::INFINITY);
+    assert!(top.is_exact());
+    assert_eq!(top.round, snap.coarsest());
+    // a fresh snapshot of a forest-free mixture has one cluster per
+    // k-NN component; every level nests
+    let h = snap.hierarchy();
+    for w in h.rounds.windows(2) {
+        assert!(w[0].refines(&w[1]));
+    }
+}
+
+/// The shared closest-to-k selection keeps the documented tie-break
+/// (equal distance → the finer round) across the legacy result types and
+/// the unified hierarchy.
+#[test]
+fn closest_to_k_tie_break_is_shared_everywhere() {
+    use scc::core::Partition;
+    let rounds = vec![
+        Partition::singletons(4),
+        Partition::new(vec![0, 0, 1, 1]),
+        Partition::new(vec![0, 0, 0, 0]),
+    ];
+    // counts [4, 2, 1]; k = 3 ties between 4 and 2 → the finer round (4)
+    let idx = scc::pipeline::closest_to_k_index(&rounds, 3);
+    assert_eq!(rounds[idx].num_clusters(), 4);
+    let h = scc::pipeline::Hierarchy::from_rounds(rounds, vec![0.0, 1.0, 2.0]);
+    assert_eq!(h.round_closest_to_k(3).num_clusters(), 4);
+    assert_eq!(h.cut_k(3).num_clusters(), 4);
+}

@@ -6,6 +6,11 @@
 //!   δ-separated target clusterings with perfect dendrogram purity;
 //! * hierarchy invariants across the full pipeline.
 
+// This suite deliberately exercises the legacy free entry point
+// (`scc::run`) — the pipeline trait API is property-tested against it in
+// `pipeline_properties.rs`.
+#![allow(deprecated)]
+
 use scc::core::{Partition, Tree};
 use scc::data::mixture::{measured_delta, separated_mixture, MixtureSpec};
 use scc::knn::knn_graph;

@@ -11,14 +11,16 @@ use scc::core::Dataset;
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph;
 use scc::linkage::Measure;
+use scc::pipeline::{Hierarchy, SccClusterer};
 use scc::runtime::NativeBackend;
-use scc::scc::{run, thresholds::edge_range, SccConfig, SccResult, Thresholds};
+use scc::scc::{thresholds::edge_range, Thresholds};
 use scc::serve::{ingest_batch, HierarchySnapshot, IngestConfig};
 use scc::util::prop::{check, Gen};
 
-/// A randomized small workload: mixture + SCC run (sometimes the
-/// fixed-rounds variant, whose thresholds are strictly increasing).
-fn random_run(g: &mut Gen) -> (Dataset, SccResult) {
+/// A randomized small workload: mixture + SCC run through the pipeline
+/// clusterer (sometimes the fixed-rounds variant, whose thresholds are
+/// strictly increasing).
+fn random_run(g: &mut Gen) -> (Dataset, Hierarchy) {
     let n = g.usize_in(60..220);
     let k = g.usize_in(2..7);
     let ds = separated_mixture(&MixtureSpec {
@@ -33,8 +35,8 @@ fn random_run(g: &mut Gen) -> (Dataset, SccResult) {
     let graph = knn_graph(&ds, g.usize_in(3..9), Measure::L2Sq);
     let (lo, hi) = edge_range(&graph);
     let taus = Thresholds::geometric(lo, hi, g.usize_in(8..30)).taus;
-    let cfg = if g.bool() { SccConfig::fixed_rounds(taus) } else { SccConfig::new(taus) };
-    (ds, run(&graph, &cfg))
+    let clusterer = SccClusterer::with_schedule(taus).fixed_rounds(g.bool());
+    (ds, clusterer.cluster_csr(&graph))
 }
 
 #[test]

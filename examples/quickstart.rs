@@ -8,8 +8,10 @@
 
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::linkage::Measure;
-use scc::metrics::{dendrogram_purity, pairwise_prf};
-use scc::pipeline::{AffinityClusterer, BruteKnn, Cut, Pipeline, SccClusterer};
+use scc::metrics::{adjusted_rand_index, dendrogram_purity, pairwise_prf};
+use scc::pipeline::{
+    AffinityClusterer, BruteKnn, Cut, NnDescentKnn, Pipeline, SccClusterer, TeraHacClusterer,
+};
 use scc::runtime::NativeBackend;
 
 fn main() {
@@ -70,4 +72,23 @@ fn main() {
         "affinity on the same graph: {} rounds, dendrogram purity {aff_dp:.4}",
         affinity.hierarchy.num_rounds()
     );
+
+    // 5. approximate both stages: an NN-descent graph (sub-quadratic
+    //    k-NN) feeding TeraHAC-style (1+ε)-approximate HAC — every merge
+    //    provably within (1+ε) of the best local merge, and the flat cut
+    //    still recovers the planted clusters
+    let tera = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .graph(NnDescentKnn::new(10).seed(42))
+        .clusterer(TeraHacClusterer::new(0.25))
+        .build()
+        .run(&ds, &backend);
+    let tera_cut = tera.hierarchy.cut(Cut::K(20));
+    let tera_f1 = pairwise_prf(&tera_cut.partition, labels).f1;
+    let agreement = adjusted_rand_index(&tera_cut.partition, &report.partition);
+    println!(
+        "terahac(ε=0.25) over nn-descent: {} — F1 {tera_f1:.4}, ARI vs exact-pipeline cut {agreement:.4}",
+        tera_cut.summary()
+    );
+    assert!(tera_f1 > 0.99, "separated data must survive both approximations");
 }

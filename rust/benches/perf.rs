@@ -12,6 +12,7 @@ mod bench_util;
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph_with_backend;
 use scc::linkage::Measure;
+use scc::pipeline::{GraphBuilder, NnDescentKnn, TeraHacClusterer};
 use scc::runtime::{Backend, NativeBackend};
 use scc::scc::{SccConfig, Thresholds};
 use scc::util::stats::{fmt_secs, Summary};
@@ -72,6 +73,12 @@ fn main() {
         });
     }
 
+    // --- approximate graph build: nn-descent vs brute (same k)
+    bench("nn-descent graph n=4k d=64 k=25", 3, || {
+        NnDescentKnn::new(25).seed(7).build(&ds, Measure::L2Sq, &native, 8)
+    });
+    // (brute reference is the threads=8 knn_graph row above)
+
     // --- SCC engines
     let graph = knn_graph_with_backend(&ds, 25, Measure::L2Sq, &native, 8);
     let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
@@ -100,4 +107,13 @@ fn main() {
     // --- affinity (boruvka) for comparison
     #[allow(deprecated)] // micro-bench pins the legacy entry point's cost
     bench("affinity (boruvka rounds) n=4k", 5, || scc::affinity::run(&graph));
+
+    // --- terahac vs scc on the same graph: the ε knob trades merge
+    //     quality for per-epoch parallelism; 0 is exact graph HAC
+    for eps in [0.0f64, 0.25, 1.0] {
+        bench(&format!("terahac eps={eps} n=4k"), 3, || {
+            TeraHacClusterer::new(eps).cluster_csr(&graph)
+        });
+    }
+    bench("graph-hac exact n=4k", 3, || scc::hac::graph::graph_hac(&graph));
 }

@@ -15,7 +15,7 @@ mod bench_util;
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph_with_backend;
 use scc::linkage::Measure;
-use scc::pipeline::SccClusterer;
+use scc::pipeline::{SccClusterer, TeraHacClusterer};
 use scc::serve::{
     assign_to_level, ingest_batch, rebuild_snapshot, HierarchySnapshot, IngestConfig,
     RebuildConfig, ServeIndex, Service, ServiceConfig,
@@ -49,8 +49,44 @@ fn main() {
         seed: cfg.seed,
     });
     let g = knn_graph_with_backend(&ds, 10, Measure::L2Sq, backend.as_ref(), threads);
-    let res = SccClusterer::geometric(25).cluster_csr(&g);
-    let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, threads);
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- clusterer arm: scc vs terahac building a serveable snapshot
+    //     over the same graph (the rebuild worker pays exactly this
+    //     cost); the timed scc build then becomes the served index
+    let t = Timer::start();
+    let scc_snap = {
+        let r = SccClusterer::geometric(25).cluster_csr(&g);
+        HierarchySnapshot::build(&ds, &r, Measure::L2Sq, threads)
+    };
+    let scc_secs = t.secs();
+    rows.push(Row {
+        queries: build_n,
+        path: "build_scc",
+        secs: scc_secs,
+        points_per_sec: build_n as f64 / scc_secs,
+    });
+    let t = Timer::start();
+    let tera_snap = {
+        let r = TeraHacClusterer::new(0.25).cluster_csr(&g);
+        HierarchySnapshot::build(&ds, &r, Measure::L2Sq, threads)
+    };
+    let tera_secs = t.secs();
+    rows.push(Row {
+        queries: build_n,
+        path: "build_terahac",
+        secs: tera_secs,
+        points_per_sec: build_n as f64 / tera_secs,
+    });
+    println!(
+        "build n={:>9}  scc {:>10}  terahac(eps=0.25) {:>10}  ({} vs {} levels)",
+        fmt_count(build_n),
+        fmt_secs(scc_secs),
+        fmt_secs(tera_secs),
+        scc_snap.num_levels(),
+        tera_snap.num_levels()
+    );
+    let snap = scc_snap;
     let level = snap.coarsest();
     let clusters = snap.num_clusters(level);
     println!(
@@ -64,7 +100,6 @@ fn main() {
     );
     let index = Arc::new(ServeIndex::new(snap));
 
-    let mut rows: Vec<Row> = Vec::new();
     for &base_q in &[10_000usize, 100_000] {
         let nq = ((base_q as f64) * cfg.scale).round().max(1000.0) as usize;
         // jittered known points as queries

@@ -13,7 +13,7 @@ use crate::eval::EvalConfig;
 use crate::linkage::Measure;
 use crate::pipeline::{
     AffinityClusterer, Clusterer, DpMeansClusterer, DpVariant, GrinchClusterer, HacClusterer,
-    KMeansClusterer, PerchClusterer, SccClusterer,
+    KMeansClusterer, PerchClusterer, SccClusterer, TeraHacClusterer,
 };
 use crate::runtime::{auto_backend, Backend, NativeBackend, PjrtBackend};
 use anyhow::{bail, Context, Result};
@@ -49,6 +49,11 @@ pub fn make_clusterer(
         ),
         "affinity" => Arc::new(AffinityClusterer::default()),
         "hac" => Arc::new(HacClusterer::default()),
+        "terahac" => Arc::new(
+            TeraHacClusterer::new(cfg.epsilon)
+                .schedule_len(cfg.rounds)
+                .workers(cfg.threads),
+        ),
         "perch" => Arc::new(PerchClusterer::default()),
         "grinch" => Arc::new(GrinchClusterer::default()),
         "kmeans" => Arc::new(KMeansClusterer { k: k_true.max(1), seed: cfg.seed }),
@@ -59,7 +64,7 @@ pub fn make_clusterer(
         }),
         other => bail!(
             "unknown algorithm {other:?} \
-             (scc|scc-fixed|affinity|hac|perch|grinch|kmeans|dpmeans)"
+             (scc|scc-fixed|affinity|hac|terahac|perch|grinch|kmeans|dpmeans)"
         ),
     })
 }
@@ -143,9 +148,16 @@ OPTIONS:
   --backend B     auto | native | pjrt (default auto: pjrt when artifacts exist)
   --dataset D     covtype|ilsvrc_sm|aloi|speaker|imagenet|ilsvrc_lg (cluster/serve)
   --algo A        hierarchy algorithm for cluster/serve/serve-cut:
-                  scc | scc-fixed | affinity | hac | perch | grinch |
-                  kmeans | dpmeans (default scc; all dispatch through
-                  the pipeline Clusterer trait)
+                  scc | scc-fixed | affinity | hac | terahac | perch |
+                  grinch | kmeans | dpmeans (default scc; all dispatch
+                  through the pipeline Clusterer trait)
+  --graph G       graph construction strategy: brute | nn-descent | lsh
+                  (default brute; nn-descent is sub-quadratic approximate
+                  k-NN, composes with every --algo)
+  --epsilon F     terahac approximation slack: each merge is within
+                  (1+F) of the best local merge (default 0.1; 0 = exact
+                  graph HAC, larger = faster/coarser)
+  --nnd-iters N   nn-descent refinement sweep cap (default 12)
   --queries N     serve: assignment queries to submit (default 2000)
   --workers N     serve: pool worker threads (default: --threads)
   --ingest N      serve: mini-batch size to ingest after querying (default 64)
@@ -197,6 +209,19 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             }
             "--dataset" => cli.dataset = val()?.clone(),
             "--algo" => cli.algo = val()?.clone(),
+            "--graph" => {
+                cli.cfg.graph = val()?.clone();
+                if !matches!(cli.cfg.graph.as_str(), "brute" | "nn-descent" | "lsh") {
+                    bail!("unknown graph strategy {:?} (brute|nn-descent|lsh)", cli.cfg.graph);
+                }
+            }
+            "--epsilon" => {
+                cli.cfg.epsilon = val()?.parse().context("--epsilon")?;
+                if !cli.cfg.epsilon.is_finite() || cli.cfg.epsilon < 0.0 {
+                    bail!("--epsilon must be a finite value ≥ 0, got {}", cli.cfg.epsilon);
+                }
+            }
+            "--nnd-iters" => cli.cfg.nnd_iters = val()?.parse().context("--nnd-iters")?,
             "--queries" => cli.serve.queries = val()?.parse().context("--queries")?,
             "--workers" => cli.serve.workers = val()?.parse().context("--workers")?,
             "--ingest" => cli.serve.ingest = val()?.parse().context("--ingest")?,
@@ -342,6 +367,14 @@ fn serve_cmd(
         ServiceConfig,
     };
     let backend = make_backend(kind)?;
+    // resolve the graph strategy before Workload::build consumes it, so
+    // an unknown name is a clean error rather than a panic; the same
+    // builder then serves the initial build and every rebuild
+    let graph_builder: Arc<dyn crate::pipeline::GraphBuilder> =
+        match crate::eval::common::make_graph_builder(cfg) {
+            Some(g) => Arc::from(g),
+            None => bail!("unknown graph strategy {:?} (brute|nn-descent|lsh)", cfg.graph),
+        };
     let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
     let clusterer = make_clusterer(algo, cfg, w.k_true)?;
     let res = w.cluster(clusterer.as_ref(), backend.as_ref());
@@ -381,8 +414,11 @@ fn serve_cmd(
             schedule_len: cfg.rounds,
             threads: cfg.threads,
             poll: std::time::Duration::from_millis(25),
-            // rebuild with the same algorithm that built the index, so
-            // serving over affinity/HAC hierarchies stays consistent
+            // rebuild with the same graph strategy and algorithm that
+            // built the index, so serving over nn-descent/affinity/HAC
+            // indexes stays consistent (and keeps nn-descent's
+            // sub-quadratic build cost on the rebuild path)
+            graph: Some(Arc::clone(&graph_builder)),
             clusterer: Some(Arc::clone(&clusterer)),
             ..Default::default()
         },
@@ -537,8 +573,36 @@ mod tests {
     }
 
     #[test]
+    fn parses_graph_and_terahac_flags() {
+        let cli = parse(&argv("cluster --graph nn-descent --epsilon 0.5 --nnd-iters 6")).unwrap();
+        assert_eq!(cli.cfg.graph, "nn-descent");
+        assert_eq!(cli.cfg.epsilon, 0.5);
+        assert_eq!(cli.cfg.nnd_iters, 6);
+        let defaults = parse(&argv("cluster")).unwrap();
+        assert_eq!(defaults.cfg.graph, "brute");
+        assert_eq!(defaults.cfg.epsilon, 0.1);
+        assert!(parse(&argv("cluster --graph bogus")).is_err());
+        assert!(parse(&argv("cluster --epsilon -1")).is_err());
+        assert!(parse(&argv("cluster --epsilon nope")).is_err());
+        assert!(parse(&argv("cluster --epsilon inf")).is_err());
+        assert!(parse(&argv("cluster --epsilon 1e999")).is_err(), "overflow parses to inf");
+    }
+
+    #[test]
+    fn terahac_over_nn_descent_runs_end_to_end() {
+        let cli = parse(&argv(
+            "cluster --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+             --algo terahac --graph nn-descent --epsilon 0.25",
+        ))
+        .unwrap();
+        let out = execute(&cli).unwrap();
+        assert!(out.contains("dendrogram purity"), "{out}");
+        assert!(out.contains("terahac"), "report must name the algorithm: {out}");
+    }
+
+    #[test]
     fn cluster_command_dispatches_any_algo_through_the_trait() {
-        for algo in ["affinity", "hac", "kmeans"] {
+        for algo in ["affinity", "hac", "terahac", "kmeans"] {
             let cli = parse(&argv(&format!(
                 "cluster --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
                  --algo {algo}"

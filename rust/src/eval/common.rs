@@ -5,9 +5,11 @@
 use crate::core::Dataset;
 use crate::data::analogs::{bench_analog, spec_by_name, AnalogSpec};
 use crate::graph::CsrGraph;
-use crate::knn::knn_graph_with_backend;
 use crate::linkage::Measure;
-use crate::pipeline::{AffinityClusterer, Clusterer, GraphContext, Hierarchy, SccClusterer};
+use crate::pipeline::{
+    AffinityClusterer, BruteKnn, Clusterer, GraphBuilder, GraphContext, Hierarchy, LshKnn,
+    NnDescentKnn, SccClusterer,
+};
 use crate::runtime::Backend;
 use crate::scc::SccConfig;
 use crate::util::{par, timer::PhaseTimer};
@@ -28,6 +30,13 @@ pub struct EvalConfig {
     /// Dissimilarity for the main experiments (paper §4.1 headline uses
     /// dot products).
     pub measure: Measure,
+    /// Graph-construction strategy (`--graph`): `brute` | `nn-descent` |
+    /// `lsh`, resolved by [`make_graph_builder`].
+    pub graph: String,
+    /// Approximation slack ε of the TeraHAC clusterer (`--epsilon`).
+    pub epsilon: f64,
+    /// Maximum NN-descent refinement sweeps (`--nnd-iters`).
+    pub nnd_iters: usize,
 }
 
 impl Default for EvalConfig {
@@ -39,7 +48,24 @@ impl Default for EvalConfig {
             knn_k: 25,
             rounds: 30,
             measure: Measure::CosineDist,
+            graph: "brute".to_string(),
+            epsilon: 0.1,
+            nnd_iters: 12,
         }
+    }
+}
+
+/// Resolve a `--graph` value into its pipeline [`GraphBuilder`] — the
+/// graph-side twin of `cli::make_clusterer`. `None` for unknown names
+/// (the CLI reports them; [`Workload::build`] panics).
+pub fn make_graph_builder(cfg: &EvalConfig) -> Option<Box<dyn GraphBuilder>> {
+    match cfg.graph.as_str() {
+        "brute" => Some(Box::new(BruteKnn::new(cfg.knn_k))),
+        "nn-descent" => Some(Box::new(
+            NnDescentKnn::new(cfg.knn_k).iters(cfg.nnd_iters).seed(cfg.seed),
+        )),
+        "lsh" => Some(Box::new(LshKnn::new(cfg.knn_k))),
+        _ => None,
     }
 }
 
@@ -87,8 +113,10 @@ impl Workload {
         let mut timers = PhaseTimer::new();
         let effective = (bench_scale(name) * cfg.scale).clamp(1e-5, 1.0);
         let ds = timers.time("generate", || bench_analog(spec, effective, cfg.seed));
+        let builder = make_graph_builder(cfg)
+            .unwrap_or_else(|| panic!("unknown graph strategy {:?}", cfg.graph));
         let graph = timers.time("knn_graph", || {
-            knn_graph_with_backend(&ds, cfg.knn_k, cfg.measure, backend, cfg.threads)
+            builder.build(&ds, cfg.measure, backend, cfg.threads)
         });
         let k_true = ds.num_classes();
         Workload {
@@ -244,6 +272,31 @@ mod tests {
         for (a, b) in via_trait.rounds.iter().zip(&legacy.rounds) {
             assert_eq!(a.assign, b.assign);
         }
+    }
+
+    #[test]
+    fn graph_selection_resolves_every_strategy() {
+        let mut cfg = tiny_cfg();
+        for (name, expect) in
+            [("brute", "brute-knn"), ("nn-descent", "nn-descent"), ("lsh", "lsh-knn")]
+        {
+            cfg.graph = name.to_string();
+            let b = make_graph_builder(&cfg).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(b.name(), expect);
+        }
+        cfg.graph = "bogus".to_string();
+        assert!(make_graph_builder(&cfg).is_none());
+    }
+
+    #[test]
+    fn workload_builds_over_nn_descent_graphs() {
+        let cfg = EvalConfig { graph: "nn-descent".to_string(), ..tiny_cfg() };
+        let backend = NativeBackend::new();
+        let w = Workload::build("aloi", &cfg, &backend);
+        assert_eq!(w.graph.n, w.ds.n);
+        assert!(w.graph.num_edges() > 0);
+        let res = w.scc(&cfg, &backend);
+        assert!(res.rounds.len() >= 2);
     }
 
     #[test]

@@ -74,24 +74,33 @@ impl KSmallest {
         }
     }
 
+    /// Insert a candidate; returns whether it entered the list (NN-descent
+    /// counts accepted updates to detect convergence).
     #[inline]
-    pub fn push(&mut self, d: f32, i: u32) {
+    pub fn push(&mut self, d: f32, i: u32) -> bool {
         if self.items.len() >= self.k {
             let &(wd, wi) = self.items.last().unwrap();
             if (d, i) >= (wd, wi) {
-                return;
+                return false;
             }
         }
         // insertion sort position by (d, i); drop exact duplicates (the
         // same pair can be proposed by several LSH tables)
         let pos = self.items.partition_point(|&(pd, pi)| (pd, pi) < (d, i));
         if self.items.get(pos) == Some(&(d, i)) {
-            return;
+            return false;
         }
         self.items.insert(pos, (d, i));
         if self.items.len() > self.k {
             self.items.pop();
         }
+        true
+    }
+
+    /// Current `(dissimilarity, index)` entries, ascending. NN-descent
+    /// reads these to propose neighbor-of-neighbor candidates.
+    pub fn items(&self) -> &[(f32, u32)] {
+        &self.items
     }
 
     /// Drain into ascending (idx, dist) slices of a TopK row.
@@ -125,11 +134,23 @@ mod tests {
         for (d, i) in [(5.0, 0), (1.0, 1), (3.0, 2), (2.0, 3), (4.0, 4)] {
             h.push(d, i);
         }
+        assert_eq!(h.items(), &[(1.0, 1), (2.0, 3), (3.0, 2)]);
         let mut idx = [0u32; 3];
         let mut dist = [0f32; 3];
         h.write_row(&mut idx, &mut dist);
         assert_eq!(idx, [1, 3, 2]);
         assert_eq!(dist, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ksmallest_push_reports_acceptance() {
+        let mut h = KSmallest::new(2);
+        assert!(h.push(2.0, 1));
+        assert!(h.push(1.0, 0));
+        assert!(!h.push(1.0, 0), "exact duplicate is rejected");
+        assert!(!h.push(3.0, 7), "worse than the current worst is rejected");
+        assert!(h.push(0.5, 3), "a better candidate evicts the worst");
+        assert_eq!(h.items(), &[(0.5, 3), (1.0, 0)]);
     }
 
     #[test]

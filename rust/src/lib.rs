@@ -6,8 +6,9 @@
 //! rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the round coordinator, the algorithms (SCC,
-//!   HAC, Affinity, DP-means family, k-means, Perch/Grinch), metrics,
-//!   synthetic workloads and the experiment harness;
+//!   HAC, TeraHAC-style (1+ε)-approximate HAC, Affinity, DP-means
+//!   family, k-means, Perch/Grinch), metrics, synthetic workloads and
+//!   the experiment harness;
 //! * **L2 (python/compile/model.py)** — JAX tile graphs (k-NN top-k,
 //!   nearest-center assignment) AOT-lowered to HLO text;
 //! * **L1 (python/compile/kernels/)** — the Pallas pairwise-distance

@@ -8,7 +8,7 @@ pub mod pairwise;
 
 pub use dendrogram_purity::{dendrogram_purity, sampled_dendrogram_purity};
 pub use dpcost::{dp_means_cost, kmeans_cost};
-pub use pairwise::{cluster_purity, pairwise_prf};
+pub use pairwise::{adjusted_rand_index, cluster_purity, pairwise_prf};
 
 /// Precision / recall / F1 triple.
 #[derive(Debug, Clone, Copy, PartialEq)]

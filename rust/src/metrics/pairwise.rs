@@ -16,18 +16,28 @@ fn choose2(n: u64) -> u64 {
     n * n.saturating_sub(1) / 2
 }
 
+/// Contingency table of two labelings over the same points: per-pair
+/// cell counts and both marginals. Shared by [`pairwise_prf`] and
+/// [`adjusted_rand_index`].
+type Contingency = (HashMap<(u32, u32), u64>, HashMap<u32, u64>, HashMap<u32, u64>);
+
+fn contingency(a: &[u32], b: &[u32]) -> Contingency {
+    debug_assert_eq!(a.len(), b.len());
+    let mut cell: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut a_sz: HashMap<u32, u64> = HashMap::new();
+    let mut b_sz: HashMap<u32, u64> = HashMap::new();
+    for (&ca, &cb) in a.iter().zip(b) {
+        *cell.entry((ca, cb)).or_insert(0) += 1;
+        *a_sz.entry(ca).or_insert(0) += 1;
+        *b_sz.entry(cb).or_insert(0) += 1;
+    }
+    (cell, a_sz, b_sz)
+}
+
 /// Pairwise precision/recall/F1 of `pred` against ground-truth `labels`.
 pub fn pairwise_prf(pred: &Partition, labels: &[u32]) -> Prf {
     assert_eq!(pred.n(), labels.len());
-    let mut cell: HashMap<(u32, u32), u64> = HashMap::new();
-    let mut pred_sz: HashMap<u32, u64> = HashMap::new();
-    let mut true_sz: HashMap<u32, u64> = HashMap::new();
-    for (i, &c) in pred.assign.iter().enumerate() {
-        let t = labels[i];
-        *cell.entry((c, t)).or_insert(0) += 1;
-        *pred_sz.entry(c).or_insert(0) += 1;
-        *true_sz.entry(t).or_insert(0) += 1;
-    }
+    let (cell, pred_sz, true_sz) = contingency(&pred.assign, labels);
     let tp: u64 = cell.values().map(|&n| choose2(n)).sum();
     let pred_pairs: u64 = pred_sz.values().map(|&n| choose2(n)).sum();
     let true_pairs: u64 = true_sz.values().map(|&n| choose2(n)).sum();
@@ -39,6 +49,34 @@ pub fn pairwise_prf(pred: &Partition, labels: &[u32]) -> Prf {
         2.0 * precision * recall / (precision + recall)
     };
     Prf { precision, recall, f1 }
+}
+
+/// Adjusted Rand index between two partitions (Hubert & Arabie 1985):
+/// pair-counting agreement corrected for chance, from the same
+/// contingency table as [`pairwise_prf`]. 1 for identical clusterings,
+/// ≈ 0 for independent ones (can go negative for adversarial overlap).
+///
+/// Degenerate inputs where the chance correction vanishes — both sides
+/// all-singletons or both one cluster — agree perfectly and return 1.
+/// Used by the approximation suite to compare SCC over approximate
+/// k-NN graphs against SCC over the exact graph.
+pub fn adjusted_rand_index(a: &Partition, b: &Partition) -> f64 {
+    assert_eq!(a.n(), b.n(), "partitions must cover the same points");
+    let n = a.n() as u64;
+    if n <= 1 {
+        return 1.0;
+    }
+    let (cell, a_sz, b_sz) = contingency(&a.assign, &b.assign);
+    let index: u64 = cell.values().map(|&c| choose2(c)).sum();
+    let sum_a: u64 = a_sz.values().map(|&c| choose2(c)).sum();
+    let sum_b: u64 = b_sz.values().map(|&c| choose2(c)).sum();
+    let expected = sum_a as f64 * sum_b as f64 / choose2(n) as f64;
+    let max_index = 0.5 * (sum_a + sum_b) as f64;
+    if (max_index - expected).abs() < 1e-12 {
+        // no room for chance correction: identical trivial clusterings
+        return if index as f64 >= expected { 1.0 } else { 0.0 };
+    }
+    (index as f64 - expected) / (max_index - expected)
 }
 
 /// Flat cluster purity: each predicted cluster votes its majority ground
@@ -132,6 +170,43 @@ mod tests {
             assert!((fast.precision - slow.precision).abs() < 1e-12);
             assert!((fast.recall - slow.recall).abs() < 1e-12);
             assert!((fast.f1 - slow.f1).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn ari_pins_the_textbook_cases() {
+        // identical clusterings (under relabeling) score exactly 1
+        let a = Partition::new(vec![0, 0, 1, 1, 2, 2]);
+        let b = Partition::new(vec![5, 5, 9, 9, 1, 1]);
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+        // degenerate-but-identical clusterings score 1
+        assert_eq!(
+            adjusted_rand_index(&Partition::singletons(4), &Partition::singletons(4)),
+            1.0
+        );
+        assert_eq!(
+            adjusted_rand_index(&Partition::single_cluster(4), &Partition::single_cluster(4)),
+            1.0
+        );
+        // symmetric in its arguments
+        let c = Partition::new(vec![0, 0, 0, 1, 1, 2]);
+        assert_eq!(adjusted_rand_index(&a, &c), adjusted_rand_index(&c, &a));
+        assert!(adjusted_rand_index(&a, &c) < 1.0);
+        // Hubert & Arabie's worked example: ari((0,0,0,1,1,1), (0,0,1,1,2,2))
+        let x = Partition::new(vec![0, 0, 0, 1, 1, 1]);
+        let y = Partition::new(vec![0, 0, 1, 1, 2, 2]);
+        // index = 2, expected = 6*3/15 = 1.2, max = 4.5 → 0.8/3.3
+        assert!((adjusted_rand_index(&x, &y) - 0.8 / 3.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_is_near_zero_for_independent_random_partitions() {
+        crate::util::prop::check("ari ≈ 0 on independent labels", 20, |g| {
+            let n = 400;
+            let pred = Partition::new((0..n).map(|_| g.rng().index(5) as u32).collect());
+            let other = Partition::new((0..n).map(|_| g.rng().index(5) as u32).collect());
+            let ari = adjusted_rand_index(&pred, &other);
+            assert!(ari.abs() < 0.15, "independent partitions scored {ari}");
         });
     }
 

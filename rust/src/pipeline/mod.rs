@@ -6,16 +6,19 @@
 //! it flat* (§2, §4). This module turns that framing into an API:
 //!
 //! * [`GraphBuilder`] — dataset → dissimilarity graph. Implementations:
-//!   exact tiled brute force ([`BruteKnn`]), random-hyperplane LSH
-//!   ([`LshKnn`]), and a precomputed CSR pass-through ([`Precomputed`]).
+//!   exact tiled brute force ([`BruteKnn`]), NN-descent refinement
+//!   ([`NnDescentKnn`], sub-quadratic approximate k-NN), random-hyperplane
+//!   LSH ([`LshKnn`]), and a precomputed CSR pass-through
+//!   ([`Precomputed`]).
 //! * [`Clusterer`] — graph (+ dataset context) → [`Hierarchy`], one
 //!   result type for every algorithm: [`SccClusterer`] (sequential
 //!   engine or the sharded coordinator — bit-identical),
 //!   [`AffinityClusterer`] (Borůvka rounds), [`HacClusterer`]
-//!   (graph-restricted exact HAC), [`PerchClusterer`] /
-//!   [`GrinchClusterer`] (online tree baselines), [`KMeansClusterer`]
-//!   and [`DpMeansClusterer`] (flat one-shot partitions lifted into a
-//!   two-level hierarchy).
+//!   (graph-restricted exact HAC), [`TeraHacClusterer`]
+//!   ((1+ε)-approximate HAC with provably good merges),
+//!   [`PerchClusterer`] / [`GrinchClusterer`] (online tree baselines),
+//!   [`KMeansClusterer`] and [`DpMeansClusterer`] (flat one-shot
+//!   partitions lifted into a two-level hierarchy).
 //! * [`Hierarchy`] — nested rounds + heights + per-round splice
 //!   bookkeeping; `tree()` for dendrogram metrics and
 //!   [`Hierarchy::cut`] for flat clusterings with a [`CutReport`] that
@@ -35,14 +38,16 @@ pub mod clusterers;
 pub mod cut;
 pub mod graphs;
 pub mod hierarchy;
+pub mod terahac;
 
 pub use clusterers::{
     AffinityClusterer, DpMeansClusterer, DpVariant, GrinchClusterer, HacClusterer,
     KMeansClusterer, PerchClusterer, SccClusterer,
 };
 pub use cut::{ClusterCut, Cut, CutReport};
-pub use graphs::{BruteKnn, LshKnn, Precomputed};
+pub use graphs::{BruteKnn, LshKnn, NnDescentKnn, Precomputed};
 pub use hierarchy::{closest_to_k_index, Hierarchy};
+pub use terahac::{MergeRecord, TeraHacClusterer};
 
 use crate::core::Dataset;
 use crate::graph::CsrGraph;

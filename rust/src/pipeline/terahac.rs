@@ -1,0 +1,566 @@
+//! TeraHAC-style (1+ε)-approximate agglomerative clustering (PAPERS.md:
+//! "TeraHAC: Hierarchical Agglomerative Clustering of Trillion-Edge
+//! Graphs", Dhulipala et al.).
+//!
+//! TeraHAC scales HAC by giving up the *global* greedy merge order while
+//! provably tracking exact average-linkage HAC: a merge is executed only
+//! when it is **(1+ε)-good**, i.e. within a (1+ε) factor of the best
+//! merge available to either endpoint. The paper states the test on
+//! similarities (`merge similarity ≥ (1/(1+ε)) · max incident
+//! similarity`); this crate works in dissimilarity space (smaller =
+//! closer, see [`crate::linkage`]), where the same test dualizes to
+//!
+//! ```text
+//! linkage(u, v)  ≤  (1+ε) · min over edges incident to u or v of linkage
+//! ```
+//!
+//! At ε = 0 the test admits exactly the *mutual-nearest-neighbor* merges,
+//! and for reducible linkages — the k-NN-graph average linkage here is
+//! reducible, since the merged linkage is a count-weighted mean of the
+//! parts — mutual-NN merging reproduces the exact greedy HAC dendrogram
+//! (the classic NN-chain argument). `rust/tests/approximation_properties.rs`
+//! pins both facts: ε → 0 agreement with [`crate::hac::graph::graph_hac`]
+//! and the per-merge (1+ε) invariant for ε ∈ {0.1, 0.5, 1.0}.
+//!
+//! The loop structure mirrors TeraHAC's epochs:
+//!
+//! 1. **Partition** the current cluster graph by linking every cluster to
+//!    its best (minimum-linkage) neighbor under the current global
+//!    threshold; connected components of that best-edge graph are the
+//!    epoch's subgraphs. Mutual-nearest pairs always co-locate, so every
+//!    epoch with an admissible edge makes progress.
+//! 2. **Contract each partition independently** with the same lazy-heap
+//!    merging as [`crate::hac::graph`], executing only good merges (the
+//!    goodness witness — the minimum incident linkage at merge time — is
+//!    recorded in the [`MergeRecord`] log). Partitions touch disjoint
+//!    state and cross-partition aggregates are frozen for the epoch, so
+//!    the outcome is independent of partition scheduling — `workers` is
+//!    a throughput knob, never a semantics knob.
+//! 3. **Re-key** the cluster graph (merge aggregates whose endpoints
+//!    fused — exact, fixed-point [`LinkAgg`] addition), and repeat until
+//!    an epoch performs no merge; then **raise the global dissimilarity
+//!    threshold** (TeraHAC lowers its similarity threshold) along a
+//!    geometric schedule and continue until the graph is fully
+//!    contracted.
+
+use super::{Clusterer, GraphContext, Hierarchy};
+use crate::graph::{CsrGraph, UnionFind};
+use crate::linkage::LinkAgg;
+use crate::runtime::Backend;
+use crate::scc::{thresholds, Thresholds};
+use crate::util::par;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// One executed merge with its goodness witness, in execution order.
+/// `a`/`b` use the same tree-node numbering as
+/// [`crate::core::Tree::from_merges`] (leaves `0..n`, merge `i` creates
+/// node `n + i`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergeRecord {
+    pub a: u32,
+    pub b: u32,
+    /// Average linkage of the merged pair at merge time.
+    pub linkage: f64,
+    /// Minimum linkage over every edge incident to either endpoint at
+    /// merge time (the merge edge included, so `min_incident ≤ linkage`).
+    /// The (1+ε) invariant is `linkage ≤ (1+ε) · min_incident`.
+    pub min_incident: f64,
+    /// Epoch that executed the merge.
+    pub epoch: usize,
+    /// Global dissimilarity threshold in force during that epoch.
+    pub threshold: f64,
+}
+
+/// TeraHAC-style (1+ε)-approximate HAC as a pipeline [`Clusterer`].
+///
+/// `epsilon` trades quality for merge parallelism: 0 reproduces exact
+/// graph HAC (one mutual-NN wavefront at a time), larger values admit
+/// more merges per epoch at a bounded cost in merge quality.
+///
+/// ```
+/// use scc::data::mixture::{separated_mixture, MixtureSpec};
+/// use scc::linkage::Measure;
+/// use scc::pipeline::{BruteKnn, Cut, Pipeline, TeraHacClusterer};
+/// use scc::runtime::NativeBackend;
+///
+/// let ds = separated_mixture(&MixtureSpec {
+///     n: 120, d: 3, k: 4, sigma: 0.05, delta: 8.0, ..Default::default()
+/// });
+/// let run = Pipeline::builder()
+///     .measure(Measure::L2Sq)
+///     .graph(BruteKnn::new(8))
+///     .clusterer(TeraHacClusterer::new(0.2))
+///     .build()
+///     .run(&ds, &NativeBackend::new());
+/// let report = run.hierarchy.cut(Cut::K(4));
+/// assert_eq!(report.partition.n(), ds.n);
+/// assert!(report.is_exact(), "batch hierarchies carry no online splices");
+/// ```
+#[derive(Debug, Clone)]
+pub struct TeraHacClusterer {
+    /// Approximation slack of the good-merge test (≥ 0).
+    pub epsilon: f64,
+    /// Round cap for the merge-prefix → [`Hierarchy`] conversion
+    /// (0 = one round per merge; default 64, as [`super::HacClusterer`]).
+    pub levels: usize,
+    /// Length of the geometric global-threshold schedule (anchored to
+    /// the graph's edge range; a final ∞ phase always runs).
+    pub schedule_len: usize,
+    workers: usize,
+}
+
+impl TeraHacClusterer {
+    pub fn new(epsilon: f64) -> TeraHacClusterer {
+        assert!(epsilon >= 0.0 && epsilon.is_finite(), "epsilon must be ≥ 0, got {epsilon}");
+        TeraHacClusterer { epsilon, levels: 64, schedule_len: 25, workers: 0 }
+    }
+
+    /// Round cap for the produced hierarchy (0 = every merge).
+    pub fn levels(mut self, levels: usize) -> TeraHacClusterer {
+        self.levels = levels;
+        self
+    }
+
+    /// Global-threshold schedule length.
+    pub fn schedule_len(mut self, len: usize) -> TeraHacClusterer {
+        self.schedule_len = len.max(1);
+        self
+    }
+
+    /// Threads that contract partitions concurrently (≤ 1 = sequential).
+    /// Partitions own disjoint state, so the result is **bit-identical
+    /// for every worker count** (pinned by the approximation test suite).
+    pub fn workers(mut self, workers: usize) -> TeraHacClusterer {
+        self.workers = workers;
+        self
+    }
+
+    /// Cluster a CSR graph directly. The trait impl delegates here.
+    pub fn cluster_csr(&self, graph: &CsrGraph) -> Hierarchy {
+        let (merges, _) = self.merge_sequence(graph);
+        Hierarchy::from_merge_prefixes(graph.n, &merges, self.levels)
+    }
+
+    /// The full merge computation: the binary merge list (in
+    /// [`crate::core::Tree::from_merges`] numbering, execution order) plus
+    /// the per-merge goodness log the approximation tests assert on.
+    pub fn merge_sequence(&self, graph: &CsrGraph) -> (Vec<(u32, u32, f64)>, Vec<MergeRecord>) {
+        let n = graph.n;
+        let mut merges: Vec<(u32, u32, f64)> = Vec::new();
+        let mut log: Vec<MergeRecord> = Vec::new();
+        if n == 0 || graph.num_edges() == 0 {
+            return (merges, log);
+        }
+
+        // cluster graph at union-find roots, same layout as hac::graph
+        let mut adj: Vec<HashMap<u32, LinkAgg>> = vec![HashMap::new(); n];
+        for u in 0..n as u32 {
+            for (v, w) in graph.neighbors(u) {
+                if u < v {
+                    let agg = LinkAgg::new(w as f64);
+                    adj[u as usize].insert(v, agg);
+                    adj[v as usize].insert(u, agg);
+                }
+            }
+        }
+        let mut uf = UnionFind::new(n);
+        let mut node_id: Vec<u32> = (0..n as u32).collect();
+
+        // ascending dissimilarity schedule; ∞ phase guarantees full
+        // contraction of every connected component
+        let (lo, hi) = thresholds::edge_range(graph);
+        let mut taus = Thresholds::geometric(lo, hi, self.schedule_len.max(1)).taus;
+        taus.push(f64::INFINITY);
+
+        let mut epoch = 0usize;
+        for &tau in &taus {
+            loop {
+                let made =
+                    self.run_epoch(&mut adj, &mut uf, &mut node_id, &mut merges, &mut log, tau, epoch);
+                epoch += 1;
+                if made == 0 {
+                    break;
+                }
+            }
+        }
+        (merges, log)
+    }
+
+    /// One epoch at global threshold `tau`: partition by best neighbor,
+    /// contract partitions (concurrently when `workers > 1` — outcomes
+    /// are scheduling-independent), apply merges in deterministic
+    /// partition order, then re-key the cluster graph. Returns the number
+    /// of merges executed.
+    #[allow(clippy::too_many_arguments)]
+    fn run_epoch(
+        &self,
+        adj: &mut Vec<HashMap<u32, LinkAgg>>,
+        uf: &mut UnionFind,
+        node_id: &mut [u32],
+        merges: &mut Vec<(u32, u32, f64)>,
+        log: &mut Vec<MergeRecord>,
+        tau: f64,
+        epoch: usize,
+    ) -> usize {
+        let n = adj.len();
+        // best (minimum-linkage, tie-break smaller neighbor id) edge per
+        // live cluster root
+        let mut part = UnionFind::new(n);
+        let mut any = false;
+        for r in 0..n {
+            if adj[r].is_empty() {
+                continue;
+            }
+            let mut best: Option<(f64, u32)> = None;
+            for (&nbr, agg) in &adj[r] {
+                let cand = (agg.avg(), nbr);
+                match best {
+                    Some(b) if cand >= b => {}
+                    _ => best = Some(cand),
+                }
+            }
+            let (avg, nbr) = best.expect("non-empty adjacency");
+            if avg <= tau {
+                part.union(r as u32, nbr);
+                any = true;
+            }
+        }
+        if !any {
+            return 0;
+        }
+
+        // group live roots into partitions, ordered by smallest member
+        let mut groups: HashMap<u32, Vec<u32>> = HashMap::new();
+        for r in 0..n as u32 {
+            if !adj[r as usize].is_empty() {
+                groups.entry(part.find(r)).or_default().push(r);
+            }
+        }
+        let mut jobs: Vec<LocalJob> = Vec::new();
+        let mut members_of: Vec<Vec<u32>> = groups.into_values().filter(|m| m.len() >= 2).collect();
+        members_of.sort_by_key(|m| m[0]); // members pushed in ascending r
+        for members in members_of {
+            let maps = members.iter().map(|&m| std::mem::take(&mut adj[m as usize])).collect();
+            jobs.push(LocalJob { members, maps });
+        }
+
+        // contract partitions: pure function of the inputs, so par_map's
+        // scheduling cannot change any outcome (the parallel path clones
+        // each partition's maps; the sequential path consumes them)
+        let eps = self.epsilon;
+        let outcomes: Vec<LocalOutcome> = if self.workers > 1 {
+            par::par_map(&jobs, self.workers, |job| {
+                contract_partition(&job.members, job.maps.clone(), eps, tau)
+            })
+        } else {
+            jobs.into_iter()
+                .map(|job| contract_partition(&job.members, job.maps, eps, tau))
+                .collect()
+        };
+
+        // apply merges in deterministic partition order
+        let mut made = 0usize;
+        for out in &outcomes {
+            for m in &out.merges {
+                let (ra, rb) = (uf.find(m.keep), uf.find(m.gone));
+                debug_assert_ne!(ra, rb);
+                merges.push((node_id[ra as usize], node_id[rb as usize], m.linkage));
+                log.push(MergeRecord {
+                    a: node_id[ra as usize],
+                    b: node_id[rb as usize],
+                    linkage: m.linkage,
+                    min_incident: m.min_incident,
+                    epoch,
+                    threshold: tau,
+                });
+                uf.union(ra, rb);
+                let root = uf.find(ra);
+                node_id[root as usize] = (n + merges.len() - 1) as u32;
+                made += 1;
+            }
+        }
+
+        // write the contracted partition maps back at their current roots
+        for out in outcomes {
+            for (rep, map) in out.final_maps {
+                let root = uf.find(rep);
+                adj[root as usize] = map;
+            }
+        }
+
+        // re-key in place: only maps still holding a key whose endpoint
+        // fused this epoch are rewritten, folding those aggregates
+        // together (exact fixed-point sums — order-independent)
+        if made > 0 {
+            for r in 0..n {
+                if adj[r].is_empty() {
+                    continue;
+                }
+                debug_assert_eq!(uf.find(r as u32), r as u32, "live maps sit at roots");
+                if !adj[r].keys().any(|&k| uf.find(k) != k) {
+                    continue;
+                }
+                let old = std::mem::take(&mut adj[r]);
+                let mut fresh = HashMap::with_capacity(old.len());
+                for (nbr, agg) in old {
+                    let nn = uf.find(nbr);
+                    if nn == r as u32 {
+                        continue;
+                    }
+                    fresh.entry(nn).and_modify(|e: &mut LinkAgg| e.merge(&agg)).or_insert(agg);
+                }
+                adj[r] = fresh;
+            }
+        }
+        made
+    }
+}
+
+impl Clusterer for TeraHacClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, _backend: &dyn Backend) -> Hierarchy {
+        self.cluster_csr(cx.graph)
+    }
+
+    fn name(&self) -> &'static str {
+        "terahac"
+    }
+}
+
+/// One partition's frozen input: its member cluster roots (ascending) and
+/// their adjacency maps (keys are epoch-start roots — members or
+/// cross-partition clusters).
+struct LocalJob {
+    members: Vec<u32>,
+    maps: Vec<HashMap<u32, LinkAgg>>,
+}
+
+/// One intra-partition merge, by the *representative* (minimum original
+/// root) of each side, in execution order.
+#[derive(Debug, Clone, Default)]
+struct LocalMerge {
+    keep: u32,
+    gone: u32,
+    linkage: f64,
+    min_incident: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct LocalOutcome {
+    merges: Vec<LocalMerge>,
+    /// Surviving clusters: (representative root, adjacency map).
+    final_maps: Vec<(u32, HashMap<u32, LinkAgg>)>,
+}
+
+/// Heap key ordered by (linkage, rep_a, rep_b) ascending via `Reverse` —
+/// the same discipline as [`crate::hac::graph`].
+#[derive(Debug, PartialEq)]
+struct Key(f64, u32, u32);
+
+impl Eq for Key {}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+            .then(self.2.cmp(&other.2))
+    }
+}
+
+/// Contract one partition: lazy-heap merging over intra-partition pairs
+/// with linkage ≤ `tau`, executing only (1+ε)-good merges. Pure function
+/// of its inputs — reads/writes no shared state.
+fn contract_partition(
+    members: &[u32],
+    mut maps: Vec<HashMap<u32, LinkAgg>>,
+    epsilon: f64,
+    tau: f64,
+) -> LocalOutcome {
+    let m = members.len();
+    let idx_of = |root: u32| members.binary_search(&root).expect("member root");
+    let mut uf = UnionFind::new(m);
+    // rep[local root] = minimum original root of the fused set — stable
+    // global names for heap keys and the returned merge list
+    let mut rep: Vec<u32> = members.to_vec();
+
+    let mut heap: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+    for (li, map) in maps.iter().enumerate() {
+        let a = members[li];
+        for (&b, agg) in map {
+            if b > a && members.binary_search(&b).is_ok() {
+                let avg = agg.avg();
+                if avg <= tau {
+                    heap.push(Reverse(Key(avg, a, b)));
+                }
+            }
+        }
+    }
+
+    let mut out = LocalOutcome::default();
+    while let Some(Reverse(Key(avg, a, b))) = heap.pop() {
+        if avg > tau {
+            break; // pops are non-decreasing: nothing admissible remains
+        }
+        let (la, lb) = (uf.find(idx_of(a) as u32), uf.find(idx_of(b) as u32));
+        if la == lb {
+            continue; // stale: already fused
+        }
+        let (ka, kb) = (rep[la as usize], rep[lb as usize]);
+        if (a, b) != (ka.min(kb), ka.max(kb)) {
+            continue; // stale: one side has a newer representative
+        }
+        let cur = maps[la as usize].get(&kb).copied();
+        let fresh = matches!(cur, Some(agg)
+            if (agg.avg() - avg).abs() <= f64::EPSILON * avg.abs().max(1.0));
+        if !fresh {
+            continue; // stale: aggregate changed since this entry was pushed
+        }
+        // goodness witness: minimum linkage incident to either side (the
+        // merge edge included), cross-partition edges counted — frozen
+        // this epoch, so blocked pairs stay blocked until re-partitioning
+        let min_incident = maps[la as usize]
+            .values()
+            .chain(maps[lb as usize].values())
+            .map(LinkAgg::avg)
+            .fold(f64::INFINITY, f64::min);
+        if avg > (1.0 + epsilon) * min_incident {
+            continue; // not a good merge under this ε
+        }
+
+        let keep = ka.min(kb);
+        let gone = ka.max(kb);
+        out.merges.push(LocalMerge { keep, gone, linkage: avg, min_incident });
+
+        // fuse adjacency exactly as hac::graph does
+        let (lk, lg) = if keep == ka { (la, lb) } else { (lb, la) };
+        let gone_map = std::mem::take(&mut maps[lg as usize]);
+        let mut keep_map = std::mem::take(&mut maps[lk as usize]);
+        keep_map.remove(&gone);
+        for (nbr, agg) in gone_map {
+            if nbr == keep {
+                continue;
+            }
+            keep_map.entry(nbr).and_modify(|e| e.merge(&agg)).or_insert(agg);
+        }
+        uf.union(la, lb);
+        let root = uf.find(la);
+        rep[root as usize] = keep;
+        // rewrite intra-partition back-references and push refreshed keys
+        for (&nbr, agg) in &keep_map {
+            if let Ok(ni) = members.binary_search(&nbr) {
+                let ln = uf.find(ni as u32);
+                // intra keys always name live representatives: every
+                // earlier fuse rewrote its neighbors' keys in this loop
+                debug_assert_eq!(rep[ln as usize], nbr);
+                let na = &mut maps[ln as usize];
+                na.remove(&keep);
+                na.remove(&gone);
+                na.insert(keep, *agg);
+                let (x, y) = (keep.min(nbr), keep.max(nbr));
+                let refreshed = agg.avg();
+                if refreshed <= tau {
+                    heap.push(Reverse(Key(refreshed, x, y)));
+                }
+            }
+        }
+        maps[root as usize] = keep_map;
+    }
+
+    for li in 0..m {
+        if uf.find(li as u32) == li as u32 {
+            out.final_maps.push((rep[li], std::mem::take(&mut maps[li])));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::hac::graph::graph_hac;
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+
+    fn workload(seed: u64) -> CsrGraph {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 160,
+            d: 3,
+            k: 4,
+            sigma: 0.05,
+            delta: 8.0,
+            seed,
+            ..Default::default()
+        });
+        knn_graph(&ds, 6, Measure::L2Sq)
+    }
+
+    #[test]
+    fn contracts_every_component_like_exact_hac() {
+        let g = workload(7);
+        let (tera, log) = TeraHacClusterer::new(0.3).merge_sequence(&g);
+        let (_, exact) = graph_hac(&g);
+        // both contract each connected component to a single cluster
+        assert_eq!(tera.len(), exact.len());
+        assert_eq!(log.len(), tera.len());
+        let h = TeraHacClusterer::new(0.3).cluster_csr(&g);
+        assert_eq!(h.n(), g.n);
+        for w in h.rounds.windows(2) {
+            assert!(w[0].refines(&w[1]), "merge-prefix rounds must nest");
+        }
+        h.tree().validate().unwrap();
+    }
+
+    #[test]
+    fn eps_zero_reproduces_exact_merge_heights() {
+        let g = workload(11);
+        let (tera, _) = TeraHacClusterer::new(0.0).merge_sequence(&g);
+        let (_, exact) = graph_hac(&g);
+        assert_eq!(tera.len(), exact.len());
+        let mut a: Vec<f64> = tera.iter().map(|m| m.2).collect();
+        let mut b: Vec<f64> = exact.iter().map(|m| m.2).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y, "ε = 0 merge heights must be bit-identical to exact HAC");
+        }
+    }
+
+    #[test]
+    fn every_merge_is_good_and_workers_do_not_matter() {
+        let g = workload(3);
+        for eps in [0.0, 0.25, 1.0] {
+            let (seq, log) = TeraHacClusterer::new(eps).merge_sequence(&g);
+            for r in &log {
+                assert!(r.min_incident <= r.linkage + 1e-12, "{r:?}");
+                assert!(
+                    r.linkage <= (1.0 + eps) * r.min_incident * (1.0 + 1e-12),
+                    "merge violates the (1+{eps}) invariant: {r:?}"
+                );
+            }
+            for workers in [2usize, 4, 8] {
+                let (par, plog) = TeraHacClusterer::new(eps).workers(workers).merge_sequence(&g);
+                assert_eq!(seq, par, "workers={workers} changed the merge list");
+                assert_eq!(log, plog, "workers={workers} changed the log");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_graphs_yield_trivial_hierarchies() {
+        let g = CsrGraph::from_edges(1, &[]);
+        let h = TeraHacClusterer::new(0.5).cluster_csr(&g);
+        assert_eq!(h.num_rounds(), 1);
+        assert_eq!(h.n(), 1);
+        let (merges, log) = TeraHacClusterer::new(0.5).merge_sequence(&g);
+        assert!(merges.is_empty() && log.is_empty());
+    }
+}

@@ -1,0 +1,344 @@
+//! Cross-algorithm approximation-guarantee tests (ISSUE 4 acceptance
+//! criteria) — the suite that keeps every approximate component honest
+//! against its exact reference:
+//!
+//! 1. **ε → 0 exactness** — TeraHAC with ε = 0 admits only
+//!    mutual-nearest-neighbor merges, which for the reducible k-NN-graph
+//!    average linkage reproduce exact greedy graph HAC: same merge
+//!    count, bit-identical sorted merge heights (both sides aggregate
+//!    with exact fixed-point [`scc::linkage::LinkAgg`] sums along the
+//!    same dendrogram), and identical dendrogram cuts at every probe
+//!    height — on 12 seeded random mixtures plus both hand geometries;
+//! 2. **(1+ε) good-merge invariant** — for ε ∈ {0.1, 0.5, 1.0}, every
+//!    executed merge recorded in the [`scc::pipeline::MergeRecord`] log
+//!    satisfies `linkage ≤ (1+ε) · min_incident` (and `min_incident ≤
+//!    linkage`, since the merge edge is itself incident);
+//! 3. **hierarchy sanity** — TeraHAC hierarchies nest, carry monotone
+//!    heights, and `cut(k)` is monotone in `k`;
+//! 4. **NN-descent quality** — recall@k ≥ 0.9 against exact brute-force
+//!    k-NN on clustered data, and SCC over the NN-descent graph agrees
+//!    with SCC over the exact graph (ARI) at the ground-truth cut;
+//! 5. **determinism** — TeraHAC and NN-descent are bit-identical across
+//!    repeated runs with one seed, and TeraHAC is unaffected by
+//!    `workers ∈ {1, 2, 4, 8}` (the online_merge_properties pattern).
+
+use scc::core::{Dataset, Tree};
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::hac::graph::graph_hac;
+use scc::knn::{all_pairs_topk, knn_graph};
+use scc::linkage::Measure;
+use scc::metrics::adjusted_rand_index;
+use scc::pipeline::{Cut, NnDescentKnn, SccClusterer, TeraHacClusterer};
+use scc::runtime::NativeBackend;
+use scc::scc::{thresholds::edge_range, Thresholds};
+use scc::util::prop::{check, Gen};
+use scc::util::Rng;
+
+const KNN_K: usize = 5;
+
+/// Hand geometry 1: five tight clumps on a line at irregular positions
+/// (no two inter-clump gaps equal, so linkage ties cannot blur the
+/// ε = 0 comparison).
+fn line_clumps() -> Dataset {
+    let mut rng = Rng::new(0xA11CE);
+    let mut data = Vec::new();
+    let centers = [0.0f32, 2.3, 4.9, 7.1, 9.8];
+    for &c in &centers {
+        for _ in 0..7 {
+            data.push(c + 0.03 * rng.normal_f32());
+            data.push(0.03 * rng.normal_f32());
+        }
+    }
+    Dataset::new("line_clumps", data, 7 * centers.len(), 2)
+}
+
+/// Hand geometry 2: six clumps on a jittered 3×2 grid.
+fn grid_clumps() -> Dataset {
+    let mut rng = Rng::new(0x96D);
+    let centers: [(f32, f32); 6] =
+        [(0.0, 0.0), (3.1, 0.2), (6.3, -0.1), (0.2, 3.3), (3.4, 3.1), (6.1, 3.2)];
+    let mut data = Vec::new();
+    for &(x, y) in &centers {
+        for _ in 0..6 {
+            data.push(x + 0.04 * rng.normal_f32());
+            data.push(y + 0.04 * rng.normal_f32());
+        }
+    }
+    Dataset::new("grid_clumps", data, 6 * centers.len(), 2)
+}
+
+/// The 12 seeded random datasets of criterion 1.
+fn seeded_mixtures() -> Vec<Dataset> {
+    (0..12u64)
+        .map(|s| {
+            separated_mixture(&MixtureSpec {
+                n: 80 + 12 * s as usize,
+                d: 2 + (s % 3) as usize,
+                k: 3 + (s % 4) as usize,
+                sigma: 0.05,
+                delta: 8.0,
+                imbalance: 0.0,
+                seed: 1000 + s,
+            })
+        })
+        .collect()
+}
+
+fn all_datasets() -> Vec<Dataset> {
+    let mut ds = seeded_mixtures();
+    ds.push(line_clumps());
+    ds.push(grid_clumps());
+    ds
+}
+
+/// Criterion (a): the ε → 0 merge sequence reaches the exact graph-HAC
+/// dendrogram — merge count, bit-identical sorted heights, identical
+/// cuts at every probe height, and (in particular) the same top-level
+/// partition.
+#[test]
+fn terahac_eps_zero_matches_exact_graph_hac() {
+    for ds in all_datasets() {
+        let g = knn_graph(&ds, KNN_K, Measure::L2Sq);
+        let (exact_tree, exact) = graph_hac(&g);
+        let (tera, log) = TeraHacClusterer::new(0.0).merge_sequence(&g);
+        assert_eq!(tera.len(), exact.len(), "{}: merge count differs", ds.name);
+        assert_eq!(log.len(), tera.len(), "{}: one log record per merge", ds.name);
+
+        // heights: both sides aggregate exact fixed-point sums along the
+        // same dendrogram, so the sorted height lists are bit-identical
+        let mut ha: Vec<f64> = tera.iter().map(|m| m.2).collect();
+        let mut hb: Vec<f64> = exact.iter().map(|m| m.2).collect();
+        ha.sort_by(|x, y| x.partial_cmp(y).expect("finite heights"));
+        hb.sort_by(|x, y| x.partial_cmp(y).expect("finite heights"));
+        assert_eq!(ha, hb, "{}: ε = 0 merge heights must match exact HAC exactly", ds.name);
+
+        // dendrogram equality: cuts agree at probe heights between every
+        // pair of consecutive distinct merge heights, and above the top
+        let tera_tree = Tree::from_merges(ds.n, &tera);
+        let mut probes: Vec<f64> = Vec::new();
+        let mut distinct = hb.clone();
+        distinct.dedup();
+        probes.push(distinct.first().copied().unwrap_or(0.0) / 2.0);
+        for w in distinct.windows(2) {
+            probes.push(0.5 * (w[0] + w[1]));
+        }
+        if let Some(&top) = distinct.last() {
+            probes.push(top + 0.5); // the forest-component (top-level) cut
+        }
+        for &h in &probes {
+            let a = tera_tree.cut_at(h);
+            let b = exact_tree.cut_at(h);
+            assert!(
+                a.same_clustering(&b),
+                "{}: cut at {h} differs ({} vs {} clusters)",
+                ds.name,
+                a.num_clusters(),
+                b.num_clusters()
+            );
+        }
+    }
+}
+
+/// Criterion (b): every executed merge satisfies the (1+ε) good-merge
+/// invariant, asserted on the recorded merge log.
+#[test]
+fn terahac_merges_satisfy_the_good_merge_invariant() {
+    for eps in [0.1f64, 0.5, 1.0] {
+        for ds in all_datasets() {
+            let g = knn_graph(&ds, KNN_K, Measure::L2Sq);
+            let (merges, log) = TeraHacClusterer::new(eps).merge_sequence(&g);
+            assert_eq!(merges.len(), log.len());
+            // full contraction: the merge count is forced by the
+            // component structure, whatever ε admits along the way
+            let (_, exact) = graph_hac(&g);
+            assert_eq!(merges.len(), exact.len(), "{}: must contract fully", ds.name);
+            for r in &log {
+                assert!(
+                    r.min_incident <= r.linkage + 1e-12,
+                    "{}: the merge edge is incident to itself: {r:?}",
+                    ds.name
+                );
+                assert!(
+                    r.linkage <= (1.0 + eps) * r.min_incident * (1.0 + 1e-12),
+                    "{} ε={eps}: merge violates the (1+ε) invariant: {r:?}",
+                    ds.name
+                );
+                assert!(r.linkage <= r.threshold, "{}: merged above the phase τ: {r:?}", ds.name);
+            }
+        }
+    }
+}
+
+/// Criterion (c): TeraHAC hierarchies nest with monotone heights and a
+/// monotone cut(k), across random datasets, ε values, and level caps.
+#[test]
+fn terahac_hierarchies_nest_and_cut_monotonically() {
+    check("terahac nesting + cut(k) monotone", 10, |g: &mut Gen| {
+        let ds = separated_mixture(&MixtureSpec {
+            n: g.usize_in(60..220),
+            d: g.usize_in(2..5),
+            k: g.usize_in(2..7),
+            sigma: 0.05,
+            delta: g.f64_in(6.0, 12.0),
+            imbalance: 0.0,
+            seed: g.rng().next_u64(),
+        });
+        let graph = knn_graph(&ds, g.usize_in(3..9), Measure::L2Sq);
+        let eps = *g.choose(&[0.0f64, 0.1, 0.5, 1.0]);
+        let h = TeraHacClusterer::new(eps)
+            .levels(g.usize_in(0..40))
+            .cluster_csr(&graph);
+        assert_eq!(h.n(), ds.n);
+        assert_eq!(h.rounds[0].num_clusters(), ds.n, "round 0 is singletons");
+        for (r, w) in h.rounds.windows(2).enumerate() {
+            assert!(w[0].refines(&w[1]), "rounds {r}/{} not nested", r + 1);
+        }
+        assert!(h.heights.windows(2).all(|w| w[0] <= w[1]), "heights not monotone");
+        h.tree().validate().unwrap();
+        let mut prev = 0usize;
+        for k in [1usize, 2, 3, 5, 8, 13, ds.n / 2, ds.n] {
+            let report = h.cut(Cut::K(k));
+            assert!(
+                report.num_clusters() >= prev,
+                "cut({k}) gave {} clusters after {prev}",
+                report.num_clusters()
+            );
+            prev = report.num_clusters();
+            assert!(report.is_exact(), "fresh batch hierarchies are exact");
+            assert_eq!(report.partition.n(), ds.n);
+        }
+        // cut(τ) at every stored height reproduces that round's partition
+        for (r, &tau) in h.heights.iter().enumerate() {
+            let report = h.cut_tau(tau);
+            assert!(report.round >= r || h.heights[report.round] == tau);
+            assert_eq!(report.partition, h.rounds[report.round]);
+        }
+    });
+}
+
+/// Criterion (d), part 1: NN-descent recall@k against exact brute force
+/// on clustered data.
+#[test]
+fn nn_descent_recall_at_k_beats_point_nine() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 320,
+        d: 6,
+        k: 6,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 77,
+    });
+    let backend = NativeBackend::new();
+    let k = 8;
+    let nnd = NnDescentKnn::new(k).seed(5).topk(&ds, Measure::L2Sq, &backend, 2);
+    let brute = all_pairs_topk(&ds, k, Measure::L2Sq, &backend, 2);
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for q in 0..ds.n {
+        let (want, _) = brute.row(q);
+        let (got, _) = nnd.row(q);
+        for &w in want.iter().filter(|&&i| i != u32::MAX) {
+            total += 1;
+            if got.contains(&w) {
+                hit += 1;
+            }
+        }
+    }
+    let recall = hit as f64 / total as f64;
+    assert!(recall >= 0.9, "recall@{k} = {recall} (want ≥ 0.9)");
+}
+
+/// Criterion (d), part 2: SCC over the NN-descent graph agrees with SCC
+/// over the exact brute-force graph — same threshold schedule, compared
+/// by ARI at the ground-truth-k cut and against the planted labels.
+#[test]
+fn scc_over_nn_descent_tracks_scc_over_brute() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 300,
+        d: 5,
+        k: 5,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 31,
+    });
+    let k_true = ds.num_classes();
+    let labels = ds.labels.clone().expect("mixture is labeled");
+    let label_part = scc::core::Partition::new(labels);
+
+    let brute_g = knn_graph(&ds, 8, Measure::L2Sq);
+    let backend = NativeBackend::new();
+    let nnd_topk = NnDescentKnn::new(8).seed(5).topk(&ds, Measure::L2Sq, &backend, 2);
+    let nnd_g = scc::knn::topk_to_graph(ds.n, &nnd_topk);
+
+    // one shared explicit schedule so the comparison isolates the graph
+    let (lo, hi) = edge_range(&brute_g);
+    let taus = Thresholds::geometric(lo, hi, 20).taus;
+    let over_brute = SccClusterer::with_schedule(taus.clone()).cluster_csr(&brute_g);
+    let over_nnd = SccClusterer::with_schedule(taus).cluster_csr(&nnd_g);
+
+    let pb = over_brute.round_closest_to_k(k_true);
+    let pn = over_nnd.round_closest_to_k(k_true);
+    let cross = adjusted_rand_index(pb, pn);
+    assert!(cross >= 0.95, "SCC-over-NN-descent drifted from SCC-over-brute: ARI {cross}");
+    let ari_b = adjusted_rand_index(pb, &label_part);
+    let ari_n = adjusted_rand_index(pn, &label_part);
+    assert!(
+        ari_n >= ari_b - 0.05,
+        "NN-descent graph lost label agreement: {ari_n} vs brute {ari_b}"
+    );
+}
+
+/// Criterion (e): bit-identical determinism — repeated runs with one
+/// seed, and TeraHAC across worker counts (the
+/// `online_merge_properties.rs` worker-sweep pattern).
+#[test]
+fn terahac_is_bit_identical_across_runs_and_worker_counts() {
+    check("terahac runs/workers bit-identical", 6, |g: &mut Gen| {
+        let ds = separated_mixture(&MixtureSpec {
+            n: g.usize_in(60..180),
+            d: g.usize_in(2..4),
+            k: g.usize_in(2..6),
+            sigma: 0.05,
+            delta: g.f64_in(6.0, 12.0),
+            imbalance: 0.0,
+            seed: g.rng().next_u64(),
+        });
+        let graph = knn_graph(&ds, g.usize_in(3..8), Measure::L2Sq);
+        let eps = *g.choose(&[0.0f64, 0.1, 0.5, 1.0]);
+        let (m1, l1) = TeraHacClusterer::new(eps).merge_sequence(&graph);
+        let (m2, l2) = TeraHacClusterer::new(eps).merge_sequence(&graph);
+        assert_eq!(m1, m2, "repeated runs must be bit-identical");
+        assert_eq!(l1, l2);
+        let h1 = TeraHacClusterer::new(eps).cluster_csr(&graph);
+        for workers in [1usize, 2, 4, 8] {
+            let (mw, lw) =
+                TeraHacClusterer::new(eps).workers(workers).merge_sequence(&graph);
+            assert_eq!(m1, mw, "workers={workers} changed the merge sequence");
+            assert_eq!(l1, lw, "workers={workers} changed the goodness log");
+            let hw = TeraHacClusterer::new(eps).workers(workers).cluster_csr(&graph);
+            assert_eq!(h1, hw, "workers={workers} changed the hierarchy");
+        }
+    });
+}
+
+#[test]
+fn nn_descent_is_bit_identical_per_seed() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 240,
+        d: 4,
+        k: 4,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 9,
+    });
+    let backend = NativeBackend::new();
+    for seed in [0u64, 1, 0xDEAD] {
+        let a = NnDescentKnn::new(6).seed(seed).topk(&ds, Measure::L2Sq, &backend, 1);
+        let b = NnDescentKnn::new(6).seed(seed).topk(&ds, Measure::L2Sq, &backend, 8);
+        assert_eq!(a.idx, b.idx, "seed {seed}: neighbor ids must be bit-identical");
+        assert_eq!(a.dist, b.dist, "seed {seed}: distances must be bit-identical");
+    }
+}

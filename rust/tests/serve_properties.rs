@@ -5,17 +5,22 @@
 //!    produced at that round;
 //! 2. ingesting zero points is a no-op — the snapshot is bit-identical
 //!    (full structural equality, including fixed-point aggregates);
-//! 3. ingest preserves the hierarchical-nesting invariant at every level.
+//! 3. ingest preserves the hierarchical-nesting invariant at every level;
+//! 4. the rebuild path composes with a pluggable approximate clusterer:
+//!    a [`RebuildConfig`] carrying a `TeraHacClusterer` swaps in a fresh
+//!    exact snapshot with monotone generations and clean `cut_report`
+//!    exactness flags.
 
 use scc::core::Dataset;
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph;
 use scc::linkage::Measure;
-use scc::pipeline::{Hierarchy, SccClusterer};
+use scc::pipeline::{BruteKnn, Hierarchy, Pipeline, SccClusterer, TeraHacClusterer};
 use scc::runtime::NativeBackend;
 use scc::scc::{thresholds::edge_range, Thresholds};
-use scc::serve::{ingest_batch, HierarchySnapshot, IngestConfig};
+use scc::serve::{ingest_batch, HierarchySnapshot, IngestConfig, RebuildConfig, ServeIndex};
 use scc::util::prop::{check, Gen};
+use std::sync::Arc;
 
 /// A randomized small workload: mixture + SCC run through the pipeline
 /// clusterer (sometimes the fixed-rounds variant, whose thresholds are
@@ -131,4 +136,86 @@ fn ingest_preserves_nesting_and_counts() {
         // level-0 stays one singleton per point
         assert_eq!(snap.num_clusters(0), snap.n);
     });
+}
+
+/// Serving integration for the pluggable approximate clusterer: build a
+/// TeraHAC index, ingest a bridge that splices clusters online (so the
+/// cut stops being exact), then rebuild through a `RebuildConfig` whose
+/// clusterer *is* `TeraHacClusterer`. The swap must stamp monotone
+/// generations, resolve every splice (cut_report exact again), keep all
+/// ingested points, and reset drift.
+#[test]
+fn rebuild_with_terahac_clusterer_restores_exactness_and_generations() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 240,
+        d: 3,
+        k: 4,
+        sigma: 0.04,
+        delta: 10.0,
+        imbalance: 0.0,
+        seed: 13,
+    });
+    let backend = NativeBackend::new();
+    let snap = Pipeline::builder()
+        .measure(Measure::L2Sq)
+        .threads(2)
+        .graph(BruteKnn::new(5))
+        .clusterer(TeraHacClusterer::new(0.25))
+        .build()
+        .snapshot(&ds, &backend);
+    assert!(snap.is_exact(), "fresh terahac snapshots are exact");
+    assert_eq!(snap.generation, 0);
+    let coarse = snap.coarsest();
+    assert!(snap.num_clusters(coarse) >= 2, "{}", snap.summary());
+
+    let index = ServeIndex::new(snap);
+    // bridge the two nearest serving clusters: the online merge splices,
+    // and the cut report must flag the approximation
+    let before = index.snapshot();
+    let d = before.d;
+    let tau = before.threshold(coarse);
+    let (a, b, _) = before.nearest_cluster_pair(coarse).expect("≥ 2 clusters");
+    let centers = before.centroids(coarse);
+    let batch = scc::data::bridge_chain(
+        &centers[a as usize * d..a as usize * d + d],
+        &centers[b as usize * d..b as usize * d + d],
+        tau,
+    );
+    let report = index.ingest(
+        &batch,
+        &IngestConfig { online_merges: true, drift_limit: 0.01, ..Default::default() },
+        &backend,
+    );
+    assert_eq!(report.online_merges, 1, "{report:?}");
+    assert!(report.rebuild_recommended);
+    let spliced = index.snapshot();
+    assert_eq!(spliced.generation, 1, "ingest stamps the next generation");
+    assert!(!spliced.cut_report(f64::INFINITY).is_exact(), "splice must be flagged");
+
+    // rebuild with the same approximate clusterer plugged in
+    let cfg = RebuildConfig {
+        drift_limit: 0.01,
+        knn_k: 5,
+        threads: 2,
+        clusterer: Some(Arc::new(TeraHacClusterer::new(0.25))),
+        graph: Some(Arc::new(BruteKnn::new(5))),
+        ..Default::default()
+    };
+    assert!(index.rebuild_if_needed(&cfg, &backend), "drift crossed: must rebuild");
+    let rebuilt = index.snapshot();
+    assert_eq!(rebuilt.generation, 2, "generations stay monotone through the swap");
+    assert_eq!(rebuilt.n, ds.n + batch.len() / d, "rebuild keeps every ingested point");
+    assert!(rebuilt.is_exact(), "a fresh build resolves all splices");
+    assert_eq!(rebuilt.ingested, 0, "drift resets after the swap");
+    let cut = rebuilt.cut_report(f64::INFINITY);
+    assert!(cut.is_exact(), "post-rebuild cuts report every cluster exact");
+    assert_eq!(cut.num_spliced(), 0);
+    // the bridged clumps stay merged in the fresh exact build
+    assert!(
+        cut.num_clusters() < before.num_clusters(coarse),
+        "the bridge must keep the merged pair together after rebuild"
+    );
+    // a second check without new drift is a no-op
+    assert!(!index.rebuild_if_needed(&cfg, &backend));
+    assert_eq!(index.generation(), 2);
 }

@@ -1,11 +1,17 @@
 //! Microbenchmarks of the hot paths (criterion-less; §Perf of
 //! EXPERIMENTS.md records the numbers):
 //!
-//! * k-NN tile execution — native vs PJRT (L1 kernel through the runtime)
+//! * k-NN tile execution — native vs PJRT, prepared vs unprepared (the
+//!   PreparedDataset one-shot norms + panel layout vs per-call rebuild)
 //! * full k-NN graph build (threads sweep)
-//! * SCC round engine (argmin scan + contraction)
+//! * SCC round engine — sequential oracle vs engine-parallel rounds
+//!   (argmin scan + bucketed contraction, `scc::run_rounds`)
 //! * union-find throughput
 //! * coordinator end-to-end vs sequential engine
+//! * terahac — flat sorted-vec adjacency vs the PR-4 hashmap oracle
+//!
+//! Writes machine-readable results to `BENCH_perf.json` at the repo root
+//! (schema documented there) in addition to the stdout report.
 
 mod bench_util;
 
@@ -13,13 +19,22 @@ use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph_with_backend;
 use scc::linkage::Measure;
 use scc::pipeline::{GraphBuilder, NnDescentKnn, TeraHacClusterer};
-use scc::runtime::{Backend, NativeBackend};
+use scc::runtime::{Backend, NativeBackend, PreparedDataset};
 use scc::scc::{SccConfig, Thresholds};
 use scc::util::stats::{fmt_secs, Summary};
-use scc::util::Timer;
+use scc::util::{par, Timer};
+
+struct Row {
+    arm: String,
+    samples: usize,
+    mean_secs: f64,
+    std_secs: f64,
+    min_secs: f64,
+}
 
 /// criterion-like sample loop: warmup once, then time `samples` runs.
-fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) {
+/// Every timed arm also lands in `rows` for the JSON report.
+fn bench<T>(rows: &mut Vec<Row>, name: &str, samples: usize, mut f: impl FnMut() -> T) {
     let _ = f(); // warmup
     let mut s = Summary::new();
     for _ in 0..samples {
@@ -33,22 +48,36 @@ fn bench<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) {
         fmt_secs(s.std()),
         fmt_secs(s.min())
     );
+    rows.push(Row {
+        arm: name.to_string(),
+        samples,
+        mean_secs: s.mean(),
+        std_secs: s.std(),
+        min_secs: s.min(),
+    });
 }
 
 fn main() {
     let backend = bench_util::backend();
     println!("perf microbenches (backend for tile bench: {})\n", backend.name());
+    let mut rows: Vec<Row> = Vec::new();
 
-    // --- tile: 256 queries x 2048 candidates x 64 dims, top-32
+    // --- tile: 256 queries x 2048 candidates x 64 dims, top-32;
+    //     unprepared (per-call norms + panels) vs prepared (one-shot)
     let mut rng = scc::util::Rng::new(1);
     let q: Vec<f32> = (0..256 * 64).map(|_| rng.normal_f32()).collect();
     let c: Vec<f32> = (0..2048 * 64).map(|_| rng.normal_f32()).collect();
     let native = NativeBackend::new();
-    bench("tile 256x2048x64 k32 native", 20, || {
+    bench(&mut rows, "tile 256x2048x64 k32 unprepared", 20, || {
         native.pairwise_topk(&q, 256, &c, 2048, 64, 32, Measure::L2Sq)
     });
+    let qp = PreparedDataset::new(&q, 256, 64);
+    let cp = PreparedDataset::new(&c, 2048, 64);
+    bench(&mut rows, "tile 256x2048x64 k32 prepared", 20, || {
+        native.pairwise_topk_prepared(&qp.tile(0..256), &cp.tile(0..2048), 32, Measure::L2Sq)
+    });
     if backend.name() == "pjrt" {
-        bench("tile 256x2048x64 k32 pjrt", 20, || {
+        bench(&mut rows, "tile 256x2048x64 k32 pjrt", 20, || {
             backend.pairwise_topk(&q, 256, &c, 2048, 64, 32, Measure::L2Sq)
         });
     }
@@ -63,30 +92,37 @@ fn main() {
         ..Default::default()
     });
     for threads in [1usize, 4, 8] {
-        bench(&format!("knn_graph n=4k d=64 k=25 threads={threads}"), 3, || {
+        bench(&mut rows, &format!("knn_graph n=4k d=64 k=25 threads={threads}"), 3, || {
             knn_graph_with_backend(&ds, 25, Measure::L2Sq, &native, threads)
         });
     }
     if backend.name() == "pjrt" {
-        bench("knn_graph n=4k d=64 k=25 pjrt t=8", 3, || {
+        bench(&mut rows, "knn_graph n=4k d=64 k=25 pjrt t=8", 3, || {
             knn_graph_with_backend(&ds, 25, Measure::L2Sq, backend.as_ref(), 8)
         });
     }
 
     // --- approximate graph build: nn-descent vs brute (same k)
-    bench("nn-descent graph n=4k d=64 k=25", 3, || {
+    bench(&mut rows, "nn-descent graph n=4k d=64 k=25", 3, || {
         NnDescentKnn::new(25).seed(7).build(&ds, Measure::L2Sq, &native, 8)
     });
     // (brute reference is the threads=8 knn_graph row above)
 
-    // --- SCC engines
+    // --- SCC engines: sequential oracle vs engine-parallel rounds
+    //     (bit-identical outputs — this arm times the round hot path)
     let graph = knn_graph_with_backend(&ds, 25, Measure::L2Sq, &native, 8);
     let (lo, hi) = scc::scc::thresholds::edge_range(&graph);
     let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 30).taus);
-    #[allow(deprecated)] // micro-bench pins the legacy entry point's cost
-    bench("scc sequential n=4k", 5, || scc::scc::run(&graph, &cfg));
+    bench(&mut rows, "scc rounds sequential n=4k", 5, || {
+        scc::scc::run_rounds(&graph, &cfg, 1)
+    });
     for threads in [2usize, 4, 8] {
-        bench(&format!("scc coordinator n=4k workers={threads}"), 5, || {
+        bench(&mut rows, &format!("scc rounds parallel n=4k t={threads}"), 5, || {
+            scc::scc::run_rounds(&graph, &cfg, threads)
+        });
+    }
+    for threads in [2usize, 4, 8] {
+        bench(&mut rows, &format!("scc coordinator n=4k workers={threads}"), 5, || {
             scc::coordinator::run_parallel(&graph, &cfg, threads)
         });
     }
@@ -96,7 +132,7 @@ fn main() {
         let mut r = scc::util::Rng::new(2);
         (0..1_000_000).map(|_| (r.index(100_000) as u32, r.index(100_000) as u32)).collect()
     };
-    bench("union-find 1M unions / 100k nodes", 10, || {
+    bench(&mut rows, "union-find 1M unions / 100k nodes", 10, || {
         let mut uf = scc::graph::UnionFind::new(100_000);
         for &(a, b) in &edges {
             uf.union(a, b);
@@ -106,14 +142,49 @@ fn main() {
 
     // --- affinity (boruvka) for comparison
     #[allow(deprecated)] // micro-bench pins the legacy entry point's cost
-    bench("affinity (boruvka rounds) n=4k", 5, || scc::affinity::run(&graph));
+    bench(&mut rows, "affinity (boruvka rounds) n=4k", 5, || scc::affinity::run(&graph));
 
     // --- terahac vs scc on the same graph: the ε knob trades merge
-    //     quality for per-epoch parallelism; 0 is exact graph HAC
+    //     quality for per-epoch parallelism; 0 is exact graph HAC.
+    //     flat = the sorted-vec adjacency hot path; hashmap = the PR-4
+    //     oracle (bit-identical outputs, see hotpath_equivalence.rs)
     for eps in [0.0f64, 0.25, 1.0] {
-        bench(&format!("terahac eps={eps} n=4k"), 3, || {
-            TeraHacClusterer::new(eps).cluster_csr(&graph)
+        bench(&mut rows, &format!("terahac flat eps={eps} n=4k"), 3, || {
+            TeraHacClusterer::new(eps).merge_sequence(&graph)
         });
     }
-    bench("graph-hac exact n=4k", 3, || scc::hac::graph::graph_hac(&graph));
+    bench(&mut rows, "terahac hashmap eps=0.25 n=4k", 3, || {
+        TeraHacClusterer::new(0.25).merge_sequence_reference(&graph)
+    });
+    bench(&mut rows, "graph-hac exact n=4k", 3, || scc::hac::graph::graph_hac(&graph));
+
+    write_json(&rows, backend.name(), par::default_threads());
+}
+
+/// Hand-rolled JSON (the offline registry has no serde) — mirrors the
+/// `BENCH_serve.json` writer in `benches/serve.rs`.
+fn write_json(rows: &[Row], backend: &str, threads: usize) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"perf_hot_paths\",\n");
+    s.push_str("  \"unit\": \"seconds\",\n");
+    s.push_str(&format!("  \"backend\": \"{backend}\",\n"));
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"arm\": \"{}\", \"samples\": {}, \"mean_secs\": {:.6}, \"std_secs\": {:.6}, \"min_secs\": {:.6}}}{}\n",
+            r.arm,
+            r.samples,
+            r.mean_secs,
+            r.std_secs,
+            r.min_secs,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_perf.json", &s) {
+        Ok(()) => println!("wrote BENCH_perf.json"),
+        Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),
+    }
 }

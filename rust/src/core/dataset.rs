@@ -4,6 +4,27 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
+/// Row squared norms of an `n × d` row-major matrix — **the** squared-norm
+/// implementation for the whole crate. The native kernel, the prepared
+/// tile layout ([`crate::runtime::PreparedDataset`]), and
+/// [`Dataset::normalize_rows`] all fold rows through this one loop, so
+/// every ‖x‖² in the system is the same left-to-right f32 sum (bit-exact
+/// agreement between paths that hand norms around and paths that would
+/// otherwise recompute them).
+pub fn row_sq_norms(data: &[f32], n: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), n * d);
+    let mut out = vec![0.0f32; n];
+    for (i, slot) in out.iter_mut().enumerate() {
+        let row = &data[i * d..(i + 1) * d];
+        let mut s = 0.0f32;
+        for &v in row {
+            s += v * v;
+        }
+        *slot = s;
+    }
+    out
+}
+
 /// A dataset of `n` points in `d` dimensions, stored row-major as `f32`,
 /// with optional ground-truth cluster labels (used only by evaluation).
 #[derive(Debug, Clone)]
@@ -49,16 +70,22 @@ impl Dataset {
         }
     }
 
+    /// Row squared norms (`‖xᵢ‖²` per point), via the crate-wide
+    /// [`row_sq_norms`] helper.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        row_sq_norms(&self.data, self.n, self.d)
+    }
+
     /// ℓ2-normalize every row in place (zero rows are left unchanged).
     /// After normalization, ℓ2² distances lie in `[0, 4]` and dot products
     /// in `[-1, 1]` — the ranges the paper's threshold schedules assume
     /// (App. B.3).
     pub fn normalize_rows(&mut self) {
+        let norms = row_sq_norms(&self.data, self.n, self.d);
         for i in 0..self.n {
-            let row = &mut self.data[i * self.d..(i + 1) * self.d];
-            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let norm = norms[i].sqrt();
             if norm > 0.0 {
-                for x in row.iter_mut() {
+                for x in &mut self.data[i * self.d..(i + 1) * self.d] {
                     *x /= norm;
                 }
             }
@@ -170,6 +197,14 @@ mod tests {
     fn toy() -> Dataset {
         Dataset::new("toy", vec![0.0, 0.0, 3.0, 4.0, 1.0, 0.0], 3, 2)
             .with_labels(vec![0, 1, 0])
+    }
+
+    #[test]
+    fn row_sq_norms_is_the_single_norm_source() {
+        let ds = toy();
+        let norms = ds.row_sq_norms();
+        assert_eq!(norms, vec![0.0, 25.0, 1.0]);
+        assert_eq!(norms, row_sq_norms(&ds.data, ds.n, ds.d));
     }
 
     #[test]

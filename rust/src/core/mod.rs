@@ -6,6 +6,6 @@ pub mod dataset;
 pub mod partition;
 pub mod tree;
 
-pub use dataset::Dataset;
+pub use dataset::{row_sq_norms, Dataset};
 pub use partition::Partition;
 pub use tree::Tree;

@@ -10,7 +10,7 @@ use super::{topk_to_graph, KSmallest, TopK};
 use crate::core::Dataset;
 use crate::graph::CsrGraph;
 use crate::linkage::Measure;
-use crate::runtime::{Backend, NativeBackend};
+use crate::runtime::{Backend, NativeBackend, PreparedDataset};
 use crate::util::par;
 
 /// Candidate tile width. Matches the `M` of the AOT artifacts so the PJRT
@@ -54,19 +54,25 @@ pub fn all_pairs_topk(
     // fetch k+1 per tile so dropping the self-match still leaves k
     let kk = (k + 1).min(n.max(1));
     let mut out = TopK::new(n, k);
+    // one-shot preparation: every row's squared norm and its slot in the
+    // panel layout are computed exactly once per call, then shared
+    // read-only by all query blocks × candidate tiles (both tile widths
+    // are PANEL_W-aligned, so candidate tiles always carry panels; the
+    // same prep serves both sides — query tiles just ignore the panels)
+    let prep = PreparedDataset::new(&ds.data, n, d);
     let out_ptr = SyncOut { idx: out.idx.as_mut_ptr() as usize, dist: out.dist.as_mut_ptr() as usize };
     par::parallel_ranges(n.div_ceil(QUERY_TILE), threads, |_, block_range| {
         for bi in block_range {
             let q0 = bi * QUERY_TILE;
             let q1 = (q0 + QUERY_TILE).min(n);
             let nq = q1 - q0;
-            let queries = &ds.data[q0 * d..q1 * d];
+            let queries = prep.tile(q0..q1);
             let mut heaps: Vec<KSmallest> = (0..nq).map(|_| KSmallest::new(k)).collect();
             let mut c0 = 0usize;
             while c0 < n {
                 let c1 = (c0 + CAND_TILE).min(n);
-                let cands = &ds.data[c0 * d..c1 * d];
-                let tile = backend.pairwise_topk(queries, nq, cands, c1 - c0, d, kk, measure);
+                let tile =
+                    backend.pairwise_topk_prepared(&queries, &prep.tile(c0..c1), kk, measure);
                 for q in 0..nq {
                     let (idx, dist) = tile.row(q);
                     for j in 0..kk {

@@ -65,6 +65,13 @@ impl KSmallest {
         KSmallest { k, items: Vec::with_capacity(k + 1) }
     }
 
+    /// The current admission bound: the k-th smallest distance when the
+    /// list is full, `+∞` while slots remain (or when `k == 0`, where
+    /// nothing is ever admitted anyway). Hot loops use this to reject a
+    /// candidate with one compare — `d > worst()` can never enter —
+    /// before paying for [`KSmallest::push`]; a candidate **at** the
+    /// bound (`d == worst()`) must still go through `push`, which breaks
+    /// the tie by index.
     #[inline]
     pub fn worst(&self) -> f32 {
         if self.items.len() < self.k {
@@ -76,8 +83,19 @@ impl KSmallest {
 
     /// Insert a candidate; returns whether it entered the list (NN-descent
     /// counts accepted updates to detect convergence).
+    ///
+    /// Semantics: while fewer than `k` items are held every new
+    /// `(d, i)` pair is admitted; at capacity the candidate must be
+    /// strictly smaller than the current worst under `(d, i)` order —
+    /// so distance ties at the bound admit only smaller indices —
+    /// and admission evicts the worst. Exact duplicates are rejected
+    /// (several LSH tables can propose the same pair). `k == 0` rejects
+    /// everything.
     #[inline]
     pub fn push(&mut self, d: f32, i: u32) -> bool {
+        if self.k == 0 {
+            return false;
+        }
         if self.items.len() >= self.k {
             let &(wd, wi) = self.items.last().unwrap();
             if (d, i) >= (wd, wi) {
@@ -151,6 +169,49 @@ mod tests {
         assert!(!h.push(3.0, 7), "worse than the current worst is rejected");
         assert!(h.push(0.5, 3), "a better candidate evicts the worst");
         assert_eq!(h.items(), &[(0.5, 3), (1.0, 0)]);
+    }
+
+    #[test]
+    fn worst_is_infinite_while_not_full() {
+        let mut h = KSmallest::new(3);
+        assert!(h.worst().is_infinite(), "empty heap has no bound");
+        h.push(1.0, 0);
+        h.push(2.0, 1);
+        assert!(h.worst().is_infinite(), "partially full heap still admits everything");
+    }
+
+    #[test]
+    fn worst_tracks_the_kth_smallest_when_exactly_full() {
+        let mut h = KSmallest::new(2);
+        h.push(3.0, 0);
+        h.push(1.0, 1);
+        assert_eq!(h.worst(), 3.0);
+        h.push(2.0, 2); // evicts 3.0
+        assert_eq!(h.worst(), 2.0);
+    }
+
+    #[test]
+    fn tie_at_the_worst_bound_is_decided_by_index() {
+        // the early-reject pattern `d <= worst()` must forward ties to
+        // push: equal distance with a smaller index still enters, with a
+        // larger index it does not
+        let mut h = KSmallest::new(2);
+        h.push(1.0, 3);
+        h.push(2.0, 9);
+        assert_eq!(h.worst(), 2.0);
+        let d = 2.0f32;
+        assert!(d <= h.worst(), "tie must not be early-rejected");
+        assert!(h.push(d, 4), "smaller index wins the tie at the bound");
+        assert_eq!(h.items(), &[(1.0, 3), (2.0, 4)]);
+        assert!(!h.push(2.0, 7), "larger index loses the tie at the bound");
+    }
+
+    #[test]
+    fn k_zero_rejects_everything() {
+        let mut h = KSmallest::new(0);
+        assert!(h.worst().is_infinite());
+        assert!(!h.push(1.0, 0));
+        assert!(h.is_empty());
     }
 
     #[test]

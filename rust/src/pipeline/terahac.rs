@@ -42,6 +42,15 @@
 //!    threshold** (TeraHAC lowers its similarity threshold) along a
 //!    geometric schedule and continue until the graph is fully
 //!    contracted.
+//!
+//! Cluster adjacency is TeraHAC's flat, partition-local representation:
+//! one sorted [`FlatAdj`] (`Vec<(neighbor, aggregate)>`) per cluster —
+//! binary-search lookups, cache-linear scans, and one batched
+//! map-sort-fold pass per epoch re-key, instead of the PR-4
+//! `HashMap`-per-cluster layout whose every re-key rebuilt hash tables.
+//! The hashmap implementation is retained verbatim in [`reference`] as
+//! the bit-exactness oracle (`rust/tests/hotpath_equivalence.rs`) and
+//! the `flat-vs-hashmap` bench arm (`benches/perf.rs`).
 
 use super::{Clusterer, GraphContext, Hierarchy};
 use crate::graph::{CsrGraph, UnionFind};
@@ -50,7 +59,7 @@ use crate::runtime::Backend;
 use crate::scc::{thresholds, Thresholds};
 use crate::util::par;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 /// One executed merge with its goodness witness, in execution order.
 /// `a`/`b` use the same tree-node numbering as
@@ -70,6 +79,142 @@ pub struct MergeRecord {
     pub epoch: usize,
     /// Global dissimilarity threshold in force during that epoch.
     pub threshold: f64,
+}
+
+/// Flat sorted adjacency of one cluster: `(neighbor, aggregate)` entries
+/// ascending by neighbor id, one entry per neighbor. All folds over
+/// duplicates are exact fixed-point [`LinkAgg`] sums, so every operation
+/// here is order-independent — the whole point of the layout is that
+/// re-keying becomes one linear map-sort-fold pass over a compact array.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlatAdj {
+    entries: Vec<(u32, LinkAgg)>,
+}
+
+impl FlatAdj {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, (u32, LinkAgg)> {
+        self.entries.iter()
+    }
+
+    /// Binary-search lookup.
+    pub fn get(&self, key: u32) -> Option<LinkAgg> {
+        self.entries
+            .binary_search_by_key(&key, |e| e.0)
+            .ok()
+            .map(|i| self.entries[i].1)
+    }
+
+    /// Insert or overwrite.
+    pub fn insert(&mut self, key: u32, agg: LinkAgg) {
+        match self.entries.binary_search_by_key(&key, |e| e.0) {
+            Ok(i) => self.entries[i].1 = agg,
+            Err(i) => self.entries.insert(i, (key, agg)),
+        }
+    }
+
+    /// Insert or fold into an existing aggregate (exact sum).
+    pub fn merge_in(&mut self, key: u32, agg: LinkAgg) {
+        match self.entries.binary_search_by_key(&key, |e| e.0) {
+            Ok(i) => self.entries[i].1.merge(&agg),
+            Err(i) => self.entries.insert(i, (key, agg)),
+        }
+    }
+
+    pub fn remove(&mut self, key: u32) {
+        if let Ok(i) = self.entries.binary_search_by_key(&key, |e| e.0) {
+            self.entries.remove(i);
+        }
+    }
+
+    /// Best neighbor under `(avg, id)` order, `None` when empty.
+    pub fn best(&self) -> Option<(f64, u32)> {
+        let mut best: Option<(f64, u32)> = None;
+        for &(nbr, agg) in &self.entries {
+            let cand = (agg.avg(), nbr);
+            match best {
+                Some(b) if cand >= b => {}
+                _ => best = Some(cand),
+            }
+        }
+        best
+    }
+
+    /// Minimum incident linkage (∞ when empty).
+    pub fn min_avg(&self) -> f64 {
+        self.entries.iter().map(|(_, agg)| agg.avg()).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Union with `other` (a sorted merge), folding shared neighbors and
+    /// dropping `skip` from `other` — the fuse step of a cluster merge.
+    pub fn absorb(&mut self, other: FlatAdj, skip: u32) {
+        let a = &self.entries;
+        let b = &other.entries;
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            if b[j].0 == skip {
+                j += 1;
+                continue;
+            }
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let mut agg = a[i].1;
+                    agg.merge(&b[j].1);
+                    out.push((a[i].0, agg));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        while j < b.len() {
+            if b[j].0 != skip {
+                out.push(b[j]);
+            }
+            j += 1;
+        }
+        self.entries = out;
+    }
+
+    /// Whether any key names a cluster that fused this epoch.
+    pub fn needs_rekey(&self, uf: &mut UnionFind) -> bool {
+        self.entries.iter().any(|&(k, _)| uf.find(k) != k)
+    }
+
+    /// Batched re-key + compaction: map every key to its union-find
+    /// root, drop self-references, restore sort order, fold duplicates.
+    /// One linear pass plus one sort of the (short) entry list — no
+    /// per-key table rebuilds.
+    pub fn rekey_compact(&mut self, uf: &mut UnionFind, me: u32) {
+        for e in self.entries.iter_mut() {
+            e.0 = uf.find(e.0);
+        }
+        self.entries.retain(|&(k, _)| k != me);
+        self.entries.sort_unstable_by_key(|e| e.0);
+        let mut w = 0usize;
+        for r in 0..self.entries.len() {
+            if w > 0 && self.entries[w - 1].0 == self.entries[r].0 {
+                let agg = self.entries[r].1;
+                self.entries[w - 1].1.merge(&agg);
+            } else {
+                self.entries[w] = self.entries[r];
+                w += 1;
+            }
+        }
+        self.entries.truncate(w);
+    }
 }
 
 /// TeraHAC-style (1+ε)-approximate HAC as a pipeline [`Clusterer`].
@@ -153,8 +298,9 @@ impl TeraHacClusterer {
             return (merges, log);
         }
 
-        // cluster graph at union-find roots, same layout as hac::graph
-        let mut adj: Vec<HashMap<u32, LinkAgg>> = vec![HashMap::new(); n];
+        // cluster graph at union-find roots: flat sorted adjacency per
+        // cluster, same insert (replace) semantics as the hashmap oracle
+        let mut adj: Vec<FlatAdj> = vec![FlatAdj::default(); n];
         for u in 0..n as u32 {
             for (v, w) in graph.neighbors(u) {
                 if u < v {
@@ -187,6 +333,15 @@ impl TeraHacClusterer {
         (merges, log)
     }
 
+    /// The PR-4 `HashMap`-adjacency merge computation, retained as the
+    /// bit-exactness oracle — see [`reference`].
+    pub fn merge_sequence_reference(
+        &self,
+        graph: &CsrGraph,
+    ) -> (Vec<(u32, u32, f64)>, Vec<MergeRecord>) {
+        reference::merge_sequence_hashmap(self, graph)
+    }
+
     /// One epoch at global threshold `tau`: partition by best neighbor,
     /// contract partitions (concurrently when `workers > 1` — outcomes
     /// are scheduling-independent), apply merges in deterministic
@@ -195,7 +350,7 @@ impl TeraHacClusterer {
     #[allow(clippy::too_many_arguments)]
     fn run_epoch(
         &self,
-        adj: &mut Vec<HashMap<u32, LinkAgg>>,
+        adj: &mut Vec<FlatAdj>,
         uf: &mut UnionFind,
         node_id: &mut [u32],
         merges: &mut Vec<(u32, u32, f64)>,
@@ -212,15 +367,7 @@ impl TeraHacClusterer {
             if adj[r].is_empty() {
                 continue;
             }
-            let mut best: Option<(f64, u32)> = None;
-            for (&nbr, agg) in &adj[r] {
-                let cand = (agg.avg(), nbr);
-                match best {
-                    Some(b) if cand >= b => {}
-                    _ => best = Some(cand),
-                }
-            }
-            let (avg, nbr) = best.expect("non-empty adjacency");
+            let (avg, nbr) = adj[r].best().expect("non-empty adjacency");
             if avg <= tau {
                 part.union(r as u32, nbr);
                 any = true;
@@ -230,17 +377,24 @@ impl TeraHacClusterer {
             return 0;
         }
 
-        // group live roots into partitions, ordered by smallest member
-        let mut groups: HashMap<u32, Vec<u32>> = HashMap::new();
+        // group live roots into partitions in first-seen order over
+        // ascending r — i.e. ordered by smallest member, members
+        // ascending (no hashmap, no sort)
+        let mut group_of: Vec<u32> = vec![u32::MAX; n];
+        let mut members_of: Vec<Vec<u32>> = Vec::new();
         for r in 0..n as u32 {
-            if !adj[r as usize].is_empty() {
-                groups.entry(part.find(r)).or_default().push(r);
+            if adj[r as usize].is_empty() {
+                continue;
             }
+            let root = part.find(r) as usize;
+            if group_of[root] == u32::MAX {
+                group_of[root] = members_of.len() as u32;
+                members_of.push(Vec::new());
+            }
+            members_of[group_of[root] as usize].push(r);
         }
         let mut jobs: Vec<LocalJob> = Vec::new();
-        let mut members_of: Vec<Vec<u32>> = groups.into_values().filter(|m| m.len() >= 2).collect();
-        members_of.sort_by_key(|m| m[0]); // members pushed in ascending r
-        for members in members_of {
+        for members in members_of.into_iter().filter(|m| m.len() >= 2) {
             let maps = members.iter().map(|&m| std::mem::take(&mut adj[m as usize])).collect();
             jobs.push(LocalJob { members, maps });
         }
@@ -289,28 +443,21 @@ impl TeraHacClusterer {
             }
         }
 
-        // re-key in place: only maps still holding a key whose endpoint
-        // fused this epoch are rewritten, folding those aggregates
-        // together (exact fixed-point sums — order-independent)
+        // batched re-key: only lists still holding a key whose endpoint
+        // fused this epoch are rewritten — one map-sort-fold pass each
+        // (exact fixed-point sums — order-independent)
         if made > 0 {
             for r in 0..n {
                 if adj[r].is_empty() {
                     continue;
                 }
                 debug_assert_eq!(uf.find(r as u32), r as u32, "live maps sit at roots");
-                if !adj[r].keys().any(|&k| uf.find(k) != k) {
+                if !adj[r].needs_rekey(uf) {
                     continue;
                 }
-                let old = std::mem::take(&mut adj[r]);
-                let mut fresh = HashMap::with_capacity(old.len());
-                for (nbr, agg) in old {
-                    let nn = uf.find(nbr);
-                    if nn == r as u32 {
-                        continue;
-                    }
-                    fresh.entry(nn).and_modify(|e: &mut LinkAgg| e.merge(&agg)).or_insert(agg);
-                }
-                adj[r] = fresh;
+                let mut map = std::mem::take(&mut adj[r]);
+                map.rekey_compact(uf, r as u32);
+                adj[r] = map;
             }
         }
         made
@@ -328,11 +475,11 @@ impl Clusterer for TeraHacClusterer {
 }
 
 /// One partition's frozen input: its member cluster roots (ascending) and
-/// their adjacency maps (keys are epoch-start roots — members or
+/// their adjacency lists (keys are epoch-start roots — members or
 /// cross-partition clusters).
 struct LocalJob {
     members: Vec<u32>,
-    maps: Vec<HashMap<u32, LinkAgg>>,
+    maps: Vec<FlatAdj>,
 }
 
 /// One intra-partition merge, by the *representative* (minimum original
@@ -348,8 +495,8 @@ struct LocalMerge {
 #[derive(Debug, Clone, Default)]
 struct LocalOutcome {
     merges: Vec<LocalMerge>,
-    /// Surviving clusters: (representative root, adjacency map).
-    final_maps: Vec<(u32, HashMap<u32, LinkAgg>)>,
+    /// Surviving clusters: (representative root, adjacency list).
+    final_maps: Vec<(u32, FlatAdj)>,
 }
 
 /// Heap key ordered by (linkage, rep_a, rep_b) ascending via `Reverse` —
@@ -380,7 +527,7 @@ impl Ord for Key {
 /// of its inputs — reads/writes no shared state.
 fn contract_partition(
     members: &[u32],
-    mut maps: Vec<HashMap<u32, LinkAgg>>,
+    mut maps: Vec<FlatAdj>,
     epsilon: f64,
     tau: f64,
 ) -> LocalOutcome {
@@ -394,7 +541,7 @@ fn contract_partition(
     let mut heap: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
     for (li, map) in maps.iter().enumerate() {
         let a = members[li];
-        for (&b, agg) in map {
+        for &(b, agg) in map.iter() {
             if b > a && members.binary_search(&b).is_ok() {
                 let avg = agg.avg();
                 if avg <= tau {
@@ -417,7 +564,7 @@ fn contract_partition(
         if (a, b) != (ka.min(kb), ka.max(kb)) {
             continue; // stale: one side has a newer representative
         }
-        let cur = maps[la as usize].get(&kb).copied();
+        let cur = maps[la as usize].get(kb);
         let fresh = matches!(cur, Some(agg)
             if (agg.avg() - avg).abs() <= f64::EPSILON * avg.abs().max(1.0));
         if !fresh {
@@ -426,11 +573,7 @@ fn contract_partition(
         // goodness witness: minimum linkage incident to either side (the
         // merge edge included), cross-partition edges counted — frozen
         // this epoch, so blocked pairs stay blocked until re-partitioning
-        let min_incident = maps[la as usize]
-            .values()
-            .chain(maps[lb as usize].values())
-            .map(LinkAgg::avg)
-            .fold(f64::INFINITY, f64::min);
+        let min_incident = maps[la as usize].min_avg().min(maps[lb as usize].min_avg());
         if avg > (1.0 + epsilon) * min_incident {
             continue; // not a good merge under this ε
         }
@@ -439,31 +582,26 @@ fn contract_partition(
         let gone = ka.max(kb);
         out.merges.push(LocalMerge { keep, gone, linkage: avg, min_incident });
 
-        // fuse adjacency exactly as hac::graph does
+        // fuse adjacency: sorted-merge union of the two lists
         let (lk, lg) = if keep == ka { (la, lb) } else { (lb, la) };
         let gone_map = std::mem::take(&mut maps[lg as usize]);
         let mut keep_map = std::mem::take(&mut maps[lk as usize]);
-        keep_map.remove(&gone);
-        for (nbr, agg) in gone_map {
-            if nbr == keep {
-                continue;
-            }
-            keep_map.entry(nbr).and_modify(|e| e.merge(&agg)).or_insert(agg);
-        }
+        keep_map.remove(gone);
+        keep_map.absorb(gone_map, keep);
         uf.union(la, lb);
         let root = uf.find(la);
         rep[root as usize] = keep;
         // rewrite intra-partition back-references and push refreshed keys
-        for (&nbr, agg) in &keep_map {
+        for &(nbr, agg) in keep_map.iter() {
             if let Ok(ni) = members.binary_search(&nbr) {
                 let ln = uf.find(ni as u32);
                 // intra keys always name live representatives: every
                 // earlier fuse rewrote its neighbors' keys in this loop
                 debug_assert_eq!(rep[ln as usize], nbr);
                 let na = &mut maps[ln as usize];
-                na.remove(&keep);
-                na.remove(&gone);
-                na.insert(keep, *agg);
+                na.remove(keep);
+                na.remove(gone);
+                na.insert(keep, agg);
                 let (x, y) = (keep.min(nbr), keep.max(nbr));
                 let refreshed = agg.avg();
                 if refreshed <= tau {
@@ -480,6 +618,275 @@ fn contract_partition(
         }
     }
     out
+}
+
+/// The PR-4 `HashMap<u32, LinkAgg>`-per-cluster implementation, kept
+/// verbatim as the oracle the flat layout is proven against:
+/// `rust/tests/hotpath_equivalence.rs` asserts merge-list and log
+/// bit-identity for ε ∈ {0, 0.5}, and `benches/perf.rs` times
+/// flat-vs-hashmap on the same graph. Not wired into any production
+/// path.
+pub mod reference {
+    use super::*;
+    use std::collections::HashMap;
+
+    struct HashJob {
+        members: Vec<u32>,
+        maps: Vec<HashMap<u32, LinkAgg>>,
+    }
+
+    /// See [`TeraHacClusterer::merge_sequence_reference`].
+    pub fn merge_sequence_hashmap(
+        cl: &TeraHacClusterer,
+        graph: &CsrGraph,
+    ) -> (Vec<(u32, u32, f64)>, Vec<MergeRecord>) {
+        let n = graph.n;
+        let mut merges: Vec<(u32, u32, f64)> = Vec::new();
+        let mut log: Vec<MergeRecord> = Vec::new();
+        if n == 0 || graph.num_edges() == 0 {
+            return (merges, log);
+        }
+
+        let mut adj: Vec<HashMap<u32, LinkAgg>> = vec![HashMap::new(); n];
+        for u in 0..n as u32 {
+            for (v, w) in graph.neighbors(u) {
+                if u < v {
+                    let agg = LinkAgg::new(w as f64);
+                    adj[u as usize].insert(v, agg);
+                    adj[v as usize].insert(u, agg);
+                }
+            }
+        }
+        let mut uf = UnionFind::new(n);
+        let mut node_id: Vec<u32> = (0..n as u32).collect();
+
+        let (lo, hi) = thresholds::edge_range(graph);
+        let mut taus = Thresholds::geometric(lo, hi, cl.schedule_len.max(1)).taus;
+        taus.push(f64::INFINITY);
+
+        let mut epoch = 0usize;
+        for &tau in &taus {
+            loop {
+                let made = run_epoch_hashmap(
+                    cl, &mut adj, &mut uf, &mut node_id, &mut merges, &mut log, tau, epoch,
+                );
+                epoch += 1;
+                if made == 0 {
+                    break;
+                }
+            }
+        }
+        (merges, log)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_epoch_hashmap(
+        cl: &TeraHacClusterer,
+        adj: &mut Vec<HashMap<u32, LinkAgg>>,
+        uf: &mut UnionFind,
+        node_id: &mut [u32],
+        merges: &mut Vec<(u32, u32, f64)>,
+        log: &mut Vec<MergeRecord>,
+        tau: f64,
+        epoch: usize,
+    ) -> usize {
+        let n = adj.len();
+        let mut part = UnionFind::new(n);
+        let mut any = false;
+        for r in 0..n {
+            if adj[r].is_empty() {
+                continue;
+            }
+            let mut best: Option<(f64, u32)> = None;
+            for (&nbr, agg) in &adj[r] {
+                let cand = (agg.avg(), nbr);
+                match best {
+                    Some(b) if cand >= b => {}
+                    _ => best = Some(cand),
+                }
+            }
+            let (avg, nbr) = best.expect("non-empty adjacency");
+            if avg <= tau {
+                part.union(r as u32, nbr);
+                any = true;
+            }
+        }
+        if !any {
+            return 0;
+        }
+
+        let mut groups: HashMap<u32, Vec<u32>> = HashMap::new();
+        for r in 0..n as u32 {
+            if !adj[r as usize].is_empty() {
+                groups.entry(part.find(r)).or_default().push(r);
+            }
+        }
+        let mut jobs: Vec<HashJob> = Vec::new();
+        let mut members_of: Vec<Vec<u32>> =
+            groups.into_values().filter(|m| m.len() >= 2).collect();
+        members_of.sort_by_key(|m| m[0]); // members pushed in ascending r
+        for members in members_of {
+            let maps = members.iter().map(|&m| std::mem::take(&mut adj[m as usize])).collect();
+            jobs.push(HashJob { members, maps });
+        }
+
+        let eps = cl.epsilon;
+        let outcomes: Vec<HashOutcome> = jobs
+            .into_iter()
+            .map(|job| contract_partition_hashmap(&job.members, job.maps, eps, tau))
+            .collect();
+
+        let mut made = 0usize;
+        for out in &outcomes {
+            for m in &out.merges {
+                let (ra, rb) = (uf.find(m.keep), uf.find(m.gone));
+                debug_assert_ne!(ra, rb);
+                merges.push((node_id[ra as usize], node_id[rb as usize], m.linkage));
+                log.push(MergeRecord {
+                    a: node_id[ra as usize],
+                    b: node_id[rb as usize],
+                    linkage: m.linkage,
+                    min_incident: m.min_incident,
+                    epoch,
+                    threshold: tau,
+                });
+                uf.union(ra, rb);
+                let root = uf.find(ra);
+                node_id[root as usize] = (n + merges.len() - 1) as u32;
+                made += 1;
+            }
+        }
+
+        for out in outcomes {
+            for (rep, map) in out.final_maps {
+                let root = uf.find(rep);
+                adj[root as usize] = map;
+            }
+        }
+
+        if made > 0 {
+            for r in 0..n {
+                if adj[r].is_empty() {
+                    continue;
+                }
+                if !adj[r].keys().any(|&k| uf.find(k) != k) {
+                    continue;
+                }
+                let old = std::mem::take(&mut adj[r]);
+                let mut fresh = HashMap::with_capacity(old.len());
+                for (nbr, agg) in old {
+                    let nn = uf.find(nbr);
+                    if nn == r as u32 {
+                        continue;
+                    }
+                    fresh.entry(nn).and_modify(|e: &mut LinkAgg| e.merge(&agg)).or_insert(agg);
+                }
+                adj[r] = fresh;
+            }
+        }
+        made
+    }
+
+    #[derive(Debug, Clone, Default)]
+    struct HashOutcome {
+        merges: Vec<LocalMerge>,
+        final_maps: Vec<(u32, HashMap<u32, LinkAgg>)>,
+    }
+
+    fn contract_partition_hashmap(
+        members: &[u32],
+        mut maps: Vec<HashMap<u32, LinkAgg>>,
+        epsilon: f64,
+        tau: f64,
+    ) -> HashOutcome {
+        let m = members.len();
+        let idx_of = |root: u32| members.binary_search(&root).expect("member root");
+        let mut uf = UnionFind::new(m);
+        let mut rep: Vec<u32> = members.to_vec();
+
+        let mut heap: BinaryHeap<Reverse<Key>> = BinaryHeap::new();
+        for (li, map) in maps.iter().enumerate() {
+            let a = members[li];
+            for (&b, agg) in map {
+                if b > a && members.binary_search(&b).is_ok() {
+                    let avg = agg.avg();
+                    if avg <= tau {
+                        heap.push(Reverse(Key(avg, a, b)));
+                    }
+                }
+            }
+        }
+
+        let mut out = HashOutcome::default();
+        while let Some(Reverse(Key(avg, a, b))) = heap.pop() {
+            if avg > tau {
+                break;
+            }
+            let (la, lb) = (uf.find(idx_of(a) as u32), uf.find(idx_of(b) as u32));
+            if la == lb {
+                continue;
+            }
+            let (ka, kb) = (rep[la as usize], rep[lb as usize]);
+            if (a, b) != (ka.min(kb), ka.max(kb)) {
+                continue;
+            }
+            let cur = maps[la as usize].get(&kb).copied();
+            let fresh = matches!(cur, Some(agg)
+                if (agg.avg() - avg).abs() <= f64::EPSILON * avg.abs().max(1.0));
+            if !fresh {
+                continue;
+            }
+            let min_incident = maps[la as usize]
+                .values()
+                .chain(maps[lb as usize].values())
+                .map(LinkAgg::avg)
+                .fold(f64::INFINITY, f64::min);
+            if avg > (1.0 + epsilon) * min_incident {
+                continue;
+            }
+
+            let keep = ka.min(kb);
+            let gone = ka.max(kb);
+            out.merges.push(LocalMerge { keep, gone, linkage: avg, min_incident });
+
+            let (lk, lg) = if keep == ka { (la, lb) } else { (lb, la) };
+            let gone_map = std::mem::take(&mut maps[lg as usize]);
+            let mut keep_map = std::mem::take(&mut maps[lk as usize]);
+            keep_map.remove(&gone);
+            for (nbr, agg) in gone_map {
+                if nbr == keep {
+                    continue;
+                }
+                keep_map.entry(nbr).and_modify(|e| e.merge(&agg)).or_insert(agg);
+            }
+            uf.union(la, lb);
+            let root = uf.find(la);
+            rep[root as usize] = keep;
+            for (&nbr, agg) in &keep_map {
+                if let Ok(ni) = members.binary_search(&nbr) {
+                    let ln = uf.find(ni as u32);
+                    debug_assert_eq!(rep[ln as usize], nbr);
+                    let na = &mut maps[ln as usize];
+                    na.remove(&keep);
+                    na.remove(&gone);
+                    na.insert(keep, *agg);
+                    let (x, y) = (keep.min(nbr), keep.max(nbr));
+                    let refreshed = agg.avg();
+                    if refreshed <= tau {
+                        heap.push(Reverse(Key(refreshed, x, y)));
+                    }
+                }
+            }
+            maps[root as usize] = keep_map;
+        }
+
+        for li in 0..m {
+            if uf.find(li as u32) == li as u32 {
+                out.final_maps.push((rep[li], std::mem::take(&mut maps[li])));
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -552,6 +959,51 @@ mod tests {
                 assert_eq!(log, plog, "workers={workers} changed the log");
             }
         }
+    }
+
+    #[test]
+    fn flat_adjacency_matches_hashmap_reference() {
+        let g = workload(5);
+        for eps in [0.0, 0.5] {
+            let cl = TeraHacClusterer::new(eps);
+            let (flat, flat_log) = cl.merge_sequence(&g);
+            let (hash, hash_log) = cl.merge_sequence_reference(&g);
+            assert_eq!(flat, hash, "ε={eps}: flat merge list drifted from the hashmap oracle");
+            assert_eq!(flat_log, hash_log, "ε={eps}: goodness logs differ");
+        }
+    }
+
+    #[test]
+    fn flat_adj_primitives() {
+        let mut adj = FlatAdj::default();
+        assert!(adj.is_empty() && adj.best().is_none());
+        assert!(adj.min_avg().is_infinite());
+        adj.merge_in(5, LinkAgg::new(2.0));
+        adj.merge_in(2, LinkAgg::new(1.0));
+        adj.merge_in(5, LinkAgg::new(4.0)); // folds: avg(5) = 3.0
+        assert_eq!(adj.get(5).unwrap().count, 2);
+        assert_eq!(adj.best(), Some((1.0, 2)));
+        assert_eq!(adj.min_avg(), 1.0);
+        // absorb a sorted neighbor list, skipping the merged-away id
+        let mut other = FlatAdj::default();
+        other.merge_in(2, LinkAgg::new(3.0));
+        other.merge_in(7, LinkAgg::new(0.5));
+        other.merge_in(9, LinkAgg::new(9.0));
+        adj.absorb(other, 9);
+        assert_eq!(adj.get(2).unwrap().count, 2, "shared neighbor folds");
+        assert_eq!(adj.get(7).unwrap().count, 1);
+        assert!(adj.get(9).is_none(), "skip key must be dropped");
+        // rekey: 5 and 7 fuse into 5; entries fold and stay sorted
+        let mut uf = UnionFind::new(10);
+        uf.union(5, 7);
+        let root = uf.find(5);
+        let mut keys: Vec<u32> = adj.iter().map(|e| e.0).collect();
+        assert_eq!(keys, vec![2, 5, 7]);
+        adj.rekey_compact(&mut uf, 2);
+        keys = adj.iter().map(|e| e.0).collect();
+        assert_eq!(keys, vec![root]);
+        let folded = adj.get(root).unwrap();
+        assert_eq!(folded.count, 3, "5's two edges and 7's one edge fold");
     }
 
     #[test]

@@ -22,8 +22,123 @@ pub use manifest::Manifest;
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 
+use crate::core::row_sq_norms;
 use crate::knn::TopK;
 use crate::linkage::Measure;
+
+/// Candidate lanes per micro-kernel panel: the native backend's
+/// register-blocked cross-term kernel walks candidates [`PANEL_W`] at a
+/// time over the interleaved layout built by [`PreparedDataset`].
+pub const PANEL_W: usize = 8;
+
+/// One-shot per-dataset precomputation for the tiled kernels: row squared
+/// norms (computed **once** per dataset, not once per tile call) and a
+/// panel-interleaved copy of the rows that the native micro-kernel
+/// streams lane-contiguously.
+///
+/// Panel layout: rows are grouped into `⌈n / PANEL_W⌉` panels of
+/// [`PANEL_W`] rows; panel `p` stores `d × PANEL_W` values with dimension
+/// major order — `panels[p·d·W + i·W + lane] = data[(p·W + lane)·d + i]`
+/// — and all-zero padding lanes past `n`. This is the flat, GEMM-style
+/// tile layout: for a fixed dimension `i` the `W` candidate values are
+/// contiguous, so the `acc[lane] += q[i] · panel[i·W + lane]` inner loop
+/// autovectorizes while each (query, candidate) dot product still
+/// accumulates strictly in `i` order — bit-identical to the scalar loop.
+#[derive(Debug, Clone)]
+pub struct PreparedDataset<'a> {
+    pub data: &'a [f32],
+    pub n: usize,
+    pub d: usize,
+    /// `‖row_i‖²` for every row, via [`crate::core::row_sq_norms`].
+    pub sq_norms: Vec<f32>,
+    /// Panel-interleaved rows, `⌈n / PANEL_W⌉ · d · PANEL_W` long.
+    pub panels: Vec<f32>,
+}
+
+impl<'a> PreparedDataset<'a> {
+    /// Prepare `n × d` row-major `data`: one pass for norms, one for the
+    /// panel layout.
+    pub fn new(data: &'a [f32], n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        let sq_norms = row_sq_norms(data, n, d);
+        let panels = build_panels(data, n, d);
+        PreparedDataset { data, n, d, sq_norms, panels }
+    }
+
+    /// Norms only, no panel copy. Right for **query-side** preparation:
+    /// the micro-kernel streams candidate panels but reads queries
+    /// row-major, so a query panel copy would be O(n·d) dead work.
+    pub fn norms_only(data: &'a [f32], n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        let sq_norms = row_sq_norms(data, n, d);
+        PreparedDataset { data, n, d, sq_norms, panels: Vec::new() }
+    }
+
+    /// A contiguous row range as a [`PreparedTile`]: norms always ride
+    /// along; the panel view rides along when panels were built
+    /// ([`PreparedDataset::new`], not [`PreparedDataset::norms_only`])
+    /// and `rows.start` is [`PANEL_W`]-aligned (true for every
+    /// [`crate::knn::brute`] tile — the tile widths are multiples of
+    /// `PANEL_W`).
+    pub fn tile(&self, rows: std::ops::Range<usize>) -> PreparedTile<'_> {
+        assert!(rows.end <= self.n);
+        let n = rows.len();
+        let panels = if !self.panels.is_empty() && rows.start % PANEL_W == 0 && n > 0 {
+            let lo = (rows.start / PANEL_W) * self.d * PANEL_W;
+            let hi = rows.end.div_ceil(PANEL_W) * self.d * PANEL_W;
+            &self.panels[lo..hi]
+        } else {
+            &[]
+        };
+        PreparedTile {
+            rows: &self.data[rows.start * self.d..rows.end * self.d],
+            n,
+            d: self.d,
+            sq_norms: &self.sq_norms[rows.clone()],
+            panels,
+        }
+    }
+}
+
+/// Interleave `n × d` row-major rows into the [`PreparedDataset`] panel
+/// layout (see its docs). Shared by the prepared path (one-shot) and the
+/// native backend's unprepared fallback (per call).
+pub(crate) fn build_panels(data: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut panels = vec![0.0f32; n.div_ceil(PANEL_W) * d * PANEL_W];
+    for r in 0..n {
+        let (p, lane) = (r / PANEL_W, r % PANEL_W);
+        let base = p * d * PANEL_W;
+        for i in 0..d {
+            panels[base + i * PANEL_W + lane] = data[r * d + i];
+        }
+    }
+    panels
+}
+
+/// A borrowed tile of a [`PreparedDataset`]: row-major rows plus whatever
+/// precomputation is available. Empty `sq_norms`/`panels` mean "not
+/// available" — implementations recompute or fall back, so a bare tile
+/// (`PreparedTile::bare`) is always valid, just slower.
+#[derive(Debug, Clone, Copy)]
+pub struct PreparedTile<'a> {
+    pub rows: &'a [f32],
+    pub n: usize,
+    pub d: usize,
+    /// `n` row squared norms, or empty when not precomputed.
+    pub sq_norms: &'a [f32],
+    /// Panel-interleaved rows covering `⌈n / PANEL_W⌉` panels, or empty
+    /// when the tile is unaligned / not precomputed.
+    pub panels: &'a [f32],
+}
+
+impl<'a> PreparedTile<'a> {
+    /// A tile with no precomputation attached (norms/panels recomputed by
+    /// the backend as needed).
+    pub fn bare(rows: &'a [f32], n: usize, d: usize) -> Self {
+        debug_assert_eq!(rows.len(), n * d);
+        PreparedTile { rows, n, d, sq_norms: &[], panels: &[] }
+    }
+}
 
 /// A tile-computation backend. Implementations must be `Sync`: the k-NN
 /// builder calls them from worker threads.
@@ -44,6 +159,23 @@ pub trait Backend: Sync {
         measure: Measure,
     ) -> TopK;
 
+    /// [`Backend::pairwise_topk`] over [`PreparedTile`]s: same contract,
+    /// but tiles carry precomputed row norms (and, for candidates, the
+    /// panel layout) so backends that can exploit them skip the per-call
+    /// norm pass. The default forwards to the row-major entry point —
+    /// the passthrough the PJRT backend uses, since its AOT artifacts
+    /// compute norms on device.
+    fn pairwise_topk_prepared(
+        &self,
+        queries: &PreparedTile<'_>,
+        cands: &PreparedTile<'_>,
+        k: usize,
+        measure: Measure,
+    ) -> TopK {
+        debug_assert_eq!(queries.d, cands.d);
+        self.pairwise_topk(queries.rows, queries.n, cands.rows, cands.n, queries.d, k, measure)
+    }
+
     /// Nearest center per point: returns `(argmin index, dissimilarity)`
     /// per point.
     fn assign(
@@ -55,6 +187,19 @@ pub trait Backend: Sync {
         d: usize,
         measure: Measure,
     ) -> (Vec<u32>, Vec<f32>);
+
+    /// [`Backend::assign`] over [`PreparedTile`]s (norms computed once
+    /// per serve-assignment call instead of once per tile). Default
+    /// forwards to the row-major entry point (PJRT passthrough).
+    fn assign_prepared(
+        &self,
+        points: &PreparedTile<'_>,
+        centers: &PreparedTile<'_>,
+        measure: Measure,
+    ) -> (Vec<u32>, Vec<f32>) {
+        debug_assert_eq!(points.d, centers.d);
+        self.assign(points.rows, points.n, centers.rows, centers.n, points.d, measure)
+    }
 
     fn name(&self) -> &'static str;
 }

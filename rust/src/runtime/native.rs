@@ -2,13 +2,24 @@
 //! the fallback when artifacts are absent.
 //!
 //! The inner loops mirror the L1 Pallas kernel's decomposition
-//! (‖x‖² + ‖y‖² − 2·x·y for ℓ2²; plain dot for cosine): distances are
-//! assembled from a blocked GEMM-like cross-term so the hot loop is
-//! d-contiguous and autovectorizes.
+//! (‖x‖² + ‖y‖² − 2·x·y for ℓ2²; plain dot for cosine), executed as a
+//! register-blocked micro-kernel: [`Q_BLK`] query rows × [`PANEL_W`]
+//! candidate lanes of accumulators held across the `d` loop, streaming a
+//! dimension-major candidate panel ([`super::PreparedDataset`] layout) so
+//! the lane loop autovectorizes. Each (query, candidate) dot product
+//! still accumulates strictly in dimension order, so results are
+//! **bit-identical** to the scalar reference loop — and row squared
+//! norms ride in on [`super::PreparedTile`]s (computed once per dataset)
+//! instead of being recomputed per tile call.
 
-use super::Backend;
+use super::{build_panels, Backend, PreparedTile, PANEL_W};
+use crate::core::row_sq_norms;
 use crate::knn::{KSmallest, TopK};
 use crate::linkage::Measure;
+
+/// Query rows per register block: `Q_BLK × PANEL_W` f32 accumulators
+/// (4 × 8 = one AVX2 register file's worth) live across the `d` loop.
+pub const Q_BLK: usize = 4;
 
 /// See module docs.
 #[derive(Debug, Default)]
@@ -22,14 +33,104 @@ impl NativeBackend {
     }
 }
 
-/// Row squared norms.
-fn sq_norms(x: &[f32], n: usize, d: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
-    for i in 0..n {
-        let row = &x[i * d..(i + 1) * d];
-        out[i] = row.iter().map(|v| v * v).sum();
+/// The blocked kernel behind both [`Backend`] entry points. Norms and
+/// panels are taken from the tiles when present and rebuilt per call
+/// otherwise (the unprepared oracle path), so both paths run the exact
+/// same arithmetic in the exact same order.
+fn topk_blocked(queries: &PreparedTile<'_>, cands: &PreparedTile<'_>, k: usize, measure: Measure) -> TopK {
+    let (nq, nc, d) = (queries.n, cands.n, queries.d);
+    debug_assert_eq!(queries.d, cands.d);
+    let mut topk = TopK::new(nq, k);
+    if nq == 0 || nc == 0 || k == 0 {
+        return topk;
     }
-    out
+
+    // reuse precomputed norms when the tile carries them; otherwise fall
+    // back to the one shared helper (cosine needs none)
+    let qn_owned;
+    let cn_owned;
+    let qn: &[f32] = match measure {
+        Measure::L2Sq if queries.sq_norms.len() == nq => queries.sq_norms,
+        Measure::L2Sq => {
+            qn_owned = row_sq_norms(queries.rows, nq, d);
+            &qn_owned
+        }
+        Measure::CosineDist => &[],
+    };
+    let cn: &[f32] = match measure {
+        Measure::L2Sq if cands.sq_norms.len() == nc => cands.sq_norms,
+        Measure::L2Sq => {
+            cn_owned = row_sq_norms(cands.rows, nc, d);
+            &cn_owned
+        }
+        Measure::CosineDist => &[],
+    };
+
+    let num_panels = nc.div_ceil(PANEL_W);
+    let panels_owned;
+    let panels: &[f32] = if cands.panels.len() >= num_panels * d * PANEL_W {
+        cands.panels
+    } else {
+        panels_owned = build_panels(cands.rows, nc, d);
+        &panels_owned
+    };
+
+    for q0 in (0..nq).step_by(Q_BLK) {
+        let qb = (q0 + Q_BLK).min(nq) - q0;
+        let mut heaps: Vec<KSmallest> = (0..qb).map(|_| KSmallest::new(k)).collect();
+        for p in 0..num_panels {
+            let panel = &panels[p * d * PANEL_W..(p + 1) * d * PANEL_W];
+            let lanes = (nc - p * PANEL_W).min(PANEL_W);
+            // cross terms: acc[qi][lane] = q_{q0+qi} · cand_{p·W+lane},
+            // accumulated in dimension order (bit-equal to the scalar
+            // loop); the lane loop is the vectorized axis
+            let mut acc = [[0.0f32; PANEL_W]; Q_BLK];
+            for i in 0..d {
+                let pl = &panel[i * PANEL_W..(i + 1) * PANEL_W];
+                for (qi, a) in acc.iter_mut().enumerate().take(qb) {
+                    let qv = queries.rows[(q0 + qi) * d + i];
+                    for (slot, &c) in a.iter_mut().zip(pl) {
+                        *slot += qv * c;
+                    }
+                }
+            }
+            let c_base = p * PANEL_W;
+            for (qi, heap) in heaps.iter_mut().enumerate() {
+                match measure {
+                    Measure::L2Sq => {
+                        let qnq = qn[q0 + qi];
+                        for lane in 0..lanes {
+                            let c = c_base + lane;
+                            // clamp tiny negative values from cancellation
+                            let dd = (qnq + cn[c] - 2.0 * acc[qi][lane]).max(0.0);
+                            // `worst()` bound: a full heap rejects most
+                            // candidates here without touching `push`
+                            // (ties at the bound still go through push
+                            // for the index tie-break)
+                            if dd <= heap.worst() {
+                                heap.push(dd, c as u32);
+                            }
+                        }
+                    }
+                    Measure::CosineDist => {
+                        for lane in 0..lanes {
+                            let c = c_base + lane;
+                            let dd = 1.0 - acc[qi][lane];
+                            if dd <= heap.worst() {
+                                heap.push(dd, c as u32);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (qi, heap) in heaps.iter().enumerate() {
+            let lo = (q0 + qi) * k;
+            let hi = lo + k;
+            heap.write_row(&mut topk.idx[lo..hi], &mut topk.dist[lo..hi]);
+        }
+    }
+    topk
 }
 
 impl Backend for NativeBackend {
@@ -45,50 +146,23 @@ impl Backend for NativeBackend {
     ) -> TopK {
         debug_assert_eq!(queries.len(), nq * d);
         debug_assert_eq!(cands.len(), nc * d);
-        let mut topk = TopK::new(nq, k);
-        if nc == 0 {
-            return topk;
-        }
-        let qn = match measure {
-            Measure::L2Sq => sq_norms(queries, nq, d),
-            Measure::CosineDist => Vec::new(),
-        };
-        let cn = match measure {
-            Measure::L2Sq => sq_norms(cands, nc, d),
-            Measure::CosineDist => Vec::new(),
-        };
-        let mut dist_row = vec![0.0f32; nc];
-        for q in 0..nq {
-            let qrow = &queries[q * d..(q + 1) * d];
-            // cross term: dist_row[c] = qrow . cand_c
-            for (c, slot) in dist_row.iter_mut().enumerate() {
-                let crow = &cands[c * d..(c + 1) * d];
-                let mut s = 0.0f32;
-                for i in 0..d {
-                    s += qrow[i] * crow[i];
-                }
-                *slot = s;
-            }
-            let mut heap = KSmallest::new(k);
-            match measure {
-                Measure::L2Sq => {
-                    for c in 0..nc {
-                        // clamp tiny negative values from cancellation
-                        let dd = (qn[q] + cn[c] - 2.0 * dist_row[c]).max(0.0);
-                        heap.push(dd, c as u32);
-                    }
-                }
-                Measure::CosineDist => {
-                    for c in 0..nc {
-                        heap.push(1.0 - dist_row[c], c as u32);
-                    }
-                }
-            }
-            let lo = q * k;
-            let hi = lo + k;
-            heap.write_row(&mut topk.idx[lo..hi], &mut topk.dist[lo..hi]);
-        }
-        topk
+        // unprepared path: same kernel, norms/panels rebuilt per call
+        topk_blocked(
+            &PreparedTile::bare(queries, nq, d),
+            &PreparedTile::bare(cands, nc, d),
+            k,
+            measure,
+        )
+    }
+
+    fn pairwise_topk_prepared(
+        &self,
+        queries: &PreparedTile<'_>,
+        cands: &PreparedTile<'_>,
+        k: usize,
+        measure: Measure,
+    ) -> TopK {
+        topk_blocked(queries, cands, k, measure)
     }
 
     fn assign(
@@ -100,9 +174,22 @@ impl Backend for NativeBackend {
         d: usize,
         measure: Measure,
     ) -> (Vec<u32>, Vec<f32>) {
-        let topk = self.pairwise_topk(points, np, centers, nc, d, 1, measure);
-        let idx = (0..np).map(|p| topk.idx[p]).collect();
-        let dist = (0..np).map(|p| topk.dist[p]).collect();
+        self.assign_prepared(
+            &PreparedTile::bare(points, np, d),
+            &PreparedTile::bare(centers, nc, d),
+            measure,
+        )
+    }
+
+    fn assign_prepared(
+        &self,
+        points: &PreparedTile<'_>,
+        centers: &PreparedTile<'_>,
+        measure: Measure,
+    ) -> (Vec<u32>, Vec<f32>) {
+        let topk = topk_blocked(points, centers, 1, measure);
+        let idx = (0..points.n).map(|p| topk.idx[p]).collect();
+        let dist = (0..points.n).map(|p| topk.dist[p]).collect();
         (idx, dist)
     }
 
@@ -114,6 +201,7 @@ impl Backend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::PreparedDataset;
 
     fn naive_topk(
         queries: &[f32],
@@ -175,6 +263,47 @@ mod tests {
     }
 
     #[test]
+    fn prepared_path_is_bit_identical_to_unprepared() {
+        crate::util::prop::check("prepared == unprepared", 40, |g| {
+            let nq = g.usize_in(1..20);
+            let nc = g.usize_in(1..40);
+            let d = g.usize_in(1..10);
+            let k = g.usize_in(1..9);
+            let q: Vec<f32> = (0..nq * d).map(|_| g.rng().f32() * 2.0 - 1.0).collect();
+            let c: Vec<f32> = (0..nc * d).map(|_| g.rng().f32() * 2.0 - 1.0).collect();
+            // queries: norms-only prep (the serve-assign shape); its
+            // tiles legitimately carry no panels
+            let qp = PreparedDataset::norms_only(&q, nq, d);
+            let cp = PreparedDataset::new(&c, nc, d);
+            assert!(qp.tile(0..nq).panels.is_empty());
+            let b = NativeBackend::new();
+            for measure in [Measure::L2Sq, Measure::CosineDist] {
+                let plain = b.pairwise_topk(&q, nq, &c, nc, d, k, measure);
+                let prep =
+                    b.pairwise_topk_prepared(&qp.tile(0..nq), &cp.tile(0..nc), k, measure);
+                assert_eq!(plain.idx, prep.idx, "{measure:?}");
+                assert_eq!(plain.dist, prep.dist, "{measure:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn prepared_norms_are_used_not_recomputed() {
+        // poison the query norms: if the kernel recomputed them the
+        // output would be the true distance; with the poisoned value it
+        // must be (0 + ‖c‖² − 2·q·c).max(0)
+        let q = vec![1.0f32, 2.0];
+        let c = vec![3.0f32, 4.0];
+        let poisoned = [0.0f32];
+        let qt = PreparedTile { rows: &q, n: 1, d: 2, sq_norms: &poisoned, panels: &[] };
+        let cp = PreparedDataset::new(&c, 1, 2);
+        let t = NativeBackend::new().pairwise_topk_prepared(&qt, &cp.tile(0..1), 1, Measure::L2Sq);
+        let dot = 1.0f32 * 3.0 + 2.0 * 4.0;
+        let want = (0.0f32 + 25.0 - 2.0 * dot).max(0.0);
+        assert_eq!(t.dist[0], want, "kernel must consume the provided norms");
+    }
+
+    #[test]
     fn l2_is_nonnegative_even_with_cancellation() {
         let q = vec![1.0e3f32, 1.0e3];
         let c = vec![1.0e3f32, 1.0e3];
@@ -189,5 +318,21 @@ mod tests {
         let (idx, dist) = NativeBackend::new().assign(&points, 2, &centers, 2, 2, Measure::L2Sq);
         assert_eq!(idx, vec![0, 1]);
         assert!(dist[0] < 0.02 && dist[1] < 0.02);
+    }
+
+    #[test]
+    fn unaligned_prepared_tile_still_works() {
+        // tile(1..3) starts off a panel boundary: panels are dropped,
+        // norms still ride along; output must match the bare path
+        let data: Vec<f32> = (0..5 * 3).map(|x| x as f32 * 0.25 - 1.0).collect();
+        let prep = PreparedDataset::new(&data, 5, 3);
+        let tile = prep.tile(1..3);
+        assert!(tile.panels.is_empty());
+        assert_eq!(tile.sq_norms.len(), 2);
+        let b = NativeBackend::new();
+        let got = b.pairwise_topk_prepared(&prep.tile(0..5), &tile, 2, Measure::L2Sq);
+        let want = b.pairwise_topk(&data, 5, &data[3..9], 2, 3, 2, Measure::L2Sq);
+        assert_eq!(got.idx, want.idx);
+        assert_eq!(got.dist, want.dist);
     }
 }

@@ -146,6 +146,19 @@ impl Backend for PjrtBackend {
         }
     }
 
+    fn pairwise_topk_prepared(
+        &self,
+        queries: &super::PreparedTile<'_>,
+        cands: &super::PreparedTile<'_>,
+        k: usize,
+        measure: Measure,
+    ) -> TopK {
+        // passthrough: the AOT artifacts compute ‖·‖² on device inside
+        // the kernel graph, so host-side prepared norms/panels carry no
+        // benefit here — forward to the row-major wire format
+        self.pairwise_topk(queries.rows, queries.n, cands.rows, cands.n, queries.d, k, measure)
+    }
+
     fn assign(
         &self,
         points: &[f32],

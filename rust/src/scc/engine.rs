@@ -15,6 +15,7 @@
 use crate::core::Partition;
 use crate::graph::{CsrGraph, UnionFind};
 use crate::linkage::LinkAgg;
+use crate::util::par;
 
 /// One undirected cluster-pair edge (`a < b`).
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +41,19 @@ pub struct ClusterGraph {
     labels: Vec<u32>,
     num_clusters: usize,
     edges: Vec<ClusterEdge>,
+    /// Threads for the argmin scan and contraction. `≤ 1` (the default)
+    /// is the sequential oracle; any value produces **bit-identical**
+    /// results — the parallel argmin is a deterministic elementwise
+    /// `(avg, id)` min-reduce over edge chunks, and contraction's exact
+    /// fixed-point [`LinkAgg`] sums are chunk-order independent (pinned
+    /// by `rust/tests/hotpath_equivalence.rs`).
+    threads: usize,
+    /// Live-edge count under which rounds run sequentially even with
+    /// `threads > 1` (0 = never downshift). The automatic entry points
+    /// set this so a graph that contracts to a handful of edges stops
+    /// paying per-round thread-spawn waves; a pure perf knob — the
+    /// outputs are thread-count independent either way.
+    min_par_edges: usize,
 }
 
 impl ClusterGraph {
@@ -54,12 +68,46 @@ impl ClusterGraph {
                 }
             }
         }
-        ClusterGraph { labels: (0..g.n as u32).collect(), num_clusters: g.n, edges }
+        ClusterGraph {
+            labels: (0..g.n as u32).collect(),
+            num_clusters: g.n,
+            edges,
+            threads: 1,
+            min_par_edges: 0,
+        }
     }
 
     /// Build directly from parts (used by the coordinator and tests).
     pub fn from_parts(labels: Vec<u32>, num_clusters: usize, edges: Vec<ClusterEdge>) -> Self {
-        ClusterGraph { labels, num_clusters, edges }
+        ClusterGraph { labels, num_clusters, edges, threads: 1, min_par_edges: 0 }
+    }
+
+    /// Set the engine thread count (builder form). `≤ 1` keeps the
+    /// sequential oracle path.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Downshift to the sequential path whenever fewer than `min_edges`
+    /// live edges remain (builder form; 0 = never downshift, the
+    /// default). Purely a throughput knob — see the `threads` field.
+    pub fn with_par_threshold(mut self, min_edges: usize) -> Self {
+        self.min_par_edges = min_edges;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The thread count this round will actually use.
+    fn effective_threads(&self) -> usize {
+        if self.edges.len() < self.min_par_edges {
+            1
+        } else {
+            self.threads
+        }
     }
 
     pub fn num_clusters(&self) -> usize {
@@ -81,25 +129,56 @@ impl ClusterGraph {
 
     /// Best (minimum-average) neighbor per cluster: `(avg, neighbor)` with
     /// deterministic `(avg, id)` tie-breaking; `None` for isolated
-    /// clusters. One O(E) pass.
+    /// clusters. One O(E) pass, folded over edge chunks on the engine's
+    /// thread count — the per-chunk partial bests merge by elementwise
+    /// `(avg, id)` min, an associative + commutative reduce, so the
+    /// result is identical for any chunking.
     pub fn argmin_neighbors(&self) -> Vec<Option<(f64, u32)>> {
-        let mut best: Vec<Option<(f64, u32)>> = vec![None; self.num_clusters];
-        for e in &self.edges {
+        let threads = self.effective_threads();
+        if threads <= 1 {
+            let mut best: Vec<Option<(f64, u32)>> = vec![None; self.num_clusters];
+            Self::argmin_fold(&mut best, &self.edges);
+            return best;
+        }
+        par::par_fold(
+            self.edges.len(),
+            threads,
+            vec![None; self.num_clusters],
+            |mut best, range| {
+                Self::argmin_fold(&mut best, &self.edges[range]);
+                best
+            },
+            |mut acc, other| {
+                for (slot, cand) in acc.iter_mut().zip(other) {
+                    if let Some(c) = cand {
+                        Self::offer(slot, c);
+                    }
+                }
+                acc
+            },
+        )
+    }
+
+    /// Fold one edge chunk into a partial best-neighbor table.
+    fn argmin_fold(best: &mut [Option<(f64, u32)>], edges: &[ClusterEdge]) {
+        for e in edges {
             let avg = e.agg.avg();
             for (me, other) in [(e.a, e.b), (e.b, e.a)] {
-                let slot = &mut best[me as usize];
-                let cand = (avg, other);
-                match slot {
-                    None => *slot = Some(cand),
-                    Some(cur) => {
-                        if (cand.0, cand.1) < (cur.0, cur.1) {
-                            *slot = Some(cand);
-                        }
-                    }
+                Self::offer(&mut best[me as usize], (avg, other));
+            }
+        }
+    }
+
+    #[inline]
+    fn offer(slot: &mut Option<(f64, u32)>, cand: (f64, u32)) {
+        match slot {
+            None => *slot = Some(cand),
+            Some(cur) => {
+                if (cand.0, cand.1) < (cur.0, cur.1) {
+                    *slot = Some(cand);
                 }
             }
         }
-        best
     }
 
     /// Execute one round at threshold `tau` (see module docs). Returns
@@ -144,29 +223,131 @@ impl ClusterGraph {
     }
 
     /// Contract merged clusters: relabel points, re-aggregate edges.
+    ///
+    /// No O(E log E) global sort: edges map to their relabeled endpoint
+    /// pairs (parallel over chunks, concatenated in chunk order), a
+    /// stable counting sort buckets them by the smaller endpoint `a`
+    /// (two O(E) passes), and each bucket is sorted by `b` alone before
+    /// adjacent duplicate pairs fold together in place. Duplicate folds
+    /// are exact fixed-point [`LinkAgg`] sums (order-independent), so
+    /// the surviving edge list — ascending `(a, b)`, one edge per pair,
+    /// exact aggregates — is identical to the old global-sort path for
+    /// every thread count.
     fn contract(&mut self, uf: &mut UnionFind) {
         let relabel = uf.labels(); // old cluster -> new compact id
         let new_count = uf.components();
-        for l in self.labels.iter_mut() {
-            *l = relabel[*l as usize];
-        }
-        // re-aggregate: sort by (min,max) of relabeled endpoints, merge runs
-        let mut mapped: Vec<ClusterEdge> = Vec::with_capacity(self.edges.len());
-        for e in &self.edges {
-            let (na, nb) = (relabel[e.a as usize], relabel[e.b as usize]);
-            if na == nb {
-                continue; // interior edge disappears
+        let threads = self.effective_threads();
+
+        // 1. relabel points
+        if threads > 1 {
+            par::parallel_chunks_mut(&mut self.labels, threads, |_, chunk| {
+                for l in chunk {
+                    *l = relabel[*l as usize];
+                }
+            });
+        } else {
+            for l in self.labels.iter_mut() {
+                *l = relabel[*l as usize];
             }
-            let (a, b) = if na < nb { (na, nb) } else { (nb, na) };
-            mapped.push(ClusterEdge { a, b, agg: e.agg });
         }
-        mapped.sort_unstable_by_key(|e| ((e.a as u64) << 32) | e.b as u64);
-        let mut out: Vec<ClusterEdge> = Vec::with_capacity(mapped.len());
+
+        // 2. map edges, dropping now-interior ones
+        let map_chunk = |acc: &mut Vec<ClusterEdge>, edges: &[ClusterEdge]| {
+            for e in edges {
+                let (na, nb) = (relabel[e.a as usize], relabel[e.b as usize]);
+                if na == nb {
+                    continue; // interior edge disappears
+                }
+                let (a, b) = if na < nb { (na, nb) } else { (nb, na) };
+                acc.push(ClusterEdge { a, b, agg: e.agg });
+            }
+        };
+        let mapped: Vec<ClusterEdge> = if threads > 1 {
+            par::par_fold(
+                self.edges.len(),
+                threads,
+                Vec::new(),
+                |mut acc, range| {
+                    map_chunk(&mut acc, &self.edges[range]);
+                    acc
+                },
+                |mut a, mut b| {
+                    a.append(&mut b);
+                    a
+                },
+            )
+        } else {
+            let mut acc = Vec::with_capacity(self.edges.len());
+            map_chunk(&mut acc, &self.edges);
+            acc
+        };
+
+        // 3. stable counting sort into per-`a` buckets
+        let mut offsets = vec![0usize; new_count + 1];
+        for e in &mapped {
+            offsets[e.a as usize + 1] += 1;
+        }
+        for i in 0..new_count {
+            offsets[i + 1] += offsets[i];
+        }
+        let placeholder = ClusterEdge { a: 0, b: 0, agg: LinkAgg::from_parts(0, 0) };
+        let mut bucketed = vec![placeholder; mapped.len()];
+        let mut cursor = offsets.clone();
         for e in mapped {
-            match out.last_mut() {
-                Some(last) if last.a == e.a && last.b == e.b => last.agg.merge(&e.agg),
-                _ => out.push(e),
+            let pos = cursor[e.a as usize];
+            bucketed[pos] = e;
+            cursor[e.a as usize] += 1;
+        }
+
+        // 4. per-bucket: sort by `b`, fold duplicate pairs in place;
+        //    buckets are disjoint slices, so thread ranges split cleanly
+        let mut kept = vec![0usize; new_count];
+        let fold_buckets = |buckets: std::ops::Range<usize>,
+                            edges_chunk: &mut [ClusterEdge],
+                            kept_chunk: &mut [usize]| {
+            let base = offsets[buckets.start];
+            for (bi, b) in buckets.enumerate() {
+                let bucket = &mut edges_chunk[offsets[b] - base..offsets[b + 1] - base];
+                bucket.sort_unstable_by_key(|e| e.b);
+                let mut w = 0usize;
+                for r in 0..bucket.len() {
+                    if w > 0 && bucket[w - 1].b == bucket[r].b {
+                        let agg = bucket[r].agg;
+                        bucket[w - 1].agg.merge(&agg);
+                    } else {
+                        bucket[w] = bucket[r];
+                        w += 1;
+                    }
+                }
+                kept_chunk[bi] = w;
             }
+        };
+        let bucket_ranges = par::split_ranges(new_count, threads);
+        if threads > 1 && bucket_ranges.len() > 1 {
+            std::thread::scope(|s| {
+                let mut rest_e: &mut [ClusterEdge] = &mut bucketed;
+                let mut rest_k: &mut [usize] = &mut kept;
+                let mut consumed = 0usize;
+                for br in bucket_ranges {
+                    let end = offsets[br.end];
+                    let (ec, et) = rest_e.split_at_mut(end - consumed);
+                    rest_e = et;
+                    let (kc, kt) = rest_k.split_at_mut(br.len());
+                    rest_k = kt;
+                    consumed = end;
+                    let fold_buckets = &fold_buckets;
+                    s.spawn(move || fold_buckets(br, ec, kc));
+                }
+            });
+        } else {
+            fold_buckets(0..new_count, &mut bucketed, &mut kept);
+        }
+
+        // 5. compact each bucket's surviving prefix, in bucket order
+        let mut out: Vec<ClusterEdge> = Vec::with_capacity(kept.iter().sum());
+        for (b, &keep) in kept.iter().enumerate() {
+            let lo = offsets[b];
+            out.extend_from_slice(&bucketed[lo..lo + keep]);
         }
         self.edges = out;
         self.num_clusters = new_count;
@@ -283,6 +464,49 @@ mod tests {
         let cg = ClusterGraph::from_knn(&g);
         let best = cg.argmin_neighbors();
         assert!(best[2].is_none());
+    }
+
+    #[test]
+    fn parallel_engine_is_bit_identical_to_sequential() {
+        // a messy pseudo-random graph: parallel edges (duplicate pairs
+        // aggregate), ties, several contraction waves per τ
+        let mut pairs = Vec::new();
+        let mut x = 1u64;
+        for i in 0..90u32 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let j = ((x >> 33) % 48) as u32;
+            let a = i % 48;
+            if a != j {
+                pairs.push((a.min(j), a.max(j), 0.1 + (i % 7) as f32 * 0.3));
+            }
+        }
+        for tau in [0.2f64, 0.8, 1.6, 3.0] {
+            let g = knn_like(48, &pairs);
+            let mut seq = ClusterGraph::from_knn(&g);
+            seq.run_to_fixpoint(tau, 64);
+            for t in [2usize, 4, 8] {
+                let mut par_cg = ClusterGraph::from_knn(&g).with_threads(t);
+                assert_eq!(par_cg.argmin_neighbors(), ClusterGraph::from_knn(&g).argmin_neighbors());
+                par_cg.run_to_fixpoint(tau, 64);
+                assert_eq!(par_cg.point_partition().assign, seq.point_partition().assign);
+                assert_eq!(par_cg.num_edges(), seq.num_edges(), "τ={tau} t={t}");
+                for (pe, se) in par_cg.edges().iter().zip(seq.edges()) {
+                    assert_eq!((pe.a, pe.b), (se.a, se.b));
+                    assert_eq!(pe.agg, se.agg, "aggregates must be exact-sum identical");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_threshold_downshift_is_semantics_free() {
+        let g = knn_like(6, &[(0, 1, 1.0), (2, 3, 1.0), (1, 2, 1.5), (4, 5, 0.5)]);
+        let mut plain = ClusterGraph::from_knn(&g).with_threads(4);
+        let mut gated = ClusterGraph::from_knn(&g).with_threads(4).with_par_threshold(usize::MAX);
+        plain.run_to_fixpoint(2.0, 64);
+        gated.run_to_fixpoint(2.0, 64);
+        assert_eq!(plain.point_partition().assign, gated.point_partition().assign);
+        assert_eq!(plain.num_edges(), gated.num_edges());
     }
 
     #[test]

@@ -96,12 +96,49 @@ pub fn run(graph: &CsrGraph, config: &SccConfig) -> SccResult {
     run_impl(graph, config)
 }
 
-/// The engine behind [`run`] and [`crate::pipeline::SccClusterer`]
-/// (crate-internal so the deprecated shim stays the only free public
-/// entry point).
+/// Live-edge count below which engine-parallel rounds don't pay for
+/// their thread spawns: the automatic entry points downshift a round to
+/// the sequential path under it (re-checked every round, so a graph
+/// that contracts to a handful of edges stops spawning threads).
+/// Explicit [`run_rounds`] calls never downshift.
+const PAR_ROUND_MIN_EDGES: usize = 1 << 13;
+
+/// The engine behind [`run`] and [`crate::pipeline::SccClusterer`].
+/// Runs with all available threads but downshifts each round whose live
+/// edge count is below [`PAR_ROUND_MIN_EDGES`] — either way the output
+/// is bit-identical (see [`run_rounds`]).
 pub(crate) fn run_impl(graph: &CsrGraph, config: &SccConfig) -> SccResult {
+    run_rounds_with_policy(
+        graph,
+        config,
+        crate::util::par::default_threads(),
+        PAR_ROUND_MIN_EDGES,
+    )
+}
+
+/// The SCC round loop with an explicit engine thread count, honored for
+/// every round (the automatic entry points — [`crate::pipeline::SccClusterer`],
+/// the deprecated [`run`] — instead downshift small rounds): `threads ≤ 1`
+/// runs the sequential oracle; higher counts parallelize the per-round
+/// argmin scan and contraction ([`ClusterGraph::with_threads`]) and
+/// produce **bit-identical** rounds (pinned by
+/// `rust/tests/hotpath_equivalence.rs` across threads ∈ {1, 2, 4, 8}).
+/// This is a data-parallel knob *within* rounds — the sharded
+/// message-passing engine in [`crate::coordinator`] remains the
+/// distributed-execution path.
+pub fn run_rounds(graph: &CsrGraph, config: &SccConfig, threads: usize) -> SccResult {
+    run_rounds_with_policy(graph, config, threads, 0)
+}
+
+fn run_rounds_with_policy(
+    graph: &CsrGraph,
+    config: &SccConfig,
+    threads: usize,
+    min_par_edges: usize,
+) -> SccResult {
     let n = graph.n;
-    let mut cg = ClusterGraph::from_knn(graph);
+    let mut cg =
+        ClusterGraph::from_knn(graph).with_threads(threads).with_par_threshold(min_par_edges);
     let mut rounds = vec![Partition::singletons(n)];
     let mut stats = Vec::new();
     let mut idx = 0usize;

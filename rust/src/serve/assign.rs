@@ -9,7 +9,7 @@
 
 use super::snapshot::HierarchySnapshot;
 use crate::knn::brute::{CAND_TILE, QUERY_TILE};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, PreparedDataset};
 use crate::util::par;
 
 /// Per-query nearest cluster and its dissimilarity.
@@ -51,6 +51,12 @@ pub fn assign_to_level(
     if nq == 0 || ncl == 0 {
         return out;
     }
+    // norms for the query batch and the level's centroid matrix are
+    // computed once per call (the single row_sq_norms implementation),
+    // not once per tile — same discipline as knn::brute::all_pairs_topk.
+    // Queries skip the panel copy (the kernel reads them row-major).
+    let qprep = PreparedDataset::norms_only(queries, nq, d);
+    let cprep = PreparedDataset::new(centers, ncl, d);
     let out_ptr =
         SyncOut { idx: out.cluster.as_mut_ptr() as usize, dist: out.dist.as_mut_ptr() as usize };
     par::parallel_ranges(nq.div_ceil(QUERY_TILE), threads.max(1), |_, block_range| {
@@ -58,14 +64,14 @@ pub fn assign_to_level(
             let q0 = bi * QUERY_TILE;
             let q1 = (q0 + QUERY_TILE).min(nq);
             let nb = q1 - q0;
-            let block = &queries[q0 * d..q1 * d];
+            let block = qprep.tile(q0..q1);
             let mut best_i = vec![u32::MAX; nb];
             let mut best_d = vec![f32::INFINITY; nb];
             let mut c0 = 0usize;
             while c0 < ncl {
                 let c1 = (c0 + CAND_TILE).min(ncl);
                 let (ti, td) =
-                    backend.assign(block, nb, &centers[c0 * d..c1 * d], c1 - c0, d, snap.measure);
+                    backend.assign_prepared(&block, &cprep.tile(c0..c1), snap.measure);
                 for q in 0..nb {
                     if ti[q] == u32::MAX {
                         continue;

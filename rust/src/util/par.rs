@@ -93,6 +93,36 @@ where
     out
 }
 
+/// Run `f` over disjoint contiguous chunks of `data` on `threads`
+/// threads; `f` receives `(chunk_start_offset, chunk)`. The mutable
+/// counterpart of [`parallel_ranges`] (relabel passes, in-place scans):
+/// chunk boundaries come from [`split_ranges`], so they are deterministic
+/// for a given `(len, threads)`.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let ranges = split_ranges(data.len(), threads.max(1));
+    if ranges.len() <= 1 {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut offset = 0usize;
+        for r in ranges {
+            let (chunk, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(offset, chunk));
+            offset = r.end;
+        }
+    });
+}
+
 /// Dynamic work queue: run `f(i)` for every `i in 0..n`, with threads
 /// pulling indices from a shared atomic counter in blocks of `grain`.
 /// Use when per-item cost is irregular (e.g. per-cluster work).
@@ -207,6 +237,21 @@ mod tests {
         let got = par_map(&xs, 5, |x| x * x);
         let want: Vec<u64> = xs.iter().map(|x| x * x).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_sees_correct_offsets() {
+        for threads in [1usize, 3, 8] {
+            let mut xs = vec![0u64; 1001];
+            parallel_chunks_mut(&mut xs, threads, |off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = (off + i) as u64;
+                }
+            });
+            assert!(xs.iter().enumerate().all(|(i, &x)| x == i as u64), "threads={threads}");
+        }
+        let mut empty: Vec<u64> = vec![];
+        parallel_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks for empty input"));
     }
 
     #[test]

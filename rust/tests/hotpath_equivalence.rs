@@ -1,0 +1,303 @@
+//! Hot-path equivalence suite (ISSUE 5 acceptance criteria): every
+//! optimized path must be **bit-identical** to its sequential / naive
+//! oracle.
+//!
+//! 1. **Rounds** — `scc::run_rounds` with engine threads ∈ {1, 2, 4, 8}
+//!    produces identical per-round partitions (final labels included),
+//!    identical per-round stats, and identical sorted merge heights
+//!    (the thresholds of merging rounds) on the 12 seeded mixtures plus
+//!    both hand geometries. The parallel argmin is a deterministic
+//!    `(avg, id)` min-reduce and contraction's duplicate folds are exact
+//!    fixed-point sums, so nothing may drift.
+//! 2. **Kernel** — the prepared blocked top-k (`PreparedDataset` norms +
+//!    panels through `Backend::pairwise_topk_prepared`) equals a naive
+//!    per-pair oracle that runs the same ‖q‖² + ‖c‖² − 2·q·c arithmetic,
+//!    bit for bit; and a counting test double on [`Backend`] proves the
+//!    tiled build never hits the unprepared entry point and every tile
+//!    call carries precomputed norms — i.e. each row's squared norm is
+//!    computed exactly once per `all_pairs_topk` call, in
+//!    `PreparedDataset::new`.
+//! 3. **TeraHAC** — the flat sorted-vec adjacency reproduces the PR-4
+//!    `HashMap` implementation (retained as
+//!    `TeraHacClusterer::merge_sequence_reference`) merge-for-merge,
+//!    log-for-log, for ε ∈ {0, 0.5}, sequential and with workers.
+
+use scc::core::{row_sq_norms, Dataset};
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::{all_pairs_topk, TopK};
+use scc::linkage::Measure;
+use scc::pipeline::TeraHacClusterer;
+use scc::runtime::{Backend, NativeBackend, PreparedTile};
+use scc::scc::{run_rounds, thresholds::edge_range, SccConfig, Thresholds};
+use scc::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+const KNN_K: usize = 5;
+
+/// Hand geometry 1: five tight clumps on a line at irregular positions
+/// (matches the approximation suite's geometry).
+fn line_clumps() -> Dataset {
+    let mut rng = Rng::new(0xA11CE);
+    let mut data = Vec::new();
+    let centers = [0.0f32, 2.3, 4.9, 7.1, 9.8];
+    for &c in &centers {
+        for _ in 0..7 {
+            data.push(c + 0.03 * rng.normal_f32());
+            data.push(0.03 * rng.normal_f32());
+        }
+    }
+    Dataset::new("line_clumps", data, 7 * centers.len(), 2)
+}
+
+/// Hand geometry 2: six clumps on a jittered 3×2 grid.
+fn grid_clumps() -> Dataset {
+    let mut rng = Rng::new(0x96D);
+    let centers: [(f32, f32); 6] =
+        [(0.0, 0.0), (3.1, 0.2), (6.3, -0.1), (0.2, 3.3), (3.4, 3.1), (6.1, 3.2)];
+    let mut data = Vec::new();
+    for &(x, y) in &centers {
+        for _ in 0..6 {
+            data.push(x + 0.04 * rng.normal_f32());
+            data.push(y + 0.04 * rng.normal_f32());
+        }
+    }
+    Dataset::new("grid_clumps", data, 6 * centers.len(), 2)
+}
+
+/// The 12 seeded random datasets (same family as the approximation
+/// suite).
+fn seeded_mixtures() -> Vec<Dataset> {
+    (0..12u64)
+        .map(|s| {
+            separated_mixture(&MixtureSpec {
+                n: 80 + 12 * s as usize,
+                d: 2 + (s % 3) as usize,
+                k: 3 + (s % 4) as usize,
+                sigma: 0.05,
+                delta: 8.0,
+                imbalance: 0.0,
+                seed: 1000 + s,
+            })
+        })
+        .collect()
+}
+
+fn all_datasets() -> Vec<Dataset> {
+    let mut ds = seeded_mixtures();
+    ds.push(line_clumps());
+    ds.push(grid_clumps());
+    ds
+}
+
+fn knn(ds: &Dataset) -> scc::graph::CsrGraph {
+    scc::knn::knn_graph(ds, KNN_K, Measure::L2Sq)
+}
+
+// ---------------------------------------------------------------- rounds
+
+#[test]
+fn parallel_rounds_match_sequential_rounds_bit_identically() {
+    for ds in all_datasets() {
+        let g = knn(&ds);
+        let (lo, hi) = edge_range(&g);
+        let cfg = SccConfig::new(Thresholds::geometric(lo, hi, 20).taus);
+        let seq = run_rounds(&g, &cfg, 1);
+        // sorted merge heights of the sequential oracle: the thresholds
+        // of rounds that merged
+        let mut seq_heights: Vec<f64> = seq.stats.iter().map(|s| s.threshold).collect();
+        seq_heights.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        for threads in [1usize, 2, 4, 8] {
+            let par = run_rounds(&g, &cfg, threads);
+            assert_eq!(
+                par.rounds.len(),
+                seq.rounds.len(),
+                "{}: round count differs at t={threads}",
+                ds.name
+            );
+            for (i, (a, b)) in par.rounds.iter().zip(&seq.rounds).enumerate() {
+                assert_eq!(a.assign, b.assign, "{}: round {i} differs at t={threads}", ds.name);
+            }
+            // final labels, explicitly
+            assert_eq!(
+                par.final_partition().assign,
+                seq.final_partition().assign,
+                "{}: final labels differ at t={threads}",
+                ds.name
+            );
+            let mut par_heights: Vec<f64> = par.stats.iter().map(|s| s.threshold).collect();
+            par_heights.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            assert_eq!(par_heights, seq_heights, "{}: merge heights differ", ds.name);
+            for (sa, sb) in par.stats.iter().zip(&seq.stats) {
+                assert_eq!(sa.clusters_before, sb.clusters_before);
+                assert_eq!(sa.clusters_after, sb.clusters_after);
+                assert_eq!(sa.merge_edges, sb.merge_edges);
+                assert_eq!(sa.live_edges, sb.live_edges);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- kernel
+
+/// Naive per-query oracle running the **same** f32 arithmetic as the
+/// blocked kernel (norm + norm − 2·dot, dot accumulated in dimension
+/// order), so agreement is exact, not approximate. Excludes self.
+fn naive_topk(ds: &Dataset, k: usize, measure: Measure) -> TopK {
+    let norms = row_sq_norms(&ds.data, ds.n, ds.d);
+    let mut out = TopK::new(ds.n, k);
+    for q in 0..ds.n {
+        let mut all: Vec<(f32, u32)> = (0..ds.n)
+            .filter(|&c| c != q)
+            .map(|c| {
+                let mut dot = 0.0f32;
+                for i in 0..ds.d {
+                    dot += ds.data[q * ds.d + i] * ds.data[c * ds.d + i];
+                }
+                let dd = match measure {
+                    Measure::L2Sq => (norms[q] + norms[c] - 2.0 * dot).max(0.0),
+                    Measure::CosineDist => 1.0 - dot,
+                };
+                (dd, c as u32)
+            })
+            .collect();
+        all.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).expect("finite distances").then(a.1.cmp(&b.1))
+        });
+        for (j, &(dd, c)) in all.iter().take(k).enumerate() {
+            out.idx[q * k + j] = c;
+            out.dist[q * k + j] = dd;
+        }
+    }
+    out
+}
+
+#[test]
+fn prepared_kernel_topk_equals_naive_topk_bit_for_bit() {
+    for ds in all_datasets() {
+        for measure in [Measure::L2Sq, Measure::CosineDist] {
+            for threads in [1usize, 3] {
+                let got = all_pairs_topk(&ds, 4, measure, &NativeBackend::new(), threads);
+                let want = naive_topk(&ds, 4, measure);
+                assert_eq!(got.idx, want.idx, "{} {measure:?} t={threads}", ds.name);
+                assert_eq!(got.dist, want.dist, "{} {measure:?} t={threads}", ds.name);
+            }
+        }
+    }
+}
+
+/// Counting test double: forwards to the native backend, recording how
+/// each entry point was exercised and whether tiles carried norms.
+#[derive(Default)]
+struct CountingBackend {
+    inner: NativeBackend,
+    unprepared_calls: AtomicUsize,
+    prepared_calls: AtomicUsize,
+    prepared_calls_with_norms: AtomicUsize,
+    prepared_calls_with_cand_panels: AtomicUsize,
+}
+
+impl Backend for CountingBackend {
+    fn pairwise_topk(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        cands: &[f32],
+        nc: usize,
+        d: usize,
+        k: usize,
+        measure: Measure,
+    ) -> TopK {
+        self.unprepared_calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.pairwise_topk(queries, nq, cands, nc, d, k, measure)
+    }
+
+    fn pairwise_topk_prepared(
+        &self,
+        queries: &PreparedTile<'_>,
+        cands: &PreparedTile<'_>,
+        k: usize,
+        measure: Measure,
+    ) -> TopK {
+        self.prepared_calls.fetch_add(1, Ordering::Relaxed);
+        if queries.sq_norms.len() == queries.n && cands.sq_norms.len() == cands.n {
+            self.prepared_calls_with_norms.fetch_add(1, Ordering::Relaxed);
+        }
+        if !cands.panels.is_empty() {
+            self.prepared_calls_with_cand_panels.fetch_add(1, Ordering::Relaxed);
+        }
+        self.inner.pairwise_topk_prepared(queries, cands, k, measure)
+    }
+
+    fn assign(
+        &self,
+        points: &[f32],
+        np: usize,
+        centers: &[f32],
+        nc: usize,
+        d: usize,
+        measure: Measure,
+    ) -> (Vec<u32>, Vec<f32>) {
+        self.unprepared_calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.assign(points, np, centers, nc, d, measure)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+#[test]
+fn all_pairs_topk_computes_norms_once_per_call() {
+    // norms are computed once, in PreparedDataset::new, and every tile
+    // call receives them: the double must see zero unprepared calls and
+    // 100% norm-carrying (and panel-carrying) prepared calls
+    let ds = seeded_mixtures().remove(3);
+    let counting = CountingBackend::default();
+    let got = all_pairs_topk(&ds, 4, Measure::L2Sq, &counting, 3);
+    let prepared = counting.prepared_calls.load(Ordering::Relaxed);
+    assert!(prepared > 0, "tiled build must go through the prepared entry point");
+    assert_eq!(
+        counting.unprepared_calls.load(Ordering::Relaxed),
+        0,
+        "no tile call may fall back to the unprepared (norm-recomputing) path"
+    );
+    assert_eq!(
+        counting.prepared_calls_with_norms.load(Ordering::Relaxed),
+        prepared,
+        "every tile call must carry precomputed norms for queries and candidates"
+    );
+    assert_eq!(
+        counting.prepared_calls_with_cand_panels.load(Ordering::Relaxed),
+        prepared,
+        "every candidate tile must carry the panel layout"
+    );
+    // and the counted run is still the exact result
+    let want = naive_topk(&ds, 4, Measure::L2Sq);
+    assert_eq!(got.idx, want.idx);
+    assert_eq!(got.dist, want.dist);
+}
+
+// --------------------------------------------------------------- terahac
+
+#[test]
+fn flat_adjacency_terahac_matches_hashmap_reference() {
+    for ds in all_datasets() {
+        let g = knn(&ds);
+        for eps in [0.0f64, 0.5] {
+            let cl = TeraHacClusterer::new(eps);
+            let (flat, flat_log) = cl.merge_sequence(&g);
+            let (hash, hash_log) = cl.merge_sequence_reference(&g);
+            assert_eq!(
+                flat, hash,
+                "{} ε={eps}: flat merge list drifted from the PR-4 hashmap oracle",
+                ds.name
+            );
+            assert_eq!(flat_log, hash_log, "{} ε={eps}: goodness logs differ", ds.name);
+            // workers must not change the flat path either
+            let (flat_w, flat_w_log) =
+                TeraHacClusterer::new(eps).workers(4).merge_sequence(&g);
+            assert_eq!(flat_w, hash, "{} ε={eps}: workers=4 drifted", ds.name);
+            assert_eq!(flat_w_log, hash_log, "{} ε={eps}: workers=4 log drifted", ds.name);
+        }
+    }
+}

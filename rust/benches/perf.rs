@@ -158,12 +158,12 @@ fn main() {
     });
     bench(&mut rows, "graph-hac exact n=4k", 3, || scc::hac::graph::graph_hac(&graph));
 
-    write_json(&rows, backend.name(), par::default_threads());
+    write_json(&rows, backend.name(), par::default_threads(), &scc::telemetry::global().snapshot());
 }
 
 /// Hand-rolled JSON (the offline registry has no serde) — mirrors the
 /// `BENCH_serve.json` writer in `benches/serve.rs`.
-fn write_json(rows: &[Row], backend: &str, threads: usize) {
+fn write_json(rows: &[Row], backend: &str, threads: usize, tele: &scc::telemetry::TelemetrySnapshot) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"perf_hot_paths\",\n");
@@ -182,7 +182,9 @@ fn write_json(rows: &[Row], backend: &str, threads: usize) {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"telemetry\": {}\n", tele.to_json_compact()));
+    s.push_str("}\n");
     match std::fs::write("BENCH_perf.json", &s) {
         Ok(()) => println!("wrote BENCH_perf.json"),
         Err(e) => eprintln!("could not write BENCH_perf.json: {e}"),

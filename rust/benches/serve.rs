@@ -50,6 +50,9 @@ fn main() {
     });
     let g = knn_graph_with_backend(&ds, 10, Measure::L2Sq, backend.as_ref(), threads);
     let mut rows: Vec<Row> = Vec::new();
+    // accumulates per-service private metrics; global engine metrics are
+    // merged in at write time
+    let mut tele = scc::telemetry::TelemetrySnapshot::default();
 
     // --- clusterer arm: scc vs terahac building a serveable snapshot
     //     over the same graph (the rebuild worker pays exactly this
@@ -137,6 +140,11 @@ fn main() {
         }
         let pooled_secs = t.secs();
         assert_eq!(served, nq);
+        // fold this service's private metrics (query latency histogram,
+        // served counters) into the bench-wide snapshot before the
+        // workers go away; latest service wins on name collisions so the
+        // embedded latency histogram describes the largest run
+        tele = service.telemetry().merge(tele);
         service.shutdown();
         rows.push(Row {
             queries: nq,
@@ -227,11 +235,13 @@ fn main() {
         defer_secs / online_secs
     );
 
-    write_json(&rows, build_n, ds.d, clusters, backend.name(), threads);
+    let tele = tele.merge(scc::telemetry::global().snapshot());
+    write_json(&rows, build_n, ds.d, clusters, backend.name(), threads, &tele);
     println!("[serve] total wall-clock: {}", fmt_secs(total.secs()));
 }
 
 /// Hand-rolled JSON (the offline registry has no serde).
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     rows: &[Row],
     build_n: usize,
@@ -239,6 +249,7 @@ fn write_json(
     clusters: usize,
     backend: &str,
     threads: usize,
+    tele: &scc::telemetry::TelemetrySnapshot,
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -260,7 +271,9 @@ fn write_json(
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"telemetry\": {}\n", tele.to_json_compact()));
+    s.push_str("}\n");
     match std::fs::write("BENCH_serve.json", &s) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),

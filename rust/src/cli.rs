@@ -32,6 +32,12 @@ pub struct Cli {
     pub algo: String,
     /// Options for the `serve`-family commands.
     pub serve: ServeOpts,
+    /// Write a [`crate::telemetry::TelemetrySnapshot`] here after the
+    /// command finishes (`.prom` suffix = Prometheus text, else JSON).
+    pub metrics_out: Option<String>,
+    /// Route telemetry progress events to stderr for the command's
+    /// duration (quiet otherwise — no sink, no output).
+    pub verbose: bool,
 }
 
 /// Resolve an `--algo` value into its pipeline clusterer. One match arm
@@ -168,6 +174,11 @@ OPTIONS:
   --online-merges serve: apply cross-cluster conflict merges online during
                   ingest (scoped contraction + splice) instead of
                   deferring them to the next rebuild
+  --metrics-out P write the run's telemetry snapshot to P after the
+                  command finishes: Prometheus text when P ends in
+                  .prom, JSON otherwise (see README \"Observability\")
+  --verbose       stream telemetry progress events (round/epoch/sweep/
+                  phase/serve records) to stderr; default runs are quiet
 ";
 
 /// Parse argv (excluding the program name).
@@ -179,6 +190,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         dataset: "aloi".to_string(),
         algo: "scc".to_string(),
         serve: ServeOpts::default(),
+        metrics_out: None,
+        verbose: false,
     };
     let mut it = args.iter();
     cli.command = it.next().cloned().unwrap_or_else(|| "help".into());
@@ -231,6 +244,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 cli.serve.drift_limit = val()?.parse().context("--drift-limit")?
             }
             "--online-merges" => cli.serve.online_merges = true,
+            "--metrics-out" => cli.metrics_out = Some(val()?.clone()),
+            "--verbose" => cli.verbose = true,
             other => bail!("unknown flag {other:?}\n{USAGE}"),
         }
     }
@@ -252,12 +267,32 @@ pub fn make_backend(kind: BackendKind) -> Result<Arc<dyn Backend + Send + Sync>>
     })
 }
 
+/// Write a telemetry snapshot to `path`: Prometheus exposition text when
+/// the path ends in `.prom`, the JSON document otherwise.
+pub fn write_metrics(snapshot: &crate::telemetry::TelemetrySnapshot, path: &str) -> Result<()> {
+    let text =
+        if path.ends_with(".prom") { snapshot.to_prometheus() } else { snapshot.to_json() };
+    std::fs::write(path, text).with_context(|| format!("writing metrics to {path}"))
+}
+
 /// Execute a parsed CLI; returns the report text.
 pub fn execute(cli: &Cli) -> Result<String> {
+    // `--verbose`: progress events stream to stderr while this guard
+    // lives; without it no sink is installed and runs are quiet
+    let _verbose = cli
+        .verbose
+        .then(|| crate::telemetry::install_sink(Arc::new(crate::telemetry::StderrSink)));
     let cfg = &cli.cfg;
     // `serve` owns its backend (shared with the worker pool)
     if cli.command == "serve" {
-        return serve_cmd(&cli.dataset, &cli.algo, cfg, &cli.serve, cli.backend_kind);
+        return serve_cmd(
+            &cli.dataset,
+            &cli.algo,
+            cfg,
+            &cli.serve,
+            cli.backend_kind,
+            cli.metrics_out.as_deref(),
+        );
     }
     let backend = make_backend(cli.backend_kind)?;
     let out = match cli.command.as_str() {
@@ -277,7 +312,11 @@ pub fn execute(cli: &Cli) -> Result<String> {
                 "table1", "table2", "table3", "table4", "table5", "table7", "fig2", "fig4",
                 "fig5", "fig9",
             ] {
-                let sub = Cli { command: c.into(), ..cli.clone() };
+                // sub-runs share this run's sink and metrics file (the
+                // snapshot below covers them all) — don't re-install or
+                // re-write per subcommand
+                let sub =
+                    Cli { command: c.into(), metrics_out: None, verbose: false, ..cli.clone() };
                 s.push_str(&execute(&sub)?);
                 s.push('\n');
             }
@@ -288,6 +327,9 @@ pub fn execute(cli: &Cli) -> Result<String> {
         "help" | "--help" | "-h" => USAGE.to_string(),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     };
+    if let Some(path) = &cli.metrics_out {
+        write_metrics(&crate::telemetry::global().snapshot(), path)?;
+    }
     Ok(out)
 }
 
@@ -304,6 +346,16 @@ fn cluster_once(
     let tree = res.tree();
     let dp = crate::metrics::dendrogram_purity(&tree, labels);
     let f1 = crate::eval::common::f1_at_k(&res.rounds, labels, w.k_true);
+    crate::telemetry::event(
+        "cli.cluster",
+        &[
+            ("dataset", w.ds.name.as_str().into()),
+            ("algo", algo.into()),
+            ("rounds", res.rounds.len().into()),
+            ("dendrogram_purity", dp.into()),
+            ("f1_at_k", f1.into()),
+        ],
+    );
     let mut out = format!(
         "{} on {} (n={}, d={}, k*={}, backend={}, {} threads)\n{}",
         clusterer.name(),
@@ -361,6 +413,7 @@ fn serve_cmd(
     cfg: &EvalConfig,
     opts: &ServeOpts,
     kind: BackendKind,
+    metrics_out: Option<&str>,
 ) -> Result<String> {
     use crate::serve::{
         HierarchySnapshot, IngestConfig, RebuildConfig, RebuildWorker, ServeIndex, Service,
@@ -428,6 +481,10 @@ fn serve_cmd(
         let r = h.recv().context("service response")?;
         served += r.result.len();
     }
+    crate::telemetry::event(
+        "cli.serve.queries",
+        &[("served", served.into()), ("workers", workers.into()), ("level", level.into())],
+    );
     out.push_str(&format!("served {served} queries\n{}\n", service.stats().report()));
 
     if opts.ingest > 0 {
@@ -485,6 +542,11 @@ fn serve_cmd(
         }
     }
     rebuild_worker.stop();
+    if let Some(path) = metrics_out {
+        // the service's private metrics (query latency histogram,
+        // request counters) union the global engine metrics
+        write_metrics(&service.telemetry().merge(crate::telemetry::global().snapshot()), path)?;
+    }
     service.shutdown();
     Ok(out)
 }
@@ -676,6 +738,39 @@ mod tests {
             out.contains("automatic rebuild swapped in generation"),
             "worker must swap within the report window: {out}"
         );
+    }
+
+    #[test]
+    fn parses_telemetry_flags() {
+        let cli = parse(&argv("cluster --metrics-out /tmp/m.json --verbose")).unwrap();
+        assert_eq!(cli.metrics_out.as_deref(), Some("/tmp/m.json"));
+        assert!(cli.verbose);
+        let defaults = parse(&argv("cluster")).unwrap();
+        assert_eq!(defaults.metrics_out, None);
+        assert!(!defaults.verbose);
+        assert!(parse(&argv("cluster --metrics-out")).is_err(), "flag needs a value");
+    }
+
+    #[test]
+    fn cluster_metrics_out_writes_a_parseable_snapshot() {
+        let dir = std::env::temp_dir().join("scc_cli_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json_path = dir.join("metrics.json");
+        let prom_path = dir.join("metrics.prom");
+        let base = "cluster --dataset aloi --scale 0.05 --knn 6 --rounds 10 --backend native";
+        for path in [&json_path, &prom_path] {
+            let cli = parse(&argv(&format!("{base} --metrics-out {}", path.display()))).unwrap();
+            execute(&cli).unwrap();
+        }
+        let snap = crate::telemetry::TelemetrySnapshot::from_json(
+            &std::fs::read_to_string(&json_path).unwrap(),
+        )
+        .unwrap();
+        assert!(snap.counter("scc.rounds").unwrap_or(0) > 0, "round counter must be live");
+        assert!(snap.get("scc.round.merge_edges").is_some());
+        let prom = std::fs::read_to_string(&prom_path).unwrap();
+        assert!(prom.contains("# TYPE scc_rounds counter"), "{prom}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -76,6 +76,18 @@ pub fn run_parallel(graph: &CsrGraph, config: &SccConfig, workers: usize) -> (Sc
 
     let mut idx = 0usize;
     let mut round_no = 0usize;
+    // Same metric names as the in-process engine
+    // (`scc::run_rounds_with_policy`): the leader loop is sequential, so
+    // everything but the wall-clock histogram is deterministic across
+    // worker counts (the shuffle reduction is exact).
+    let tele = crate::telemetry::global();
+    let m_rounds = tele.counter("scc.rounds");
+    let m_merge_edges = tele.histogram("scc.round.merge_edges", &crate::telemetry::count_buckets());
+    let m_live_edges = tele.histogram("scc.round.live_edges", &crate::telemetry::count_buckets());
+    let m_contraction =
+        tele.histogram("scc.round.contraction_ratio", &crate::telemetry::ratio_buckets());
+    let m_secs = tele.histogram_sched("scc.round.secs", &crate::telemetry::latency_buckets());
+    let m_clusters = tele.gauge("scc.clusters");
     while idx < config.thresholds.len() && round_no < config.max_rounds {
         let tau = config.thresholds[idx];
         let timer = crate::util::Timer::start();
@@ -108,6 +120,24 @@ pub fn run_parallel(graph: &CsrGraph, config: &SccConfig, workers: usize) -> (Sc
         let before = num_clusters;
         num_clusters = new_count;
         rounds.push(Partition::new(labels.clone()));
+        let secs = timer.secs();
+        m_rounds.inc();
+        m_merge_edges.observe(merge_edges.len() as f64);
+        m_live_edges.observe(shuffle.edges_after as f64);
+        m_contraction.observe(num_clusters as f64 / before as f64);
+        m_secs.observe(secs);
+        m_clusters.set(num_clusters as f64);
+        crate::telemetry::event(
+            "scc.round",
+            &[
+                ("round", round_no.into()),
+                ("threshold", tau.into()),
+                ("clusters", num_clusters.into()),
+                ("merge_edges", merge_edges.len().into()),
+                ("live_edges", shuffle.edges_after.into()),
+                ("secs", secs.into()),
+            ],
+        );
         stats.rounds.push(RoundStat {
             round: round_no,
             threshold: tau,
@@ -115,7 +145,7 @@ pub fn run_parallel(graph: &CsrGraph, config: &SccConfig, workers: usize) -> (Sc
             clusters_after: num_clusters,
             merge_edges: merge_edges.len(),
             live_edges: shuffle.edges_after,
-            secs: timer.secs(),
+            secs,
         });
         stats.shuffles.push(shuffle);
         if config.advance_each_round {

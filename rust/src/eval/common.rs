@@ -119,6 +119,18 @@ impl Workload {
             builder.build(&ds, cfg.measure, backend, cfg.threads)
         });
         let k_true = ds.num_classes();
+        crate::telemetry::event(
+            "workload.build",
+            &[
+                ("dataset", ds.name.as_str().into()),
+                ("n", ds.n.into()),
+                ("d", ds.d.into()),
+                ("k_true", k_true.into()),
+                ("graph", cfg.graph.as_str().into()),
+                ("edges", graph.num_edges().into()),
+                ("secs", timers.total().into()),
+            ],
+        );
         Workload {
             spec,
             ds,

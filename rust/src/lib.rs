@@ -92,6 +92,7 @@ pub mod runtime;
 pub mod scc;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod data;
 pub mod graph;
 pub mod metrics;

@@ -125,7 +125,13 @@ impl NnDescentKnn {
             }
         }
 
-        for _ in 0..self.iters {
+        // The sweep loop is fully sequential and the rng is seeded, so
+        // both metrics are deterministic.
+        let tele = crate::telemetry::global();
+        let m_sweeps = tele.counter("graph.nnd.sweeps");
+        let m_update_frac =
+            tele.histogram("graph.nnd.update_frac", &crate::telemetry::ratio_buckets());
+        for sweep in 0..self.iters {
             // reverse lists, subsampled per target through the seeded rng
             // (Dong et al.'s ρ-sampling; keeping the first few by index
             // would deterministically starve high-index sources of
@@ -164,6 +170,17 @@ impl NnDescentKnn {
                     }
                 }
             }
+            let update_frac = updates as f64 / ((n as f64) * (k as f64));
+            m_sweeps.inc();
+            m_update_frac.observe(update_frac);
+            crate::telemetry::event(
+                "graph.nnd.sweep",
+                &[
+                    ("sweep", sweep.into()),
+                    ("updates", updates.into()),
+                    ("update_frac", update_frac.into()),
+                ],
+            );
             if (updates as f64) <= self.min_update_frac * (n as f64) * (k as f64) {
                 break;
             }

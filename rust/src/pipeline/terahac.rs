@@ -398,6 +398,7 @@ impl TeraHacClusterer {
             let maps = members.iter().map(|&m| std::mem::take(&mut adj[m as usize])).collect();
             jobs.push(LocalJob { members, maps });
         }
+        let num_partitions = jobs.len();
 
         // contract partitions: pure function of the inputs, so par_map's
         // scheduling cannot change any outcome (the parallel path clones
@@ -460,6 +461,32 @@ impl TeraHacClusterer {
                 adj[r] = map;
             }
         }
+        // Epoch accounting. The epoch loop is sequential and partition
+        // contraction is a pure function of its inputs, so every value
+        // here is identical for all worker counts — each merge executed
+        // is (1+ε)-good by construction, so `terahac.merges` doubles as
+        // the good-merge count.
+        let tele = crate::telemetry::global();
+        tele.counter("terahac.epochs").inc();
+        tele.counter("terahac.merges").add(made as u64);
+        tele.histogram("terahac.epoch.partitions", &crate::telemetry::count_buckets())
+            .observe(num_partitions as f64);
+        tele.histogram("terahac.epoch.merges", &crate::telemetry::count_buckets())
+            .observe(made as f64);
+        if tau.is_finite() {
+            // the ∞ contraction phase would not survive a JSON snapshot
+            tele.gauge("terahac.threshold").set(tau);
+        }
+        let tau_field = if tau.is_finite() { tau } else { -1.0 };
+        crate::telemetry::event(
+            "terahac.epoch",
+            &[
+                ("epoch", epoch.into()),
+                ("threshold", tau_field.into()),
+                ("partitions", num_partitions.into()),
+                ("merges", made.into()),
+            ],
+        );
         made
     }
 }

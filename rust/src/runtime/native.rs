@@ -45,6 +45,24 @@ fn topk_blocked(queries: &PreparedTile<'_>, cands: &PreparedTile<'_>, k: usize, 
         return topk;
     }
 
+    // Kernel accounting. How work splits into tiles follows the caller's
+    // chunking (and therefore the thread count), so these are Scheduling
+    // metrics — excluded from cross-thread-count invariance.
+    let tele = crate::telemetry::global();
+    tele.counter_sched("runtime.kernel.tiles").inc();
+    if matches!(measure, Measure::L2Sq) {
+        if queries.sq_norms.len() == nq {
+            tele.counter_sched("runtime.kernel.prepared_norm_hits").inc();
+        } else {
+            tele.counter_sched("runtime.kernel.prepared_norm_misses").inc();
+        }
+    }
+    if cands.panels.len() >= nc.div_ceil(PANEL_W) * d * PANEL_W {
+        tele.counter_sched("runtime.kernel.prepared_panel_hits").inc();
+    } else {
+        tele.counter_sched("runtime.kernel.prepared_panel_misses").inc();
+    }
+
     // reuse precomputed norms when the tile carries them; otherwise fall
     // back to the one shared helper (cosine needs none)
     let qn_owned;

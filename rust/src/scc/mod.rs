@@ -143,6 +143,18 @@ fn run_rounds_with_policy(
     let mut stats = Vec::new();
     let mut idx = 0usize;
     let mut round_no = 0usize;
+    // Telemetry handles, fetched once. The round loop itself is
+    // sequential — rounds are observed in order here even when the work
+    // inside a round is parallel — so every metric below except the
+    // wall-clock histogram is deterministic across thread counts.
+    let tele = crate::telemetry::global();
+    let m_rounds = tele.counter("scc.rounds");
+    let m_merge_edges = tele.histogram("scc.round.merge_edges", &crate::telemetry::count_buckets());
+    let m_live_edges = tele.histogram("scc.round.live_edges", &crate::telemetry::count_buckets());
+    let m_contraction =
+        tele.histogram("scc.round.contraction_ratio", &crate::telemetry::ratio_buckets());
+    let m_secs = tele.histogram_sched("scc.round.secs", &crate::telemetry::latency_buckets());
+    let m_clusters = tele.gauge("scc.clusters");
     while idx < config.thresholds.len() && round_no < config.max_rounds {
         let tau = config.thresholds[idx];
         let timer = crate::util::Timer::start();
@@ -152,19 +164,39 @@ fn run_rounds_with_policy(
         match outcome {
             RoundOutcome::Merged { merge_edges } => {
                 rounds.push(cg.point_partition());
+                let after = cg.num_clusters();
+                let live_edges = cg.num_edges();
+                let secs = timer.secs();
+                m_rounds.inc();
+                m_merge_edges.observe(merge_edges as f64);
+                m_live_edges.observe(live_edges as f64);
+                m_contraction.observe(after as f64 / before as f64);
+                m_secs.observe(secs);
+                m_clusters.set(after as f64);
+                crate::telemetry::event(
+                    "scc.round",
+                    &[
+                        ("round", round_no.into()),
+                        ("threshold", tau.into()),
+                        ("clusters", after.into()),
+                        ("merge_edges", merge_edges.into()),
+                        ("live_edges", live_edges.into()),
+                        ("secs", secs.into()),
+                    ],
+                );
                 stats.push(RoundStat {
                     round: round_no,
                     threshold: tau,
                     clusters_before: before,
-                    clusters_after: cg.num_clusters(),
+                    clusters_after: after,
                     merge_edges,
-                    live_edges: cg.num_edges(),
-                    secs: timer.secs(),
+                    live_edges,
+                    secs,
                 });
                 if config.advance_each_round {
                     idx += 1;
                 }
-                if cg.num_clusters() <= 1 {
+                if after <= 1 {
                     break;
                 }
             }

@@ -382,6 +382,28 @@ pub fn ingest_batch(
     snap.conflicts += report.conflicts;
     snap.online_merges += report.online_merges;
     report.rebuild_recommended = snap.needs_rebuild(cfg.drift_limit);
+    // Batch accounting: `ingest_batch` is deterministic for every worker
+    // count (property-tested above), so these are all Deterministic.
+    let splices: usize = merge_groups.iter().map(Vec::len).sum();
+    let tele = crate::telemetry::global();
+    tele.counter("serve.ingest.batches").inc();
+    tele.counter("serve.ingest.points").add(m as u64);
+    tele.counter("serve.ingest.attached").add(report.attached as u64);
+    tele.counter("serve.ingest.new_clusters").add(report.new_clusters as u64);
+    tele.counter("serve.ingest.conflicts").add(report.conflicts as u64);
+    tele.counter("serve.ingest.online_merges").add(report.online_merges as u64);
+    tele.counter("serve.ingest.splices").add(splices as u64);
+    crate::telemetry::event(
+        "serve.ingest",
+        &[
+            ("points", m.into()),
+            ("attached", report.attached.into()),
+            ("new_clusters", report.new_clusters.into()),
+            ("conflicts", report.conflicts.into()),
+            ("online_merges", report.online_merges.into()),
+            ("rebuild_recommended", report.rebuild_recommended.into()),
+        ],
+    );
     report
 }
 

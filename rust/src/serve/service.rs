@@ -12,9 +12,12 @@
 //! * [`Service`] — `workers` threads pulling jobs from a shared
 //!   queue. Requests are *batches* of queries; responses return through
 //!   per-request channels and carry the generation they were served
-//!   from. Latency lands in a [`crate::util::stats::Summary`]
-//!   (p50/p95/p99 via its interpolated percentiles) and throughput is
-//!   queries served over wall-clock;
+//!   from. Latency lands in a per-service
+//!   [`crate::telemetry::Histogram`] (`serve.query.latency`,
+//!   p50/p95/p99 via bucket-interpolated percentiles, O(1) memory for
+//!   any service lifetime) and throughput is queries served over
+//!   wall-clock; [`Service::telemetry`] exposes the whole private
+//!   registry as a [`TelemetrySnapshot`];
 //! * [`RebuildWorker`] — a background thread polling the index's drift
 //!   counter against [`RebuildConfig::drift_limit`]; when crossed it
 //!   re-runs the full batch pipeline (graph → the configured
@@ -39,7 +42,7 @@ use super::snapshot::HierarchySnapshot;
 use crate::core::Dataset;
 use crate::pipeline::{BruteKnn, Clusterer, GraphBuilder, GraphContext, SccClusterer};
 use crate::runtime::Backend;
-use crate::util::stats::Summary;
+use crate::telemetry::{latency_buckets, Counter, Histogram, Registry, TelemetrySnapshot};
 use crate::util::{par, Timer};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
@@ -94,6 +97,14 @@ impl ServeIndex {
     pub fn replace(&self, mut snapshot: HierarchySnapshot) {
         let mut cur = self.current.write().expect("index lock");
         snapshot.generation = cur.generation + 1;
+        // wall-clock ordering of swaps is scheduling-dependent
+        crate::telemetry::global()
+            .gauge_sched("serve.index.generation")
+            .set(snapshot.generation as f64);
+        crate::telemetry::event(
+            "serve.index.swap",
+            &[("generation", snapshot.generation.into()), ("n", snapshot.n.into())],
+        );
         *cur = Arc::new(snapshot);
     }
 
@@ -193,6 +204,8 @@ impl ServeIndex {
         }
         q.rebuilding = false;
         drop(q);
+        // rebuilds fire off a polling thread: scheduling-dependent
+        crate::telemetry::global().counter_sched("serve.rebuilds").inc();
         self.replace(fresh);
         true
     }
@@ -265,47 +278,22 @@ enum Job {
     Batch { queries: Vec<f32>, nq: usize, resp: mpsc::Sender<QueryResponse> },
 }
 
-/// Samples kept for percentile reporting. Percentiles describe the last
-/// `LATENCY_WINDOW` requests; lifetime totals (count/QPS) are exact.
-/// Bounded so a long-lived service's stats stay O(1) in memory and
-/// `stats()` cost.
-const LATENCY_WINDOW: usize = 4096;
-
-/// Fixed-size ring of recent per-request latencies.
-struct LatencyWindow {
-    ring: Vec<f64>,
-    next: usize,
-    filled: usize,
-}
-
-impl LatencyWindow {
-    fn new() -> Self {
-        LatencyWindow { ring: vec![0.0; LATENCY_WINDOW], next: 0, filled: 0 }
-    }
-
-    fn add(&mut self, x: f64) {
-        self.ring[self.next] = x;
-        self.next = (self.next + 1) % self.ring.len();
-        self.filled = (self.filled + 1).min(self.ring.len());
-    }
-
-    fn summary(&self) -> Summary {
-        let mut s = Summary::new();
-        for &x in &self.ring[..self.filled] {
-            s.add(x);
-        }
-        s
-    }
-}
-
 struct Shared {
     index: Arc<ServeIndex>,
     backend: Arc<dyn Backend + Send + Sync>,
     cfg: ServiceConfig,
     rx: Mutex<mpsc::Receiver<Job>>,
-    latencies: Mutex<LatencyWindow>,
-    queries_served: AtomicU64,
-    requests_served: AtomicU64,
+    /// Each service owns its metrics (latency histogram + lifetime
+    /// counters), so two services — or two tests — never bleed into each
+    /// other's stats. [`Service::telemetry`] snapshots it; callers merge
+    /// it with [`crate::telemetry::global`]'s snapshot for a full
+    /// picture.
+    metrics: Registry,
+    /// Handles out of `metrics`, cached so the worker loop records with
+    /// plain atomics (no registry lookup per request).
+    latency: Arc<Histogram>,
+    queries_served: Arc<Counter>,
+    requests_served: Arc<Counter>,
     started: Instant,
 }
 
@@ -325,14 +313,20 @@ impl Service {
         cfg: ServiceConfig,
     ) -> Service {
         let (tx, rx) = mpsc::channel();
+        let metrics = Registry::new();
+        // per-request wall-clock: scheduling-dependent by definition
+        let latency = metrics.histogram_sched("serve.query.latency", &latency_buckets());
+        let queries_served = metrics.counter_sched("serve.queries");
+        let requests_served = metrics.counter_sched("serve.requests");
         let shared = Arc::new(Shared {
             index,
             backend,
             cfg,
             rx: Mutex::new(rx),
-            latencies: Mutex::new(LatencyWindow::new()),
-            queries_served: AtomicU64::new(0),
-            requests_served: AtomicU64::new(0),
+            metrics,
+            latency,
+            queries_served,
+            requests_served,
             started: Instant::now(),
         });
         let workers = (0..shared.cfg.workers.max(1))
@@ -385,15 +379,17 @@ impl Service {
         Arc::clone(&self.shared.index)
     }
 
-    /// Point-in-time latency / throughput statistics. Percentiles cover
-    /// the most recent requests (a bounded 4096-sample window, so stats
-    /// stay O(1) on a long-lived service); counts and QPS are lifetime.
+    /// Point-in-time latency / throughput statistics, read from the
+    /// service's telemetry histogram: percentiles are bucket-interpolated
+    /// over the service's lifetime (fixed [`latency_buckets`], O(1)
+    /// memory no matter how long it runs); counts and QPS are lifetime
+    /// and exact.
     pub fn stats(&self) -> ServiceStats {
-        let lat = self.shared.latencies.lock().expect("latency lock").summary();
+        let lat = &self.shared.latency;
         let elapsed = self.shared.started.elapsed().as_secs_f64();
-        let queries = self.shared.queries_served.load(Ordering::Relaxed);
+        let queries = self.shared.queries_served.get();
         ServiceStats {
-            requests: self.shared.requests_served.load(Ordering::Relaxed),
+            requests: self.shared.requests_served.get(),
             queries,
             elapsed_secs: elapsed,
             qps: if elapsed > 0.0 { queries as f64 / elapsed } else { 0.0 },
@@ -401,8 +397,16 @@ impl Service {
             p50: zero_if_nan(lat.percentile(50.0)),
             p95: zero_if_nan(lat.percentile(95.0)),
             p99: zero_if_nan(lat.percentile(99.0)),
-            max_latency: if lat.is_empty() { 0.0 } else { lat.max() },
+            max_latency: lat.max(),
         }
+    }
+
+    /// Snapshot of this service's private metrics (`serve.query.latency`
+    /// histogram, `serve.queries` / `serve.requests` counters). Merge
+    /// with the global registry's snapshot for engine-side metrics:
+    /// `service.telemetry().merge(telemetry::global().snapshot())`.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        self.shared.metrics.snapshot()
     }
 
     /// Drain the queue, stop the workers, and return final stats.
@@ -441,9 +445,18 @@ fn worker_loop(shared: &Shared) {
             shared.cfg.threads_per_request.max(1),
         );
         let secs = timer.secs();
-        shared.latencies.lock().expect("latency lock").add(secs);
-        shared.queries_served.fetch_add(nq as u64, Ordering::Relaxed);
-        shared.requests_served.fetch_add(1, Ordering::Relaxed);
+        shared.latency.observe(secs);
+        shared.queries_served.add(nq as u64);
+        shared.requests_served.inc();
+        crate::telemetry::event(
+            "serve.query",
+            &[
+                ("nq", nq.into()),
+                ("level", level.into()),
+                ("generation", snap.generation.into()),
+                ("secs", secs.into()),
+            ],
+        );
         // receiver may have given up; that's fine
         let _ = resp.send(QueryResponse {
             result,
@@ -608,8 +621,9 @@ impl Drop for RebuildWorker {
 }
 
 /// Point-in-time service statistics (latencies in seconds). Counts,
-/// elapsed time and QPS are lifetime; the latency fields summarize the
-/// most recent bounded window of requests.
+/// elapsed time and QPS are lifetime and exact; the latency percentiles
+/// are bucket-interpolated estimates from the service's lifetime
+/// `serve.query.latency` histogram (min/max are exact).
 #[derive(Debug, Clone)]
 pub struct ServiceStats {
     pub requests: u64,

@@ -1,0 +1,52 @@
+//! Crate-wide telemetry: a lock-light metrics registry plus a
+//! structured span/event layer, with snapshot export to JSON and
+//! Prometheus-style text.
+//!
+//! Two independent channels:
+//!
+//! * **Metrics** ([`Registry`]): named monotonic [`Counter`]s,
+//!   [`Gauge`]s, and fixed-bucket [`Histogram`]s. Engine code fetches a
+//!   handle once per run (one short registry lock) and then updates it
+//!   with plain atomics — no lock in inner loops. [`global()`] is the
+//!   process-wide registry the engines report into; `serve::Service`
+//!   additionally keeps a private registry per instance so latency
+//!   stats never leak across services (or tests).
+//! * **Events** ([`event`], [`span`], [`EventSink`]): structured
+//!   progress records with pluggable sinks. With no sink installed —
+//!   the default — emission is a single atomic load, so quiet runs are
+//!   actually quiet and pay nothing.
+//!
+//! Every instrumentation site is *read-only* with respect to engine
+//! state: metrics observe numbers the algorithms already produce, and
+//! never feed back into control flow. `tests/telemetry_properties.rs`
+//! pins the consequences: deterministic metrics are identical across
+//! engine thread counts, and a run with sinks installed is bit-identical
+//! to one without.
+//!
+//! Metric stability is part of each metric's identity ([`Stability`]):
+//! counts derived from the algorithm's sequential structure (rounds,
+//! merges, epochs) are `Deterministic`; wall-clock timings and
+//! tiling/scheduling-dependent counts are `Scheduling` and are excluded
+//! from cross-thread-count comparisons via
+//! [`TelemetrySnapshot::deterministic`].
+//!
+//! Naming convention: dotted lower-case paths, `<subsystem>.<noun>` —
+//! e.g. `scc.rounds`, `scc.round.live_edges`, `terahac.epochs`,
+//! `graph.nnd.update_frac`, `runtime.kernel.tiles`,
+//! `serve.query.latency`, `phase.secs`. The README's "Observability"
+//! section lists the full set.
+
+pub mod json;
+mod registry;
+mod sinks;
+mod snapshot;
+
+pub use registry::{
+    count_buckets, exp_buckets, global, latency_buckets, ratio_buckets, Counter, Gauge, Histogram,
+    Registry, Stability,
+};
+pub use sinks::{
+    event, install_sink, sinks_active, span, Event, EventSink, FieldValue, JsonlSink, MemorySink,
+    SinkGuard, Span, StderrSink,
+};
+pub use snapshot::{MetricSnapshot, MetricValue, TelemetrySnapshot};

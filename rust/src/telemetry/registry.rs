@@ -1,0 +1,495 @@
+//! The metrics registry: monotonic counters, gauges, and
+//! fixed-exponential-bucket histograms behind lock-light handles.
+//!
+//! Handles are `Arc`s over atomics: acquiring one takes a brief
+//! `RwLock` read (or write, first time a name is seen); recording
+//! through it is a handful of atomic ops with no lock at all. Engine
+//! hot paths fetch their handles once per run and record through them,
+//! so the registry lookup never sits inside an inner loop.
+//!
+//! Every metric carries a [`Stability`] class. `Deterministic` metrics
+//! are recorded at sequential aggregation points (per-round, per-epoch,
+//! per-sweep) and are **identical for every engine thread count** — the
+//! same bit-identity contract the clustering outputs obey, pinned by
+//! `rust/tests/telemetry_properties.rs`. `Scheduling` metrics
+//! (wall-clock timings, per-tile kernel counts whose tiling follows the
+//! thread count) are excluded from that contract and flagged in every
+//! snapshot so downstream comparisons can filter them out.
+
+use super::snapshot::{MetricSnapshot, MetricValue, TelemetrySnapshot};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Whether a metric's value is a pure function of the run's inputs
+/// (`Deterministic`) or may vary with thread scheduling / wall-clock
+/// (`Scheduling`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stability {
+    Deterministic,
+    Scheduling,
+}
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins f64 cell with an atomic accumulate.
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Accumulate `dx` (CAS loop; exact when writers don't race).
+    pub fn add(&self, dx: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + dx).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+/// Fixed-bucket histogram. Bucket `i` covers `(bounds[i-1], bounds[i]]`
+/// (bucket 0 starts at 0); one trailing overflow bucket catches values
+/// above the last bound. Bounds are fixed at registration — use the
+/// [`exp_buckets`] family so snapshots from different runs and machines
+/// are bucket-for-bucket comparable.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// A standalone histogram over `bounds` (strictly ascending,
+    /// non-empty). Registry users get one via [`Registry::histogram`];
+    /// this constructor serves free-standing uses (tests, local stats).
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// Index of the bucket holding `x`: first `i` with
+    /// `x <= bounds[i]`, else the overflow bucket.
+    pub fn bucket_index(&self, x: f64) -> usize {
+        self.bounds.partition_point(|&b| b < x)
+    }
+
+    pub fn observe(&self, x: f64) {
+        self.buckets[self.bucket_index(x)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, x);
+        atomic_f64_min(&self.min_bits, x);
+        atomic_f64_max(&self.max_bits, x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Smallest observed value (`0.0` when empty).
+    pub fn min(&self) -> f64 {
+        if self.count() == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.min_bits.load(Ordering::Relaxed))
+        }
+    }
+
+    /// Largest observed value (`0.0` when empty).
+    pub fn max(&self) -> f64 {
+        if self.count() == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+        }
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Bucket-interpolated percentile estimate, `q` in `[0, 100]`:
+    /// walk the cumulative counts to the bucket holding rank
+    /// `q/100 · count`, interpolate linearly inside it, then clamp to
+    /// the exact observed `[min, max]`. Monotone in `q`; `q = 0` gives
+    /// the exact min and `q = 100` the exact max. `NaN` when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q / 100.0).clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if cum as f64 >= target {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { self.max() };
+                let frac = ((target - prev as f64) / c as f64).clamp(0.0, 1.0);
+                let x = lo + frac * (hi - lo);
+                return x.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_bits.store(0f64.to_bits(), Ordering::Relaxed);
+        self.min_bits.store(f64::INFINITY.to_bits(), Ordering::Relaxed);
+        self.max_bits.store(f64::NEG_INFINITY.to_bits(), Ordering::Relaxed);
+    }
+}
+
+fn atomic_f64_add(bits: &AtomicU64, dx: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + dx).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn atomic_f64_min(bits: &AtomicU64, x: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    while x < f64::from_bits(cur) {
+        match bits.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn atomic_f64_max(bits: &AtomicU64, x: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    while x > f64::from_bits(cur) {
+        match bits.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// `n` exponentially spaced bucket bounds `start · factor^i`. The
+/// standard families below keep snapshots comparable across runs.
+pub fn exp_buckets(start: f64, factor: f64, n: usize) -> Vec<f64> {
+    assert!(start > 0.0 && factor > 1.0 && n > 0);
+    let mut v = Vec::with_capacity(n);
+    let mut x = start;
+    for _ in 0..n {
+        v.push(x);
+        x *= factor;
+    }
+    v
+}
+
+/// Wall-clock seconds: 1µs … ~4300s, doubling.
+pub fn latency_buckets() -> Vec<f64> {
+    exp_buckets(1e-6, 2.0, 32)
+}
+
+/// Nonnegative integer quantities (edge counts, merges): 1 … ~5.5e11,
+/// doubling.
+pub fn count_buckets() -> Vec<f64> {
+    exp_buckets(1.0, 2.0, 40)
+}
+
+/// Fractions in `[0, 1]` (contraction ratios, update fractions):
+/// twenty 0.05-wide linear buckets.
+pub fn ratio_buckets() -> Vec<f64> {
+    (1..=20).map(|i| i as f64 * 0.05).collect()
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics. The crate-wide instance is
+/// [`global()`]; components that need isolated metrics (one
+/// [`crate::serve::Service`] per registry, unit tests) hold their own.
+#[derive(Default)]
+pub struct Registry {
+    metrics: RwLock<BTreeMap<String, (Stability, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register a deterministic counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_with(name, Stability::Deterministic)
+    }
+
+    /// Get or register a scheduling-dependent counter.
+    pub fn counter_sched(&self, name: &str) -> Arc<Counter> {
+        self.counter_with(name, Stability::Scheduling)
+    }
+
+    fn counter_with(&self, name: &str, stability: Stability) -> Arc<Counter> {
+        if let Some((_, Metric::Counter(c))) = self.metrics.read().expect("registry").get(name) {
+            return Arc::clone(c);
+        }
+        let mut map = self.metrics.write().expect("registry");
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| (stability, Metric::Counter(Arc::new(Counter::default()))))
+        {
+            (_, Metric::Counter(c)) => Arc::clone(c),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get or register a deterministic gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_with(name, Stability::Deterministic)
+    }
+
+    /// Get or register a scheduling-dependent gauge.
+    pub fn gauge_sched(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_with(name, Stability::Scheduling)
+    }
+
+    fn gauge_with(&self, name: &str, stability: Stability) -> Arc<Gauge> {
+        if let Some((_, Metric::Gauge(g))) = self.metrics.read().expect("registry").get(name) {
+            return Arc::clone(g);
+        }
+        let mut map = self.metrics.write().expect("registry");
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| (stability, Metric::Gauge(Arc::new(Gauge::default()))))
+        {
+            (_, Metric::Gauge(g)) => Arc::clone(g),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Get or register a deterministic histogram with the given bounds
+    /// (ignored when the name already exists).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.histogram_with(name, bounds, Stability::Deterministic)
+    }
+
+    /// Get or register a scheduling-dependent histogram.
+    pub fn histogram_sched(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.histogram_with(name, bounds, Stability::Scheduling)
+    }
+
+    fn histogram_with(&self, name: &str, bounds: &[f64], stability: Stability) -> Arc<Histogram> {
+        if let Some((_, Metric::Histogram(h))) = self.metrics.read().expect("registry").get(name)
+        {
+            return Arc::clone(h);
+        }
+        let mut map = self.metrics.write().expect("registry");
+        match map
+            .entry(name.to_string())
+            .or_insert_with(|| (stability, Metric::Histogram(Arc::new(Histogram::new(bounds)))))
+        {
+            (_, Metric::Histogram(h)) => Arc::clone(h),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Point-in-time snapshot of every registered metric, sorted by
+    /// name.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let map = self.metrics.read().expect("registry");
+        let metrics = map
+            .iter()
+            .map(|(name, (stability, metric))| MetricSnapshot {
+                name: name.clone(),
+                deterministic: *stability == Stability::Deterministic,
+                value: match metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histogram(h) => MetricValue::Histogram {
+                        bounds: h.bounds().to_vec(),
+                        buckets: h.bucket_counts(),
+                        count: h.count(),
+                        sum: h.sum(),
+                        min: h.min(),
+                        max: h.max(),
+                    },
+                },
+            })
+            .collect();
+        TelemetrySnapshot { metrics }
+    }
+
+    /// Zero every registered metric (registrations and handles stay
+    /// valid). Test plumbing — production code never resets.
+    pub fn reset(&self) {
+        let map = self.metrics.read().expect("registry");
+        for (_, metric) in map.values() {
+            match metric {
+                Metric::Counter(c) => c.reset(),
+                Metric::Gauge(g) => g.reset(),
+                Metric::Histogram(h) => h.reset(),
+            }
+        }
+    }
+}
+
+/// The crate-wide registry every engine hot path records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("c");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("c").get(), 5, "same name yields the same handle");
+        let g = r.gauge("g");
+        g.set(2.5);
+        g.add(0.5);
+        assert_eq!(g.get(), 3.0);
+        r.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let h = Registry::new().histogram("h", &[1.0, 2.0, 4.0]);
+        for x in [0.5, 1.0, 1.5, 4.0, 100.0] {
+            h.observe(x);
+        }
+        // (0,1] ← {0.5, 1.0}; (1,2] ← {1.5}; (2,4] ← {4.0}; overflow ← {100}
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 107.0);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.percentile(0.0), 0.5, "q=0 is the exact min");
+        assert_eq!(h.percentile(100.0), 100.0, "q=100 is the exact max");
+        let (p50, p90) = (h.percentile(50.0), h.percentile(90.0));
+        assert!(p50 <= p90, "percentile must be monotone: {p50} vs {p90}");
+    }
+
+    #[test]
+    fn empty_histogram_is_nan_percentile_zero_extrema() {
+        let h = Registry::new().histogram("h", &[1.0]);
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn exp_bucket_families_are_pinned() {
+        assert_eq!(exp_buckets(1e-6, 2.0, 3), vec![1e-6, 2e-6, 4e-6]);
+        assert_eq!(latency_buckets().len(), 32);
+        assert_eq!(count_buckets()[0], 1.0);
+        assert_eq!(ratio_buckets().len(), 20);
+        assert!((ratio_buckets()[19] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stability_classes_survive_snapshot() {
+        let r = Registry::new();
+        r.counter("det").inc();
+        r.counter_sched("sched").inc();
+        let snap = r.snapshot();
+        assert!(snap.get("det").unwrap().deterministic);
+        assert!(!snap.get("sched").unwrap().deterministic);
+    }
+}

@@ -1,0 +1,364 @@
+//! Structured spans and events with pluggable sinks.
+//!
+//! The engine emits events (`event("terahac.merge", &[...])`) and spans
+//! (`span("scc.round")`, which emits a close event with a wall-clock
+//! duration) unconditionally; whether anything happens is decided by the
+//! installed sinks. With no sink installed — the default — emission is a
+//! single relaxed atomic load, so instrumented hot paths cost nothing in
+//! quiet runs. Sinks:
+//!
+//! * [`MemorySink`] — collects events in memory, for tests.
+//! * [`JsonlSink`] — appends one JSON object per event to a writer.
+//! * [`StderrSink`] — human-readable lines, installed by `--verbose`.
+//!
+//! Sinks are installed process-globally via [`install_sink`], which
+//! returns a guard that removes the sink on drop. Event emission never
+//! touches metric values, so an instrumented run and a no-op-sink run
+//! produce bit-identical engine output (`telemetry_properties.rs` pins
+//! this).
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json;
+
+/// A typed field value attached to an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<u64> for FieldValue {
+    fn from(v: u64) -> Self {
+        FieldValue::U64(v)
+    }
+}
+impl From<usize> for FieldValue {
+    fn from(v: usize) -> Self {
+        FieldValue::U64(v as u64)
+    }
+}
+impl From<u32> for FieldValue {
+    fn from(v: u32) -> Self {
+        FieldValue::U64(v as u64)
+    }
+}
+impl From<i64> for FieldValue {
+    fn from(v: i64) -> Self {
+        FieldValue::I64(v)
+    }
+}
+impl From<f64> for FieldValue {
+    fn from(v: f64) -> Self {
+        FieldValue::F64(v)
+    }
+}
+impl From<&str> for FieldValue {
+    fn from(v: &str) -> Self {
+        FieldValue::Str(v.to_string())
+    }
+}
+impl From<String> for FieldValue {
+    fn from(v: String) -> Self {
+        FieldValue::Str(v)
+    }
+}
+impl From<bool> for FieldValue {
+    fn from(v: bool) -> Self {
+        FieldValue::Bool(v)
+    }
+}
+
+impl FieldValue {
+    fn to_json(&self) -> String {
+        match self {
+            FieldValue::U64(v) => v.to_string(),
+            FieldValue::I64(v) => v.to_string(),
+            FieldValue::F64(v) => json::fmt_f64(*v),
+            FieldValue::Str(s) => format!("\"{}\"", json::escape(s)),
+            FieldValue::Bool(b) => b.to_string(),
+        }
+    }
+
+    fn display(&self) -> String {
+        match self {
+            FieldValue::U64(v) => v.to_string(),
+            FieldValue::I64(v) => v.to_string(),
+            FieldValue::F64(v) => format!("{v:.6}"),
+            FieldValue::Str(s) => s.clone(),
+            FieldValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// One structured event: a dotted name plus ordered key/value fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: String,
+    pub fields: Vec<(String, FieldValue)>,
+}
+
+impl Event {
+    /// Field by key.
+    pub fn field(&self, key: &str) -> Option<&FieldValue> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Single-line JSON object (`{"event": name, ...fields}`).
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"event\": \"{}\"", json::escape(&self.name));
+        for (k, v) in &self.fields {
+            s.push_str(&format!(", \"{}\": {}", json::escape(k), v.to_json()));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Receives every emitted event. Implementations must be cheap and
+/// must not panic — they run inside engine loops.
+pub trait EventSink: Send + Sync {
+    fn accept(&self, event: &Event);
+}
+
+/// Collects events in memory; `take()` drains them. For tests.
+#[derive(Default)]
+pub struct MemorySink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Arc<MemorySink> {
+        Arc::new(MemorySink::default())
+    }
+
+    /// Drain all collected events.
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut self.events.lock().expect("memory sink poisoned"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("memory sink poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl EventSink for MemorySink {
+    fn accept(&self, event: &Event) {
+        self.events.lock().expect("memory sink poisoned").push(event.clone());
+    }
+}
+
+/// Appends one JSON object per event to any writer (a file, a Vec<u8>).
+pub struct JsonlSink<W: std::io::Write + Send> {
+    out: Mutex<W>,
+}
+
+impl<W: std::io::Write + Send> JsonlSink<W> {
+    pub fn new(out: W) -> Arc<JsonlSink<W>> {
+        Arc::new(JsonlSink { out: Mutex::new(out) })
+    }
+
+    /// Consume the sink and hand back the writer (e.g. to inspect the
+    /// buffered bytes in tests). Fails if other Arcs are still alive.
+    pub fn into_inner(self: Arc<Self>) -> Option<W> {
+        Arc::into_inner(self).map(|s| s.out.into_inner().expect("jsonl sink poisoned"))
+    }
+}
+
+impl<W: std::io::Write + Send> EventSink for JsonlSink<W> {
+    fn accept(&self, event: &Event) {
+        let mut out = self.out.lock().expect("jsonl sink poisoned");
+        // Sinks must not panic mid-engine; a full disk loses the line.
+        let _ = writeln!(out, "{}", event.to_json());
+    }
+}
+
+/// Human-readable progress lines on stderr; installed by `--verbose`.
+pub struct StderrSink;
+
+impl EventSink for StderrSink {
+    fn accept(&self, event: &Event) {
+        let fields: Vec<String> =
+            event.fields.iter().map(|(k, v)| format!("{k}={}", v.display())).collect();
+        eprintln!("[{}] {}", event.name, fields.join(" "));
+    }
+}
+
+/// Registered sinks. `SINK_COUNT` tracks how many are installed so
+/// `event` can skip the lock entirely in the common no-sink case.
+static SINKS: OnceLock<Mutex<Vec<(u64, Arc<dyn EventSink>)>>> = OnceLock::new();
+static SINK_COUNT: AtomicUsize = AtomicUsize::new(0);
+static NEXT_SINK_ID: AtomicUsize = AtomicUsize::new(0);
+
+fn sinks() -> &'static Mutex<Vec<(u64, Arc<dyn EventSink>)>> {
+    SINKS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Removes its sink when dropped.
+pub struct SinkGuard {
+    id: u64,
+}
+
+impl Drop for SinkGuard {
+    fn drop(&mut self) {
+        let mut list = sinks().lock().expect("sink list poisoned");
+        if let Some(i) = list.iter().position(|(id, _)| *id == self.id) {
+            list.remove(i);
+            SINK_COUNT.fetch_sub(1, Ordering::Release);
+        }
+    }
+}
+
+/// Install a sink for the lifetime of the returned guard. Multiple
+/// sinks may be active at once; each sees every event.
+#[must_use = "the sink is removed when the guard drops"]
+pub fn install_sink(sink: Arc<dyn EventSink>) -> SinkGuard {
+    let id = NEXT_SINK_ID.fetch_add(1, Ordering::Relaxed) as u64;
+    sinks().lock().expect("sink list poisoned").push((id, sink));
+    SINK_COUNT.fetch_add(1, Ordering::Release);
+    SinkGuard { id }
+}
+
+/// True when at least one sink is installed. Hot paths may use this to
+/// skip field formatting entirely.
+pub fn sinks_active() -> bool {
+    SINK_COUNT.load(Ordering::Acquire) > 0
+}
+
+/// Emit a structured event to every installed sink. With no sinks this
+/// is one atomic load.
+pub fn event(name: &str, fields: &[(&str, FieldValue)]) {
+    if !sinks_active() {
+        return;
+    }
+    let ev = Event {
+        name: name.to_string(),
+        fields: fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    };
+    for (_, sink) in sinks().lock().expect("sink list poisoned").iter() {
+        sink.accept(&ev);
+    }
+}
+
+/// A timed scope. Emits `<name>.close` with a `secs` field (plus any
+/// fields added via [`Span::field`]) when dropped — unless no sink is
+/// installed, in which case construction and drop are both free of
+/// allocation and locking.
+pub struct Span {
+    name: &'static str,
+    start: Instant,
+    fields: Vec<(String, FieldValue)>,
+    active: bool,
+}
+
+/// Open a timed span; its close event fires on drop.
+pub fn span(name: &'static str) -> Span {
+    Span { name, start: Instant::now(), fields: Vec::new(), active: sinks_active() }
+}
+
+impl Span {
+    /// Attach a field to the eventual close event.
+    pub fn field(&mut self, key: &str, value: impl Into<FieldValue>) {
+        if self.active {
+            self.fields.push((key.to_string(), value.into()));
+        }
+    }
+
+    /// Elapsed time since the span opened.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active || !sinks_active() {
+            return;
+        }
+        let mut ev = Event {
+            name: format!("{}.close", self.name),
+            fields: std::mem::take(&mut self.fields),
+        };
+        ev.fields.push(("secs".to_string(), FieldValue::F64(self.start.elapsed().as_secs_f64())));
+        for (_, sink) in sinks().lock().expect("sink list poisoned").iter() {
+            sink.accept(&ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sink installation is process-global; serialize the tests that
+    // install one so they don't observe each other's events.
+    static SINK_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn no_sink_emission_is_a_noop() {
+        let _serial = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!sinks_active());
+        event("quiet.event", &[("n", 1u64.into())]); // must not panic or block
+    }
+
+    #[test]
+    fn memory_sink_sees_events_in_order() {
+        let _serial = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let sink = MemorySink::new();
+        let guard = install_sink(sink.clone());
+        event("a", &[("x", 1u64.into())]);
+        event("b", &[("y", 2.5f64.into()), ("z", "hi".into())]);
+        drop(guard);
+        event("after", &[]); // guard dropped — not collected
+        let evs = sink.take();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "a");
+        assert_eq!(evs[0].field("x"), Some(&FieldValue::U64(1)));
+        assert_eq!(evs[1].field("z"), Some(&FieldValue::Str("hi".into())));
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let _serial = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let sink = JsonlSink::new(Vec::new());
+        let guard = install_sink(sink.clone());
+        event("scc.round", &[("round", 3u64.into()), ("ratio", 0.5f64.into())]);
+        drop(guard);
+        let bytes = sink.into_inner().expect("sole owner");
+        let line = String::from_utf8(bytes).unwrap();
+        let doc = super::super::json::parse(line.trim()).unwrap();
+        assert_eq!(doc.get("event").unwrap().as_str(), Some("scc.round"));
+        assert_eq!(doc.get("round").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("ratio").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn span_emits_close_event_with_duration() {
+        let _serial = SINK_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let sink = MemorySink::new();
+        let guard = install_sink(sink.clone());
+        {
+            let mut sp = span("phase.knn");
+            sp.field("k", 25u64);
+        }
+        drop(guard);
+        let evs = sink.take();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "phase.knn.close");
+        assert_eq!(evs[0].field("k"), Some(&FieldValue::U64(25)));
+        match evs[0].field("secs") {
+            Some(FieldValue::F64(s)) => assert!(*s >= 0.0),
+            other => panic!("missing secs field: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Point-in-time snapshots of a [`super::Registry`] and their export
+//! surfaces: pretty / compact JSON (round-trippable through
+//! [`TelemetrySnapshot::from_json`]) and Prometheus-style exposition
+//! text. Written by the CLI's `--metrics-out`, embedded in the
+//! `BENCH_*.json` writers, and returned by
+//! [`crate::serve::Service::telemetry`].
+
+use super::json::{self, Json};
+
+/// One metric's value at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram {
+        /// Ascending bucket upper bounds (fixed at registration).
+        bounds: Vec<f64>,
+        /// Per-bucket counts; one trailing overflow bucket.
+        buckets: Vec<u64>,
+        count: u64,
+        sum: f64,
+        /// Exact observed extrema (0 when empty — JSON holds no ±∞).
+        min: f64,
+        max: f64,
+    },
+}
+
+impl MetricValue {
+    fn kind(&self) -> &'static str {
+        match self {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram { .. } => "histogram",
+        }
+    }
+}
+
+/// One named metric in a snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSnapshot {
+    pub name: String,
+    /// `true` when the value is a pure function of the run's inputs
+    /// (identical for every engine thread count); `false` for
+    /// wall-clock timings and scheduling-dependent counts. See
+    /// [`super::Stability`].
+    pub deterministic: bool,
+    pub value: MetricValue,
+}
+
+/// An immutable, exportable copy of a registry's metrics, sorted by
+/// name.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub metrics: Vec<MetricSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    /// Metric by exact name.
+    pub fn get(&self, name: &str) -> Option<&MetricSnapshot> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// A counter's value, if `name` is a counter.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        match self.get(name)?.value {
+            MetricValue::Counter(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// A gauge's value, if `name` is a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.get(name)?.value {
+            MetricValue::Gauge(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// A histogram's total observation count, if `name` is a histogram.
+    pub fn histogram_count(&self, name: &str) -> Option<u64> {
+        match self.get(name)?.value {
+            MetricValue::Histogram { count, .. } => Some(count),
+            _ => None,
+        }
+    }
+
+    /// Only the metrics whose values are thread-count-invariant — the
+    /// set `telemetry_properties.rs` pins across engine thread counts.
+    pub fn deterministic(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            metrics: self.metrics.iter().filter(|m| m.deterministic).cloned().collect(),
+        }
+    }
+
+    /// Union with another snapshot (e.g. the global registry + one
+    /// service's private registry). On a name collision `self` wins —
+    /// collisions only happen when the same subsystem reported into
+    /// both, in which case `self` is the more specific source.
+    pub fn merge(mut self, other: TelemetrySnapshot) -> TelemetrySnapshot {
+        for m in other.metrics {
+            if self.get(&m.name).is_none() {
+                self.metrics.push(m);
+            }
+        }
+        self.metrics.sort_by(|a, b| a.name.cmp(&b.name));
+        self
+    }
+
+    /// Pretty JSON document: `{"metrics": [...]}`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"metrics\": [\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(&metric_json(m));
+            s.push_str(if i + 1 == self.metrics.len() { "\n" } else { ",\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// The same document on a single line, for embedding as a value in
+    /// a larger hand-rolled JSON document (the `BENCH_*.json` writers).
+    pub fn to_json_compact(&self) -> String {
+        let body: Vec<String> = self.metrics.iter().map(metric_json).collect();
+        format!("{{\"metrics\": [{}]}}", body.join(", "))
+    }
+
+    /// Parse a document produced by [`TelemetrySnapshot::to_json`] /
+    /// [`TelemetrySnapshot::to_json_compact`] (whitespace-insensitive).
+    pub fn from_json(text: &str) -> Result<TelemetrySnapshot, String> {
+        let doc = json::parse(text)?;
+        let arr = doc
+            .get("metrics")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot document needs a \"metrics\" array")?;
+        let mut metrics = Vec::with_capacity(arr.len());
+        for m in arr {
+            metrics.push(metric_from_json(m)?);
+        }
+        Ok(TelemetrySnapshot { metrics })
+    }
+
+    /// Prometheus-style exposition text (`# TYPE` comments, `_bucket`
+    /// series with cumulative counts and an `le` label, `_sum`/`_count`;
+    /// metric names have `.` mapped to `_`).
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for m in &self.metrics {
+            let name: String =
+                m.name.chars().map(|c| if c.is_alphanumeric() { c } else { '_' }).collect();
+            match &m.value {
+                MetricValue::Counter(v) => {
+                    s.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+                }
+                MetricValue::Gauge(v) => {
+                    s.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", json::fmt_f64(*v)));
+                }
+                MetricValue::Histogram { bounds, buckets, count, sum, .. } => {
+                    s.push_str(&format!("# TYPE {name} histogram\n"));
+                    let mut cum = 0u64;
+                    for (i, b) in buckets.iter().enumerate() {
+                        cum += b;
+                        let le = if i < bounds.len() {
+                            json::fmt_f64(bounds[i])
+                        } else {
+                            "+Inf".to_string()
+                        };
+                        s.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    s.push_str(&format!("{name}_sum {}\n", json::fmt_f64(*sum)));
+                    s.push_str(&format!("{name}_count {count}\n"));
+                }
+            }
+        }
+        s
+    }
+}
+
+fn metric_json(m: &MetricSnapshot) -> String {
+    let head = format!(
+        "{{\"name\": \"{}\", \"kind\": \"{}\", \"deterministic\": {}",
+        json::escape(&m.name),
+        m.value.kind(),
+        m.deterministic
+    );
+    match &m.value {
+        MetricValue::Counter(v) => format!("{head}, \"value\": {v}}}"),
+        MetricValue::Gauge(v) => format!("{head}, \"value\": {}}}", json::fmt_f64(*v)),
+        MetricValue::Histogram { bounds, buckets, count, sum, min, max } => {
+            let bs: Vec<String> = bounds.iter().map(|&b| json::fmt_f64(b)).collect();
+            let cs: Vec<String> = buckets.iter().map(u64::to_string).collect();
+            format!(
+                "{head}, \"count\": {count}, \"sum\": {}, \"min\": {}, \"max\": {}, \
+                 \"bounds\": [{}], \"buckets\": [{}]}}",
+                json::fmt_f64(*sum),
+                json::fmt_f64(*min),
+                json::fmt_f64(*max),
+                bs.join(", "),
+                cs.join(", ")
+            )
+        }
+    }
+}
+
+fn metric_from_json(m: &Json) -> Result<MetricSnapshot, String> {
+    let name = m.get("name").and_then(Json::as_str).ok_or("metric needs a name")?.to_string();
+    let kind = m.get("kind").and_then(Json::as_str).ok_or("metric needs a kind")?;
+    let deterministic =
+        m.get("deterministic").and_then(Json::as_bool).ok_or("metric needs determinism")?;
+    let f = |key: &str| -> Result<f64, String> {
+        m.get(key).and_then(Json::as_f64).ok_or(format!("{name}: missing number {key:?}"))
+    };
+    let u = |key: &str| -> Result<u64, String> {
+        m.get(key).and_then(Json::as_u64).ok_or(format!("{name}: missing count {key:?}"))
+    };
+    let value = match kind {
+        "counter" => MetricValue::Counter(u("value")?),
+        "gauge" => MetricValue::Gauge(f("value")?),
+        "histogram" => {
+            let nums = |key: &str| -> Result<Vec<f64>, String> {
+                m.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or(format!("{name}: missing array {key:?}"))?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or(format!("{name}: non-number in {key:?}")))
+                    .collect()
+            };
+            let counts: Result<Vec<u64>, String> = m
+                .get("buckets")
+                .and_then(Json::as_arr)
+                .ok_or(format!("{name}: missing array \"buckets\""))?
+                .iter()
+                .map(|v| v.as_u64().ok_or(format!("{name}: non-count in \"buckets\"")))
+                .collect();
+            MetricValue::Histogram {
+                bounds: nums("bounds")?,
+                buckets: counts?,
+                count: u("count")?,
+                sum: f("sum")?,
+                min: f("min")?,
+                max: f("max")?,
+            }
+        }
+        other => return Err(format!("{name}: unknown metric kind {other:?}")),
+    };
+    Ok(MetricSnapshot { name, deterministic, value })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::Registry;
+    use super::*;
+
+    fn sample() -> TelemetrySnapshot {
+        let r = Registry::new();
+        r.counter("a.count").add(7);
+        r.gauge_sched("a.gauge").set(2.5);
+        let h = r.histogram("a.hist", &[1e-6, 2e-6, 4e-6]);
+        h.observe(1.5e-6);
+        h.observe(1.0);
+        r.histogram("empty.hist", &[1.0]);
+        r.snapshot()
+    }
+
+    #[test]
+    fn json_round_trips_bit_exact() {
+        let snap = sample();
+        assert_eq!(TelemetrySnapshot::from_json(&snap.to_json()).unwrap(), snap);
+        assert_eq!(TelemetrySnapshot::from_json(&snap.to_json_compact()).unwrap(), snap);
+    }
+
+    #[test]
+    fn accessors_find_metrics() {
+        let snap = sample();
+        assert_eq!(snap.counter("a.count"), Some(7));
+        assert_eq!(snap.gauge("a.gauge"), Some(2.5));
+        assert_eq!(snap.histogram_count("a.hist"), Some(2));
+        assert_eq!(snap.histogram_count("empty.hist"), Some(0));
+        assert_eq!(snap.counter("missing"), None);
+        assert_eq!(snap.counter("a.gauge"), None, "kind mismatch is None");
+    }
+
+    #[test]
+    fn deterministic_filter_drops_scheduling_metrics() {
+        let det = sample().deterministic();
+        assert!(det.get("a.count").is_some());
+        assert!(det.get("a.gauge").is_none());
+    }
+
+    #[test]
+    fn merge_unions_and_prefers_self() {
+        let r = Registry::new();
+        r.counter("a.count").add(100);
+        r.counter("b.only").add(1);
+        let merged = sample().merge(r.snapshot());
+        assert_eq!(merged.counter("a.count"), Some(7), "self wins collisions");
+        assert_eq!(merged.counter("b.only"), Some(1));
+        let names: Vec<&str> = merged.metrics.iter().map(|m| m.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "merge keeps name order");
+    }
+
+    #[test]
+    fn prometheus_text_has_cumulative_buckets() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# TYPE a_count counter"), "{text}");
+        assert!(text.contains("# TYPE a_hist histogram"), "{text}");
+        assert!(text.contains("a_hist_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("a_hist_count 2"), "{text}");
+    }
+}

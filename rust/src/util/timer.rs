@@ -1,6 +1,12 @@
 //! Wall-clock timing helpers and a named-phase stopwatch used by the
 //! coordinator and the experiment harness to attribute time per phase
 //! (graph build, per-round argmin, contraction, …).
+//!
+//! [`PhaseTimer`] doubles as a telemetry source: every
+//! [`PhaseTimer::add`] also lands in the global registry (the
+//! `phase.secs` histogram plus a `phase.<name>.secs` gauge per phase)
+//! and emits a `phase` event, so phase attribution and the
+//! `--metrics-out` snapshot agree without any caller changes.
 
 use std::time::Instant;
 
@@ -45,13 +51,20 @@ impl PhaseTimer {
         out
     }
 
-    /// Add `secs` to phase `name`.
+    /// Add `secs` to phase `name`. Also mirrored into the global
+    /// telemetry registry (all wall-clock, so Scheduling-class): the
+    /// `phase.secs` histogram observes the increment and the cumulative
+    /// `phase.<name>.secs` gauge accumulates it.
     pub fn add(&mut self, name: &str, secs: f64) {
         if let Some(p) = self.phases.iter_mut().find(|(n, _)| n == name) {
             p.1 += secs;
         } else {
             self.phases.push((name.to_string(), secs));
         }
+        let tele = crate::telemetry::global();
+        tele.histogram_sched("phase.secs", &crate::telemetry::latency_buckets()).observe(secs);
+        tele.gauge_sched(&format!("phase.{name}.secs")).add(secs);
+        crate::telemetry::event("phase", &[("name", name.into()), ("secs", secs.into())]);
     }
 
     pub fn get(&self, name: &str) -> f64 {

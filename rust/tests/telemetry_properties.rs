@@ -1,0 +1,242 @@
+//! Telemetry property suite (ISSUE 6 acceptance criteria):
+//!
+//! 1. **thread invariance** — every `Stability::Deterministic` metric
+//!    (SCC round counters/histograms, TeraHAC epoch trajectory,
+//!    NN-descent sweep stats) is byte-for-byte identical across worker
+//!    counts {1, 2, 4, 8}; only `Scheduling`-class metrics (wall-clock,
+//!    tiling) may differ;
+//! 2. **read-only instrumentation** — installing event sinks (memory +
+//!    JSONL) does not perturb engine outputs: partitions and merge
+//!    sequences stay bit-identical to an uninstrumented run;
+//! 3. **histogram edge pins** — bucket assignment, percentile
+//!    interpolation/clamping, and empty-histogram semantics;
+//! 4. **snapshot round-trip** — `TelemetrySnapshot` → JSON →
+//!    `TelemetrySnapshot` is the identity, and the Prometheus rendering
+//!    is well-formed;
+//! 5. **serve smoke** — `cli serve --metrics-out` exports a snapshot
+//!    holding nonzero `serve.query.latency` counts and the per-round
+//!    `scc.round.*` metrics.
+
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph_with_backend;
+use scc::linkage::Measure;
+use scc::pipeline::{GraphBuilder, NnDescentKnn, TeraHacClusterer};
+use scc::runtime::NativeBackend;
+use scc::scc::{run_rounds, thresholds::edge_range, SccConfig, Thresholds};
+use scc::telemetry::{
+    self, install_sink, JsonlSink, MemorySink, Registry, TelemetrySnapshot,
+};
+use std::sync::Mutex;
+
+/// The global registry and the sink list are process-wide; tests that
+/// reset one or install into the other serialize here so the harness's
+/// parallel test threads don't interleave.
+static GLOBAL_LOCK: Mutex<()> = Mutex::new(());
+
+fn global_lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn workload() -> (scc::core::Dataset, scc::graph::CsrGraph) {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 400,
+        d: 8,
+        k: 6,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 42,
+    });
+    let graph = knn_graph_with_backend(&ds, 6, Measure::L2Sq, &NativeBackend::new(), 2);
+    (ds, graph)
+}
+
+fn scc_config(graph: &scc::graph::CsrGraph) -> SccConfig {
+    let (lo, hi) = edge_range(graph);
+    SccConfig::new(Thresholds::geometric(lo, hi, 15).taus)
+}
+
+/// Drive every instrumented engine once at the given worker count.
+fn run_engines(ds: &scc::core::Dataset, graph: &scc::graph::CsrGraph, threads: usize) {
+    let cfg = scc_config(graph);
+    let res = run_rounds(graph, &cfg, threads);
+    assert!(!res.rounds.is_empty());
+    let h = TeraHacClusterer::new(0.25).workers(threads).cluster_csr(graph);
+    assert!(!h.rounds.is_empty());
+    let g2 = NnDescentKnn::new(5).seed(7).build(ds, Measure::L2Sq, &NativeBackend::new(), threads);
+    assert!(g2.num_edges() > 0);
+}
+
+#[test]
+fn deterministic_metrics_are_thread_invariant() {
+    let _g = global_lock();
+    let (ds, graph) = workload();
+    let mut baseline: Option<TelemetrySnapshot> = None;
+    for threads in [1usize, 2, 4, 8] {
+        telemetry::global().reset();
+        run_engines(&ds, &graph, threads);
+        let snap = telemetry::global().snapshot().deterministic();
+        assert!(snap.counter("scc.rounds").unwrap_or(0) > 0, "threads={threads}");
+        assert!(snap.counter("terahac.epochs").unwrap_or(0) > 0, "threads={threads}");
+        assert!(snap.counter("graph.nnd.sweeps").unwrap_or(0) > 0, "threads={threads}");
+        // wall-clock metrics exist but are Scheduling-class, so the
+        // deterministic view must not carry them
+        assert!(snap.get("scc.round.secs").is_none());
+        match &baseline {
+            None => baseline = Some(snap),
+            Some(b) => assert_eq!(
+                b, &snap,
+                "deterministic snapshot must be invariant at threads={threads}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn sinks_do_not_perturb_engine_outputs() {
+    let _g = global_lock();
+    let (ds, graph) = workload();
+    let cfg = scc_config(&graph);
+
+    // uninstrumented run (no sinks installed)
+    let plain_scc = run_rounds(&graph, &cfg, 4);
+    let (plain_tera, _) = TeraHacClusterer::new(0.25).merge_sequence(&graph);
+    let plain_nnd =
+        NnDescentKnn::new(5).seed(7).build(&ds, Measure::L2Sq, &NativeBackend::new(), 4);
+
+    // same runs with a memory sink and a JSONL sink both attached
+    let mem = MemorySink::new();
+    let jsonl = JsonlSink::new(Vec::<u8>::new());
+    let guard_mem = install_sink(mem.clone());
+    let guard_jsonl = install_sink(jsonl.clone());
+    let sunk_scc = run_rounds(&graph, &cfg, 4);
+    let (sunk_tera, _) = TeraHacClusterer::new(0.25).merge_sequence(&graph);
+    let sunk_nnd =
+        NnDescentKnn::new(5).seed(7).build(&ds, Measure::L2Sq, &NativeBackend::new(), 4);
+    drop(guard_mem);
+    drop(guard_jsonl);
+
+    // bit-identical outputs: partitions, merge sequence, graph
+    assert_eq!(plain_scc.rounds, sunk_scc.rounds);
+    assert_eq!(plain_tera, sunk_tera);
+    assert_eq!(plain_nnd.num_edges(), sunk_nnd.num_edges());
+
+    // ... and the sinks actually saw the engine events
+    let events = mem.take();
+    assert!(events.iter().any(|e| e.name == "scc.round"), "missing scc.round events");
+    assert!(events.iter().any(|e| e.name == "terahac.epoch"), "missing terahac.epoch events");
+    assert!(events.iter().any(|e| e.name == "graph.nnd.sweep"), "missing nnd sweep events");
+    let bytes = jsonl.into_inner().expect("no other Arc holds the sink");
+    let text = String::from_utf8(bytes).unwrap();
+    assert!(!text.is_empty());
+    for line in text.lines() {
+        let v = telemetry::json::parse(line).expect("every JSONL line parses");
+        assert!(v.get("event").and_then(|e| e.as_str()).is_some(), "line {line}");
+    }
+
+    // with the guards dropped, emission is inert again
+    assert!(!telemetry::sinks_active());
+}
+
+#[test]
+fn histogram_bucket_and_percentile_edge_pins() {
+    let h = telemetry::Histogram::new(&[1.0, 2.0, 4.0]);
+    // empty: NaN mean/percentile, zero min/max (JSON-safe)
+    assert_eq!(h.count(), 0);
+    assert!(h.mean().is_nan());
+    assert!(h.percentile(50.0).is_nan());
+    assert_eq!(h.min(), 0.0);
+    assert_eq!(h.max(), 0.0);
+
+    for v in [0.5, 1.0, 1.5, 4.0, 100.0] {
+        h.observe(v);
+    }
+    // bounds are upper-inclusive: bucket i holds (bounds[i-1], bounds[i]]
+    assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+    assert_eq!(h.count(), 5);
+    assert_eq!(h.min(), 0.5);
+    assert_eq!(h.max(), 100.0);
+    assert!((h.sum() - 107.0).abs() < 1e-12);
+
+    // percentile edges: q=0 → exact min, q=100 → exact max, monotone in q
+    assert_eq!(h.percentile(0.0), 0.5);
+    assert_eq!(h.percentile(100.0), 100.0);
+    let mut prev = f64::NEG_INFINITY;
+    for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+        let p = h.percentile(q);
+        assert!(p >= prev, "percentile must be monotone: p({q}) = {p} < {prev}");
+        assert!((h.min()..=h.max()).contains(&p), "p({q}) = {p} escapes [min, max]");
+        prev = p;
+    }
+
+    // exponential families are deterministic
+    let b = telemetry::exp_buckets(1e-6, 2.0, 4);
+    assert_eq!(b, vec![1e-6, 2e-6, 4e-6, 8e-6]);
+    assert_eq!(telemetry::latency_buckets().len(), 32);
+    assert_eq!(telemetry::count_buckets().len(), 40);
+    assert_eq!(telemetry::ratio_buckets().len(), 20);
+}
+
+#[test]
+fn snapshot_round_trips_and_prometheus_renders() {
+    let reg = Registry::new();
+    reg.counter("suite.counter").add(17);
+    reg.gauge("suite.gauge").set(2.5);
+    let h = reg.histogram("suite.hist", &[0.1, 1.0, 10.0]);
+    for v in [0.05, 0.5, 5.0, 50.0] {
+        h.observe(v);
+    }
+    reg.counter_sched("suite.sched").inc();
+
+    let snap = reg.snapshot();
+    for text in [snap.to_json(), snap.to_json_compact()] {
+        let back = TelemetrySnapshot::from_json(&text).expect("snapshot JSON parses");
+        assert_eq!(snap, back, "round-trip must be the identity");
+    }
+    // deterministic() drops exactly the Scheduling-class entries
+    let det = snap.deterministic();
+    assert!(det.get("suite.counter").is_some());
+    assert!(det.get("suite.sched").is_none());
+
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("# TYPE suite_counter counter"), "{prom}");
+    assert!(prom.contains("# TYPE suite_gauge gauge"), "{prom}");
+    assert!(prom.contains("# TYPE suite_hist histogram"), "{prom}");
+    assert!(prom.contains("suite_hist_bucket{le=\"+Inf\"} 4"), "{prom}");
+    assert!(prom.contains("suite_hist_count 4"), "{prom}");
+}
+
+#[test]
+fn serve_smoke_exports_latency_and_round_metrics() {
+    let _g = global_lock();
+    telemetry::global().reset();
+    let dir = std::env::temp_dir().join("scc_telemetry_props_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.json");
+    let args: Vec<String> = format!(
+        "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+         --queries 60 --workers 2 --ingest 4 --metrics-out {}",
+        path.display()
+    )
+    .split_whitespace()
+    .map(String::from)
+    .collect();
+    let cli = scc::cli::parse(&args).unwrap();
+    let out = scc::cli::execute(&cli).unwrap();
+    assert!(out.contains("served 60 queries"), "{out}");
+
+    let snap =
+        TelemetrySnapshot::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    // the service's private registry: query latency must be live
+    assert!(
+        snap.histogram_count("serve.query.latency").unwrap_or(0) > 0,
+        "serve run must observe query latencies"
+    );
+    assert!(snap.counter("serve.queries").unwrap_or(0) >= 60);
+    // the global registry, merged in: build-time SCC rounds + ingest
+    assert!(snap.counter("scc.rounds").unwrap_or(0) > 0);
+    assert!(snap.get("scc.round.merge_edges").is_some());
+    assert!(snap.get("scc.round.contraction_ratio").is_some());
+    assert!(snap.counter("serve.ingest.points").unwrap_or(0) >= 4);
+    std::fs::remove_dir_all(&dir).ok();
+}

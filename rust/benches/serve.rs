@@ -1,7 +1,9 @@
 //! Bench: serving-layer assignment throughput (points/sec), serial vs
 //! pooled, at n ∈ {10k, 100k} query points against a frozen hierarchy —
 //! plus the ingest arm: absorbing a conflict-merge batch by
-//! defer-to-full-rebuild vs applying the merge online.
+//! defer-to-full-rebuild vs applying the merge online; plus the
+//! cold-start arm: restarting from a persisted snapshot (one read +
+//! bulk section conversion) vs re-running the batch pipeline.
 //!
 //! ```bash
 //! cargo bench --bench serve            # SCC_BENCH_SCALE / SCC_BENCH_BACKEND apply
@@ -234,6 +236,54 @@ fn main() {
         online_report.online_merges,
         defer_secs / online_secs
     );
+
+    // --- cold-start arm: restart-from-disk vs rebuild-from-points ---
+    // the restart path a crashed/redeployed replica takes: save the live
+    // snapshot, then time load (one read + bulk section conversion)
+    // against re-running the batch pipeline over the same points
+    let dir = std::env::temp_dir().join("scc_bench_serve_persist");
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let path = dir.join("index.scc");
+    let snap_now = index.snapshot();
+    let t = Timer::start();
+    let file_bytes = scc::serve::save_snapshot(&snap_now, &path).expect("persist the index");
+    let save_secs = t.secs();
+    rows.push(Row {
+        queries: snap_now.n,
+        path: "persist_save",
+        secs: save_secs,
+        points_per_sec: snap_now.n as f64 / save_secs,
+    });
+    let t = Timer::start();
+    let loaded = scc::serve::load_snapshot(&path).expect("cold-start load");
+    let load_secs = t.secs();
+    assert_eq!(loaded, *snap_now, "cold start must restore the index bit-exactly");
+    rows.push(Row {
+        queries: loaded.n,
+        path: "coldstart_load",
+        secs: load_secs,
+        points_per_sec: loaded.n as f64 / load_secs,
+    });
+    let t = Timer::start();
+    let rebuilt_cold = rebuild_snapshot(&snap_now, &rcfg, backend.as_ref());
+    let rebuild_secs = t.secs();
+    assert_eq!(rebuilt_cold.n, snap_now.n);
+    rows.push(Row {
+        queries: snap_now.n,
+        path: "coldstart_rebuild",
+        secs: rebuild_secs,
+        points_per_sec: snap_now.n as f64 / rebuild_secs,
+    });
+    println!(
+        "coldstart n={:>9}  save {:>10} ({} bytes)   load {:>10}   rebuild {:>10}  load speedup {:.0}x",
+        fmt_count(snap_now.n),
+        fmt_secs(save_secs),
+        fmt_count(file_bytes as usize),
+        fmt_secs(load_secs),
+        fmt_secs(rebuild_secs),
+        rebuild_secs / load_secs
+    );
+    std::fs::remove_dir_all(&dir).ok();
 
     let tele = tele.merge(scc::telemetry::global().snapshot());
     write_json(&rows, build_n, ds.d, clusters, backend.name(), threads, &tele);

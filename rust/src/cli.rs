@@ -93,6 +93,14 @@ pub struct ServeOpts {
     /// Apply cross-cluster conflict merges online during ingest
     /// (scoped contraction + splice) instead of deferring to rebuild.
     pub online_merges: bool,
+    /// Load the snapshot from this file instead of building
+    /// (`serve`/`serve-cut`): cold start, the batch pipeline is skipped
+    /// entirely.
+    pub snapshot_in: Option<String>,
+    /// Persist the snapshot to this file (`cluster`/`serve`/`serve-cut`;
+    /// for `serve` the rebuild worker also persists every swapped
+    /// generation there).
+    pub snapshot_out: Option<String>,
 }
 
 impl Default for ServeOpts {
@@ -105,6 +113,8 @@ impl Default for ServeOpts {
             level: None,
             drift_limit: 0.2,
             online_merges: false,
+            snapshot_in: None,
+            snapshot_out: None,
         }
     }
 }
@@ -137,12 +147,14 @@ COMMANDS (paper experiments; see DESIGN.md §6):
             print round stats
 
 SERVING (long-lived index over a frozen hierarchy; see README):
-  serve     build a hierarchy with --algo, snapshot it, answer --queries
-            assignment queries through a worker pool, then ingest
-            --ingest points and report drift + post-ingest structure
-  serve-cut build a hierarchy snapshot with --algo and print its level
-            table (and the flat cut at --tau, when given, with
-            per-cluster exactness)
+  serve     build a hierarchy with --algo (or cold-start from
+            --snapshot-in, skipping the build), snapshot it, answer
+            --queries assignment queries through a worker pool, then
+            ingest --ingest points and report drift + post-ingest
+            structure
+  serve-cut build a hierarchy snapshot with --algo (or load it from
+            --snapshot-in) and print its level table (and the flat cut
+            at --tau, when given, with per-cluster exactness)
 
 OPTIONS:
   --scale F       workload scale multiplier (default 1.0 ~ 2.5k pts/dataset)
@@ -167,8 +179,15 @@ OPTIONS:
   --queries N     serve: assignment queries to submit (default 2000)
   --workers N     serve: pool worker threads (default: --threads)
   --ingest N      serve: mini-batch size to ingest after querying (default 64)
-  --tau F         serve/serve-cut: serving cut as a dissimilarity threshold
+  --tau F         serve/serve-cut: serving cut as a dissimilarity
+                  threshold (must be finite; NaN/inf are rejected)
   --level N       serve: serving cut as a level index (overrides --tau)
+  --snapshot-in P serve/serve-cut: cold-start from the versioned
+                  snapshot file at P instead of building (README
+                  \"Persistence & restart\")
+  --snapshot-out P cluster/serve/serve-cut: write the versioned
+                  snapshot to P (serve persists each rebuilt
+                  generation there too; stale generations are refused)
   --drift-limit F serve: drift fraction that triggers the automatic
                   background rebuild worker (default 0.2)
   --online-merges serve: apply cross-cluster conflict merges online during
@@ -238,12 +257,23 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--queries" => cli.serve.queries = val()?.parse().context("--queries")?,
             "--workers" => cli.serve.workers = val()?.parse().context("--workers")?,
             "--ingest" => cli.serve.ingest = val()?.parse().context("--ingest")?,
-            "--tau" => cli.serve.tau = Some(val()?.parse().context("--tau")?),
+            "--tau" => {
+                let tau: f64 = val()?.parse().context("--tau")?;
+                // NaN would silently cut at level 0 (every threshold
+                // comparison is false) and ±∞ clamp; a malformed flag
+                // should be an error, not a surprising cut
+                if !tau.is_finite() {
+                    bail!("--tau must be a finite dissimilarity threshold, got {tau}");
+                }
+                cli.serve.tau = Some(tau);
+            }
             "--level" => cli.serve.level = Some(val()?.parse().context("--level")?),
             "--drift-limit" => {
                 cli.serve.drift_limit = val()?.parse().context("--drift-limit")?
             }
             "--online-merges" => cli.serve.online_merges = true,
+            "--snapshot-in" => cli.serve.snapshot_in = Some(val()?.clone()),
+            "--snapshot-out" => cli.serve.snapshot_out = Some(val()?.clone()),
             "--metrics-out" => cli.metrics_out = Some(val()?.clone()),
             "--verbose" => cli.verbose = true,
             other => bail!("unknown flag {other:?}\n{USAGE}"),
@@ -322,7 +352,13 @@ pub fn execute(cli: &Cli) -> Result<String> {
             }
             s
         }
-        "cluster" => cluster_once(&cli.dataset, &cli.algo, cfg, backend.as_ref())?,
+        "cluster" => cluster_once(
+            &cli.dataset,
+            &cli.algo,
+            cfg,
+            backend.as_ref(),
+            cli.serve.snapshot_out.as_deref(),
+        )?,
         "serve-cut" => serve_cut_cmd(&cli.dataset, &cli.algo, cfg, &cli.serve, backend.as_ref())?,
         "help" | "--help" | "-h" => USAGE.to_string(),
         other => bail!("unknown command {other:?}\n{USAGE}"),
@@ -338,6 +374,7 @@ fn cluster_once(
     algo: &str,
     cfg: &EvalConfig,
     backend: &dyn Backend,
+    snapshot_out: Option<&str>,
 ) -> Result<String> {
     let w = crate::eval::common::Workload::build(dataset, cfg, backend);
     let clusterer = make_clusterer(algo, cfg, w.k_true)?;
@@ -392,6 +429,14 @@ fn cluster_once(
         }
     }
     out.push_str(&format!("dendrogram purity {dp:.4}   F1@k* {f1:.4}\n"));
+    if let Some(path) = snapshot_out {
+        let snap = crate::serve::HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+        let bytes = crate::serve::save_snapshot(&snap, std::path::Path::new(path))?;
+        out.push_str(&format!(
+            "snapshot written to {path} ({bytes} bytes, generation {})\n",
+            snap.generation
+        ));
+    }
     Ok(out)
 }
 
@@ -428,24 +473,59 @@ fn serve_cmd(
             Some(g) => Arc::from(g),
             None => bail!("unknown graph strategy {:?} (brute|nn-descent|lsh)", cfg.graph),
         };
-    let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
-    let clusterer = make_clusterer(algo, cfg, w.k_true)?;
-    let res = w.cluster(clusterer.as_ref(), backend.as_ref());
-    let snap = HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+    // cold start: `--snapshot-in` restores a persisted index in one read
+    // + offset arithmetic and skips the dataset build and the batch
+    // pipeline entirely; otherwise build as before
+    let (snap, clusterer, mut out) = match opts.snapshot_in.as_deref() {
+        Some(path) => {
+            let t0 = std::time::Instant::now();
+            let snap = crate::serve::load_snapshot(std::path::Path::new(path))?;
+            let secs = t0.elapsed().as_secs_f64();
+            if snap.n == 0 {
+                bail!("snapshot {path} holds zero points; nothing to serve");
+            }
+            // a restart has no labelled workload; k*=1 only seeds
+            // clusterers that take a target k (kmeans/dpmeans)
+            let clusterer = make_clusterer(algo, cfg, 1)?;
+            let mut out = format!(
+                "cold start: loaded snapshot from {path} in {} (generation {}, skipped build)\n",
+                crate::util::stats::fmt_secs(secs),
+                snap.generation
+            );
+            out.push_str(&snap.summary());
+            (snap, clusterer, out)
+        }
+        None => {
+            let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
+            let clusterer = make_clusterer(algo, cfg, w.k_true)?;
+            let res = w.cluster(clusterer.as_ref(), backend.as_ref());
+            let snap = HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+            let out = snap.summary();
+            (snap, clusterer, out)
+        }
+    };
     let level = serving_level(&snap, opts);
     let d = snap.d;
     let n = snap.n;
-    let mut out = snap.summary();
     out.push_str(&format!("serving level {level} (threshold {:.4})\n", snap.threshold(level)));
 
-    // queries: jittered copies of dataset rows (unseen but realistic),
-    // synthesized before the service starts so QPS measures serving only
+    // queries: jittered copies of stored rows (unseen but realistic),
+    // synthesized before the service starts so QPS measures serving
+    // only; the snapshot stores the dataset verbatim, so this is
+    // identical on the build and cold-start paths
     let mut rng = crate::util::Rng::new(cfg.seed ^ 0x5EB5E);
     let nq = opts.queries;
     let mut queries = Vec::with_capacity(nq * d);
     for j in 0..nq {
-        for &x in w.ds.row(j % n) {
+        for &x in snap.point_row(j % n) {
             queries.push(x + 0.01 * rng.normal_f32());
+        }
+    }
+    // the ingest mini-batch too (the snapshot moves into the index next)
+    let mut batch = Vec::with_capacity(opts.ingest * d);
+    for j in 0..opts.ingest {
+        for &x in snap.point_row((j * 7 + 3) % n) {
+            batch.push(x + 0.02 * rng.normal_f32());
         }
     }
 
@@ -473,6 +553,10 @@ fn serve_cmd(
             // sub-quadratic build cost on the rebuild path)
             graph: Some(Arc::clone(&graph_builder)),
             clusterer: Some(Arc::clone(&clusterer)),
+            // with --snapshot-out every swapped rebuild generation is
+            // persisted (atomic, stale-guarded) so a crash after a
+            // rebuild restarts from the rebuilt structure
+            persist_path: opts.snapshot_out.as_deref().map(std::path::PathBuf::from),
             ..Default::default()
         },
     );
@@ -488,12 +572,6 @@ fn serve_cmd(
     out.push_str(&format!("served {served} queries\n{}\n", service.stats().report()));
 
     if opts.ingest > 0 {
-        let mut batch = Vec::with_capacity(opts.ingest * d);
-        for j in 0..opts.ingest {
-            for &x in w.ds.row((j * 7 + 3) % n) {
-                batch.push(x + 0.02 * rng.normal_f32());
-            }
-        }
         let icfg = IngestConfig {
             level,
             drift_limit: opts.drift_limit,
@@ -542,6 +620,23 @@ fn serve_cmd(
         }
     }
     rebuild_worker.stop();
+    if let Some(path) = opts.snapshot_out.as_deref() {
+        // persist the final state; a rebuild may already have written a
+        // newer-or-equal generation here, which is not an error
+        match crate::serve::save_snapshot_if_newer(
+            &index.snapshot(),
+            std::path::Path::new(path),
+        ) {
+            Ok(bytes) => out.push_str(&format!(
+                "snapshot written to {path} ({bytes} bytes, generation {})\n",
+                index.generation()
+            )),
+            Err(crate::serve::PersistError::StaleGeneration { on_disk, .. }) => out.push_str(
+                &format!("snapshot at {path} already holds generation {on_disk} (kept)\n"),
+            ),
+            Err(e) => return Err(e.into()),
+        }
+    }
     if let Some(path) = metrics_out {
         // the service's private metrics (query latency histogram,
         // request counters) union the global engine metrics
@@ -560,10 +655,29 @@ fn serve_cut_cmd(
     opts: &ServeOpts,
     backend: &dyn Backend,
 ) -> Result<String> {
-    let w = crate::eval::common::Workload::build(dataset, cfg, backend);
-    let clusterer = make_clusterer(algo, cfg, w.k_true)?;
-    let res = w.cluster(clusterer.as_ref(), backend);
-    let snap = crate::serve::HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+    // `--snapshot-in` restores the persisted snapshot instead of
+    // building; the report is byte-identical either way (round-trips are
+    // bit-exact), so `diff` against a freshly built report verifies the
+    // persistence path end-to-end. Provenance goes to telemetry only.
+    let snap = match opts.snapshot_in.as_deref() {
+        Some(path) => {
+            let snap = crate::serve::load_snapshot(std::path::Path::new(path))?;
+            crate::telemetry::event(
+                "cli.serve_cut.loaded",
+                &[("path", path.into()), ("generation", snap.generation.into())],
+            );
+            snap
+        }
+        None => {
+            let w = crate::eval::common::Workload::build(dataset, cfg, backend);
+            let clusterer = make_clusterer(algo, cfg, w.k_true)?;
+            let res = w.cluster(clusterer.as_ref(), backend);
+            crate::serve::HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads)
+        }
+    };
+    if let Some(path) = opts.snapshot_out.as_deref() {
+        crate::serve::save_snapshot(&snap, std::path::Path::new(path))?;
+    }
     let mut out = snap.summary();
     if let Some(tau) = opts.tau {
         let report = snap.cut_report(tau);
@@ -782,5 +896,86 @@ mod tests {
         let out = execute(&cli).unwrap();
         assert!(out.contains("level  threshold   clusters"), "{out}");
         assert!(out.contains("cut_at(0.5)"), "{out}");
+    }
+
+    #[test]
+    fn parses_snapshot_flags() {
+        let cli =
+            parse(&argv("serve --snapshot-in /tmp/a.scc --snapshot-out /tmp/b.scc")).unwrap();
+        assert_eq!(cli.serve.snapshot_in.as_deref(), Some("/tmp/a.scc"));
+        assert_eq!(cli.serve.snapshot_out.as_deref(), Some("/tmp/b.scc"));
+        let defaults = parse(&argv("serve")).unwrap();
+        assert_eq!(defaults.serve.snapshot_in, None);
+        assert_eq!(defaults.serve.snapshot_out, None);
+        assert!(parse(&argv("serve --snapshot-in")).is_err(), "flag needs a value");
+    }
+
+    #[test]
+    fn rejects_non_finite_tau_at_parse_time() {
+        // level_for_tau would clamp these, but a NaN/inf cut request is
+        // always a caller mistake — reject it before any work happens
+        assert!(parse(&argv("serve --tau nan")).is_err());
+        assert!(parse(&argv("serve --tau inf")).is_err());
+        assert!(parse(&argv("serve-cut --tau -inf")).is_err());
+        assert!(parse(&argv("serve-cut --tau 1e999")).is_err(), "overflow parses to inf");
+        assert_eq!(parse(&argv("serve --tau 0.5")).unwrap().serve.tau, Some(0.5));
+    }
+
+    #[test]
+    fn snapshot_written_by_cluster_reloads_into_an_identical_serve_cut_report() {
+        let dir = std::env::temp_dir().join("scc_cli_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snapshot.scc");
+        let base = "--dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native";
+
+        let direct =
+            execute(&parse(&argv(&format!("serve-cut {base} --tau 0.5"))).unwrap()).unwrap();
+        let written = execute(
+            &parse(&argv(&format!("cluster {base} --snapshot-out {}", path.display()))).unwrap(),
+        )
+        .unwrap();
+        assert!(written.contains("snapshot written to"), "{written}");
+        // the restored report must be byte-identical to the direct one
+        // (no provenance lines) — this is what CI diffs
+        let restored = execute(
+            &parse(&argv(&format!("serve-cut --snapshot-in {} --tau 0.5", path.display())))
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(direct, restored, "restored report must match the built one byte-for-byte");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_cold_starts_from_a_snapshot_file() {
+        let dir = std::env::temp_dir().join("scc_cli_cold_start_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.scc");
+        let base = "--dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native";
+        execute(
+            &parse(&argv(&format!("serve-cut {base} --snapshot-out {}", path.display())))
+                .unwrap(),
+        )
+        .unwrap();
+        let out = execute(
+            &parse(&argv(&format!(
+                "serve --snapshot-in {} --queries 40 --workers 2 --ingest 4 --backend native",
+                path.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(out.contains("cold start: loaded snapshot from"), "{out}");
+        assert!(out.contains("served 40 queries"), "{out}");
+        assert!(out.contains("ingested 4 points"), "{out}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_in_missing_file_is_a_clean_error() {
+        let cli = parse(&argv("serve-cut --snapshot-in /nonexistent/no.scc --backend native"))
+            .unwrap();
+        let err = execute(&cli).unwrap_err();
+        assert!(err.to_string().contains("snapshot i/o error"), "{err}");
     }
 }

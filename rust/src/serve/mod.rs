@@ -26,6 +26,13 @@
 //!   bit-identical for every worker count) runs over only the touched
 //!   clusters, and a drift counter flags when accumulated change
 //!   warrants a full rebuild;
+//! * [`persist`] — versioned flat binary snapshot files (magic +
+//!   version + endianness tag, aligned flat sections, raw fixed-point
+//!   aggregate words, FNV-1a trailer): save→load round-trips are
+//!   bit-exact (`PartialEq`), loads are one read + offset arithmetic —
+//!   no per-element parsing — so a restart cold-starts from disk in
+//!   milliseconds instead of re-running the batch pipeline, and the
+//!   stamped generation lets a rebuild tier refuse stale overwrites;
 //! * [`service`] — a multi-threaded request loop: worker pool, batched
 //!   query submission, per-request latency / QPS statistics through
 //!   [`crate::util::stats::Summary`], copy-on-write snapshot swaps so
@@ -76,11 +83,16 @@
 
 pub mod assign;
 pub mod ingest;
+pub mod persist;
 pub mod service;
 pub mod snapshot;
 
 pub use assign::{assign_at_tau, assign_to_level, AssignResult};
 pub use ingest::{ingest_batch, IngestConfig, IngestReport};
+pub use persist::{
+    load_snapshot, peek_info, save_snapshot, save_snapshot_if_newer, snapshot_from_bytes,
+    snapshot_to_bytes, PersistError, SnapshotFileInfo,
+};
 pub use service::{
     rebuild_snapshot, QueryResponse, RebuildConfig, RebuildWorker, ServeIndex, Service,
     ServiceConfig, ServiceStats,

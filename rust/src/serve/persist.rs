@@ -1,0 +1,738 @@
+//! Versioned flat binary persistence for [`HierarchySnapshot`] — the
+//! restart path of the serving layer, and the transport a rebuild tier
+//! will ship snapshots to serving replicas over (ROADMAP: sharded
+//! serving).
+//!
+//! # Format (version 1)
+//!
+//! One file, little-endian everywhere, laid out as a fixed header, an
+//! 8-entry section table, 16-byte-aligned flat sections, and a checksum
+//! trailer:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  "SCCSNAP\0"
+//!      8     4  format version (u32, = 1)
+//!     12     4  endianness tag (u32, = 0x01020304 as little-endian bytes)
+//!     16     8  d               (u64)   dimensionality
+//!     24     8  n               (u64)   points (build + ingested)
+//!     32     8  built_n         (u64)   drift baseline
+//!     40     8  ingested        (u64)
+//!     48     8  conflicts       (u64)
+//!     56     8  online_merges   (u64)
+//!     64     8  generation      (u64)   monotone swap counter
+//!     72     4  measure tag     (u32)   0 = l2sq, 1 = dot
+//!     76     4  num_levels      (u32)
+//!     80   128  section table: 8 × { offset u64, length u64 }
+//!    208     …  sections, each 16-byte aligned, zero-padded between:
+//!                 0 NAME        name, UTF-8 bytes
+//!                 1 POINTS      n × d × f32
+//!                 2 LEVELS      num_levels × 32B records:
+//!                                 threshold f64-bits, splice_bound
+//!                                 f64-bits, k u64, spliced_len u64
+//!                 3 PARTITIONS  num_levels × n × u32 (concatenated)
+//!                 4 AGG_COUNTS  Σk × u64
+//!                 5 AGG_SUMS    Σk × d × i128   raw fixed-point words
+//!                 6 CENTROIDS   Σk × d × f32
+//!                 7 SPLICED     Σspliced_len × u32 (concatenated)
+//!   end-8     8  FNV-1a 64 checksum of every preceding byte
+//! ```
+//!
+//! The aggregate sums are the **raw fixed-point words** of
+//! [`crate::linkage::CentroidAgg`] (per-dimension Σ round(x·2³²) as
+//! `i128`), not floats — so a loaded snapshot continues ingesting on
+//! exactly the arithmetic the live one would have used, and save→load
+//! round-trips are bit-exact (`PartialEq`), property-tested in
+//! `rust/tests/persist_properties.rs`.
+//!
+//! Loading is zero-copy in spirit: one `fs::read` into a buffer, header
+//! checks, checksum, then each section resolved by offset-table
+//! arithmetic with validated lengths and converted **in bulk** (a
+//! `memcpy` per section on little-endian hosts, see
+//! [`crate::util::binfmt`]) — no per-element parsing. A malformed file
+//! of any kind — wrong magic, foreign endianness, unknown version,
+//! truncation, bit rot, inconsistent sections — fails with a typed
+//! [`PersistError`], never a panic.
+//!
+//! # Version policy
+//!
+//! The version is bumped whenever the layout changes incompatibly; a
+//! reader rejects any version it doesn't know
+//! ([`PersistError::UnsupportedVersion`]) rather than guessing. The
+//! snapshot `generation` is stamped in the header, so a rebuild tier
+//! can refuse to clobber a newer file ([`save_snapshot_if_newer`],
+//! [`PersistError::StaleGeneration`]) and operators can [`peek_info`]
+//! at a file without loading the sections.
+
+use super::snapshot::HierarchySnapshot;
+use crate::core::Partition;
+use crate::linkage::{CentroidAgg, Measure};
+use crate::serve::SnapshotLevel;
+use crate::util::binfmt::{
+    align_up, fnv1a64, read_f32s_le, read_i128s_le, read_u32s_le, read_u64s_le, write_f32s_le,
+    write_i128s_le, write_u32s_le,
+};
+use crate::util::Timer;
+use std::path::Path;
+
+/// First 8 bytes of every snapshot file.
+pub const MAGIC: [u8; 8] = *b"SCCSNAP\0";
+/// The (only) format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+/// Stored as little-endian bytes `04 03 02 01`; a big-endian writer
+/// would produce `01 02 03 04` and be rejected on load.
+pub const ENDIAN_TAG: u32 = 0x0102_0304;
+
+const HEADER_LEN: usize = 208;
+const SECTION_COUNT: usize = 8;
+const ALIGN: usize = 16;
+const TRAILER_LEN: usize = 8;
+const LEVEL_RECORD_LEN: usize = 32;
+
+const SEC_NAME: usize = 0;
+const SEC_POINTS: usize = 1;
+const SEC_LEVELS: usize = 2;
+const SEC_PARTITIONS: usize = 3;
+const SEC_AGG_COUNTS: usize = 4;
+const SEC_AGG_SUMS: usize = 5;
+const SEC_CENTROIDS: usize = 6;
+const SEC_SPLICED: usize = 7;
+
+/// Why a snapshot file could not be written or read. Every load-side
+/// failure mode is a clean error — corrupt input never panics.
+#[derive(Debug)]
+pub enum PersistError {
+    /// Filesystem failure (open/read/write/rename).
+    Io(std::io::Error),
+    /// The file does not start with [`MAGIC`] — not a snapshot file.
+    BadMagic,
+    /// The endianness tag does not read back as [`ENDIAN_TAG`]: the file
+    /// was written with a byte order this format does not use.
+    BadEndianness { found: u32 },
+    /// The file's format version is not one this build understands.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The file ends before the bytes its own header promises.
+    Truncated { expected: usize, found: usize },
+    /// The FNV-1a trailer does not match the file contents (bit rot or
+    /// a torn write).
+    ChecksumMismatch { expected: u64, found: u64 },
+    /// Structurally invalid contents: inconsistent section lengths,
+    /// out-of-range ids, non-monotone thresholds, …
+    Corrupt(String),
+    /// [`save_snapshot_if_newer`] refused to overwrite a file whose
+    /// stamped generation is newer than (or equal to) the candidate's.
+    StaleGeneration { on_disk: u64, candidate: u64 },
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "snapshot i/o error: {e}"),
+            PersistError::BadMagic => {
+                write!(f, "not a snapshot file (bad magic; expected \"SCCSNAP\\0\")")
+            }
+            PersistError::BadEndianness { found } => write!(
+                f,
+                "snapshot written with an unsupported byte order (endian tag {found:#010x})"
+            ),
+            PersistError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "unsupported snapshot format version {found} (this build reads version {supported})"
+            ),
+            PersistError::Truncated { expected, found } => write!(
+                f,
+                "snapshot file truncated: {found} bytes, but the header describes {expected}"
+            ),
+            PersistError::ChecksumMismatch { expected, found } => write!(
+                f,
+                "snapshot checksum mismatch (stored {expected:#018x}, computed {found:#018x}): \
+                 the file is corrupt"
+            ),
+            PersistError::Corrupt(why) => write!(f, "corrupt snapshot file: {why}"),
+            PersistError::StaleGeneration { on_disk, candidate } => write!(
+                f,
+                "refusing to overwrite snapshot at generation {on_disk} with stale \
+                 generation {candidate}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PersistError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        PersistError::Io(e)
+    }
+}
+
+fn corrupt(msg: impl Into<String>) -> PersistError {
+    PersistError::Corrupt(msg.into())
+}
+
+/// Wire tag for [`Measure`] (exhaustive: adding a variant forces a tag
+/// here, and with it a format-version decision).
+fn measure_tag(m: Measure) -> u32 {
+    match m {
+        Measure::L2Sq => 0,
+        Measure::CosineDist => 1,
+    }
+}
+
+fn measure_from_tag(tag: u32) -> Result<Measure, PersistError> {
+    match tag {
+        0 => Ok(Measure::L2Sq),
+        1 => Ok(Measure::CosineDist),
+        t => Err(corrupt(format!("unknown measure tag {t}"))),
+    }
+}
+
+#[inline]
+fn put_u32(buf: &mut [u8], off: usize, v: u32) {
+    buf[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+fn put_u64(buf: &mut [u8], off: usize, v: u64) {
+    buf[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Caller guarantees `off + 4 <= buf.len()` (the header length is
+/// checked once up front).
+#[inline]
+fn get_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().expect("bounds checked"))
+}
+
+#[inline]
+fn get_u64(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().expect("bounds checked"))
+}
+
+/// Invariants a snapshot must satisfy to be serializable — the same
+/// ones the loader re-validates, so a persisted file can never encode a
+/// snapshot the loader would reject. [`HierarchySnapshot::build`]
+/// enforces these by construction; hand-mutated snapshots get a clean
+/// error instead of a corrupt file.
+fn validate(snap: &HierarchySnapshot) -> Result<(), PersistError> {
+    if snap.points.len() != snap.n * snap.d {
+        return Err(corrupt(format!(
+            "points length {} != n*d = {}*{}",
+            snap.points.len(),
+            snap.n,
+            snap.d
+        )));
+    }
+    if snap.levels.is_empty() {
+        return Err(corrupt("a snapshot holds at least the singleton level"));
+    }
+    let mut prev_t = f64::NEG_INFINITY;
+    for (l, lv) in snap.levels.iter().enumerate() {
+        if !lv.threshold.is_finite() || lv.threshold < prev_t {
+            return Err(corrupt(format!(
+                "level {l} threshold {} is not finite non-decreasing",
+                lv.threshold
+            )));
+        }
+        prev_t = lv.threshold;
+        if !lv.splice_bound.is_finite() {
+            return Err(corrupt(format!("level {l} splice bound is not finite")));
+        }
+        if lv.partition.n() != snap.n {
+            return Err(corrupt(format!(
+                "level {l} partition covers {} points, snapshot holds {}",
+                lv.partition.n(),
+                snap.n
+            )));
+        }
+        if lv.centroids.len() != lv.aggs.len() * snap.d {
+            return Err(corrupt(format!("level {l} centroid matrix is not k*d")));
+        }
+        if lv.aggs.iter().any(|a| a.dim() != snap.d) {
+            return Err(corrupt(format!("level {l} aggregate dimensionality != d")));
+        }
+        let k = if l == 0 { snap.n } else { lv.aggs.len() };
+        if lv.partition.assign.iter().any(|&c| c as usize >= k) {
+            return Err(corrupt(format!("level {l} partition ids exceed its {k} clusters")));
+        }
+        if lv.spliced.iter().any(|&c| c as usize >= k) {
+            return Err(corrupt(format!("level {l} spliced ids exceed its {k} clusters")));
+        }
+    }
+    Ok(())
+}
+
+/// Serialize to the version-1 wire format (see module docs). Fails only
+/// on a structurally invalid snapshot ([`PersistError::Corrupt`]).
+pub fn snapshot_to_bytes(snap: &HierarchySnapshot) -> Result<Vec<u8>, PersistError> {
+    validate(snap)?;
+    let (d, n, nl) = (snap.d, snap.n, snap.levels.len());
+    let k_total: usize = snap.levels.iter().map(|lv| lv.aggs.len()).sum();
+    let s_total: usize = snap.levels.iter().map(|lv| lv.spliced.len()).sum();
+    let sizes = [
+        snap.name.len(),       // NAME
+        n * d * 4,             // POINTS
+        nl * LEVEL_RECORD_LEN, // LEVELS
+        nl * n * 4,            // PARTITIONS
+        k_total * 8,           // AGG_COUNTS
+        k_total * d * 16,      // AGG_SUMS
+        k_total * d * 4,       // CENTROIDS
+        s_total * 4,           // SPLICED
+    ];
+    let mut offsets = [0usize; SECTION_COUNT];
+    let mut cur = HEADER_LEN;
+    for (off, &sz) in offsets.iter_mut().zip(&sizes) {
+        *off = cur;
+        cur = align_up(cur + sz, ALIGN);
+    }
+    let total = cur + TRAILER_LEN;
+    let mut buf = vec![0u8; total];
+
+    buf[0..8].copy_from_slice(&MAGIC);
+    put_u32(&mut buf, 8, FORMAT_VERSION);
+    put_u32(&mut buf, 12, ENDIAN_TAG);
+    put_u64(&mut buf, 16, d as u64);
+    put_u64(&mut buf, 24, n as u64);
+    put_u64(&mut buf, 32, snap.built_n as u64);
+    put_u64(&mut buf, 40, snap.ingested as u64);
+    put_u64(&mut buf, 48, snap.conflicts as u64);
+    put_u64(&mut buf, 56, snap.online_merges as u64);
+    put_u64(&mut buf, 64, snap.generation);
+    put_u32(&mut buf, 72, measure_tag(snap.measure));
+    put_u32(&mut buf, 76, nl as u32);
+    for i in 0..SECTION_COUNT {
+        put_u64(&mut buf, 80 + i * 16, offsets[i] as u64);
+        put_u64(&mut buf, 88 + i * 16, sizes[i] as u64);
+    }
+
+    buf[offsets[SEC_NAME]..offsets[SEC_NAME] + sizes[SEC_NAME]]
+        .copy_from_slice(snap.name.as_bytes());
+    write_f32s_le(
+        &mut buf[offsets[SEC_POINTS]..offsets[SEC_POINTS] + sizes[SEC_POINTS]],
+        &snap.points,
+    );
+    let mut level_off = offsets[SEC_LEVELS];
+    let mut part_off = offsets[SEC_PARTITIONS];
+    let mut count_off = offsets[SEC_AGG_COUNTS];
+    let mut sum_off = offsets[SEC_AGG_SUMS];
+    let mut cent_off = offsets[SEC_CENTROIDS];
+    let mut spl_off = offsets[SEC_SPLICED];
+    for lv in &snap.levels {
+        put_u64(&mut buf, level_off, lv.threshold.to_bits());
+        put_u64(&mut buf, level_off + 8, lv.splice_bound.to_bits());
+        put_u64(&mut buf, level_off + 16, lv.aggs.len() as u64);
+        put_u64(&mut buf, level_off + 24, lv.spliced.len() as u64);
+        level_off += LEVEL_RECORD_LEN;
+        write_u32s_le(&mut buf[part_off..part_off + n * 4], &lv.partition.assign);
+        part_off += n * 4;
+        for agg in &lv.aggs {
+            put_u64(&mut buf, count_off, agg.count);
+            count_off += 8;
+            write_i128s_le(&mut buf[sum_off..sum_off + d * 16], &agg.sum_fp);
+            sum_off += d * 16;
+        }
+        write_f32s_le(&mut buf[cent_off..cent_off + lv.centroids.len() * 4], &lv.centroids);
+        cent_off += lv.centroids.len() * 4;
+        write_u32s_le(&mut buf[spl_off..spl_off + lv.spliced.len() * 4], &lv.spliced);
+        spl_off += lv.spliced.len() * 4;
+    }
+
+    let sum = fnv1a64(&buf[..total - TRAILER_LEN]);
+    put_u64(&mut buf, total - TRAILER_LEN, sum);
+    Ok(buf)
+}
+
+/// Deserialize a version-1 snapshot, validating magic, endianness,
+/// version, total length, checksum, section geometry, and structural
+/// invariants — in that order, so the error names the *first* thing
+/// wrong with the file. See module docs for the layout.
+pub fn snapshot_from_bytes(buf: &[u8]) -> Result<HierarchySnapshot, PersistError> {
+    // the fixed prelude (magic + version + endian) must be present
+    // before anything else is interpretable
+    if buf.len() < 16 {
+        return Err(PersistError::Truncated {
+            expected: HEADER_LEN + TRAILER_LEN,
+            found: buf.len(),
+        });
+    }
+    if buf[0..8] != MAGIC {
+        return Err(PersistError::BadMagic);
+    }
+    let endian = get_u32(buf, 12);
+    if endian != ENDIAN_TAG {
+        return Err(PersistError::BadEndianness { found: endian });
+    }
+    let version = get_u32(buf, 8);
+    if version != FORMAT_VERSION {
+        return Err(PersistError::UnsupportedVersion {
+            found: version,
+            supported: FORMAT_VERSION,
+        });
+    }
+    if buf.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(PersistError::Truncated {
+            expected: HEADER_LEN + TRAILER_LEN,
+            found: buf.len(),
+        });
+    }
+
+    let d = get_u64(buf, 16) as usize;
+    let n = get_u64(buf, 24) as usize;
+    let built_n = get_u64(buf, 32) as usize;
+    let ingested = get_u64(buf, 40) as usize;
+    let conflicts = get_u64(buf, 48) as usize;
+    let online_merges = get_u64(buf, 56) as usize;
+    let generation = get_u64(buf, 64);
+    let measure = measure_from_tag(get_u32(buf, 72))?;
+    let nl = get_u32(buf, 76) as usize;
+
+    // section table: resolve geometry before touching any section, and
+    // derive the total length the file must have
+    let mut sections = [(0usize, 0usize); SECTION_COUNT];
+    let mut data_end = HEADER_LEN as u64;
+    for (i, sec) in sections.iter_mut().enumerate() {
+        let off = get_u64(buf, 80 + i * 16);
+        let len = get_u64(buf, 88 + i * 16);
+        let end = off
+            .checked_add(len)
+            .filter(|&e| e <= (usize::MAX - ALIGN) as u64)
+            .ok_or_else(|| corrupt(format!("section {i} range overflows")))?;
+        if off < HEADER_LEN as u64 {
+            return Err(corrupt(format!("section {i} overlaps the header")));
+        }
+        data_end = data_end.max(align_up(end as usize, ALIGN) as u64);
+        *sec = (off as usize, len as usize);
+    }
+    let expected_total = data_end as usize + TRAILER_LEN;
+    if buf.len() < expected_total {
+        return Err(PersistError::Truncated { expected: expected_total, found: buf.len() });
+    }
+    if buf.len() > expected_total {
+        return Err(corrupt(format!(
+            "{} bytes of trailing garbage after the checksum",
+            buf.len() - expected_total
+        )));
+    }
+    let stored = get_u64(buf, expected_total - TRAILER_LEN);
+    let computed = fnv1a64(&buf[..expected_total - TRAILER_LEN]);
+    if stored != computed {
+        return Err(PersistError::ChecksumMismatch { expected: stored, found: computed });
+    }
+
+    // checksum passed: the geometry is what the writer put there; now
+    // cross-check the section lengths against the header counts
+    let sec = |i: usize| -> &[u8] {
+        let (off, len) = sections[i];
+        &buf[off..off + len]
+    };
+    if nl == 0 {
+        return Err(corrupt("a snapshot holds at least the singleton level"));
+    }
+    let expect_len = |i: usize, want: usize, what: &str| -> Result<(), PersistError> {
+        if sections[i].1 != want {
+            Err(corrupt(format!(
+                "{what} section holds {} bytes, header describes {want}",
+                sections[i].1
+            )))
+        } else {
+            Ok(())
+        }
+    };
+    expect_len(SEC_POINTS, n * d * 4, "points")?;
+    expect_len(SEC_LEVELS, nl * LEVEL_RECORD_LEN, "level table")?;
+    expect_len(SEC_PARTITIONS, nl * n * 4, "partitions")?;
+
+    // level table → per-level geometry for the flat aggregate sections
+    let level_table = sec(SEC_LEVELS);
+    let mut ks = Vec::with_capacity(nl);
+    let mut spliced_lens = Vec::with_capacity(nl);
+    let mut thresholds = Vec::with_capacity(nl);
+    let mut bounds = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let rec = l * LEVEL_RECORD_LEN;
+        thresholds.push(f64::from_bits(get_u64(level_table, rec)));
+        bounds.push(f64::from_bits(get_u64(level_table, rec + 8)));
+        ks.push(get_u64(level_table, rec + 16) as usize);
+        spliced_lens.push(get_u64(level_table, rec + 24) as usize);
+    }
+    let k_total: usize = ks.iter().sum();
+    let s_total: usize = spliced_lens.iter().sum();
+    expect_len(SEC_AGG_COUNTS, k_total * 8, "aggregate counts")?;
+    expect_len(SEC_AGG_SUMS, k_total * d * 16, "aggregate sums")?;
+    expect_len(SEC_CENTROIDS, k_total * d * 4, "centroids")?;
+    expect_len(SEC_SPLICED, s_total * 4, "spliced ids")?;
+
+    // bulk-convert each section once, then carve per-level views by
+    // offset arithmetic
+    let name = std::str::from_utf8(sec(SEC_NAME))
+        .map_err(|_| corrupt("snapshot name is not UTF-8"))?
+        .to_string();
+    let points = read_f32s_le(sec(SEC_POINTS));
+    let parts_all = read_u32s_le(sec(SEC_PARTITIONS));
+    let counts_all = read_u64s_le(sec(SEC_AGG_COUNTS));
+    let sums_all = read_i128s_le(sec(SEC_AGG_SUMS));
+    let cents_all = read_f32s_le(sec(SEC_CENTROIDS));
+    let spliced_all = read_u32s_le(sec(SEC_SPLICED));
+
+    let mut levels = Vec::with_capacity(nl);
+    let (mut k0, mut s0) = (0usize, 0usize);
+    let mut prev_t = f64::NEG_INFINITY;
+    for l in 0..nl {
+        let (t, b, k, sl) = (thresholds[l], bounds[l], ks[l], spliced_lens[l]);
+        if !t.is_finite() || t < prev_t {
+            return Err(corrupt(format!("level {l} threshold {t} is not finite non-decreasing")));
+        }
+        prev_t = t;
+        if !b.is_finite() {
+            return Err(corrupt(format!("level {l} splice bound is not finite")));
+        }
+        let assign = parts_all[l * n..(l + 1) * n].to_vec();
+        // level 0 partitions point ids; coarser levels partition into
+        // exactly k clusters — out-of-range ids would index aggregates
+        // out of bounds at serve time, so they never leave this function
+        let limit = if l == 0 { n } else { k };
+        if assign.iter().any(|&c| c as usize >= limit) {
+            return Err(corrupt(format!("level {l} partition ids exceed its {limit} clusters")));
+        }
+        let aggs: Vec<CentroidAgg> = (0..k)
+            .map(|c| CentroidAgg {
+                sum_fp: sums_all[(k0 + c) * d..(k0 + c + 1) * d].to_vec(),
+                count: counts_all[k0 + c],
+            })
+            .collect();
+        if l > 0 && aggs.iter().map(|a| a.count).sum::<u64>() != n as u64 {
+            return Err(corrupt(format!("level {l} aggregate counts do not cover all {n} points")));
+        }
+        let centroids = cents_all[k0 * d..(k0 + k) * d].to_vec();
+        let spliced = spliced_all[s0..s0 + sl].to_vec();
+        if spliced.iter().any(|&c| c as usize >= limit) {
+            return Err(corrupt(format!("level {l} spliced ids exceed its {limit} clusters")));
+        }
+        k0 += k;
+        s0 += sl;
+        levels.push(SnapshotLevel {
+            threshold: t,
+            partition: Partition::new(assign),
+            aggs,
+            centroids,
+            spliced,
+            splice_bound: b,
+        });
+    }
+
+    Ok(HierarchySnapshot {
+        name,
+        d,
+        measure,
+        points,
+        n,
+        levels,
+        built_n,
+        ingested,
+        conflicts,
+        online_merges,
+        generation,
+    })
+}
+
+/// Atomically write `snap` to `path` (temp file + rename, so a crash
+/// mid-write never leaves a torn snapshot where a good one was).
+/// Returns the file size in bytes.
+pub fn save_snapshot(snap: &HierarchySnapshot, path: &Path) -> Result<u64, PersistError> {
+    let t = Timer::start();
+    let bytes = snapshot_to_bytes(snap)?;
+    let tmp = path.with_file_name(format!(
+        "{}.tmp",
+        path.file_name().and_then(|s| s.to_str()).unwrap_or("snapshot.scc")
+    ));
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    crate::telemetry::global().counter_sched("serve.persist.saves").inc();
+    crate::telemetry::event(
+        "serve.persist.save",
+        &[
+            ("bytes", bytes.len().into()),
+            ("generation", snap.generation.into()),
+            ("secs", t.secs().into()),
+        ],
+    );
+    Ok(bytes.len() as u64)
+}
+
+/// Load a snapshot from `path`: one read into a buffer, then
+/// [`snapshot_from_bytes`].
+pub fn load_snapshot(path: &Path) -> Result<HierarchySnapshot, PersistError> {
+    let t = Timer::start();
+    let bytes = std::fs::read(path)?;
+    let snap = snapshot_from_bytes(&bytes)?;
+    crate::telemetry::global().counter_sched("serve.persist.loads").inc();
+    crate::telemetry::event(
+        "serve.persist.load",
+        &[
+            ("bytes", bytes.len().into()),
+            ("generation", snap.generation.into()),
+            ("n", snap.n.into()),
+            ("secs", t.secs().into()),
+        ],
+    );
+    Ok(snap)
+}
+
+/// Header-only facts about a snapshot file, read without touching the
+/// sections. **Not checksum-verified** — a `peek` can succeed on a file
+/// whose body [`load_snapshot`] would reject; use it for generation
+/// ordering and operator tooling, not integrity decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotFileInfo {
+    pub version: u32,
+    pub generation: u64,
+    pub n: u64,
+    pub d: u64,
+    pub num_levels: u32,
+}
+
+/// Read a file's fixed header (magic/endianness/version validated).
+pub fn peek_info(path: &Path) -> Result<SnapshotFileInfo, PersistError> {
+    use std::io::Read;
+    let mut head = [0u8; HEADER_LEN];
+    let mut f = std::fs::File::open(path)?;
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match f.read(&mut head[got..])? {
+            0 => break,
+            r => got += r,
+        }
+    }
+    if got < 16 {
+        return Err(PersistError::Truncated { expected: HEADER_LEN + TRAILER_LEN, found: got });
+    }
+    if head[0..8] != MAGIC {
+        return Err(PersistError::BadMagic);
+    }
+    let endian = get_u32(&head, 12);
+    if endian != ENDIAN_TAG {
+        return Err(PersistError::BadEndianness { found: endian });
+    }
+    let version = get_u32(&head, 8);
+    if version != FORMAT_VERSION {
+        return Err(PersistError::UnsupportedVersion {
+            found: version,
+            supported: FORMAT_VERSION,
+        });
+    }
+    if got < HEADER_LEN {
+        return Err(PersistError::Truncated { expected: HEADER_LEN + TRAILER_LEN, found: got });
+    }
+    Ok(SnapshotFileInfo {
+        version,
+        generation: get_u64(&head, 64),
+        n: get_u64(&head, 24),
+        d: get_u64(&head, 16),
+        num_levels: get_u32(&head, 76),
+    })
+}
+
+/// [`save_snapshot`], unless `path` already holds a snapshot whose
+/// stamped generation is ≥ the candidate's — then
+/// [`PersistError::StaleGeneration`] and the file is left untouched
+/// (newer-or-equal on disk wins; generations are monotone per index, so
+/// an equal generation is the same snapshot). A missing or unreadable
+/// file is always overwritten. This is the guard the rebuild tier uses
+/// so a slow, late-finishing persist can never clobber a newer
+/// generation.
+pub fn save_snapshot_if_newer(snap: &HierarchySnapshot, path: &Path) -> Result<u64, PersistError> {
+    if let Ok(info) = peek_info(path) {
+        if info.generation >= snap.generation {
+            return Err(PersistError::StaleGeneration {
+                on_disk: info.generation,
+                candidate: snap.generation,
+            });
+        }
+    }
+    save_snapshot(snap, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dataset;
+    use crate::pipeline::Hierarchy;
+
+    fn tiny_snapshot() -> HierarchySnapshot {
+        let ds = Dataset::new(
+            "tiny",
+            vec![0.0, 0.0, 0.1, 0.0, 5.0, 5.0, 5.1, 5.0],
+            4,
+            2,
+        );
+        let h = Hierarchy::from_rounds(
+            vec![Partition::singletons(4), Partition::new(vec![0, 0, 1, 1])],
+            vec![0.0, 0.5],
+        );
+        HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 1)
+    }
+
+    #[test]
+    fn measure_tags_round_trip() {
+        for m in [Measure::L2Sq, Measure::CosineDist] {
+            assert_eq!(measure_from_tag(measure_tag(m)).unwrap(), m);
+        }
+        assert!(measure_from_tag(7).is_err());
+    }
+
+    #[test]
+    fn header_layout_is_pinned() {
+        let bytes = snapshot_to_bytes(&tiny_snapshot()).unwrap();
+        assert_eq!(&bytes[0..8], b"SCCSNAP\0");
+        assert_eq!(get_u32(&bytes, 8), FORMAT_VERSION);
+        // the endian tag must serialize as the byte sequence 04 03 02 01
+        assert_eq!(&bytes[12..16], &[0x04, 0x03, 0x02, 0x01]);
+        assert_eq!(get_u64(&bytes, 16), 2, "d");
+        assert_eq!(get_u64(&bytes, 24), 4, "n");
+        assert_eq!(get_u32(&bytes, 76), 2, "num_levels");
+        // sections start immediately after the table, 16-aligned
+        assert_eq!(get_u64(&bytes, 80), HEADER_LEN as u64, "first section offset");
+        assert_eq!(bytes.len() % ALIGN, TRAILER_LEN, "aligned data + 8-byte trailer");
+    }
+
+    #[test]
+    fn in_memory_round_trip_is_equal() {
+        let snap = tiny_snapshot();
+        let bytes = snapshot_to_bytes(&snap).unwrap();
+        assert_eq!(snapshot_from_bytes(&bytes).unwrap(), snap);
+    }
+
+    #[test]
+    fn serializing_a_hand_corrupted_snapshot_is_refused() {
+        // out-of-range partition id: the save side must reject it so a
+        // persisted file can never encode a snapshot the loader rejects
+        let mut snap = tiny_snapshot();
+        snap.levels[1].partition.assign[0] = 999;
+        assert!(matches!(snapshot_to_bytes(&snap), Err(PersistError::Corrupt(_))));
+        // NaN threshold
+        let mut snap = tiny_snapshot();
+        snap.levels[1].threshold = f64::NAN;
+        assert!(matches!(snapshot_to_bytes(&snap), Err(PersistError::Corrupt(_))));
+        // partition not covering the points
+        let mut snap = tiny_snapshot();
+        snap.levels[1].partition = Partition::singletons(3);
+        assert!(matches!(snapshot_to_bytes(&snap), Err(PersistError::Corrupt(_))));
+    }
+
+    #[test]
+    fn errors_render_cleanly() {
+        let e = PersistError::UnsupportedVersion { found: 9, supported: 1 };
+        assert!(e.to_string().contains("version 9"));
+        let e = PersistError::Truncated { expected: 100, found: 10 };
+        assert!(e.to_string().contains("truncated"));
+        let e = PersistError::StaleGeneration { on_disk: 5, candidate: 3 };
+        assert!(e.to_string().contains("generation 5"));
+    }
+}

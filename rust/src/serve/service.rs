@@ -156,8 +156,59 @@ impl ServeIndex {
     /// ingest latency stays flat. Queries are never blocked (they only
     /// read the `RwLock`, briefly). Returns `true` when a rebuilt
     /// snapshot was swapped in.
+    ///
+    /// With [`RebuildConfig::persist_path`] set, every swapped
+    /// generation is also persisted (after the swap, off every lock) via
+    /// [`super::persist::save_snapshot_if_newer`] — a late-finishing
+    /// rebuild can never clobber a newer on-disk generation, and a
+    /// persist failure only logs (`serve.persist.skip` /
+    /// `serve.persist.error` events): durability is best-effort, serving
+    /// never stops for the disk.
     pub fn rebuild_if_needed(&self, cfg: &RebuildConfig, backend: &dyn Backend) -> bool {
-        self.rebuild_with(backend, cfg.drift_limit, |cur| rebuild_snapshot(cur, cfg, backend))
+        let swapped =
+            self.rebuild_with(backend, cfg.drift_limit, |cur| rebuild_snapshot(cur, cfg, backend));
+        if swapped {
+            if let Some(path) = &cfg.persist_path {
+                self.persist_current(path);
+            }
+        }
+        swapped
+    }
+
+    /// Persist the *current* snapshot to `path` unless the file already
+    /// holds a newer-or-equal generation; failures are reported as
+    /// telemetry events, never propagated (see
+    /// [`ServeIndex::rebuild_if_needed`]).
+    fn persist_current(&self, path: &std::path::Path) {
+        match super::persist::save_snapshot_if_newer(&self.snapshot(), path) {
+            Ok(_) => {}
+            Err(super::persist::PersistError::StaleGeneration { on_disk, candidate }) => {
+                crate::telemetry::event(
+                    "serve.persist.skip",
+                    &[("on_disk", on_disk.into()), ("candidate", candidate.into())],
+                );
+            }
+            Err(e) => {
+                crate::telemetry::event("serve.persist.error", &[("error", format!("{e}").into())]);
+            }
+        }
+    }
+
+    /// Persist the current snapshot to `path`
+    /// ([`super::persist::save_snapshot`]: atomic temp-file + rename).
+    /// The saved generation is whatever snapshot is current at the call
+    /// — saving mid-rebuild captures the pre-swap snapshot, which the
+    /// monotone-generation guard in [`super::persist::save_snapshot_if_newer`]
+    /// orders correctly against later persists.
+    pub fn save(&self, path: &std::path::Path) -> Result<u64, super::persist::PersistError> {
+        super::persist::save_snapshot(&self.snapshot(), path)
+    }
+
+    /// Build an index from a persisted snapshot file. The loaded
+    /// snapshot keeps its stamped generation, so post-restart swaps
+    /// continue the monotone sequence (`replace` bumps from it).
+    pub fn load(path: &std::path::Path) -> Result<ServeIndex, super::persist::PersistError> {
+        Ok(ServeIndex::new(super::persist::load_snapshot(path)?))
     }
 
     /// The rebuild protocol with a pluggable builder (the seam the
@@ -500,6 +551,10 @@ pub struct RebuildConfig {
     /// Hierarchy algorithm (`None` = sequential SCC with a
     /// `schedule_len`-step geometric schedule).
     pub clusterer: Option<Arc<dyn Clusterer>>,
+    /// When set, every swapped rebuild generation is persisted here
+    /// (atomic write, stale-generation guarded; see
+    /// [`ServeIndex::rebuild_if_needed`]). `None` = no persistence.
+    pub persist_path: Option<std::path::PathBuf>,
 }
 
 impl Default for RebuildConfig {
@@ -512,6 +567,7 @@ impl Default for RebuildConfig {
             poll: Duration::from_millis(50),
             graph: None,
             clusterer: None,
+            persist_path: None,
         }
     }
 }
@@ -526,6 +582,7 @@ impl std::fmt::Debug for RebuildConfig {
             .field("poll", &self.poll)
             .field("graph", &self.graph.as_ref().map(|g| g.name()))
             .field("clusterer", &self.clusterer.as_ref().map(|c| c.name()))
+            .field("persist_path", &self.persist_path)
             .finish()
     }
 }
@@ -561,7 +618,10 @@ pub fn rebuild_snapshot(
 /// [`ServeIndex::rebuild_if_needed`] when crossed. The rebuild runs off
 /// the query hot path — readers keep the old `Arc` until the atomic
 /// swap — and a rebuilt snapshot starts at zero drift, so each limit
-/// crossing swaps exactly once.
+/// crossing swaps exactly once. With [`RebuildConfig::persist_path`]
+/// set, each swapped generation is also written to disk (stale-guarded,
+/// best-effort), so a restart resumes from the latest rebuild instead
+/// of raw points.
 ///
 /// Dropping the worker (or calling [`RebuildWorker::stop`]) signals the
 /// thread and joins it.
@@ -938,6 +998,96 @@ mod tests {
         assert!(index.rebuild_if_needed(&good, &NativeBackend::new()));
         assert!(index.snapshot().is_exact());
         assert_eq!(index.snapshot().ingested, 0, "rebuild resets drift");
+    }
+
+    /// Regression for the drift bugfix: `built_n == 0` used to report
+    /// zero drift forever, leaving the rebuild worker permanently inert
+    /// on an index seeded from an empty build.
+    #[test]
+    fn empty_build_plus_ingest_triggers_a_rebuild() {
+        let ds = Dataset::new("empty", Vec::new(), 0, 2);
+        let h = crate::pipeline::Hierarchy::from_rounds(
+            vec![crate::core::Partition::singletons(0)],
+            vec![0.0],
+        );
+        let snap = HierarchySnapshot::build(&ds, &h, crate::linkage::Measure::L2Sq, 1);
+        let index = Arc::new(ServeIndex::new(snap));
+        // two clumps of three points each
+        let batch: Vec<f32> = vec![
+            0.0, 0.0, 0.1, 0.0, 0.0, 0.1, //
+            9.0, 9.0, 9.1, 9.0, 9.0, 9.1,
+        ];
+        let icfg = IngestConfig { drift_limit: 0.5, ..Default::default() };
+        let report = index.ingest(&batch, &icfg, &NativeBackend::new());
+        assert_eq!(report.ingested, 6);
+        assert!(
+            report.rebuild_recommended,
+            "infinite drift over an empty baseline must recommend a rebuild: {report:?}"
+        );
+        assert_eq!(index.snapshot().drift(), f64::INFINITY);
+        let rcfg = RebuildConfig { drift_limit: 0.5, knn_k: 3, ..Default::default() };
+        assert!(
+            index.rebuild_if_needed(&rcfg, &NativeBackend::new()),
+            "the rebuild must fire (it never did before the drift fix)"
+        );
+        let after = index.snapshot();
+        assert_eq!(after.built_n, 6, "rebuild adopts the ingested points as its baseline");
+        assert_eq!(after.ingested, 0);
+        assert!(after.num_levels() > 1, "six clumped points must actually cluster");
+    }
+
+    #[test]
+    fn rebuild_persists_each_swapped_generation() {
+        let dir = std::env::temp_dir().join("scc_rebuild_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snapshot.scc");
+        std::fs::remove_file(&path).ok();
+
+        let (ds, index) = index();
+        let batch: Vec<f32> = ds.data[..8 * ds.d].to_vec();
+        let icfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
+        index.ingest(&batch, &icfg, &NativeBackend::new());
+        let rcfg = RebuildConfig {
+            drift_limit: 0.02,
+            knn_k: 8,
+            persist_path: Some(path.clone()),
+            ..Default::default()
+        };
+        assert!(index.rebuild_if_needed(&rcfg, &NativeBackend::new()));
+        let on_disk = super::super::persist::load_snapshot(&path).expect("persisted file loads");
+        assert_eq!(on_disk, *index.snapshot(), "the persisted file is the swapped generation");
+        // a stale writer (lower generation) must not clobber the file
+        let stale = HierarchySnapshot { generation: 0, ..(*index.snapshot()).clone() };
+        let err = super::super::persist::save_snapshot_if_newer(&stale, &path);
+        assert!(
+            matches!(err, Err(super::super::persist::PersistError::StaleGeneration { .. })),
+            "{err:?}"
+        );
+        assert_eq!(
+            super::super::persist::load_snapshot(&path).unwrap().generation,
+            on_disk.generation
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn index_save_load_restart_continues_generations() {
+        let dir = std::env::temp_dir().join("scc_index_save_load_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.scc");
+
+        let (ds, index) = index();
+        // bump to generation 1 so the stamp is non-trivial
+        index.ingest(&ds.row(0).to_vec(), &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(index.generation(), 1);
+        index.save(&path).expect("save");
+
+        let restarted = ServeIndex::load(&path).expect("load");
+        assert_eq!(*restarted.snapshot(), *index.snapshot(), "restart is bit-exact");
+        assert_eq!(restarted.generation(), 1, "the stamped generation survives restart");
+        restarted.replace((*restarted.snapshot()).clone());
+        assert_eq!(restarted.generation(), 2, "post-restart swaps continue the sequence");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

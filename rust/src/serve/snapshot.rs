@@ -103,6 +103,15 @@ impl HierarchySnapshot {
     /// parallelizes the level-1 aggregation; the output is bit-identical
     /// for every thread count. Legacy results convert via
     /// `Hierarchy::from(&scc_result)` / the pipeline clusterers.
+    ///
+    /// # Panics
+    ///
+    /// On structurally invalid input — a hierarchy with no rounds, a
+    /// round not covering the dataset, or **non-compact cluster ids**
+    /// (a gappy partition would allocate phantom zero-count aggregates;
+    /// see [`compact_cluster_count`]). Every built-in clusterer
+    /// produces compact rounds; hand-built `Hierarchy::from_rounds`
+    /// input must be normalized first.
     pub fn build(
         ds: &Dataset,
         hierarchy: &Hierarchy,
@@ -212,7 +221,18 @@ impl HierarchySnapshot {
     /// The coarsest level whose threshold is ≤ `tau` (level 0 for `tau`
     /// below every merge threshold). Thresholds are non-decreasing, so
     /// this is a binary search over ≤ a few dozen levels.
+    ///
+    /// Non-finite `tau` is clamped, explicitly: `+∞` selects the
+    /// coarsest level, `−∞` level 0, and `NaN` level 0 (every
+    /// `threshold <= NaN` comparison is false, which the binary search
+    /// would silently map to level 0 anyway — the clamp makes that a
+    /// documented contract instead of an accident). Callers that should
+    /// *reject* malformed thresholds rather than clamp — the CLI's
+    /// `--tau` — validate finiteness before getting here.
     pub fn level_for_tau(&self, tau: f64) -> usize {
+        if tau.is_nan() {
+            return 0;
+        }
         let first_above = self.levels.partition_point(|lv| lv.threshold <= tau);
         first_above.saturating_sub(1)
     }
@@ -307,10 +327,18 @@ impl HierarchySnapshot {
         self.levels.iter().fold(0.0, |b, lv| b.max(lv.splice_bound))
     }
 
-    /// Fraction of the index that arrived after the build.
+    /// Fraction of the index that arrived after the build. An index
+    /// seeded from an **empty** build has no baseline: any ingested
+    /// point is infinite drift (were it 0, [`Self::needs_rebuild`]
+    /// could never fire and the rebuild worker would be permanently
+    /// inert — regression-tested in `service::tests`).
     pub fn drift(&self) -> f64 {
         if self.built_n == 0 {
-            0.0
+            if self.ingested > 0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
         } else {
             self.ingested as f64 / self.built_n as f64
         }
@@ -356,10 +384,21 @@ impl HierarchySnapshot {
     }
 }
 
-/// `max(label)+1` with a debug check that ids are engine-compact.
+/// `max(label)+1`, validated against the number of *distinct* labels —
+/// a real release-mode check, not a `debug_assert`: a gappy partition
+/// (e.g. a user-built [`Hierarchy::from_rounds`] with ids `{0, 2}`)
+/// would silently allocate phantom zero-count aggregates whose
+/// all-zero centroids corrupt assignment and, once persisted, encode an
+/// invalid snapshot. Engine partitions are compact by construction;
+/// hand-built hierarchies must be `Partition::normalized()` first.
 fn compact_cluster_count(part: &Partition) -> usize {
     let k = part.assign.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
-    debug_assert_eq!(k, part.num_clusters(), "engine partitions must use compact ids");
+    assert_eq!(
+        k,
+        part.num_clusters(),
+        "hierarchy partitions must use compact cluster ids 0..K \
+         (normalize hand-built partitions with Partition::normalized)"
+    );
     k
 }
 
@@ -548,6 +587,61 @@ mod tests {
         let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
         assert_eq!(snap.centroids(0), &ds.data[..]);
         assert_eq!(snap.num_clusters(0), ds.n);
+    }
+
+    #[test]
+    fn level_for_tau_clamps_non_finite_thresholds() {
+        let (ds, res) = small_run();
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        // documented clamps: +∞ → coarsest, −∞ → 0, NaN → 0
+        assert_eq!(snap.level_for_tau(f64::INFINITY), snap.coarsest());
+        assert_eq!(snap.level_for_tau(f64::NEG_INFINITY), 0);
+        assert_eq!(snap.level_for_tau(f64::NAN), 0);
+        assert_eq!(snap.cut_at(f64::NAN), res.rounds[0], "NaN cuts at singletons");
+        // the report path goes through the same clamp
+        assert_eq!(snap.cut_report(f64::NAN).round, 0);
+        assert_eq!(snap.cut_report(f64::INFINITY).round, snap.coarsest());
+    }
+
+    #[test]
+    fn empty_build_reports_infinite_drift_once_points_arrive() {
+        let ds = Dataset::new("empty", Vec::new(), 0, 3);
+        let h = Hierarchy::from_rounds(vec![Partition::singletons(0)], vec![0.0]);
+        let mut snap = HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 1);
+        assert_eq!(snap.built_n, 0);
+        assert_eq!(snap.drift(), 0.0, "nothing ingested yet: no drift");
+        assert!(!snap.needs_rebuild(0.5));
+        // any ingested point over a zero-point baseline is infinite
+        // drift — needs_rebuild must fire for every finite limit
+        snap.ingested = 1;
+        assert_eq!(snap.drift(), f64::INFINITY);
+        assert!(snap.needs_rebuild(0.5));
+        assert!(snap.needs_rebuild(1e12));
+    }
+
+    #[test]
+    #[should_panic(expected = "compact cluster ids")]
+    fn build_rejects_gappy_partitions() {
+        // ids {0, 2}: max+1 = 3 but only 2 distinct clusters — phantom
+        // slot 1 would get a zero-count aggregate and a zero centroid
+        let ds = Dataset::new("gap", vec![0.0, 0.0, 1.0, 0.0, 9.0, 9.0], 3, 2);
+        let h = Hierarchy::from_rounds(
+            vec![Partition::singletons(3), Partition::new(vec![0, 0, 2])],
+            vec![0.0, 0.5],
+        );
+        HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 1);
+    }
+
+    #[test]
+    fn build_accepts_the_gappy_partition_once_normalized() {
+        let ds = Dataset::new("gap", vec![0.0, 0.0, 1.0, 0.0, 9.0, 9.0], 3, 2);
+        let h = Hierarchy::from_rounds(
+            vec![Partition::singletons(3), Partition::new(vec![0, 0, 2]).normalized()],
+            vec![0.0, 0.5],
+        );
+        let snap = HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 1);
+        assert_eq!(snap.num_clusters(1), 2);
+        assert!(snap.levels[1].aggs.iter().all(|a| a.count > 0), "no phantom clusters");
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Flat little-endian binary layout helpers shared by on-disk formats
+//! (today: the serve snapshot format in [`crate::serve::persist`]).
+//!
+//! Everything here is deliberately dumb: fixed-width little-endian
+//! scalars, *bulk* slice conversions between typed vectors and raw
+//! bytes, power-of-two alignment arithmetic, and an FNV-1a 64-bit
+//! checksum. The bulk converters are the "zero-copy in spirit" part —
+//! on little-endian targets (every platform this crate ships on) a
+//! whole section converts with one `memcpy` into a freshly allocated,
+//! properly aligned `Vec`, no per-element parsing; big-endian targets
+//! fall back to per-element `from_le_bytes` so files stay portable.
+//!
+//! The offline build environment has no `byteorder`/`zerocopy`; this is
+//! the dependency-free subset of their behaviour the crate needs (same
+//! philosophy as [`super::rng`] / [`super::par`] / [`super::prop`]).
+
+/// Round `x` up to the next multiple of `align` (`align` a power of two).
+#[inline]
+pub fn align_up(x: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    (x + align - 1) & !(align - 1)
+}
+
+/// FNV-1a 64-bit hash. Not cryptographic — an integrity check against
+/// torn writes and bit rot, not an authenticity check. Any single-byte
+/// change provably changes the hash (the per-byte step `h = (h ^ b) * P`
+/// is injective in `h` for fixed `b`: `P` is odd, hence invertible
+/// mod 2⁶⁴).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+macro_rules! bulk_convert {
+    ($read_name:ident, $write_name:ident, $ty:ty, $width:expr) => {
+        /// Decode a packed little-endian section into a typed vector.
+        /// `bytes.len()` must be a multiple of the scalar width (the
+        /// caller validates section lengths before slicing).
+        pub fn $read_name(bytes: &[u8]) -> Vec<$ty> {
+            assert_eq!(bytes.len() % $width, 0, "section length must be a scalar multiple");
+            let n = bytes.len() / $width;
+            if cfg!(target_endian = "little") {
+                let mut out: Vec<$ty> = vec![<$ty>::default(); n];
+                // SAFETY: `out` owns exactly `n * $width` writable bytes
+                // at an allocation aligned for `$ty`; on little-endian
+                // targets the wire layout *is* the in-memory layout and
+                // every bit pattern is a valid `$ty`. Same raw-copy idiom
+                // as `knn::brute` / `serve::assign` (safety-commented
+                // there too).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes.as_ptr(),
+                        out.as_mut_ptr() as *mut u8,
+                        n * $width,
+                    );
+                }
+                out
+            } else {
+                bytes
+                    .chunks_exact($width)
+                    .map(|c| <$ty>::from_le_bytes(c.try_into().expect("chunk width")))
+                    .collect()
+            }
+        }
+
+        /// Encode a typed slice into `dst` as packed little-endian bytes.
+        /// `dst.len()` must equal `src.len() * width`.
+        pub fn $write_name(dst: &mut [u8], src: &[$ty]) {
+            assert_eq!(dst.len(), src.len() * $width, "destination must fit the slice exactly");
+            if cfg!(target_endian = "little") {
+                // SAFETY: `src` owns `src.len() * $width` readable bytes
+                // and `dst` is exactly that long (asserted above); on
+                // little-endian targets the in-memory layout is the wire
+                // layout, and the two buffers cannot overlap (`dst` is
+                // `&mut`).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr() as *const u8,
+                        dst.as_mut_ptr(),
+                        dst.len(),
+                    );
+                }
+            } else {
+                for (c, v) in dst.chunks_exact_mut($width).zip(src) {
+                    c.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    };
+}
+
+bulk_convert!(read_u32s_le, write_u32s_le, u32, 4);
+bulk_convert!(read_f32s_le, write_f32s_le, f32, 4);
+bulk_convert!(read_u64s_le, write_u64s_le, u64, 8);
+bulk_convert!(read_i128s_le, write_i128s_le, i128, 16);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_rounds_to_the_next_multiple() {
+        assert_eq!(align_up(0, 16), 0);
+        assert_eq!(align_up(1, 16), 16);
+        assert_eq!(align_up(16, 16), 16);
+        assert_eq!(align_up(17, 16), 32);
+        assert_eq!(align_up(5, 1), 5);
+        assert_eq!(align_up(5, 8), 8);
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a64_detects_every_single_byte_flip() {
+        let base: Vec<u8> = (0u16..257).map(|i| (i % 251) as u8).collect();
+        let h = fnv1a64(&base);
+        for i in 0..base.len() {
+            let mut tampered = base.clone();
+            tampered[i] ^= 0x40;
+            assert_ne!(fnv1a64(&tampered), h, "flip at byte {i} must change the hash");
+        }
+    }
+
+    #[test]
+    fn bulk_round_trips_are_bit_exact() {
+        let u32s = vec![0u32, 1, 0xdead_beef, u32::MAX];
+        let mut buf = vec![0u8; u32s.len() * 4];
+        write_u32s_le(&mut buf, &u32s);
+        assert_eq!(read_u32s_le(&buf), u32s);
+
+        // f32 round-trips by bits (NaN payloads and -0.0 included)
+        let f32s = vec![0.0f32, -0.0, 1.5, f32::NEG_INFINITY, f32::from_bits(0x7fc0_dead)];
+        let mut buf = vec![0u8; f32s.len() * 4];
+        write_f32s_le(&mut buf, &f32s);
+        let back = read_f32s_le(&buf);
+        assert_eq!(
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            f32s.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        let u64s = vec![0u64, u64::MAX, 0x0102_0304_0506_0708];
+        let mut buf = vec![0u8; u64s.len() * 8];
+        write_u64s_le(&mut buf, &u64s);
+        assert_eq!(read_u64s_le(&buf), u64s);
+
+        let i128s = vec![0i128, -1, i128::MIN, i128::MAX, 42 << 90];
+        let mut buf = vec![0u8; i128s.len() * 16];
+        write_i128s_le(&mut buf, &i128s);
+        assert_eq!(read_i128s_le(&buf), i128s);
+    }
+
+    #[test]
+    fn wire_layout_is_little_endian_regardless_of_host() {
+        let mut buf = vec![0u8; 8];
+        write_u64s_le(&mut buf, &[0x0102_0304_0506_0708]);
+        assert_eq!(buf, [0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01]);
+        assert_eq!(read_u64s_le(&buf), vec![0x0102_0304_0506_0708]);
+    }
+
+    #[test]
+    fn empty_sections_convert_to_empty_vectors() {
+        assert!(read_u32s_le(&[]).is_empty());
+        assert!(read_i128s_le(&[]).is_empty());
+        write_f32s_le(&mut [], &[]);
+    }
+}

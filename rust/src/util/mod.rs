@@ -1,11 +1,12 @@
 //! Shared utilities: deterministic RNG, scoped-thread parallelism, timing,
-//! streaming statistics, a property-testing mini-framework, and the
-//! artifact-manifest parser.
+//! streaming statistics, a property-testing mini-framework, flat
+//! little-endian binary-layout helpers, and the artifact-manifest parser.
 //!
 //! The offline build environment provides no `rand`, `rayon`, `serde` or
 //! `proptest`; these modules are small, dependency-free stand-ins with the
 //! subset of behaviour this crate needs (see DESIGN.md §2).
 
+pub mod binfmt;
 pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,360 @@
+//! Property tests for the versioned snapshot persistence layer
+//! (ISSUE 7 acceptance criteria):
+//!
+//! 1. **bit-exact round trips** — `snapshot_from_bytes(snapshot_to_bytes(s))
+//!    == s` (full structural equality, including the raw fixed-point
+//!    aggregate words) for freshly built snapshots, post-ingest
+//!    snapshots, and post-online-merge snapshots carrying spliced
+//!    clusters and a non-zero splice bound;
+//! 2. **clean rejection** — wrong magic, foreign endianness, unknown
+//!    version, truncation at *every* prefix length, and single-bit rot
+//!    at *every* byte position each produce a typed [`PersistError`],
+//!    never a panic and never a silently wrong snapshot;
+//! 3. **restart equivalence** — a loaded snapshot answers queries
+//!    (`assign_to_level`, `cut_report`) identically to the one that was
+//!    saved, and continues ingesting from the persisted drift counters;
+//! 4. **generation ordering** — [`save_snapshot_if_newer`] refuses a
+//!    stale-or-equal generation and leaves the newer file intact.
+//!
+//! [`PersistError`]: scc::serve::PersistError
+//! [`save_snapshot_if_newer`]: scc::serve::save_snapshot_if_newer
+
+use scc::core::{Dataset, Partition};
+use scc::data::bridge_chain;
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::pipeline::{Hierarchy, SccClusterer};
+use scc::runtime::NativeBackend;
+use scc::scc::{thresholds::edge_range, Thresholds};
+use scc::serve::{
+    assign_to_level, ingest_batch, load_snapshot, peek_info, save_snapshot,
+    save_snapshot_if_newer, snapshot_from_bytes, snapshot_to_bytes, HierarchySnapshot,
+    IngestConfig, PersistError,
+};
+use scc::util::prop::{check, Gen};
+
+/// A randomized small workload: mixture + SCC through the pipeline.
+fn random_snapshot(g: &mut Gen) -> (Dataset, HierarchySnapshot) {
+    let n = g.usize_in(40..140);
+    let ds = separated_mixture(&MixtureSpec {
+        n,
+        d: g.usize_in(2..5),
+        k: g.usize_in(2..6),
+        sigma: 0.05,
+        delta: g.f64_in(6.0, 12.0),
+        imbalance: 0.0,
+        seed: g.rng().next_u64(),
+    });
+    let graph = knn_graph(&ds, g.usize_in(3..8), Measure::L2Sq);
+    let (lo, hi) = edge_range(&graph);
+    let taus = Thresholds::geometric(lo, hi, g.usize_in(6..20)).taus;
+    let res = SccClusterer::with_schedule(taus).cluster_csr(&graph);
+    let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+    (ds, snap)
+}
+
+/// A jittered mini-batch drawn from existing rows.
+fn jitter_batch(g: &mut Gen, ds: &Dataset, m: usize) -> Vec<f32> {
+    let mut batch = Vec::with_capacity(m * ds.d);
+    for _ in 0..m {
+        let row = ds.row(g.usize_in(0..ds.n));
+        for &x in row {
+            batch.push(x + g.f64_in(-0.02, 0.02) as f32);
+        }
+    }
+    batch
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small deterministic two-level snapshot for the exhaustive
+/// corruption sweeps (kept tiny so every-byte loops stay fast).
+fn small_snapshot(name: &str) -> HierarchySnapshot {
+    let ds = Dataset::new(name, vec![0.0, 0.0, 0.1, 0.0, 5.0, 5.0], 3, 2);
+    let h = Hierarchy::from_rounds(
+        vec![Partition::singletons(3), Partition::new(vec![0, 0, 1])],
+        vec![0.0, 0.5],
+    );
+    HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 1)
+}
+
+#[test]
+fn round_trip_is_bit_exact_fresh_and_post_ingest() {
+    check("save∘load == id", 15, |g| {
+        let (ds, snap) = random_snapshot(g);
+        assert_eq!(snapshot_from_bytes(&snapshot_to_bytes(&snap).unwrap()).unwrap(), snap);
+
+        // post-ingest: drift counters, appended points, possibly new
+        // clusters — everything must survive the trip untouched
+        let mut after = snap;
+        let batch = jitter_batch(g, &ds, g.usize_in(1..12));
+        let report = ingest_batch(
+            &mut after,
+            &batch,
+            &IngestConfig { workers: *g.choose(&[1usize, 2, 4]), ..Default::default() },
+            &NativeBackend::new(),
+        );
+        assert!(report.ingested > 0);
+        let back = snapshot_from_bytes(&snapshot_to_bytes(&after).unwrap()).unwrap();
+        assert_eq!(back, after, "post-ingest snapshot must round-trip bit-exactly");
+        assert_eq!(back.ingested, after.ingested);
+        assert_eq!(back.drift(), after.drift());
+    });
+}
+
+#[test]
+fn round_trip_preserves_online_merge_splices() {
+    // clumps on a line (see online_merge_properties) so the coarsest
+    // level has one cluster per clump and a bridge forces an online
+    // merge — the spliced ids and splice bound must survive persistence
+    check("spliced snapshots round-trip", 8, |g| {
+        let clumps = g.usize_in(3..5);
+        let d = 2;
+        let mut data = Vec::new();
+        for c in 0..clumps {
+            for _ in 0..g.usize_in(6..9) {
+                data.push((c as f64 * 3.0 + g.f64_in(-0.04, 0.04)) as f32);
+                data.push(g.f64_in(-0.04, 0.04) as f32);
+            }
+        }
+        let n = data.len() / d;
+        let ds = Dataset::new("clumps", data, n, d);
+        let graph = knn_graph(&ds, 4, Measure::L2Sq);
+        let (lo, hi) = edge_range(&graph);
+        let taus = Thresholds::geometric(lo, hi, g.usize_in(8..14)).taus;
+        let res = SccClusterer::with_schedule(taus).cluster_csr(&graph);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let coarse = snap.coarsest();
+        if snap.num_clusters(coarse) < 2 {
+            return; // k-NN graph not clump-disconnected: skip the case
+        }
+        let (a, b, _) = snap.nearest_cluster_pair(coarse).unwrap();
+        let centers = snap.centroids(coarse);
+        let (a, b) = (a as usize, b as usize);
+        let batch =
+            bridge_chain(&centers[a * d..a * d + d], &centers[b * d..b * d + d], snap.threshold(coarse));
+
+        let mut online = snap;
+        let report = ingest_batch(
+            &mut online,
+            &batch,
+            &IngestConfig { online_merges: true, workers: 1, ..Default::default() },
+            &NativeBackend::new(),
+        );
+        if report.online_merges == 0 {
+            return; // bridge attached without a cross-clump merge: skip
+        }
+        assert!(online.splice_bound() > 0.0, "the merge must record its bound");
+        let back = snapshot_from_bytes(&snapshot_to_bytes(&online).unwrap()).unwrap();
+        assert_eq!(back, online, "spliced snapshot must round-trip bit-exactly");
+        assert_eq!(back.splice_bound(), online.splice_bound());
+        let l = back.coarsest();
+        assert_eq!(back.level(l).spliced, online.level(l).spliced);
+    });
+}
+
+#[test]
+fn degenerate_snapshots_round_trip() {
+    // zero points: the smallest legal snapshot (singleton level only)
+    let ds = Dataset::new("empty", Vec::new(), 0, 3);
+    let h = Hierarchy::from_rounds(vec![Partition::singletons(0)], vec![0.0]);
+    let snap = HierarchySnapshot::build(&ds, &h, Measure::L2Sq, 1);
+    assert_eq!(snapshot_from_bytes(&snapshot_to_bytes(&snap).unwrap()).unwrap(), snap);
+
+    // one point, both measures, non-empty name
+    for m in [Measure::L2Sq, Measure::CosineDist] {
+        let ds = Dataset::new("single", vec![1.0, 2.0], 1, 2);
+        let h = Hierarchy::from_rounds(
+            vec![Partition::singletons(1), Partition::new(vec![0])],
+            vec![0.0, 0.5],
+        );
+        let snap = HierarchySnapshot::build(&ds, &h, m, 1);
+        let back = snapshot_from_bytes(&snapshot_to_bytes(&snap).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.measure, m);
+    }
+}
+
+#[test]
+fn file_round_trip_is_bit_exact_and_leaves_no_temp_file() {
+    check("file save/load", 6, |g| {
+        let dir = tmp_dir("scc_persist_file_rt");
+        let path = dir.join(format!("rt_{}.scc", g.usize_in(0..1_000_000)));
+        let (_, snap) = random_snapshot(g);
+        let bytes = save_snapshot(&snap, &path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len(), "reported size is the file");
+        assert!(
+            !dir.join(format!("{}.tmp", path.file_name().unwrap().to_str().unwrap())).exists(),
+            "the atomic-rename temp file must not survive"
+        );
+        assert_eq!(load_snapshot(&path).unwrap(), snap);
+        let info = peek_info(&path).unwrap();
+        assert_eq!(info.generation, snap.generation);
+        assert_eq!(info.n, snap.n as u64);
+        assert_eq!(info.d, snap.d as u64);
+        assert_eq!(info.num_levels as usize, snap.num_levels());
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn loaded_snapshot_serves_identically_to_the_saved_one() {
+    check("load-then-query == build-then-query", 8, |g| {
+        let (ds, snap) = random_snapshot(g);
+        let loaded = snapshot_from_bytes(&snapshot_to_bytes(&snap).unwrap()).unwrap();
+        let backend = NativeBackend::new();
+
+        let nq = g.usize_in(3..20);
+        let queries = jitter_batch(g, &ds, nq);
+        for level in [0, snap.coarsest() / 2, snap.coarsest()] {
+            let a = assign_to_level(&snap, level, &queries, nq, &backend, 2);
+            let b = assign_to_level(&loaded, level, &queries, nq, &backend, 2);
+            assert_eq!(a.cluster, b.cluster, "level {level} assignments");
+            assert_eq!(a.dist, b.dist, "level {level} distances");
+        }
+        for tau in [0.0, snap.threshold(snap.coarsest()) * 0.5, f64::INFINITY] {
+            assert_eq!(snap.cut_report(tau), loaded.cut_report(tau), "cut at τ={tau}");
+        }
+    });
+}
+
+#[test]
+fn loaded_snapshot_continues_ingesting_from_persisted_counters() {
+    check("load-then-ingest continues drift", 8, |g| {
+        let (ds, mut snap) = random_snapshot(g);
+        // accumulate some drift before the save
+        let first = jitter_batch(g, &ds, g.usize_in(1..6));
+        ingest_batch(&mut snap, &first, &IngestConfig::default(), &NativeBackend::new());
+        let saved_ingested = snap.ingested;
+        let saved_drift = snap.drift();
+
+        let mut loaded = snapshot_from_bytes(&snapshot_to_bytes(&snap).unwrap()).unwrap();
+        assert_eq!(loaded.ingested, saved_ingested);
+        assert_eq!(loaded.drift(), saved_drift);
+
+        // one more batch on the restored snapshot: counters continue
+        // from the persisted values, not from zero
+        let m = g.usize_in(1..6);
+        let second = jitter_batch(g, &ds, m);
+        let report = ingest_batch(&mut loaded, &second, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.ingested, m);
+        assert_eq!(loaded.ingested, saved_ingested + m, "drift counter continues across restart");
+        assert!(loaded.drift() > saved_drift);
+    });
+}
+
+#[test]
+fn wrong_magic_version_and_endianness_are_rejected_with_typed_errors() {
+    let good = snapshot_to_bytes(&small_snapshot("typed_errors")).unwrap();
+
+    let mut bad = good.clone();
+    bad[0..8].copy_from_slice(b"NOTSNAP\0");
+    assert!(matches!(snapshot_from_bytes(&bad), Err(PersistError::BadMagic)));
+
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+    assert!(matches!(
+        snapshot_from_bytes(&bad),
+        Err(PersistError::UnsupportedVersion { found: 99, supported: 1 })
+    ));
+
+    // a big-endian writer would lay the tag down reversed
+    let mut bad = good.clone();
+    bad[12..16].copy_from_slice(&[0x01, 0x02, 0x03, 0x04]);
+    assert!(matches!(snapshot_from_bytes(&bad), Err(PersistError::BadEndianness { .. })));
+
+    // trailing garbage after the checksum is not silently ignored
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 16]);
+    assert!(matches!(snapshot_from_bytes(&bad), Err(PersistError::Corrupt(_))));
+}
+
+#[test]
+fn truncation_at_every_prefix_is_a_clean_error() {
+    let good = snapshot_to_bytes(&small_snapshot("trunc")).unwrap();
+    for len in 0..good.len() {
+        let r = snapshot_from_bytes(&good[..len]);
+        assert!(r.is_err(), "prefix of {len}/{} bytes must be rejected", good.len());
+    }
+    assert!(snapshot_from_bytes(&good).is_ok(), "the untruncated file still loads");
+}
+
+#[test]
+fn single_bit_rot_at_every_byte_is_detected() {
+    // FNV-1a catches every single-byte change (multiplication by an odd
+    // prime is invertible mod 2^64 — see util::binfmt); flips in the
+    // prelude fail the magic/endian/version checks first, and flips in
+    // the trailer disagree with the recomputed sum. No position may
+    // load, and none may panic.
+    let good = snapshot_to_bytes(&small_snapshot("rot")).unwrap();
+    for pos in 0..good.len() {
+        for bit in [0x01u8, 0x80] {
+            let mut bad = good.clone();
+            bad[pos] ^= bit;
+            assert!(
+                snapshot_from_bytes(&bad).is_err(),
+                "flipping bit {bit:#x} of byte {pos} must not load"
+            );
+        }
+    }
+}
+
+#[test]
+fn stale_generations_never_clobber_newer_files() {
+    let dir = tmp_dir("scc_persist_stale");
+    let path = dir.join("gen.scc");
+    std::fs::remove_file(&path).ok();
+    let snap = small_snapshot("gen");
+
+    let mut newer = snap.clone();
+    newer.generation = 5;
+    save_snapshot(&newer, &path).unwrap();
+
+    for stale_gen in [0u64, 4, 5] {
+        let mut stale = snap.clone();
+        stale.generation = stale_gen;
+        let err = save_snapshot_if_newer(&stale, &path);
+        assert!(
+            matches!(err, Err(PersistError::StaleGeneration { on_disk: 5, candidate }) if candidate == stale_gen),
+            "{err:?}"
+        );
+        assert_eq!(load_snapshot(&path).unwrap().generation, 5, "file left untouched");
+    }
+
+    let mut newest = snap.clone();
+    newest.generation = 6;
+    save_snapshot_if_newer(&newest, &path).unwrap();
+    assert_eq!(load_snapshot(&path).unwrap(), newest, "a newer generation does overwrite");
+
+    // a missing file is always written
+    std::fs::remove_file(&path).unwrap();
+    let mut zero = snap;
+    zero.generation = 0;
+    save_snapshot_if_newer(&zero, &path).unwrap();
+    assert_eq!(load_snapshot(&path).unwrap().generation, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_files_and_non_snapshot_files_error_cleanly() {
+    let dir = tmp_dir("scc_persist_badfiles");
+    let missing = dir.join("nope.scc");
+    std::fs::remove_file(&missing).ok();
+    assert!(matches!(load_snapshot(&missing), Err(PersistError::Io(_))));
+    assert!(matches!(peek_info(&missing), Err(PersistError::Io(_))));
+
+    let text = dir.join("readme.txt");
+    std::fs::write(&text, b"this is not a snapshot file at all").unwrap();
+    assert!(matches!(load_snapshot(&text), Err(PersistError::BadMagic)));
+    assert!(matches!(peek_info(&text), Err(PersistError::BadMagic)));
+
+    let short = dir.join("short.scc");
+    std::fs::write(&short, b"SCC").unwrap();
+    assert!(matches!(load_snapshot(&short), Err(PersistError::Truncated { .. })));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -15,12 +15,17 @@ use scc::core::Dataset;
 use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph;
 use scc::linkage::Measure;
-use scc::pipeline::{BruteKnn, Hierarchy, Pipeline, SccClusterer, TeraHacClusterer};
-use scc::runtime::NativeBackend;
+use scc::pipeline::{
+    BruteKnn, Clusterer, GraphContext, Hierarchy, Pipeline, SccClusterer, TeraHacClusterer,
+};
+use scc::runtime::{Backend, NativeBackend};
 use scc::scc::{thresholds::edge_range, Thresholds};
-use scc::serve::{ingest_batch, HierarchySnapshot, IngestConfig, RebuildConfig, ServeIndex};
+use scc::serve::{
+    ingest_batch, load_snapshot, save_snapshot_if_newer, HierarchySnapshot, IngestConfig,
+    RebuildConfig, ServeIndex,
+};
 use scc::util::prop::{check, Gen};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// A randomized small workload: mixture + SCC run through the pipeline
 /// clusterer (sometimes the fixed-rounds variant, whose thresholds are
@@ -218,4 +223,111 @@ fn rebuild_with_terahac_clusterer_restores_exactness_and_generations() {
     // a second check without new drift is a no-op
     assert!(!index.rebuild_if_needed(&cfg, &backend));
     assert_eq!(index.generation(), 2);
+}
+
+/// A clusterer that announces when the rebuild has entered its slow
+/// phase and blocks until released — the deterministic hook the
+/// persistence-under-concurrency test drives (same device as the
+/// catch-up tests in `serve::service`).
+struct GatedClusterer {
+    inner: SccClusterer,
+    // Mutex-wrapped: `Clusterer: Sync`, but mpsc endpoints are not
+    started: Mutex<mpsc::Sender<()>>,
+    release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl Clusterer for GatedClusterer {
+    fn cluster(&self, cx: &GraphContext<'_>, backend: &dyn Backend) -> Hierarchy {
+        self.started.lock().expect("started").send(()).expect("test alive");
+        self.release.lock().expect("release").recv().expect("released");
+        self.inner.cluster(cx, backend)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-scc"
+    }
+}
+
+/// Satellite (ISSUE 7): persistence under concurrency. Saving while a
+/// rebuild is in flight and the catch-up queue is non-empty must
+/// capture the live pre-swap generation; after the swap no queued batch
+/// is lost, generations stay monotone, and the post-swap save
+/// supersedes the earlier file through the stale-generation guard.
+#[test]
+fn save_during_rebuild_with_queued_ingest_loses_nothing() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 220,
+        d: 4,
+        k: 5,
+        sigma: 0.04,
+        delta: 10.0,
+        imbalance: 0.0,
+        seed: 11,
+    });
+    let g = knn_graph(&ds, 8, Measure::L2Sq);
+    let res = SccClusterer::geometric(20).cluster_csr(&g);
+    let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+    let index = Arc::new(ServeIndex::new(snap));
+    let backend = NativeBackend::new();
+
+    // prime past the drift limit so the rebuild fires
+    let primer: Vec<f32> = ds.data[..8 * ds.d].to_vec();
+    let primed = index.ingest(
+        &primer,
+        &IngestConfig { drift_limit: 0.02, ..Default::default() },
+        &backend,
+    );
+    assert!(primed.rebuild_recommended);
+    let n_at_rebuild = index.snapshot().n;
+    let gen_before = index.generation();
+
+    let (started_tx, started_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let rcfg = RebuildConfig {
+        drift_limit: 0.02,
+        knn_k: 8,
+        clusterer: Some(Arc::new(GatedClusterer {
+            inner: SccClusterer::geometric(20),
+            started: Mutex::new(started_tx),
+            release: Mutex::new(release_rx),
+        })),
+        ..Default::default()
+    };
+    let rebuild = {
+        let index = Arc::clone(&index);
+        std::thread::spawn(move || index.rebuild_if_needed(&rcfg, &NativeBackend::new()))
+    };
+    started_rx.recv().expect("rebuild reached its slow phase");
+
+    // mid-rebuild ingest: queued for catch-up, not applied yet
+    let batch: Vec<f32> = ds.row(5).iter().map(|x| x + 1e-3).collect();
+    let queued = index.ingest(&batch, &IngestConfig::default(), &backend);
+    assert!(queued.queued, "{queued:?}");
+
+    // save with the rebuild mid-flight and the queue non-empty: the
+    // file is the live pre-swap snapshot, bit-exact
+    let dir = std::env::temp_dir().join("scc_serve_concurrent_persist");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("concurrent.scc");
+    std::fs::remove_file(&path).ok();
+    index.save(&path).expect("save mid-rebuild");
+    let on_disk = load_snapshot(&path).expect("reload mid-rebuild save");
+    assert_eq!(on_disk, *index.snapshot(), "mid-rebuild save is the live snapshot");
+    assert_eq!(on_disk.generation, gen_before, "pre-swap generation persisted");
+    assert_eq!(on_disk.n, n_at_rebuild, "the queued batch is not in the pre-swap file");
+
+    release_tx.send(()).expect("release the rebuild");
+    assert!(rebuild.join().expect("rebuild thread"), "rebuild must swap");
+    let after = index.snapshot();
+    assert_eq!(after.n, n_at_rebuild + 1, "the queued batch survives the swap");
+    assert_eq!(after.generation, gen_before + 1, "generations stay monotone");
+
+    // the post-swap save supersedes the earlier file; a re-save of the
+    // same generation is refused by the stale guard
+    save_snapshot_if_newer(&after, &path).expect("newer generation overwrites");
+    let reloaded = load_snapshot(&path).unwrap();
+    assert_eq!(reloaded, *after, "post-swap file round-trips bit-exactly");
+    assert!(reloaded.generation > on_disk.generation);
+    assert!(save_snapshot_if_newer(&after, &path).is_err(), "equal generation is stale");
+    std::fs::remove_dir_all(&dir).ok();
 }

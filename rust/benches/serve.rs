@@ -20,7 +20,8 @@ use scc::linkage::Measure;
 use scc::pipeline::{SccClusterer, TeraHacClusterer};
 use scc::serve::{
     assign_to_level, ingest_batch, rebuild_snapshot, HierarchySnapshot, IngestConfig,
-    RebuildConfig, ServeIndex, Service, ServiceConfig,
+    RebuildConfig, RouteMode, ServeIndex, Service, ServiceConfig, ShardRouter, ShardSpec,
+    ShardedIndex,
 };
 use scc::util::stats::{fmt_count, fmt_secs};
 use scc::util::{par, Rng, Timer};
@@ -31,6 +32,31 @@ struct Row {
     path: &'static str,
     secs: f64,
     points_per_sec: f64,
+    /// p99 of per-request wall latency — only the shard routing arms
+    /// measure request-level latency; `null` elsewhere.
+    p99_secs: Option<f64>,
+    /// fraction of queries agreeing with the exact single-index
+    /// assignment — only the sketch-routing arm is approximate.
+    recall: Option<f64>,
+}
+
+/// Row where throughput is `queries / secs` and the routing-only
+/// columns are null.
+fn row(queries: usize, path: &'static str, secs: f64) -> Row {
+    Row {
+        queries,
+        path,
+        secs,
+        points_per_sec: queries as f64 / secs,
+        p99_secs: None,
+        recall: None,
+    }
+}
+
+/// p99 by sorted rank over raw per-request latencies (no buckets).
+fn p99_of(lat: &mut [f64]) -> f64 {
+    lat.sort_by(|a, b| a.total_cmp(b));
+    lat[((lat.len() as f64 * 0.99).ceil() as usize).max(1) - 1]
 }
 
 fn main() {
@@ -65,24 +91,14 @@ fn main() {
         HierarchySnapshot::build(&ds, &r, Measure::L2Sq, threads)
     };
     let scc_secs = t.secs();
-    rows.push(Row {
-        queries: build_n,
-        path: "build_scc",
-        secs: scc_secs,
-        points_per_sec: build_n as f64 / scc_secs,
-    });
+    rows.push(row(build_n, "build_scc", scc_secs));
     let t = Timer::start();
     let tera_snap = {
         let r = TeraHacClusterer::new(0.25).cluster_csr(&g);
         HierarchySnapshot::build(&ds, &r, Measure::L2Sq, threads)
     };
     let tera_secs = t.secs();
-    rows.push(Row {
-        queries: build_n,
-        path: "build_terahac",
-        secs: tera_secs,
-        points_per_sec: build_n as f64 / tera_secs,
-    });
+    rows.push(row(build_n, "build_terahac", tera_secs));
     println!(
         "build n={:>9}  scc {:>10}  terahac(eps=0.25) {:>10}  ({} vs {} levels)",
         fmt_count(build_n),
@@ -122,12 +138,7 @@ fn main() {
         let serial = assign_to_level(&snap_now, level, &queries, nq, backend.as_ref(), 1);
         let serial_secs = t.secs();
         assert_eq!(serial.len(), nq);
-        rows.push(Row {
-            queries: nq,
-            path: "serial",
-            secs: serial_secs,
-            points_per_sec: nq as f64 / serial_secs,
-        });
+        rows.push(row(nq, "serial", serial_secs));
 
         // pooled path: worker pool + batched submission
         let service = Service::start(
@@ -148,12 +159,7 @@ fn main() {
         // embedded latency histogram describes the largest run
         tele = service.telemetry().merge(tele);
         service.shutdown();
-        rows.push(Row {
-            queries: nq,
-            path: "pooled",
-            secs: pooled_secs,
-            points_per_sec: nq as f64 / pooled_secs,
-        });
+        rows.push(row(nq, "pooled", pooled_secs));
 
         println!(
             "n={:>9}  serial {:>10}  ({:>12.0} pts/s)   pooled {:>10}  ({:>12.0} pts/s)  speedup {:.2}x",
@@ -204,12 +210,7 @@ fn main() {
     let rebuilt = rebuild_snapshot(&defer_snap, &rcfg, backend.as_ref());
     let defer_secs = t.secs();
     assert_eq!(rebuilt.n, snap_now.n + m);
-    rows.push(Row {
-        queries: m,
-        path: "ingest_defer_rebuild",
-        secs: defer_secs,
-        points_per_sec: m as f64 / defer_secs,
-    });
+    rows.push(row(m, "ingest_defer_rebuild", defer_secs));
 
     // online merge: the same batch absorbed in place, no rebuild
     let mut online_snap = (*snap_now).clone();
@@ -221,12 +222,7 @@ fn main() {
         backend.as_ref(),
     );
     let online_secs = t.secs();
-    rows.push(Row {
-        queries: m,
-        path: "ingest_online_merge",
-        secs: online_secs,
-        points_per_sec: m as f64 / online_secs,
-    });
+    rows.push(row(m, "ingest_online_merge", online_secs));
     println!(
         "ingest n={:>6}  defer+rebuild {:>10} ({} conflicts)   online {:>10} ({} merges applied)  speedup {:.1}x",
         fmt_count(m),
@@ -248,32 +244,17 @@ fn main() {
     let t = Timer::start();
     let file_bytes = scc::serve::save_snapshot(&snap_now, &path).expect("persist the index");
     let save_secs = t.secs();
-    rows.push(Row {
-        queries: snap_now.n,
-        path: "persist_save",
-        secs: save_secs,
-        points_per_sec: snap_now.n as f64 / save_secs,
-    });
+    rows.push(row(snap_now.n, "persist_save", save_secs));
     let t = Timer::start();
     let loaded = scc::serve::load_snapshot(&path).expect("cold-start load");
     let load_secs = t.secs();
     assert_eq!(loaded, *snap_now, "cold start must restore the index bit-exactly");
-    rows.push(Row {
-        queries: loaded.n,
-        path: "coldstart_load",
-        secs: load_secs,
-        points_per_sec: loaded.n as f64 / load_secs,
-    });
+    rows.push(row(loaded.n, "coldstart_load", load_secs));
     let t = Timer::start();
     let rebuilt_cold = rebuild_snapshot(&snap_now, &rcfg, backend.as_ref());
     let rebuild_secs = t.secs();
     assert_eq!(rebuilt_cold.n, snap_now.n);
-    rows.push(Row {
-        queries: snap_now.n,
-        path: "coldstart_rebuild",
-        secs: rebuild_secs,
-        points_per_sec: snap_now.n as f64 / rebuild_secs,
-    });
+    rows.push(row(snap_now.n, "coldstart_rebuild", rebuild_secs));
     println!(
         "coldstart n={:>9}  save {:>10} ({} bytes)   load {:>10}   rebuild {:>10}  load speedup {:.0}x",
         fmt_count(snap_now.n),
@@ -284,6 +265,140 @@ fn main() {
         rebuild_secs / load_secs
     );
     std::fs::remove_dir_all(&dir).ok();
+
+    // --- shard arm: tier projection cost + routed fan-out QPS/p99 at
+    //     S ∈ {1, 2, 4, 8}, plus sketch-routing recall at S=4 probe=2.
+    //     Fan-out is bit-identical to the single index for every S
+    //     (pinned in rust/tests/shard_properties.rs and re-asserted
+    //     live here), so those rows measure pure routing overhead and
+    //     scaling; only the sketch row trades recall for fewer probes.
+    let snap_now = index.snapshot();
+    let shard_nq = (10_000.0 * cfg.scale).round().max(1000.0) as usize;
+    let mut rng = Rng::new(cfg.seed ^ 0x5A4D);
+    let mut squeries = Vec::with_capacity(shard_nq * d);
+    for j in 0..shard_nq {
+        for &x in ds.row((j * 13) % ds.n) {
+            squeries.push(x + 0.01 * rng.normal_f32());
+        }
+    }
+    let baseline = assign_to_level(&snap_now, level, &squeries, shard_nq, backend.as_ref(), threads);
+    let chunk = 256usize;
+    let mut tier4: Option<Arc<ShardedIndex>> = None;
+    for &s_count in &[1usize, 2, 4, 8] {
+        let (ppath, fpath) = match s_count {
+            1 => ("shard1_project", "shard1_fanout"),
+            2 => ("shard2_project", "shard2_fanout"),
+            4 => ("shard4_project", "shard4_fanout"),
+            _ => ("shard8_project", "shard8_fanout"),
+        };
+        let t = Timer::start();
+        let tier = Arc::new(ShardedIndex::new(
+            (*snap_now).clone(),
+            ShardSpec::new(s_count, cfg.seed),
+        ));
+        let proj_secs = t.secs();
+        rows.push(row(snap_now.n, ppath, proj_secs));
+        if s_count == 4 {
+            tier4 = Some(Arc::clone(&tier));
+        }
+
+        // total worker threads stay ~constant across S so the arm
+        // compares routing topologies, not thread counts
+        let router = ShardRouter::start(
+            Arc::clone(&tier),
+            Arc::clone(&backend),
+            ServiceConfig {
+                workers: (threads / s_count).max(1),
+                level,
+                max_batch: 1024,
+                ..Default::default()
+            },
+            RouteMode::Fanout,
+        );
+        let mut lat = Vec::with_capacity(shard_nq / chunk + 1);
+        let t = Timer::start();
+        let mut q0 = 0usize;
+        while q0 < shard_nq {
+            let q1 = (q0 + chunk).min(shard_nq);
+            let tq = Timer::start();
+            let resp = router.query_blocking(&squeries[q0 * d..q1 * d], q1 - q0);
+            lat.push(tq.secs());
+            assert_eq!(
+                resp.result.cluster,
+                baseline.cluster[q0..q1],
+                "fan-out routing must be bit-identical to the single index (S={s_count})"
+            );
+            q0 = q1;
+        }
+        let fan_secs = t.secs();
+        let p99 = p99_of(&mut lat);
+        rows.push(Row {
+            queries: shard_nq,
+            path: fpath,
+            secs: fan_secs,
+            points_per_sec: shard_nq as f64 / fan_secs,
+            p99_secs: Some(p99),
+            recall: None,
+        });
+        router.shutdown();
+        println!(
+            "shards S={}  project {:>10}   fanout {:>10} ({:>10.0} q/s, p99 {}/req)",
+            s_count,
+            fmt_secs(proj_secs),
+            fmt_secs(fan_secs),
+            shard_nq as f64 / fan_secs,
+            fmt_secs(p99)
+        );
+    }
+    let tier4 = tier4.expect("the S=4 arm always runs");
+    let router = ShardRouter::start(
+        Arc::clone(&tier4),
+        Arc::clone(&backend),
+        ServiceConfig {
+            workers: (threads / 4).max(1),
+            level,
+            max_batch: 1024,
+            ..Default::default()
+        },
+        RouteMode::Sketch { probe: 2 },
+    );
+    let mut lat = Vec::with_capacity(shard_nq / chunk + 1);
+    let mut matched = 0usize;
+    let t = Timer::start();
+    let mut q0 = 0usize;
+    while q0 < shard_nq {
+        let q1 = (q0 + chunk).min(shard_nq);
+        let tq = Timer::start();
+        let resp = router.query_blocking(&squeries[q0 * d..q1 * d], q1 - q0);
+        lat.push(tq.secs());
+        matched += resp
+            .result
+            .cluster
+            .iter()
+            .zip(baseline.cluster[q0..q1].iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        q0 = q1;
+    }
+    let sk_secs = t.secs();
+    let recall = matched as f64 / shard_nq as f64;
+    let p99 = p99_of(&mut lat);
+    rows.push(Row {
+        queries: shard_nq,
+        path: "shard4_sketch_p2",
+        secs: sk_secs,
+        points_per_sec: shard_nq as f64 / sk_secs,
+        p99_secs: Some(p99),
+        recall: Some(recall),
+    });
+    router.shutdown();
+    println!(
+        "sketch S=4 P=2  {:>10} ({:>10.0} q/s, p99 {}/req)  recall {:.3} vs exact fan-out",
+        fmt_secs(sk_secs),
+        shard_nq as f64 / sk_secs,
+        fmt_secs(p99),
+        recall
+    );
 
     let tele = tele.merge(scc::telemetry::global().snapshot());
     write_json(&rows, build_n, ds.d, clusters, backend.name(), threads, &tele);
@@ -312,12 +427,16 @@ fn write_json(
     s.push_str(&format!("  \"threads\": {threads},\n"));
     s.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let p99 = r.p99_secs.map_or("null".to_string(), |v| format!("{v:.6}"));
+        let recall = r.recall.map_or("null".to_string(), |v| format!("{v:.4}"));
         s.push_str(&format!(
-            "    {{\"queries\": {}, \"path\": \"{}\", \"secs\": {:.6}, \"points_per_sec\": {:.1}}}{}\n",
+            "    {{\"queries\": {}, \"path\": \"{}\", \"secs\": {:.6}, \"points_per_sec\": {:.1}, \"p99_secs\": {}, \"recall\": {}}}{}\n",
             r.queries,
             r.path,
             r.secs,
             r.points_per_sec,
+            p99,
+            recall,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

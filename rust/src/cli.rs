@@ -99,8 +99,17 @@ pub struct ServeOpts {
     pub snapshot_in: Option<String>,
     /// Persist the snapshot to this file (`cluster`/`serve`/`serve-cut`;
     /// for `serve` the rebuild worker also persists every swapped
-    /// generation there).
+    /// generation there). With `--shards` this names a tier *directory*
+    /// ([`crate::serve::ShardedIndex::save_all`]).
     pub snapshot_out: Option<String>,
+    /// Shard the serving tier across this many shards behind a
+    /// [`crate::serve::ShardRouter`] (0 = classic single index).
+    pub shards: usize,
+    /// Shard routing mode: `fanout` (exact, bit-identical to the single
+    /// index) or `sketch` (probe the nearest `--probe` shards).
+    pub route: String,
+    /// Shards probed per query under sketch routing.
+    pub probe: usize,
 }
 
 impl Default for ServeOpts {
@@ -115,6 +124,9 @@ impl Default for ServeOpts {
             online_merges: false,
             snapshot_in: None,
             snapshot_out: None,
+            shards: 0,
+            route: "fanout".to_string(),
+            probe: 2,
         }
     }
 }
@@ -193,6 +205,16 @@ OPTIONS:
   --online-merges serve: apply cross-cluster conflict merges online during
                   ingest (scoped contraction + splice) instead of
                   deferring them to the next rebuild
+  --shards S      serve: shard the tier across S shards behind a router
+                  (0 = classic single index, the default). --snapshot-in/
+                  --snapshot-out then name a tier *directory* (one
+                  snapshot file per shard + manifest); see README
+                  \"Sharded serving\"
+  --route R       serve: shard routing mode: fanout | sketch (default
+                  fanout — exact and bit-identical to the single index;
+                  sketch probes only the nearest shards per query)
+  --probe P       serve: shards probed per query under --route sketch
+                  (default 2)
   --metrics-out P write the run's telemetry snapshot to P after the
                   command finishes: Prometheus text when P ends in
                   .prom, JSON otherwise (see README \"Observability\")
@@ -272,6 +294,19 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 cli.serve.drift_limit = val()?.parse().context("--drift-limit")?
             }
             "--online-merges" => cli.serve.online_merges = true,
+            "--shards" => cli.serve.shards = val()?.parse().context("--shards")?,
+            "--route" => {
+                cli.serve.route = val()?.clone();
+                if !matches!(cli.serve.route.as_str(), "fanout" | "sketch") {
+                    bail!("unknown route mode {:?} (fanout|sketch)", cli.serve.route);
+                }
+            }
+            "--probe" => {
+                cli.serve.probe = val()?.parse().context("--probe")?;
+                if cli.serve.probe == 0 {
+                    bail!("--probe must be >= 1 (shards probed per query)");
+                }
+            }
             "--snapshot-in" => cli.serve.snapshot_in = Some(val()?.clone()),
             "--snapshot-out" => cli.serve.snapshot_out = Some(val()?.clone()),
             "--metrics-out" => cli.metrics_out = Some(val()?.clone()),
@@ -473,6 +508,9 @@ fn serve_cmd(
             Some(g) => Arc::from(g),
             None => bail!("unknown graph strategy {:?} (brute|nn-descent|lsh)", cfg.graph),
         };
+    if opts.shards > 0 {
+        return serve_sharded_cmd(dataset, algo, cfg, opts, backend, graph_builder, metrics_out);
+    }
     // cold start: `--snapshot-in` restores a persisted index in one read
     // + offset arithmetic and skips the dataset build and the batch
     // pipeline entirely; otherwise build as before
@@ -643,6 +681,198 @@ fn serve_cmd(
         write_metrics(&service.telemetry().merge(crate::telemetry::global().snapshot()), path)?;
     }
     service.shutdown();
+    Ok(out)
+}
+
+/// `serve --shards S`: the sharded tier. Build (or cold-start a whole
+/// tier from a `--snapshot-in` directory), route queries through a
+/// [`crate::serve::ShardRouter`] (fan-out is bit-identical to the
+/// single-index `serve` path), ingest through the global index with
+/// reprojection, and persist the tier (one file per shard + manifest)
+/// with `--snapshot-out`.
+fn serve_sharded_cmd(
+    dataset: &str,
+    algo: &str,
+    cfg: &EvalConfig,
+    opts: &ServeOpts,
+    backend: Arc<dyn Backend + Send + Sync>,
+    graph_builder: Arc<dyn crate::pipeline::GraphBuilder>,
+    metrics_out: Option<&str>,
+) -> Result<String> {
+    use crate::serve::shard::{
+        RouteMode, ShardRebuildWorker, ShardRouter, ShardSpec, ShardedIndex,
+    };
+    use crate::serve::{HierarchySnapshot, IngestConfig, RebuildConfig, ServiceConfig};
+    // the partition seed is part of the tier's identity: the same
+    // --seed must be passed when reloading a persisted tier (the
+    // manifest refuses otherwise, with a typed error)
+    let spec = ShardSpec::new(opts.shards, cfg.seed);
+    let (tier, clusterer, mut out) = match opts.snapshot_in.as_deref() {
+        Some(dir) => {
+            let t0 = std::time::Instant::now();
+            let tier = ShardedIndex::load_all(std::path::Path::new(dir), spec)?;
+            let secs = t0.elapsed().as_secs_f64();
+            if tier.global().snapshot().n == 0 {
+                bail!("tier at {dir} holds zero points; nothing to serve");
+            }
+            let clusterer = make_clusterer(algo, cfg, 1)?;
+            let out = format!(
+                "cold start: loaded {}-shard tier from {dir} in {} (global generation {}, \
+                 skipped build)\n",
+                tier.num_shards(),
+                crate::util::stats::fmt_secs(secs),
+                tier.global().generation()
+            );
+            (tier, clusterer, out)
+        }
+        None => {
+            let w = crate::eval::common::Workload::build(dataset, cfg, backend.as_ref());
+            let clusterer = make_clusterer(algo, cfg, w.k_true)?;
+            let res = w.cluster(clusterer.as_ref(), backend.as_ref());
+            let snap = HierarchySnapshot::build(&w.ds, &res, cfg.measure, cfg.threads);
+            (ShardedIndex::new(snap, spec), clusterer, String::new())
+        }
+    };
+    let tier = Arc::new(tier);
+    let gsnap = tier.global().snapshot();
+    let level = serving_level(&gsnap, opts);
+    let (d, n) = (gsnap.d, gsnap.n);
+    out.push_str(&gsnap.summary());
+    out.push_str(&format!(
+        "serving level {level} (threshold {:.4})\n",
+        gsnap.threshold(level)
+    ));
+    let sizes: Vec<usize> = (0..tier.num_shards()).map(|s| tier.shard(s).snapshot().n).collect();
+    out.push_str(&format!(
+        "{} shards (seed {}, route {}{}) — points per shard: {sizes:?}\n",
+        tier.num_shards(),
+        spec.seed,
+        opts.route,
+        if opts.route == "sketch" { format!(", probe {}", opts.probe) } else { String::new() },
+    ));
+
+    // same query/ingest synthesis as the single-index path, so the two
+    // reports are comparable query-for-query
+    let mut rng = crate::util::Rng::new(cfg.seed ^ 0x5EB5E);
+    let nq = opts.queries;
+    let mut queries = Vec::with_capacity(nq * d);
+    for j in 0..nq {
+        for &x in gsnap.point_row(j % n) {
+            queries.push(x + 0.01 * rng.normal_f32());
+        }
+    }
+    let mut batch = Vec::with_capacity(opts.ingest * d);
+    for j in 0..opts.ingest {
+        for &x in gsnap.point_row((j * 7 + 3) % n) {
+            batch.push(x + 0.02 * rng.normal_f32());
+        }
+    }
+
+    let workers = if opts.workers == 0 { cfg.threads.max(1) } else { opts.workers };
+    let mode = match opts.route.as_str() {
+        "sketch" => RouteMode::Sketch { probe: opts.probe },
+        _ => RouteMode::Fanout,
+    };
+    let router = ShardRouter::start(
+        Arc::clone(&tier),
+        Arc::clone(&backend),
+        ServiceConfig { workers, level, ..Default::default() },
+        mode,
+    );
+    // tier-level freshness: the worker rebuilds the *global* index (a
+    // per-shard rebuild would break S-invariance) and reprojects
+    let rebuild_worker = ShardRebuildWorker::start(
+        Arc::clone(&tier),
+        RebuildConfig {
+            drift_limit: opts.drift_limit,
+            knn_k: cfg.knn_k,
+            schedule_len: cfg.rounds,
+            threads: cfg.threads,
+            graph: Some(graph_builder),
+            clusterer: Some(clusterer),
+            ..Default::default()
+        },
+        Arc::clone(&backend),
+        std::time::Duration::from_millis(25),
+    );
+    let resp = router.query_blocking(&queries, nq);
+    let served = resp.result.len();
+    crate::telemetry::event(
+        "cli.serve.sharded.queries",
+        &[
+            ("served", served.into()),
+            ("shards", tier.num_shards().into()),
+            ("workers", workers.into()),
+            ("level", level.into()),
+        ],
+    );
+    out.push_str(&format!("served {served} queries\n{}\n", router.stats().report()));
+
+    if opts.ingest > 0 {
+        let owner = tier.route_ingest(&batch[..d]);
+        let icfg = IngestConfig {
+            level,
+            drift_limit: opts.drift_limit,
+            online_merges: opts.online_merges,
+            workers: cfg.threads.max(1),
+            ..Default::default()
+        };
+        let report = tier.ingest(&batch, &icfg, backend.as_ref());
+        let after = tier.global().snapshot();
+        out.push_str(&format!(
+            "ingested {} points (owner shard {owner} by sketch): {} attached, {} new clusters, \
+             {} conflicts deferred, {} merged online, drift {:.3}{}\n",
+            report.ingested,
+            report.attached,
+            report.new_clusters,
+            report.conflicts,
+            report.online_merges,
+            after.drift(),
+            if report.rebuild_recommended { " — rebuild pending" } else { "" },
+        ));
+        let sizes: Vec<usize> =
+            (0..tier.num_shards()).map(|s| tier.shard(s).snapshot().n).collect();
+        out.push_str(&format!(
+            "post-ingest: n={} clusters@level {} — points per shard: {sizes:?}\n",
+            after.n,
+            after.num_clusters(after.resolve_level(level)),
+        ));
+        if report.rebuild_recommended {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+            while rebuild_worker.rebuilds() == 0 && std::time::Instant::now() < deadline {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            let rebuilt = tier.global().snapshot();
+            if rebuild_worker.rebuilds() > 0 {
+                out.push_str(&format!(
+                    "automatic rebuild swapped in generation {}: n={} levels={} drift {:.3} \
+                     (all shards reprojected)\n",
+                    rebuilt.generation,
+                    rebuilt.n,
+                    rebuilt.num_levels(),
+                    rebuilt.drift()
+                ));
+            } else {
+                out.push_str("automatic rebuild still running at report time\n");
+            }
+        }
+    }
+    rebuild_worker.stop();
+    if let Some(dir) = opts.snapshot_out.as_deref() {
+        tier.save_all(std::path::Path::new(dir))?;
+        let gens: Vec<u64> =
+            (0..tier.num_shards()).map(|s| tier.shard(s).generation()).collect();
+        out.push_str(&format!(
+            "tier written to {dir} ({} shard files + manifest, generations {gens:?})\n",
+            tier.num_shards()
+        ));
+    }
+    if let Some(path) = metrics_out {
+        // per-shard service registries (each labeled shard="s") union
+        // the global engine metrics
+        write_metrics(&router.telemetry().merge(crate::telemetry::global().snapshot()), path)?;
+    }
+    router.shutdown();
     Ok(out)
 }
 
@@ -977,5 +1207,95 @@ mod tests {
             .unwrap();
         let err = execute(&cli).unwrap_err();
         assert!(err.to_string().contains("snapshot i/o error"), "{err}");
+    }
+
+    #[test]
+    fn parses_shard_flags() {
+        let cli = parse(&argv("serve --shards 4 --route sketch --probe 3")).unwrap();
+        assert_eq!(cli.serve.shards, 4);
+        assert_eq!(cli.serve.route, "sketch");
+        assert_eq!(cli.serve.probe, 3);
+        let defaults = parse(&argv("serve")).unwrap();
+        assert_eq!(defaults.serve.shards, 0, "unsharded by default");
+        assert_eq!(defaults.serve.route, "fanout");
+        assert_eq!(defaults.serve.probe, 2);
+        assert!(parse(&argv("serve --route bogus")).is_err());
+        assert!(parse(&argv("serve --probe 0")).is_err());
+        assert!(parse(&argv("serve --shards nope")).is_err());
+    }
+
+    #[test]
+    fn sharded_serve_runs_end_to_end_with_both_routes() {
+        for route in ["fanout", "sketch"] {
+            let cli = parse(&argv(&format!(
+                "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                 --queries 60 --workers 2 --ingest 4 --shards 3 --route {route}"
+            )))
+            .unwrap();
+            let out = execute(&cli).unwrap();
+            assert!(out.contains("3 shards"), "{route}: {out}");
+            assert!(out.contains("served 60 queries"), "{route}: {out}");
+            assert!(out.contains("ingested 4 points"), "{route}: {out}");
+            assert!(out.contains("owner shard"), "{route}: {out}");
+        }
+    }
+
+    #[test]
+    fn sharded_serve_persists_a_tier_and_cold_starts_from_it() {
+        let dir = std::env::temp_dir().join("scc_cli_tier_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let base = "--dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                    --queries 30 --workers 2 --shards 2";
+        let saved = execute(
+            &parse(&argv(&format!(
+                "serve {base} --ingest 0 --snapshot-out {}",
+                dir.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(saved.contains("tier written to"), "{saved}");
+        assert!(dir.join("manifest.txt").exists());
+        assert!(dir.join("global.scc").exists());
+        assert!(dir.join("shard-0000.scc").exists());
+        assert!(dir.join("shard-0001.scc").exists());
+        let restored = execute(
+            &parse(&argv(&format!(
+                "serve --backend native --queries 30 --workers 2 --ingest 0 --shards 2 \
+                 --snapshot-in {}",
+                dir.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(restored.contains("cold start: loaded 2-shard tier"), "{restored}");
+        assert!(restored.contains("served 30 queries"), "{restored}");
+        // wrong shard count against the same directory: typed refusal
+        let err = execute(
+            &parse(&argv(&format!(
+                "serve --backend native --queries 1 --ingest 0 --shards 3 --snapshot-in {}",
+                dir.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_serve_fanout_report_matches_single_index_structure() {
+        // the sharded and single-index serve paths answer the same
+        // synthesized queries; spot-check that both serve the same count
+        // and that the sharded report names the fan-out contract inputs
+        let base = "--dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                    --queries 40 --workers 2 --ingest 0";
+        let single = execute(&parse(&argv(&format!("serve {base}"))).unwrap()).unwrap();
+        let sharded =
+            execute(&parse(&argv(&format!("serve {base} --shards 4"))).unwrap()).unwrap();
+        assert!(single.contains("served 40 queries"));
+        assert!(sharded.contains("served 40 queries"));
+        assert!(sharded.contains("4 shards"));
+        assert!(sharded.contains("route fanout"));
     }
 }

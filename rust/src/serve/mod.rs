@@ -38,7 +38,14 @@
 //!   [`crate::util::stats::Summary`], copy-on-write snapshot swaps so
 //!   ingest never blocks readers, and the automatic
 //!   [`RebuildWorker`] that re-runs the batch pipeline off the hot path
-//!   once drift crosses its limit.
+//!   once drift crosses its limit;
+//! * [`shard`] — the horizontal axis: `S` shards serving deterministic
+//!   *projections* of one global index, a [`ShardRouter`] with exact
+//!   fan-out routing (bit-identical to the single index for any `S`)
+//!   and approximate sketch routing, and per-shard snapshot transport
+//!   over the [`persist`] format
+//!   ([`ShardedIndex::save_all`] / [`ShardedIndex::load_all`] plus a
+//!   seed- and generation-validated tier manifest).
 //!
 //! Update policy (documented invariant): ingest appends points to
 //! clusters (updating their exact aggregates) or creates new clusters;
@@ -85,6 +92,7 @@ pub mod assign;
 pub mod ingest;
 pub mod persist;
 pub mod service;
+pub mod shard;
 pub mod snapshot;
 
 pub use assign::{assign_at_tau, assign_to_level, AssignResult};
@@ -96,5 +104,9 @@ pub use persist::{
 pub use service::{
     rebuild_snapshot, QueryResponse, RebuildConfig, RebuildWorker, ServeIndex, Service,
     ServiceConfig, ServiceStats,
+};
+pub use shard::{
+    RouteMode, ShardError, ShardManifest, ShardRebuildWorker, ShardRouter, ShardSpec,
+    ShardedIndex,
 };
 pub use snapshot::{HierarchySnapshot, SnapshotLevel};

@@ -394,8 +394,23 @@ impl Service {
 
     /// Enqueue one batch of `nq` row-major queries; the response arrives
     /// on the returned channel.
+    ///
+    /// `nq == 0` resolves immediately with an empty response — it never
+    /// enters the worker pool (whatever stray bytes `queries` holds are
+    /// ignored rather than tripping the `nq·d` shape assert inside a
+    /// worker thread) and is not counted in the service's statistics.
     pub fn submit(&self, queries: Vec<f32>, nq: usize) -> mpsc::Receiver<QueryResponse> {
         let (rtx, rrx) = mpsc::channel();
+        if nq == 0 {
+            let snap = self.shared.index.snapshot();
+            let _ = rtx.send(QueryResponse {
+                result: AssignResult { cluster: Vec::new(), dist: Vec::new() },
+                level: snap.resolve_level(self.shared.cfg.level),
+                generation: snap.generation,
+                latency_secs: 0.0,
+            });
+            return rrx;
+        }
         self.tx
             .as_ref()
             .expect("service is live")
@@ -449,6 +464,37 @@ impl Service {
             p95: zero_if_nan(lat.percentile(95.0)),
             p99: zero_if_nan(lat.percentile(99.0)),
             max_latency: lat.max(),
+        }
+    }
+
+    /// Aggregate statistics across several services — the sharded
+    /// serving tier's per-shard worker pools — into one
+    /// [`ServiceStats`]. Request/query counters add; `elapsed_secs` is
+    /// the longest service lifetime and QPS is total queries over it;
+    /// latency percentiles come from folding the per-service latency
+    /// histograms bucket-by-bucket ([`Histogram::merge_from`] — a
+    /// histogram merge over the shared [`latency_buckets`] layout, not
+    /// sample concatenation), so the merged p50/p95/p99 are bit-equal
+    /// to one service having observed every request.
+    pub fn merged_stats(services: &[&Service]) -> ServiceStats {
+        let merged = Histogram::new(&latency_buckets());
+        let (mut requests, mut queries, mut elapsed) = (0u64, 0u64, 0f64);
+        for s in services {
+            merged.merge_from(&s.shared.latency);
+            requests += s.shared.requests_served.get();
+            queries += s.shared.queries_served.get();
+            elapsed = elapsed.max(s.shared.started.elapsed().as_secs_f64());
+        }
+        ServiceStats {
+            requests,
+            queries,
+            elapsed_secs: elapsed,
+            qps: if elapsed > 0.0 { queries as f64 / elapsed } else { 0.0 },
+            mean_latency: zero_if_nan(merged.mean()),
+            p50: zero_if_nan(merged.percentile(50.0)),
+            p95: zero_if_nan(merged.percentile(95.0)),
+            p99: zero_if_nan(merged.percentile(99.0)),
+            max_latency: merged.max(),
         }
     }
 
@@ -1099,5 +1145,80 @@ mod tests {
         assert_eq!(stats.queries, 0);
         assert_eq!(stats.p99, 0.0);
         service.shutdown();
+    }
+
+    /// Regression (sharded-tier edge case): an `nq == 0` submission must
+    /// resolve to an empty response — not trip the shape assert inside a
+    /// worker thread (which would kill the worker and wedge the pool).
+    #[test]
+    fn zero_query_submission_returns_an_empty_response() {
+        let (ds, index) = index();
+        let service = Service::start(
+            Arc::clone(&index),
+            Arc::new(NativeBackend::new()),
+            ServiceConfig { workers: 1, ..Default::default() },
+        );
+        let r = service.query_blocking(Vec::new(), 0);
+        assert!(r.result.is_empty(), "{:?}", r.result);
+        assert_eq!(r.level, index.snapshot().coarsest());
+        assert_eq!(r.generation, index.generation());
+        // stray bytes with nq == 0 are ignored, not shape-asserted
+        let r = service.query_blocking(vec![1.0, 2.0, 3.0], 0);
+        assert!(r.result.is_empty());
+        assert_eq!(service.stats().queries, 0, "empty batches don't count as traffic");
+        // the pool is still healthy afterwards
+        let r = service.query_blocking(ds.row(0).to_vec(), 1);
+        assert_eq!(r.result.len(), 1);
+        let handles = service.submit_chunked(&[], 0);
+        assert!(handles.is_empty(), "chunked empty submission yields no handles");
+        service.shutdown();
+    }
+
+    /// Satellite (ISSUE 8): per-shard stats aggregate through a
+    /// histogram merge. The merged report must count every request once
+    /// and reproduce, bit-for-bit, the percentiles of a histogram that
+    /// observed the union of the per-service latency streams.
+    #[test]
+    fn merged_stats_aggregates_across_services() {
+        let (ds, index) = index();
+        let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+        let a = Service::start(
+            Arc::clone(&index),
+            backend.clone(),
+            ServiceConfig { workers: 2, ..Default::default() },
+        );
+        let b = Service::start(
+            Arc::clone(&index),
+            backend.clone(),
+            ServiceConfig { workers: 2, ..Default::default() },
+        );
+        for j in 0..7 {
+            a.query_blocking(ds.row(j).to_vec(), 1);
+        }
+        for j in 0..5 {
+            b.query_blocking(ds.row(j).to_vec(), 1);
+        }
+        let merged = Service::merged_stats(&[&a, &b]);
+        assert_eq!(merged.requests, 12);
+        assert_eq!(merged.queries, 12);
+        assert!(merged.qps > 0.0);
+        // union-equality: fold both latency histograms by hand and pin
+        // the merged percentiles bit-for-bit against it
+        let union = Histogram::new(&latency_buckets());
+        union.merge_from(&a.shared.latency);
+        union.merge_from(&b.shared.latency);
+        assert_eq!(union.count(), 12);
+        for (got, q) in [(merged.p50, 50.0), (merged.p95, 95.0), (merged.p99, 99.0)] {
+            assert_eq!(got.to_bits(), union.percentile(q).to_bits(), "p{q} mismatch");
+        }
+        assert_eq!(merged.mean_latency.to_bits(), union.mean().to_bits());
+        assert_eq!(merged.max_latency.to_bits(), union.max().to_bits());
+        assert!(merged.elapsed_secs > 0.0);
+        // degenerate inputs: no services, and services with no traffic
+        let empty = Service::merged_stats(&[]);
+        assert_eq!((empty.requests, empty.queries), (0, 0));
+        assert_eq!((empty.qps, empty.p50, empty.p99, empty.max_latency), (0.0, 0.0, 0.0, 0.0));
+        a.shutdown();
+        b.shutdown();
     }
 }

@@ -1,0 +1,712 @@
+//! The sharded tier's state: one authoritative global [`ServeIndex`]
+//! plus `S` per-shard [`ServeIndex`]es whose snapshots are deterministic
+//! **projections** of the global one.
+//!
+//! This "leader holds global, shards are projections" layout is what
+//! makes every contract in `shard_properties.rs` provable instead of
+//! statistical:
+//!
+//! * **S-invariance.** A shard's level-`l` clusters are exactly the
+//!   global level-`l` clusters its owned points fall in (ownership is by
+//!   whole coarsest clusters, and levels are nested, so no cluster
+//!   straddles shards). Each projected cluster carries the *global*
+//!   centroid row bit-for-bit — gathered, never recomputed — and the
+//!   per-pair kernel distance is independent of tile position, so a
+//!   fan-out over any `S` scans the same centroid set as the single
+//!   index and merges to the same `(dist, global id)` argmin.
+//! * **Cross-shard merges.** Ingest mutates the *global* index through
+//!   the existing online conflict-merge path (which contracts
+//!   cross-cluster components through
+//!   [`crate::coordinator::protocol::Leader`] when
+//!   `IngestConfig::workers > 1` — bit-identical for any worker count),
+//!   then reprojects. A merge spanning two shards is therefore applied
+//!   exactly once, on the global snapshot, and both shards observe its
+//!   outcome through their next projection — there is no pairwise
+//!   shard-to-shard reconciliation to get wrong.
+//! * **Transport.** Each shard snapshot is a plain
+//!   [`HierarchySnapshot`], so the PR-7 file format is the per-shard
+//!   transport unchanged; [`ShardedIndex::save_all`] writes one file per
+//!   shard plus a [`super::ShardManifest`], and
+//!   [`ShardedIndex::load_all`] cross-checks every file against a fresh
+//!   projection of the loaded global, refusing (typed
+//!   [`super::ShardError`]) to serve a torn or mismatched directory.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use super::manifest::{ShardError, ShardManifest};
+use super::partition::{cluster_shards, owned_points, shard_sketch, sketch_distance, ShardSpec};
+use crate::core::Partition;
+use crate::runtime::Backend;
+use crate::serve::ingest::{IngestConfig, IngestReport};
+use crate::serve::persist::{load_snapshot, save_snapshot_if_newer, PersistError};
+use crate::serve::service::{RebuildConfig, ServeIndex};
+use crate::serve::snapshot::{HierarchySnapshot, SnapshotLevel};
+
+/// Per-shard, per-level mapping from shard-local cluster ids back to
+/// global cluster ids: `global_ids[level][local] = global`. Strictly
+/// increasing in `local` — the projection assigns local ids in global-id
+/// order, which keeps shard-internal `(dist, local id)` tie-breaks
+/// aligned with the router's `(dist, global id)` merge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardMap {
+    pub global_ids: Vec<Vec<u32>>,
+}
+
+impl ShardMap {
+    /// Translate a shard-local cluster id at `level` to its global id
+    /// (`None` for the `u32::MAX` empty-level sentinel or a stale local
+    /// id from a raced projection swap).
+    pub fn to_global(&self, level: usize, local: u32) -> Option<u32> {
+        self.global_ids.get(level)?.get(local as usize).copied()
+    }
+}
+
+/// One consistent view of the tier's routing state: the id maps and
+/// sketches of the projections currently installed in the shard
+/// indexes, plus the per-shard generations they were installed as.
+/// Swapped atomically (an `Arc` behind an `RwLock`) by every
+/// reprojection, so the router always reads a matched set.
+#[derive(Debug, Clone)]
+pub struct ShardViews {
+    pub maps: Vec<ShardMap>,
+    /// `None` for empty shards (no owned points — see
+    /// [`super::partition::shard_sketch`]).
+    pub sketches: Vec<Option<Vec<f64>>>,
+    /// Generation each shard's installed projection carries; the router
+    /// compares response generations against these to detect a swap
+    /// racing a fan-out.
+    pub generations: Vec<u64>,
+}
+
+/// Project the slice of `global` owned by one shard into a standalone
+/// snapshot plus its local→global id map. Deterministic, and
+/// *gathering*, not recomputing: centroid rows and aggregates are cloned
+/// from the global level, so they are bit-identical to the single-index
+/// ones by construction.
+pub fn project_shard(
+    global: &HierarchySnapshot,
+    owned: &[u32],
+    shard: usize,
+) -> (HierarchySnapshot, ShardMap) {
+    let d = global.d;
+    let n = owned.len();
+    let mut points = Vec::with_capacity(n * d);
+    for &p in owned {
+        points.extend_from_slice(global.point_row(p as usize));
+    }
+    let mut levels = Vec::with_capacity(global.num_levels());
+    let mut global_ids = Vec::with_capacity(global.num_levels());
+    // level 0: singletons — local cluster ids are local point ids, and
+    // the global ids are the owned points themselves (sorted ascending)
+    {
+        let lv = &global.levels[0];
+        let spliced = remap_sorted(&lv.spliced, owned);
+        let splice_bound = if spliced.is_empty() { 0.0 } else { lv.splice_bound };
+        levels.push(SnapshotLevel {
+            threshold: lv.threshold,
+            partition: Partition::singletons(n),
+            aggs: Vec::new(),
+            centroids: Vec::new(),
+            spliced,
+            splice_bound,
+        });
+        global_ids.push(owned.to_vec());
+    }
+    for lv in &global.levels[1..] {
+        // the shard's clusters at this level: global ids its points fall
+        // in, deduplicated and sorted so local id order == global order
+        let mut uniq: Vec<u32> = owned.iter().map(|&p| lv.partition.assign[p as usize]).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let assign: Vec<u32> = owned
+            .iter()
+            .map(|&p| {
+                let g = lv.partition.assign[p as usize];
+                uniq.binary_search(&g).expect("own cluster present") as u32
+            })
+            .collect();
+        let mut aggs = Vec::with_capacity(uniq.len());
+        let mut centroids = Vec::with_capacity(uniq.len() * d);
+        for &g in &uniq {
+            aggs.push(lv.aggs[g as usize].clone());
+            centroids.extend_from_slice(&lv.centroids[g as usize * d..(g as usize + 1) * d]);
+        }
+        let spliced = remap_sorted(&lv.spliced, &uniq);
+        let splice_bound = if spliced.is_empty() { 0.0 } else { lv.splice_bound };
+        levels.push(SnapshotLevel {
+            threshold: lv.threshold,
+            partition: Partition::new(assign),
+            aggs,
+            centroids,
+            spliced,
+            splice_bound,
+        });
+        global_ids.push(uniq);
+    }
+    // points at global index ≥ built_n arrived by ingest; the shard's
+    // drift baseline counts only its built points
+    let ingested = owned.iter().filter(|&&p| (p as usize) >= global.built_n).count();
+    let snap = HierarchySnapshot {
+        name: format!("{}/shard-{shard:04}", global.name),
+        d,
+        measure: global.measure,
+        points,
+        n,
+        levels,
+        built_n: n - ingested,
+        ingested,
+        // tier-wide counters: every shard reports the global totals (a
+        // conflict merge is a property of the hierarchy, not of the
+        // shard that happened to receive the batch)
+        conflicts: global.conflicts,
+        online_merges: global.online_merges,
+        generation: 0,
+    };
+    (snap, ShardMap { global_ids })
+}
+
+/// `sorted ∩ universe`, remapped to ranks within `universe` (both inputs
+/// sorted ascending). Used to carry splice bookkeeping into projections.
+fn remap_sorted(sorted: &[u32], universe: &[u32]) -> Vec<u32> {
+    sorted
+        .iter()
+        .filter_map(|g| universe.binary_search(g).ok().map(|r| r as u32))
+        .collect()
+}
+
+/// Equality of everything a snapshot *says*, ignoring the generation
+/// stamp (which tracks swap history, not content). Reprojection uses it
+/// to leave untouched shards at their current generation, and `load_all`
+/// uses it to validate shard files against fresh projections.
+pub fn same_content(a: &HierarchySnapshot, b: &HierarchySnapshot) -> bool {
+    a.name == b.name
+        && a.d == b.d
+        && a.measure == b.measure
+        && a.points == b.points
+        && a.n == b.n
+        && a.levels == b.levels
+        && a.built_n == b.built_n
+        && a.ingested == b.ingested
+        && a.conflicts == b.conflicts
+        && a.online_merges == b.online_merges
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.txt")
+}
+
+fn global_path(dir: &Path) -> PathBuf {
+    dir.join("global.scc")
+}
+
+fn shard_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(format!("shard-{s:04}.scc"))
+}
+
+/// The sharded tier: authoritative global index + per-shard projection
+/// indexes + the routing views that tie them together. See module docs
+/// for why this shape makes the tier's contracts exact.
+pub struct ShardedIndex {
+    spec: ShardSpec,
+    global: Arc<ServeIndex>,
+    shards: Vec<Arc<ServeIndex>>,
+    views: RwLock<Arc<ShardViews>>,
+    /// Serializes reprojections (ingest-triggered and rebuild-triggered)
+    /// so views always describe the installed projections.
+    project_gate: Mutex<()>,
+}
+
+impl ShardedIndex {
+    /// Shard a freshly built (or loaded single-file) snapshot into a
+    /// tier: partition by `spec`, project, install.
+    pub fn new(snapshot: HierarchySnapshot, spec: ShardSpec) -> ShardedIndex {
+        let global = Arc::new(ServeIndex::new(snapshot));
+        let snap = global.snapshot();
+        let (projections, maps, sketches) = project_all(&snap, &spec);
+        let shards: Vec<Arc<ServeIndex>> =
+            projections.into_iter().map(|p| Arc::new(ServeIndex::new(p))).collect();
+        let generations = shards.iter().map(|s| s.generation()).collect();
+        ShardedIndex {
+            spec,
+            global,
+            shards,
+            views: RwLock::new(Arc::new(ShardViews { maps, sketches, generations })),
+            project_gate: Mutex::new(()),
+        }
+    }
+
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The global (single-index-equivalent) serve index.
+    pub fn global(&self) -> &Arc<ServeIndex> {
+        &self.global
+    }
+
+    /// Shard `s`'s serve index (its snapshot is the shard's projection).
+    pub fn shard(&self, s: usize) -> &Arc<ServeIndex> {
+        &self.shards[s]
+    }
+
+    /// The current consistent routing view (cheap `Arc` clone).
+    pub fn views(&self) -> Arc<ShardViews> {
+        self.views.read().expect("views lock").clone()
+    }
+
+    /// Tier drift = global drift (shards are projections; their drift
+    /// counters mirror their slice of the same ingests).
+    pub fn drift(&self) -> f64 {
+        self.global.snapshot().drift()
+    }
+
+    /// Ingest a batch into the tier: apply to the **global** index (the
+    /// online conflict-merge path runs there — cross-shard components
+    /// contract once, through the coordinator leader when
+    /// `cfg.workers > 1`), then refresh every shard whose projection
+    /// changed. When a global rebuild is in flight the batch is queued
+    /// by the global index ([`IngestReport::queued`]) and the
+    /// projections are refreshed by the rebuild's own reproject instead.
+    pub fn ingest(
+        &self,
+        batch: &[f32],
+        cfg: &IngestConfig,
+        backend: &dyn Backend,
+    ) -> IngestReport {
+        let report = self.global.ingest(batch, cfg, backend);
+        if !report.queued {
+            self.reproject();
+        }
+        report
+    }
+
+    /// Recompute the partition and every projection from the current
+    /// global snapshot; swap only the shards whose content changed
+    /// (untouched shards keep their generation — a point-local ingest
+    /// leaves `S − 1` shards' serving state and stats completely alone).
+    pub fn reproject(&self) {
+        let _gate = self.project_gate.lock().expect("project gate");
+        let snap = self.global.snapshot();
+        let (projections, maps, sketches) = project_all(&snap, &self.spec);
+        let mut changed = 0usize;
+        for (s, proj) in projections.into_iter().enumerate() {
+            if !same_content(&self.shards[s].snapshot(), &proj) {
+                self.shards[s].replace(proj);
+                changed += 1;
+            }
+        }
+        let generations = self.shards.iter().map(|s| s.generation()).collect();
+        *self.views.write().expect("views lock") =
+            Arc::new(ShardViews { maps, sketches, generations });
+        crate::telemetry::event(
+            "serve.shard.reproject",
+            &[("shards", self.shards.len().into()), ("changed", changed.into())],
+        );
+    }
+
+    /// The shard whose sketch is nearest to `row` under the tier's
+    /// measure — the *owner* for ingest routing and per-shard accounting
+    /// (falls back to shard 0 when every shard is empty). The batch
+    /// itself is still applied globally by [`ShardedIndex::ingest`]:
+    /// ownership decides bookkeeping, not placement, which is exactly
+    /// what keeps results independent of `S`.
+    pub fn route_ingest(&self, row: &[f32]) -> usize {
+        let views = self.views();
+        let measure = self.global.snapshot().measure;
+        let mut best: Option<(f64, usize)> = None;
+        for (s, sketch) in views.sketches.iter().enumerate() {
+            if let Some(sk) = sketch {
+                let dist = sketch_distance(measure, row, sk);
+                if best.map_or(true, |(bd, bs)| dist < bd || (dist == bd && s < bs)) {
+                    best = Some((dist, s));
+                }
+            }
+        }
+        best.map_or(0, |(_, s)| s)
+    }
+
+    /// Persist the whole tier into `dir`: `global.scc`, one
+    /// `shard-NNNN.scc` per shard, and `manifest.txt` recording the
+    /// shard count, partition seed, and per-shard generations. Saves are
+    /// generation-guarded ([`save_snapshot_if_newer`]); re-saving an
+    /// unchanged tier over itself is a no-op success, while a directory
+    /// holding *newer* generations refuses rather than rolling back.
+    /// The manifest is written last, so a crash mid-save leaves the old
+    /// manifest describing the old (still present, still valid) files.
+    pub fn save_all(&self, dir: &Path) -> Result<(), ShardError> {
+        std::fs::create_dir_all(dir)?;
+        let _gate = self.project_gate.lock().expect("project gate");
+        save_guarded(&self.global.snapshot(), &global_path(dir))?;
+        let mut generations = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let snap = shard.snapshot();
+            save_guarded(&snap, &shard_path(dir, s))?;
+            generations.push(snap.generation);
+        }
+        let manifest =
+            ShardManifest { shards: self.spec.shards, seed: self.spec.seed, generations };
+        manifest.save(&manifest_path(dir))
+    }
+
+    /// Cold-start the tier from a directory written by
+    /// [`ShardedIndex::save_all`]. Validates everything it can:
+    /// manifest shard count and seed against `spec` (typed
+    /// [`ShardError::ShardCountMismatch`] / [`ShardError::SeedMismatch`]),
+    /// each shard file's generation against the manifest, and each shard
+    /// file's *content* against a fresh projection of the loaded global
+    /// snapshot — a shard file from a different save than the global is
+    /// [`ShardError::Corrupt`], not silently served. Loaded generations
+    /// are preserved, so post-restart swaps continue each shard's
+    /// monotone sequence.
+    pub fn load_all(dir: &Path, spec: ShardSpec) -> Result<ShardedIndex, ShardError> {
+        let manifest = ShardManifest::load(&manifest_path(dir))?;
+        if manifest.shards != spec.shards {
+            return Err(ShardError::ShardCountMismatch {
+                manifest: manifest.shards,
+                expected: spec.shards,
+            });
+        }
+        if manifest.seed != spec.seed {
+            return Err(ShardError::SeedMismatch { manifest: manifest.seed, expected: spec.seed });
+        }
+        let global_snap = load_snapshot(&global_path(dir))?;
+        let (projections, maps, sketches) = project_all(&global_snap, &spec);
+        let mut shards = Vec::with_capacity(spec.shards);
+        let mut generations = Vec::with_capacity(spec.shards);
+        for (s, proj) in projections.into_iter().enumerate() {
+            let file = load_snapshot(&shard_path(dir, s))?;
+            if file.generation != manifest.generations[s] {
+                return Err(ShardError::Corrupt(format!(
+                    "shard {s} file generation {} != manifest generation {}",
+                    file.generation, manifest.generations[s]
+                )));
+            }
+            if !same_content(&file, &proj) {
+                return Err(ShardError::Corrupt(format!(
+                    "shard {s} content does not match the projection of global.scc \
+                     (files from different saves?)"
+                )));
+            }
+            generations.push(file.generation);
+            shards.push(Arc::new(ServeIndex::new(file)));
+        }
+        Ok(ShardedIndex {
+            spec,
+            global: Arc::new(ServeIndex::new(global_snap)),
+            shards,
+            views: RwLock::new(Arc::new(ShardViews { maps, sketches, generations })),
+            project_gate: Mutex::new(()),
+        })
+    }
+}
+
+/// Partition + project every shard of `snap` under `spec`.
+fn project_all(
+    snap: &HierarchySnapshot,
+    spec: &ShardSpec,
+) -> (Vec<HierarchySnapshot>, Vec<ShardMap>, Vec<Option<Vec<f64>>>) {
+    let cs = cluster_shards(snap, spec);
+    let owned = owned_points(snap, &cs, spec.shards);
+    let mut projections = Vec::with_capacity(spec.shards);
+    let mut maps = Vec::with_capacity(spec.shards);
+    let mut sketches = Vec::with_capacity(spec.shards);
+    for (s, o) in owned.iter().enumerate() {
+        let (proj, map) = project_shard(snap, o, s);
+        sketches.push(shard_sketch(snap, o));
+        projections.push(proj);
+        maps.push(map);
+    }
+    (projections, maps, sketches)
+}
+
+/// [`save_snapshot_if_newer`] with idempotent re-save: the same
+/// generation already on disk is success (save_all over its own output),
+/// a strictly newer one still refuses.
+fn save_guarded(snap: &HierarchySnapshot, path: &Path) -> Result<(), ShardError> {
+    match save_snapshot_if_newer(snap, path) {
+        Ok(_) => Ok(()),
+        Err(PersistError::StaleGeneration { on_disk, candidate }) if on_disk == candidate => Ok(()),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Background freshness for the whole tier: polls the **global** index's
+/// drift (per-shard rebuilds would re-cluster a shard in isolation and
+/// break S-invariance), and reprojects every shard after each swap. The
+/// global rebuild replays mid-rebuild ingests before its swap exactly as
+/// the single-index [`crate::serve::RebuildWorker`] does.
+pub struct ShardRebuildWorker {
+    stop: Arc<AtomicBool>,
+    rebuilds: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardRebuildWorker {
+    pub fn start(
+        tier: Arc<ShardedIndex>,
+        cfg: RebuildConfig,
+        backend: Arc<dyn Backend + Send + Sync>,
+        poll: Duration,
+    ) -> ShardRebuildWorker {
+        let stop = Arc::new(AtomicBool::new(false));
+        let rebuilds = Arc::new(AtomicU64::new(0));
+        let (stop2, rebuilds2) = (Arc::clone(&stop), Arc::clone(&rebuilds));
+        let handle = std::thread::Builder::new()
+            .name("shard-rebuild".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    if tier.global().rebuild_if_needed(&cfg, backend.as_ref()) {
+                        tier.reproject();
+                        rebuilds2.fetch_add(1, Ordering::Relaxed);
+                    }
+                    std::thread::sleep(poll);
+                }
+            })
+            .expect("spawn shard rebuild worker");
+        ShardRebuildWorker { stop, rebuilds, handle: Some(handle) }
+    }
+
+    /// Rebuild-and-reproject cycles completed so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Signal and join the polling thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().expect("shard rebuild worker panicked");
+        }
+    }
+}
+
+impl Drop for ShardRebuildWorker {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::pipeline::SccClusterer;
+    use crate::runtime::NativeBackend;
+
+    fn snap(n: usize, k: usize, seed: u64) -> HierarchySnapshot {
+        let ds = separated_mixture(&MixtureSpec {
+            n,
+            d: 4,
+            k,
+            sigma: 0.04,
+            delta: 10.0,
+            imbalance: 0.0,
+            seed,
+        });
+        let g = knn_graph(&ds, 6, Measure::L2Sq);
+        let res = SccClusterer::geometric(15).cluster_csr(&g);
+        HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2)
+    }
+
+    #[test]
+    fn projections_partition_every_level_exactly() {
+        let global = snap(200, 5, 13);
+        let spec = ShardSpec::new(3, 42);
+        let cs = cluster_shards(&global, &spec);
+        let owned = owned_points(&global, &cs, spec.shards);
+        let mut per_shard = Vec::new();
+        for (s, o) in owned.iter().enumerate() {
+            per_shard.push(project_shard(&global, o, s));
+        }
+        for l in 0..global.num_levels() {
+            // the union of shard clusters at level l is exactly the
+            // global cluster set, with no overlap
+            let mut union: Vec<u32> =
+                per_shard.iter().flat_map(|(_, m)| m.global_ids[l].iter().copied()).collect();
+            union.sort_unstable();
+            let k = global.num_clusters(l);
+            assert_eq!(union, (0..k as u32).collect::<Vec<_>>(), "level {l}");
+            for (proj, map) in &per_shard {
+                assert!(map.global_ids[l].windows(2).all(|w| w[0] < w[1]));
+                assert_eq!(proj.num_clusters(l), map.global_ids[l].len(), "level {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn projected_state_is_gathered_global_state_bit_for_bit() {
+        let global = snap(180, 4, 17);
+        let spec = ShardSpec::new(4, 7);
+        let cs = cluster_shards(&global, &spec);
+        let owned = owned_points(&global, &cs, spec.shards);
+        for (s, o) in owned.iter().enumerate() {
+            let (proj, map) = project_shard(&global, o, s);
+            assert_eq!(proj.n, o.len());
+            assert_eq!(proj.num_levels(), global.num_levels());
+            for (li, &p) in o.iter().enumerate() {
+                assert_eq!(proj.point_row(li), global.point_row(p as usize));
+            }
+            for l in 1..global.num_levels() {
+                let glv = &global.levels[l];
+                for (local, &g) in map.global_ids[l].iter().enumerate() {
+                    assert_eq!(
+                        proj.levels[l].aggs[local], glv.aggs[g as usize],
+                        "shard {s} level {l} aggregate"
+                    );
+                    let d = global.d;
+                    assert_eq!(
+                        &proj.levels[l].centroids[local * d..(local + 1) * d],
+                        &glv.centroids[g as usize * d..(g as usize + 1) * d],
+                        "shard {s} level {l} centroid row"
+                    );
+                }
+                // local assignment maps back to the global one
+                for (li, &p) in o.iter().enumerate() {
+                    let local = proj.levels[l].partition.assign[li];
+                    assert_eq!(
+                        map.to_global(l, local).unwrap(),
+                        glv.partition.assign[p as usize]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shard_projects_serves_and_reports_cleanly() {
+        let global = snap(120, 3, 19);
+        let k = global.num_clusters(global.coarsest());
+        let tier = ShardedIndex::new(global.clone(), ShardSpec::new(k + 2, 5));
+        let views = tier.views();
+        let empties: Vec<usize> =
+            (0..tier.num_shards()).filter(|&s| views.sketches[s].is_none()).collect();
+        assert!(!empties.is_empty(), "k={k} clusters over {} shards", tier.num_shards());
+        for &s in &empties {
+            let shard_snap = tier.shard(s).snapshot();
+            assert_eq!(shard_snap.n, 0);
+            assert_eq!(shard_snap.num_levels(), global.num_levels());
+            assert_eq!(shard_snap.drift(), 0.0);
+            // querying an empty shard yields the documented sentinel
+            let got = crate::serve::assign::assign_to_level(
+                &shard_snap,
+                usize::MAX,
+                global.point_row(0),
+                1,
+                &NativeBackend::new(),
+                1,
+            );
+            assert_eq!(got.cluster, vec![u32::MAX]);
+            assert_eq!(got.dist, vec![f32::INFINITY]);
+        }
+    }
+
+    #[test]
+    fn ingest_reprojects_only_changed_shards() {
+        let global = snap(160, 4, 23);
+        let tier = ShardedIndex::new(global, ShardSpec::new(4, 11));
+        let before: Vec<u64> = (0..4).map(|s| tier.shard(s).generation()).collect();
+        // ingest one point on top of an existing cluster: the global
+        // index swaps, but only the owning shard's projection changes
+        let snap0 = tier.global().snapshot();
+        let row = snap0.point_row(0).to_vec();
+        let report = tier.ingest(&row, &IngestConfig::default(), &NativeBackend::new());
+        assert_eq!(report.ingested, 1);
+        assert!(!report.queued);
+        let after: Vec<u64> = (0..4).map(|s| tier.shard(s).generation()).collect();
+        let bumped = before.iter().zip(&after).filter(|(b, a)| a > b).count();
+        assert!(bumped >= 1, "the owning shard must swap");
+        assert!(bumped < 4, "a point-local ingest must not swap every shard");
+        // views stay consistent with the installed projections
+        let views = tier.views();
+        assert_eq!(views.generations, after);
+        let total: usize = (0..4).map(|s| tier.shard(s).snapshot().n).sum();
+        assert_eq!(total, tier.global().snapshot().n);
+    }
+
+    #[test]
+    fn route_ingest_picks_the_nearest_sketch() {
+        let global = snap(150, 3, 29);
+        let tier = ShardedIndex::new(global.clone(), ShardSpec::new(3, 3));
+        let views = tier.views();
+        for p in (0..global.n).step_by(17) {
+            let s = tier.route_ingest(global.point_row(p));
+            let dist = |sh: usize| {
+                views.sketches[sh]
+                    .as_ref()
+                    .map(|sk| sketch_distance(Measure::L2Sq, global.point_row(p), sk))
+                    .unwrap_or(f64::INFINITY)
+            };
+            let best = (0..3).map(dist).fold(f64::INFINITY, f64::min);
+            assert_eq!(dist(s), best);
+        }
+    }
+
+    #[test]
+    fn save_all_load_all_round_trips_with_generations() {
+        let global = snap(140, 4, 31);
+        let spec = ShardSpec::new(2, 77);
+        let tier = ShardedIndex::new(global, spec);
+        // advance one shard's generation with a real ingest first
+        let row = tier.global().snapshot().point_row(3).to_vec();
+        tier.ingest(&row, &IngestConfig::default(), &NativeBackend::new());
+        let dir = std::env::temp_dir().join(format!("scc-tier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        tier.save_all(&dir).unwrap();
+        // idempotent re-save of the same generations succeeds
+        tier.save_all(&dir).unwrap();
+        let loaded = ShardedIndex::load_all(&dir, spec).unwrap();
+        for s in 0..2 {
+            let (a, b) = (tier.shard(s).snapshot(), loaded.shard(s).snapshot());
+            assert_eq!(*a, *b, "shard {s} round trip");
+            assert_eq!(a.generation, b.generation, "generation continuity");
+        }
+        assert!(same_content(&tier.global().snapshot(), &loaded.global().snapshot()));
+        // typed rejections: wrong shard count, wrong seed
+        assert!(matches!(
+            ShardedIndex::load_all(&dir, ShardSpec::new(3, 77)),
+            Err(ShardError::ShardCountMismatch { manifest: 2, expected: 3 })
+        ));
+        assert!(matches!(
+            ShardedIndex::load_all(&dir, ShardSpec::new(2, 78)),
+            Err(ShardError::SeedMismatch { manifest: 77, expected: 78 })
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_all_rejects_a_torn_directory() {
+        let global = snap(130, 3, 37);
+        let spec = ShardSpec::new(2, 9);
+        let tier = ShardedIndex::new(global, spec);
+        let dir = std::env::temp_dir().join(format!("scc-torn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        tier.save_all(&dir).unwrap();
+        // overwrite shard 0 with shard 1's file: generations may agree,
+        // content cannot
+        std::fs::copy(shard_path(&dir, 1), shard_path(&dir, 0)).unwrap();
+        assert!(matches!(
+            ShardedIndex::load_all(&dir, spec),
+            Err(ShardError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn remap_sorted_intersects_and_ranks() {
+        assert_eq!(remap_sorted(&[2, 5, 9], &[1, 2, 5, 8]), vec![1, 2]);
+        assert_eq!(remap_sorted(&[], &[1, 2]), Vec::<u32>::new());
+        assert_eq!(remap_sorted(&[3], &[]), Vec::<u32>::new());
+    }
+}

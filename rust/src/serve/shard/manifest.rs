@@ -1,0 +1,252 @@
+//! Tier manifest: the small text file that makes a directory of
+//! per-shard snapshot files a *tier* instead of a pile of snapshots.
+//!
+//! Layout on disk (`manifest.txt` beside `global.scc` and
+//! `shard-0000.scc` …):
+//!
+//! ```text
+//! SCCSHARD v1
+//! shards 4
+//! seed 42
+//! generation 0 3
+//! generation 1 3
+//! ...
+//! ```
+//!
+//! `shards` and `seed` are the tier's identity — reload validates both
+//! against the caller's [`super::ShardSpec`] and refuses with a typed
+//! error on mismatch, because loading shard files under a different
+//! partition silently mis-owns every cluster. `generation <shard> <gen>`
+//! records the generation each shard file carried at save time; reload
+//! cross-checks it against the file so a half-updated directory
+//! (manifest from one save, shard file from another) is caught as
+//! [`ShardError::Corrupt`] rather than served.
+
+use std::fmt;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use crate::serve::persist::PersistError;
+
+const MAGIC: &str = "SCCSHARD";
+const VERSION: u32 = 1;
+
+/// Everything `save_all` records and `load_all` validates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardManifest {
+    pub shards: usize,
+    pub seed: u64,
+    /// `generations[s]` = generation of `shard-{s:04}.scc` at save time.
+    pub generations: Vec<u64>,
+}
+
+/// Typed failure modes of the sharded persistence path.
+#[derive(Debug)]
+pub enum ShardError {
+    Io(std::io::Error),
+    BadMagic,
+    UnsupportedVersion { found: u32, supported: u32 },
+    Corrupt(String),
+    ShardCountMismatch { manifest: usize, expected: usize },
+    SeedMismatch { manifest: u64, expected: u64 },
+    /// A per-shard (or global) snapshot file failed to load or save.
+    Persist(PersistError),
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::Io(e) => write!(f, "shard manifest i/o error: {e}"),
+            ShardError::BadMagic => write!(f, "not a shard manifest (bad magic)"),
+            ShardError::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported shard manifest version {found} (supported: {supported})")
+            }
+            ShardError::Corrupt(why) => write!(f, "corrupt shard manifest: {why}"),
+            ShardError::ShardCountMismatch { manifest, expected } => {
+                write!(f, "manifest declares {manifest} shards, tier expects {expected}")
+            }
+            ShardError::SeedMismatch { manifest, expected } => {
+                write!(f, "manifest partition seed {manifest} does not match tier seed {expected}")
+            }
+            ShardError::Persist(e) => write!(f, "shard snapshot error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+impl From<std::io::Error> for ShardError {
+    fn from(e: std::io::Error) -> ShardError {
+        ShardError::Io(e)
+    }
+}
+
+impl From<PersistError> for ShardError {
+    fn from(e: PersistError) -> ShardError {
+        ShardError::Persist(e)
+    }
+}
+
+impl ShardManifest {
+    pub fn encode(&self) -> String {
+        let mut out = format!("{MAGIC} v{VERSION}\nshards {}\nseed {}\n", self.shards, self.seed);
+        for (s, g) in self.generations.iter().enumerate() {
+            out.push_str(&format!("generation {s} {g}\n"));
+        }
+        out
+    }
+
+    pub fn decode(text: &str) -> Result<ShardManifest, ShardError> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or(ShardError::BadMagic)?;
+        let (magic, version) = header.split_once(' ').ok_or(ShardError::BadMagic)?;
+        if magic != MAGIC {
+            return Err(ShardError::BadMagic);
+        }
+        let found: u32 = version
+            .strip_prefix('v')
+            .and_then(|v| v.parse().ok())
+            .ok_or(ShardError::BadMagic)?;
+        if found != VERSION {
+            return Err(ShardError::UnsupportedVersion { found, supported: VERSION });
+        }
+        let mut shards: Option<usize> = None;
+        let mut seed: Option<u64> = None;
+        let mut generations: Vec<Option<u64>> = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_ascii_whitespace();
+            let key = parts.next().unwrap_or("");
+            let corrupt = |why: &str| ShardError::Corrupt(format!("{why}: {line:?}"));
+            match key {
+                "shards" => {
+                    let v = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| corrupt("bad shard count"))?;
+                    shards = Some(v);
+                    generations.resize(v, None);
+                }
+                "seed" => {
+                    seed = Some(
+                        parts
+                            .next()
+                            .and_then(|v| v.parse().ok())
+                            .ok_or_else(|| corrupt("bad seed"))?,
+                    );
+                }
+                "generation" => {
+                    let s: usize = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| corrupt("bad generation shard id"))?;
+                    let g: u64 = parts
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| corrupt("bad generation value"))?;
+                    if s >= generations.len() {
+                        return Err(corrupt("generation for out-of-range shard"));
+                    }
+                    generations[s] = Some(g);
+                }
+                _ => return Err(corrupt("unknown manifest key")),
+            }
+        }
+        let shards = shards.ok_or_else(|| ShardError::Corrupt("missing shards line".into()))?;
+        let seed = seed.ok_or_else(|| ShardError::Corrupt("missing seed line".into()))?;
+        let generations = generations
+            .into_iter()
+            .enumerate()
+            .map(|(s, g)| g.ok_or_else(|| ShardError::Corrupt(format!("missing generation for shard {s}"))))
+            .collect::<Result<Vec<u64>, ShardError>>()?;
+        if generations.len() != shards {
+            return Err(ShardError::Corrupt("generation count != shard count".into()));
+        }
+        Ok(ShardManifest { shards, seed, generations })
+    }
+
+    /// Atomic write: tmp file in the same directory, then rename, so a
+    /// crash mid-save leaves either the old manifest or the new one.
+    pub fn save(&self, path: &Path) -> Result<(), ShardError> {
+        let tmp = path.with_extension("txt.tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(self.encode().as_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ShardManifest, ShardError> {
+        ShardManifest::decode(&fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ShardManifest {
+        ShardManifest { shards: 3, seed: 42, generations: vec![5, 0, 7] }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let m = sample();
+        assert_eq!(ShardManifest::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let dir = std::env::temp_dir().join(format!("scc-manifest-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.txt");
+        let m = sample();
+        m.save(&path).unwrap();
+        assert_eq!(ShardManifest::load(&path).unwrap(), m);
+        assert!(
+            !path.with_extension("txt.tmp").exists(),
+            "atomic write leaves no tmp file behind"
+        );
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        assert!(matches!(ShardManifest::decode("NOPE v1\n"), Err(ShardError::BadMagic)));
+        assert!(matches!(ShardManifest::decode(""), Err(ShardError::BadMagic)));
+        assert!(matches!(
+            ShardManifest::decode("SCCSHARD v9\nshards 1\nseed 0\ngeneration 0 0\n"),
+            Err(ShardError::UnsupportedVersion { found: 9, supported: 1 })
+        ));
+    }
+
+    #[test]
+    fn rejects_structural_corruption() {
+        for bad in [
+            "SCCSHARD v1\nshards 2\nseed 0\ngeneration 0 1\n",          // missing gen 1
+            "SCCSHARD v1\nshards 1\nseed 0\ngeneration 4 1\n",          // out of range
+            "SCCSHARD v1\nseed 0\n",                                    // missing shards
+            "SCCSHARD v1\nshards 1\ngeneration 0 0\n",                  // missing seed
+            "SCCSHARD v1\nshards 1\nseed 0\ngeneration 0 0\nwhat 1\n",  // unknown key
+            "SCCSHARD v1\nshards x\n",                                  // unparsable
+        ] {
+            assert!(
+                matches!(ShardManifest::decode(bad), Err(ShardError::Corrupt(_))),
+                "should reject: {bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_display_names_the_mismatch() {
+        let e = ShardError::ShardCountMismatch { manifest: 4, expected: 2 };
+        assert_eq!(e.to_string(), "manifest declares 4 shards, tier expects 2");
+        let e = ShardError::SeedMismatch { manifest: 1, expected: 9 };
+        assert!(e.to_string().contains("seed 1"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Horizontal scale for the serving tier: `S` shards, one router.
+//!
+//! The single-process [`crate::serve::ServeIndex`] answers queries over
+//! one snapshot; this module spreads that work across `S` shards while
+//! keeping the *answers* exactly what the single index would say — the
+//! tier's S-invariance contract. The design is deliberately asymmetric:
+//!
+//! ```text
+//!                ┌────────────┐ queries (fan-out or sketch-probed)
+//!   clients ───▶ │ ShardRouter│────────────┬───────────┐
+//!                └────────────┘            ▼           ▼
+//!                      │             ┌─────────┐ ┌─────────┐
+//!                      │ ingest      │ shard 0 │…│ shard S-1 │  each: Service pool
+//!                      ▼             │ (proj.) │ │  (proj.)  │  over a projected
+//!                ┌────────────┐      └────▲────┘ └────▲────┘  HierarchySnapshot
+//!                │   global   │───────────┴─reproject─┘
+//!                │ ServeIndex │   (gather, bit-exact, changed shards only)
+//!                └────────────┘
+//!                      │ drift → ShardRebuildWorker → rebuild + reproject
+//! ```
+//!
+//! * [`partition`] — seeded spatial partitioner: shards own whole
+//!   coarsest-level clusters (so nested levels never straddle shards),
+//!   plus the per-shard centroid *sketch* that powers approximate
+//!   routing;
+//! * [`index`] — [`ShardedIndex`]: the authoritative global index, the
+//!   per-shard projection indexes, [`ShardedIndex::save_all`] /
+//!   [`ShardedIndex::load_all`] over the PR-7 snapshot format (one file
+//!   per shard + [`ShardManifest`]), and the tier-level
+//!   [`ShardRebuildWorker`];
+//! * [`router`] — [`ShardRouter`]: per-shard [`crate::serve::Service`]
+//!   pools, fan-out and sketch routing, `(dist, global id)` merging,
+//!   per-shard telemetry labeled and folded into one snapshot;
+//! * [`manifest`] — the tier manifest and the typed [`ShardError`].
+//!
+//! Contracts (all property-tested in `rust/tests/shard_properties.rs`):
+//! fan-out answers are bit-identical to the single index for
+//! `S ∈ {1,2,4,8}`; cross-shard online merges equal the single-index
+//! merge on the union dataset (they *are* the single-index merge — the
+//! global index applies it once, shards re-project); sketch routing
+//! keeps recall ≥ 0.95 at `probe = 2`; `save_all → load_all` serves
+//! identically and continues per-shard generations; the manifest rejects
+//! mismatched shard counts and partition seeds with typed errors.
+
+pub mod index;
+pub mod manifest;
+pub mod partition;
+pub mod router;
+
+pub use index::{
+    project_shard, same_content, ShardMap, ShardRebuildWorker, ShardViews, ShardedIndex,
+};
+pub use manifest::{ShardError, ShardManifest};
+pub use partition::{cluster_shards, owned_points, shard_sketch, sketch_distance, ShardSpec};
+pub use router::{RouteMode, ShardRouter};

@@ -1,0 +1,270 @@
+//! Deterministic dataset partitioning for the sharded serving tier.
+//!
+//! Shards own **whole coarsest-level clusters**, not raw point ranges.
+//! Because snapshot levels are nested, every cluster at *every* level is
+//! then wholly contained in exactly one shard — the property the whole
+//! tier's S-invariance contract rests on: a shard's projected snapshot
+//! can carry its clusters' exact global aggregates, and the union of
+//! per-shard candidate sets at any serving level is precisely the global
+//! cluster set, with nothing split and nothing counted twice.
+//!
+//! The assignment itself is *spatial* and seeded: coarsest centroids are
+//! projected onto a random unit direction drawn from
+//! [`ShardSpec::seed`], sorted by `(projection, cluster id)`, and dealt
+//! out in contiguous chunks of `⌈k/S⌉`/`⌊k/S⌋` clusters. Nearby clusters
+//! land on the same shard, so a shard's centroid sketch (the mean of its
+//! points) is spatially meaningful — that is what makes sketch routing
+//! (`--route sketch`) achieve high recall with a small probe count. A
+//! hash partition would scatter clusters uniformly and every sketch
+//! would collapse toward the global mean. The same seed always
+//! reproduces the same partition of the same snapshot; the seed is
+//! recorded in the tier manifest and validated on reload.
+
+use crate::serve::snapshot::HierarchySnapshot;
+use crate::util::Rng;
+
+/// Tier shape: how many shards, and the seed the spatial partitioner
+/// (and therefore every projection and every sketch) derives from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Number of shards `S ≥ 1`.
+    pub shards: usize,
+    /// Partition seed; part of the tier's identity (persisted in the
+    /// manifest, [`super::ShardError::SeedMismatch`] on reload drift).
+    pub seed: u64,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize, seed: u64) -> ShardSpec {
+        assert!(shards >= 1, "a sharded tier needs at least one shard");
+        ShardSpec { shards, seed }
+    }
+}
+
+/// The seeded random unit direction the partitioner projects onto
+/// (f64 throughout; deterministic for a given seed and `d`). A
+/// degenerate all-zero draw falls back to the first axis.
+fn direction(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x5AA2_D1E5_u64);
+    let mut dir: Vec<f64> = (0..d).map(|_| rng.normal_f32() as f64).collect();
+    let norm = dir.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in &mut dir {
+            *x /= norm;
+        }
+    } else if d > 0 {
+        dir[0] = 1.0;
+    }
+    dir
+}
+
+/// Shard id for every coarsest-level cluster of `snap`: project the
+/// coarsest centroids onto the seeded direction, sort by
+/// `(projection, cluster id)`, chunk contiguously (`k mod S` leading
+/// shards take one extra cluster). With `k < S` the trailing shards own
+/// no clusters — an *empty shard*, which the tier serves and persists
+/// like any other (see `shard_properties.rs`).
+pub fn cluster_shards(snap: &HierarchySnapshot, spec: &ShardSpec) -> Vec<u32> {
+    let coarsest = snap.coarsest();
+    let k = snap.num_clusters(coarsest);
+    let d = snap.d;
+    let dir = direction(d, spec.seed);
+    let centroids = snap.centroids(coarsest);
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    let proj: Vec<f64> = (0..k)
+        .map(|c| {
+            centroids[c * d..(c + 1) * d]
+                .iter()
+                .zip(&dir)
+                .map(|(&x, &w)| x as f64 * w)
+                .sum()
+        })
+        .collect();
+    order.sort_by(|&a, &b| {
+        proj[a as usize].total_cmp(&proj[b as usize]).then(a.cmp(&b))
+    });
+    let (base, rem) = (k / spec.shards, k % spec.shards);
+    let mut assign = vec![0u32; k];
+    let mut next = 0usize;
+    for s in 0..spec.shards {
+        let take = base + usize::from(s < rem);
+        for &c in &order[next..next + take] {
+            assign[c as usize] = s as u32;
+        }
+        next += take;
+    }
+    assign
+}
+
+/// Per-shard owned point ids (sorted ascending), derived from the
+/// coarsest-cluster assignment: point `p` belongs to the shard owning
+/// its coarsest cluster. Ascending order is load-bearing — the
+/// projection assigns shard-local ids in this order, which keeps every
+/// shard-local tie-break consistent with global cluster-id order (see
+/// [`super::index`]).
+pub fn owned_points(snap: &HierarchySnapshot, cluster_shard: &[u32], shards: usize) -> Vec<Vec<u32>> {
+    let coarsest = snap.coarsest();
+    let assign = &snap.level(coarsest).partition.assign;
+    let mut owned = vec![Vec::new(); shards];
+    if coarsest == 0 {
+        // single-level hierarchy: coarsest clusters are the points
+        for p in 0..snap.n {
+            owned[cluster_shard[p] as usize].push(p as u32);
+        }
+    } else {
+        for (p, &c) in assign.iter().enumerate() {
+            owned[cluster_shard[c as usize] as usize].push(p as u32);
+        }
+    }
+    owned
+}
+
+/// The shard's centroid sketch: the (f64) mean of its owned points,
+/// `None` for an empty shard. Queries and ingest batches route to the
+/// shard(s) whose sketch is nearest under the snapshot's measure.
+pub fn shard_sketch(snap: &HierarchySnapshot, owned: &[u32]) -> Option<Vec<f64>> {
+    if owned.is_empty() {
+        return None;
+    }
+    let d = snap.d;
+    let mut mean = vec![0f64; d];
+    for &p in owned {
+        for (m, &x) in mean.iter_mut().zip(snap.point_row(p as usize)) {
+            *m += x as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= owned.len() as f64;
+    }
+    Some(mean)
+}
+
+/// Routing dissimilarity between a query row and a sketch, under the
+/// snapshot's measure. Routing-only — exact distances always come from
+/// the shards' tiled assignment kernels, so this needs to *rank* well,
+/// not match kernel bits.
+pub fn sketch_distance(measure: crate::linkage::Measure, q: &[f32], sketch: &[f64]) -> f64 {
+    use crate::linkage::Measure;
+    match measure {
+        Measure::L2Sq => q
+            .iter()
+            .zip(sketch)
+            .map(|(&x, &m)| {
+                let diff = x as f64 - m;
+                diff * diff
+            })
+            .sum(),
+        Measure::CosineDist => {
+            let (mut dot, mut nq, mut ns) = (0f64, 0f64, 0f64);
+            for (&x, &m) in q.iter().zip(sketch) {
+                dot += x as f64 * m;
+                nq += (x as f64) * (x as f64);
+                ns += m * m;
+            }
+            let denom = (nq.sqrt() * ns.sqrt()).max(f64::MIN_POSITIVE);
+            1.0 - dot / denom
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::pipeline::SccClusterer;
+
+    fn snap(n: usize, k: usize, seed: u64) -> HierarchySnapshot {
+        let ds = separated_mixture(&MixtureSpec {
+            n,
+            d: 4,
+            k,
+            sigma: 0.04,
+            delta: 10.0,
+            imbalance: 0.0,
+            seed,
+        });
+        let g = knn_graph(&ds, 6, Measure::L2Sq);
+        let res = SccClusterer::geometric(15).cluster_csr(&g);
+        HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2)
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_balanced() {
+        let s = snap(180, 5, 3);
+        let spec = ShardSpec::new(3, 42);
+        let a = cluster_shards(&s, &spec);
+        let b = cluster_shards(&s, &spec);
+        assert_eq!(a, b, "same seed, same partition");
+        let k = s.num_clusters(s.coarsest());
+        assert_eq!(a.len(), k);
+        let mut sizes = vec![0usize; 3];
+        for &sh in &a {
+            sizes[sh as usize] += 1;
+        }
+        let (min, max) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "chunking balances cluster counts: {sizes:?}");
+        // a different seed may produce a different layout, but always a
+        // valid one
+        let c = cluster_shards(&s, &ShardSpec::new(3, 43));
+        assert!(c.iter().all(|&sh| sh < 3));
+    }
+
+    #[test]
+    fn owned_points_cover_every_point_exactly_once_sorted() {
+        let s = snap(160, 4, 5);
+        let spec = ShardSpec::new(4, 7);
+        let cs = cluster_shards(&s, &spec);
+        let owned = owned_points(&s, &cs, spec.shards);
+        let mut all: Vec<u32> = owned.iter().flatten().copied().collect();
+        assert!(owned.iter().all(|o| o.windows(2).all(|w| w[0] < w[1])), "sorted, deduped");
+        all.sort_unstable();
+        assert_eq!(all, (0..s.n as u32).collect::<Vec<_>>(), "a true partition of points");
+        // ownership respects coarsest clusters
+        let assign = &s.level(s.coarsest()).partition.assign;
+        for (sh, o) in owned.iter().enumerate() {
+            for &p in o {
+                assert_eq!(cs[assign[p as usize] as usize], sh as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_clusters_leaves_empty_shards() {
+        let s = snap(120, 3, 9);
+        let k = s.num_clusters(s.coarsest());
+        let spec = ShardSpec::new(k + 3, 1);
+        let owned = owned_points(&s, &cluster_shards(&s, &spec), spec.shards);
+        let empty = owned.iter().filter(|o| o.is_empty()).count();
+        assert!(empty >= 3, "k={k} clusters over {} shards", spec.shards);
+        assert_eq!(owned.iter().map(Vec::len).sum::<usize>(), s.n);
+        for o in &owned {
+            assert_eq!(shard_sketch(&s, o).is_none(), o.is_empty());
+        }
+    }
+
+    #[test]
+    fn sketch_is_the_exact_point_mean() {
+        let s = snap(90, 3, 11);
+        let owned: Vec<u32> = (0..10).collect();
+        let sk = shard_sketch(&s, &owned).unwrap();
+        let mut want = vec![0f64; s.d];
+        for &p in &owned {
+            for (w, &x) in want.iter_mut().zip(s.point_row(p as usize)) {
+                *w += x as f64;
+            }
+        }
+        for w in &mut want {
+            *w /= owned.len() as f64;
+        }
+        assert_eq!(sk, want);
+        assert_eq!(sketch_distance(Measure::L2Sq, s.point_row(0), &sk), {
+            s.point_row(0)
+                .iter()
+                .zip(&sk)
+                .map(|(&x, &m)| (x as f64 - m) * (x as f64 - m))
+                .sum::<f64>()
+        });
+    }
+}

@@ -1,0 +1,372 @@
+//! The query front door of the sharded tier: one [`Service`] worker
+//! pool per shard, and a router that turns per-shard answers (in
+//! shard-local cluster ids) into single-index answers (global cluster
+//! ids).
+//!
+//! Two routing modes:
+//!
+//! * **Fan-out** ([`RouteMode::Fanout`]): every non-empty shard scans
+//!   its projected centroids; the router k-way-merges per query by
+//!   `(distance, global cluster id)`. Because projections gather global
+//!   centroid rows bit-for-bit and the assignment kernel's per-pair
+//!   distances don't depend on tile position, the merged answer is
+//!   **bit-identical to the single index for every shard count** — the
+//!   tier's S-invariance contract (`shard_properties.rs`).
+//! * **Sketch** ([`RouteMode::Sketch`]): each query first ranks shards
+//!   by distance to their centroid sketch (the mean of the shard's
+//!   points) and only the nearest `probe` shards do exact work — a
+//!   recall/fan-out trade (≥ 0.95 recall at `probe = 2` on separated
+//!   data, also pinned in `shard_properties.rs`).
+//!
+//! Responses carry **global** cluster ids and the *global* index's
+//! generation. A reprojection racing a fan-out is detected by comparing
+//! each shard response's generation against the view the requests were
+//! routed with; the router re-reads the view and resubmits (bounded
+//! retries), then falls back to the freshest view with per-id bounds
+//! checks — stale merges are impossible, at worst a raced query is
+//! served from the newer projection set.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::index::{ShardViews, ShardedIndex};
+use super::partition::sketch_distance;
+use crate::runtime::Backend;
+use crate::serve::assign::AssignResult;
+use crate::serve::service::{QueryResponse, Service, ServiceConfig, ServiceStats};
+use crate::telemetry::TelemetrySnapshot;
+
+/// How the router turns one query batch into shard work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Every non-empty shard scans; exact merge. Bit-identical to the
+    /// single index for any `S`.
+    Fanout,
+    /// Only the `probe` shards with the nearest sketches scan
+    /// (`probe ≥ 1`, clamped to the shard count). Approximate.
+    Sketch { probe: usize },
+}
+
+/// Per-shard worker pools plus the merge logic. See module docs.
+pub struct ShardRouter {
+    tier: Arc<ShardedIndex>,
+    services: Vec<Service>,
+    mode: RouteMode,
+    level: usize,
+}
+
+/// How many times a raced fan-out re-reads the view and resubmits
+/// before serving from the freshest view best-effort.
+const ROUTE_RETRIES: usize = 3;
+
+impl ShardRouter {
+    /// Spawn one `cfg.workers`-thread [`Service`] per shard (shards are
+    /// independent pools, so tier capacity scales with `S`).
+    /// `cfg.level` fixes the serving level for every routed query.
+    pub fn start(
+        tier: Arc<ShardedIndex>,
+        backend: Arc<dyn Backend + Send + Sync>,
+        cfg: ServiceConfig,
+        mode: RouteMode,
+    ) -> ShardRouter {
+        if let RouteMode::Sketch { probe } = mode {
+            assert!(probe >= 1, "sketch routing needs probe >= 1");
+        }
+        let level = cfg.level;
+        let services = (0..tier.num_shards())
+            .map(|s| Service::start(Arc::clone(tier.shard(s)), Arc::clone(&backend), cfg.clone()))
+            .collect();
+        ShardRouter { tier, services, mode, level }
+    }
+
+    pub fn tier(&self) -> &Arc<ShardedIndex> {
+        &self.tier
+    }
+
+    pub fn mode(&self) -> RouteMode {
+        self.mode
+    }
+
+    /// Route one batch of `nq` row-major queries and block for the
+    /// merged answer. Cluster ids in the response are **global**; its
+    /// generation is the global index's. `nq == 0` returns an empty
+    /// response immediately without touching any shard.
+    pub fn query_blocking(&self, queries: &[f32], nq: usize) -> QueryResponse {
+        let gsnap = self.tier.global().snapshot();
+        let level = gsnap.resolve_level(self.level);
+        if nq == 0 {
+            return QueryResponse {
+                result: AssignResult { cluster: Vec::new(), dist: Vec::new() },
+                level,
+                generation: gsnap.generation,
+                latency_secs: 0.0,
+            };
+        }
+        let (result, latency) = match self.mode {
+            RouteMode::Fanout => self.fanout(queries, nq, level),
+            RouteMode::Sketch { probe } => self.sketch(queries, nq, level, probe, gsnap.measure),
+        };
+        QueryResponse { result, level, generation: gsnap.generation, latency_secs: latency }
+    }
+
+    /// Fan-out: submit the full batch to every non-empty shard, merge
+    /// per query by `(dist, global id)`.
+    fn fanout(&self, queries: &[f32], nq: usize, level: usize) -> (AssignResult, f64) {
+        let mut attempt = 0;
+        loop {
+            let views = self.tier.views();
+            let targets: Vec<usize> =
+                (0..self.services.len()).filter(|&s| views.sketches[s].is_some()).collect();
+            let pending: Vec<(usize, mpsc::Receiver<QueryResponse>)> = targets
+                .iter()
+                .map(|&s| (s, self.services[s].submit(queries.to_vec(), nq)))
+                .collect();
+            let responses: Vec<(usize, QueryResponse)> = pending
+                .into_iter()
+                .map(|(s, rx)| (s, rx.recv().expect("shard response")))
+                .collect();
+            let raced = responses
+                .iter()
+                .any(|(s, r)| r.generation != views.generations[*s]);
+            if raced && attempt < ROUTE_RETRIES {
+                attempt += 1;
+                continue;
+            }
+            // merge with the freshest view on fallback, so local ids are
+            // interpreted against the projections that answered
+            let views = if raced { self.tier.views() } else { views };
+            let latency =
+                responses.iter().map(|(_, r)| r.latency_secs).fold(0.0f64, f64::max);
+            let mut out = AssignResult {
+                cluster: vec![u32::MAX; nq],
+                dist: vec![f32::INFINITY; nq],
+            };
+            for (s, resp) in &responses {
+                merge_response(&mut out, &views, *s, resp, level, None);
+            }
+            return (out, latency);
+        }
+    }
+
+    /// Sketch: rank shards per query by sketch distance, submit each
+    /// shard only its probed queries, merge the partial answers back.
+    fn sketch(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        level: usize,
+        probe: usize,
+        measure: crate::linkage::Measure,
+    ) -> (AssignResult, f64) {
+        let d = queries.len() / nq;
+        let mut attempt = 0;
+        loop {
+            let views = self.tier.views();
+            // per-shard sub-batch: which query rows probe this shard
+            let mut probed: Vec<Vec<u32>> = vec![Vec::new(); self.services.len()];
+            for q in 0..nq {
+                let row = &queries[q * d..(q + 1) * d];
+                let mut ranked: Vec<(f64, usize)> = views
+                    .sketches
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(s, sk)| {
+                        sk.as_ref().map(|sk| (sketch_distance(measure, row, sk), s))
+                    })
+                    .collect();
+                ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                for &(_, s) in ranked.iter().take(probe.max(1)) {
+                    probed[s].push(q as u32);
+                }
+            }
+            let pending: Vec<(usize, mpsc::Receiver<QueryResponse>)> = probed
+                .iter()
+                .enumerate()
+                .filter(|(_, rows)| !rows.is_empty())
+                .map(|(s, rows)| {
+                    let mut sub = Vec::with_capacity(rows.len() * d);
+                    for &q in rows {
+                        sub.extend_from_slice(&queries[q as usize * d..(q as usize + 1) * d]);
+                    }
+                    (s, self.services[s].submit(sub, rows.len()))
+                })
+                .collect();
+            let responses: Vec<(usize, QueryResponse)> = pending
+                .into_iter()
+                .map(|(s, rx)| (s, rx.recv().expect("shard response")))
+                .collect();
+            let raced = responses
+                .iter()
+                .any(|(s, r)| r.generation != views.generations[*s]);
+            if raced && attempt < ROUTE_RETRIES {
+                attempt += 1;
+                continue;
+            }
+            let merge_views = if raced { self.tier.views() } else { views };
+            let latency =
+                responses.iter().map(|(_, r)| r.latency_secs).fold(0.0f64, f64::max);
+            let mut out = AssignResult {
+                cluster: vec![u32::MAX; nq],
+                dist: vec![f32::INFINITY; nq],
+            };
+            for (s, resp) in &responses {
+                merge_response(&mut out, &merge_views, *s, resp, level, Some(&probed[*s]));
+            }
+            return (out, latency);
+        }
+    }
+
+    /// One aggregated [`ServiceStats`] over every shard pool
+    /// (histogram-merged, not concatenated — see
+    /// [`Service::merged_stats`]).
+    pub fn stats(&self) -> ServiceStats {
+        let refs: Vec<&Service> = self.services.iter().collect();
+        Service::merged_stats(&refs)
+    }
+
+    /// Per-shard registries folded into one snapshot, each metric tagged
+    /// with a `shard` label so `--metrics-out` and the Prometheus view
+    /// keep one series per shard instead of colliding.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        let mut merged: Option<TelemetrySnapshot> = None;
+        for (s, svc) in self.services.iter().enumerate() {
+            let snap = svc.telemetry().labeled("shard", &s.to_string());
+            merged = Some(match merged {
+                Some(acc) => acc.merge(snap),
+                None => snap,
+            });
+        }
+        merged.expect("a tier has at least one shard")
+    }
+
+    /// Drain every shard pool and return the aggregated final stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        let stats = self.stats();
+        for svc in self.services.drain(..) {
+            svc.shutdown();
+        }
+        stats
+    }
+}
+
+/// Fold one shard's response into the running per-query argmin,
+/// translating local cluster ids to global through the shard's map.
+/// `rows`: the original query index of each response row (`None` = the
+/// response covers all queries in order, i.e. fan-out).
+fn merge_response(
+    out: &mut AssignResult,
+    views: &ShardViews,
+    shard: usize,
+    resp: &QueryResponse,
+    level: usize,
+    rows: Option<&[u32]>,
+) {
+    for i in 0..resp.result.len() {
+        let local = resp.result.cluster[i];
+        if local == u32::MAX {
+            continue; // empty-level sentinel: this shard has no answer
+        }
+        let Some(g) = views.maps[shard].to_global(level, local) else {
+            continue; // stale local id from a raced swap: never mistranslate
+        };
+        let q = rows.map_or(i, |r| r[i] as usize);
+        let dist = resp.result.dist[i];
+        if dist < out.dist[q] || (dist == out.dist[q] && g < out.cluster[q]) {
+            out.dist[q] = dist;
+            out.cluster[q] = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::{separated_mixture, MixtureSpec};
+    use crate::knn::knn_graph;
+    use crate::linkage::Measure;
+    use crate::pipeline::SccClusterer;
+    use crate::runtime::NativeBackend;
+    use crate::serve::assign::assign_to_level;
+    use crate::serve::shard::{ShardSpec, ShardedIndex};
+    use crate::serve::snapshot::HierarchySnapshot;
+
+    fn build(n: usize, k: usize, seed: u64) -> (crate::core::Dataset, HierarchySnapshot) {
+        let ds = separated_mixture(&MixtureSpec {
+            n,
+            d: 4,
+            k,
+            sigma: 0.04,
+            delta: 10.0,
+            imbalance: 0.0,
+            seed,
+        });
+        let g = knn_graph(&ds, 6, Measure::L2Sq);
+        let res = SccClusterer::geometric(15).cluster_csr(&g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        (ds, snap)
+    }
+
+    fn router(snap: HierarchySnapshot, shards: usize, mode: RouteMode) -> ShardRouter {
+        let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(shards, 42)));
+        ShardRouter::start(
+            tier,
+            Arc::new(NativeBackend::new()),
+            ServiceConfig { workers: 2, ..Default::default() },
+            mode,
+        )
+    }
+
+    #[test]
+    fn fanout_matches_the_single_index_bit_for_bit() {
+        let (ds, snap) = build(200, 5, 51);
+        let want = assign_to_level(&snap, usize::MAX, &ds.data, ds.n, &NativeBackend::new(), 2);
+        for shards in [1, 2, 4, 8] {
+            let r = router(snap.clone(), shards, RouteMode::Fanout);
+            let got = r.query_blocking(&ds.data, ds.n);
+            assert_eq!(got.result, want, "S={shards} diverged from the single index");
+            r.shutdown();
+        }
+    }
+
+    #[test]
+    fn sketch_probing_all_shards_is_exact() {
+        let (ds, snap) = build(160, 4, 53);
+        let want = assign_to_level(&snap, usize::MAX, &ds.data, ds.n, &NativeBackend::new(), 2);
+        // probe == S degenerates to fan-out: same bits
+        let r = router(snap, 4, RouteMode::Sketch { probe: 4 });
+        let got = r.query_blocking(&ds.data, ds.n);
+        assert_eq!(got.result, want);
+        r.shutdown();
+    }
+
+    #[test]
+    fn zero_query_batches_and_stats_merge() {
+        let (ds, snap) = build(120, 3, 57);
+        let r = router(snap, 3, RouteMode::Fanout);
+        let empty = r.query_blocking(&[], 0);
+        assert!(empty.result.is_empty());
+        let _ = r.query_blocking(&ds.data[..4 * 8], 8);
+        let stats = r.stats();
+        // the fan-out touched every non-empty shard with one request of
+        // 8 queries each; zero-query batches are not counted
+        assert!(stats.requests >= 1);
+        assert_eq!(stats.queries % 8, 0);
+        let telem = r.telemetry();
+        assert!(
+            telem.get("serve.queries{shard=\"0\"}").is_some(),
+            "per-shard series must be labeled"
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn responses_carry_global_ids_and_generation() {
+        let (ds, snap) = build(150, 4, 59);
+        let k = snap.num_clusters(snap.coarsest());
+        let r = router(snap, 4, RouteMode::Fanout);
+        let got = r.query_blocking(&ds.data, ds.n);
+        assert!(got.result.cluster.iter().all(|&c| (c as usize) < k));
+        assert_eq!(got.generation, r.tier().global().generation());
+        r.shutdown();
+    }
+}

@@ -215,6 +215,40 @@ impl Histogram {
         self.max()
     }
 
+    /// Fold `other`'s observations into `self`, bucket by bucket — a
+    /// histogram merge, **not** sample concatenation. Counts and sums
+    /// add, extrema fold; every derived statistic (`mean`,
+    /// [`Self::percentile`]) afterwards equals what a single histogram
+    /// observing the union of both sample streams would report, because
+    /// all of them are functions of `(bounds, buckets, count, sum, min,
+    /// max)` alone. This is how per-shard latency histograms aggregate
+    /// into one tier-wide [`crate::serve::ServiceStats`].
+    ///
+    /// # Panics
+    ///
+    /// When the bucket layouts differ — merging is only defined over
+    /// identical bounds (use one of the standard `*_buckets` families).
+    pub fn merge_from(&self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "histogram merge needs identical bucket bounds"
+        );
+        if other.count() == 0 {
+            return;
+        }
+        for (b, c) in self.buckets.iter().zip(other.bucket_counts()) {
+            if c > 0 {
+                b.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, other.sum());
+        // fold the raw extrema bits (not `min()`/`max()`, which report
+        // 0.0 for an empty histogram and would corrupt the fold)
+        atomic_f64_min(&self.min_bits, f64::from_bits(other.min_bits.load(Ordering::Relaxed)));
+        atomic_f64_max(&self.max_bits, f64::from_bits(other.max_bits.load(Ordering::Relaxed)));
+    }
+
     fn reset(&self) {
         for b in &self.buckets {
             b.store(0, Ordering::Relaxed);
@@ -481,6 +515,67 @@ mod tests {
         assert_eq!(count_buckets()[0], 1.0);
         assert_eq!(ratio_buckets().len(), 20);
         assert!((ratio_buckets()[19] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge_equals_union_observation() {
+        let bounds = [1.0, 2.0, 4.0, 8.0];
+        let a_samples = [0.5, 1.5, 3.0];
+        let b_samples = [3.5, 6.0, 20.0];
+        let (a, b, union) =
+            (Histogram::new(&bounds), Histogram::new(&bounds), Histogram::new(&bounds));
+        for &x in &a_samples {
+            a.observe(x);
+            union.observe(x);
+        }
+        for &x in &b_samples {
+            b.observe(x);
+            union.observe(x);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.bucket_counts(), union.bucket_counts());
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.sum().to_bits(), union.sum().to_bits());
+        assert_eq!(a.min(), union.min());
+        assert_eq!(a.max(), union.max());
+        for q in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                a.percentile(q).to_bits(),
+                union.percentile(q).to_bits(),
+                "merged p{q} must be bit-equal to observing the union"
+            );
+        }
+        // pinned: rank 3 of 6 lands in (2,4] ← {3.0, 3.5} with one
+        // in-bucket step already consumed → lo 2 + 0.5·(4−2) = 3.0
+        assert_eq!(a.percentile(50.0), 3.0, "merged p50 is pinned");
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 20.0);
+    }
+
+    #[test]
+    fn histogram_merge_with_empty_sides_is_identity() {
+        let bounds = latency_buckets();
+        let (a, empty) = (Histogram::new(&bounds), Histogram::new(&bounds));
+        for x in [1e-4, 2e-3, 0.5] {
+            a.observe(x);
+        }
+        let before = (a.bucket_counts(), a.count(), a.sum().to_bits(), a.min(), a.max());
+        a.merge_from(&empty);
+        assert_eq!(
+            (a.bucket_counts(), a.count(), a.sum().to_bits(), a.min(), a.max()),
+            before,
+            "merging an empty histogram changes nothing"
+        );
+        empty.merge_from(&a);
+        assert_eq!(empty.bucket_counts(), a.bucket_counts());
+        assert_eq!(empty.min(), a.min(), "extrema fold from the raw bits, not min()'s 0.0");
+        assert_eq!(empty.max(), a.max());
+    }
+
+    #[test]
+    #[should_panic(expected = "identical bucket bounds")]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        Histogram::new(&[1.0, 2.0]).merge_from(&Histogram::new(&[1.0, 3.0]));
     }
 
     #[test]

@@ -106,6 +106,31 @@ impl TelemetrySnapshot {
         self
     }
 
+    /// Decorate every metric name with one label, Prometheus-style:
+    /// `serve.query.latency` → `serve.query.latency{shard="3"}`. The
+    /// label becomes part of the name for every other operation — `get`
+    /// wants the decorated name, JSON round-trips it verbatim, and
+    /// [`Self::merge`] treats differently-labeled copies of one metric
+    /// as distinct series — which is exactly what lets per-shard
+    /// registries union into one snapshot without colliding.
+    /// [`Self::to_prometheus`] renders the decoration as a real label
+    /// set, composing it with the histogram `le` label.
+    ///
+    /// A metric that already carries a label set gets the new pair
+    /// appended (`a{x="1"}` → `a{x="1",y="2"}`). Label values are
+    /// escaped for quotes/backslashes by the caller being sensible —
+    /// shard ids here are always small integers.
+    pub fn labeled(mut self, key: &str, value: &str) -> TelemetrySnapshot {
+        for m in &mut self.metrics {
+            m.name = match m.name.strip_suffix('}') {
+                Some(base) => format!("{base},{key}=\"{value}\"}}"),
+                None => format!("{}{{{key}=\"{value}\"}}", m.name),
+            };
+        }
+        self.metrics.sort_by(|a, b| a.name.cmp(&b.name));
+        self
+    }
+
     /// Pretty JSON document: `{"metrics": [...]}`.
     pub fn to_json(&self) -> String {
         let mut s = String::from("{\n  \"metrics\": [\n");
@@ -142,18 +167,32 @@ impl TelemetrySnapshot {
 
     /// Prometheus-style exposition text (`# TYPE` comments, `_bucket`
     /// series with cumulative counts and an `le` label, `_sum`/`_count`;
-    /// metric names have `.` mapped to `_`).
+    /// metric names have `.` mapped to `_`). A [`Self::labeled`]
+    /// decoration renders as a real label set — `a.b{shard="0"}`
+    /// becomes `a_b{shard="0"}`, histogram buckets
+    /// `a_b_bucket{shard="0",le="..."}`.
     pub fn to_prometheus(&self) -> String {
         let mut s = String::new();
         for m in &self.metrics {
+            // split a labeled name into base + label set: only the base
+            // is sanitized, the labels pass through verbatim
+            let (base, labels) = match m.name.split_once('{') {
+                Some((base, rest)) => (base, rest.strip_suffix('}').unwrap_or(rest)),
+                None => (m.name.as_str(), ""),
+            };
             let name: String =
-                m.name.chars().map(|c| if c.is_alphanumeric() { c } else { '_' }).collect();
+                base.chars().map(|c| if c.is_alphanumeric() { c } else { '_' }).collect();
+            let series = if labels.is_empty() {
+                name.clone()
+            } else {
+                format!("{name}{{{labels}}}")
+            };
             match &m.value {
                 MetricValue::Counter(v) => {
-                    s.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+                    s.push_str(&format!("# TYPE {name} counter\n{series} {v}\n"));
                 }
                 MetricValue::Gauge(v) => {
-                    s.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", json::fmt_f64(*v)));
+                    s.push_str(&format!("# TYPE {name} gauge\n{series} {}\n", json::fmt_f64(*v)));
                 }
                 MetricValue::Histogram { bounds, buckets, count, sum, .. } => {
                     s.push_str(&format!("# TYPE {name} histogram\n"));
@@ -165,14 +204,29 @@ impl TelemetrySnapshot {
                         } else {
                             "+Inf".to_string()
                         };
-                        s.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                        let blabels = if labels.is_empty() {
+                            format!("le=\"{le}\"")
+                        } else {
+                            format!("{labels},le=\"{le}\"")
+                        };
+                        s.push_str(&format!("{name}_bucket{{{blabels}}} {cum}\n"));
                     }
-                    s.push_str(&format!("{name}_sum {}\n", json::fmt_f64(*sum)));
-                    s.push_str(&format!("{name}_count {count}\n"));
+                    s.push_str(&format!("{name}_sum{} {}\n", suffix(labels), json::fmt_f64(*sum)));
+                    s.push_str(&format!("{name}_count{} {count}\n", suffix(labels)));
                 }
             }
         }
         s
+    }
+}
+
+/// A label set as a `{...}` suffix for `_sum`/`_count` series (empty
+/// string when there are no labels).
+fn suffix(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
     }
 }
 
@@ -308,5 +362,41 @@ mod tests {
         assert!(text.contains("# TYPE a_hist histogram"), "{text}");
         assert!(text.contains("a_hist_bucket{le=\"+Inf\"} 2"), "{text}");
         assert!(text.contains("a_hist_count 2"), "{text}");
+    }
+
+    #[test]
+    fn labeled_decorates_every_name_and_round_trips() {
+        let snap = sample().labeled("shard", "3");
+        assert_eq!(snap.counter("a.count{shard=\"3\"}"), Some(7));
+        assert!(snap.get("a.count").is_none(), "undecorated name is gone");
+        // a second label appends to the set
+        let two = snap.clone().labeled("tier", "serve");
+        assert!(two.get("a.count{shard=\"3\",tier=\"serve\"}").is_some());
+        // JSON round-trips decorated names verbatim
+        assert_eq!(TelemetrySnapshot::from_json(&snap.to_json()).unwrap(), snap);
+    }
+
+    #[test]
+    fn labeled_shards_merge_without_colliding() {
+        let per_shard = |shard: usize, v: u64| {
+            let r = Registry::new();
+            r.counter("serve.requests").add(v);
+            r.snapshot().labeled("shard", &shard.to_string())
+        };
+        let merged = per_shard(0, 10).merge(per_shard(1, 32));
+        assert_eq!(merged.counter("serve.requests{shard=\"0\"}"), Some(10));
+        assert_eq!(merged.counter("serve.requests{shard=\"1\"}"), Some(32));
+        assert_eq!(merged.metrics.len(), 2, "labels keep the series distinct");
+    }
+
+    #[test]
+    fn prometheus_renders_labels_as_label_sets() {
+        let text = sample().labeled("shard", "0").to_prometheus();
+        assert!(text.contains("# TYPE a_count counter"), "type line stays base-named: {text}");
+        assert!(text.contains("a_count{shard=\"0\"} 7"), "{text}");
+        assert!(text.contains("a_hist_bucket{shard=\"0\",le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("a_hist_count{shard=\"0\"} 2"), "{text}");
+        assert!(text.contains("a_hist_sum{shard=\"0\"}"), "{text}");
+        assert!(!text.contains("shard__0"), "label set must not be sanitized: {text}");
     }
 }

@@ -1,0 +1,308 @@
+//! Property tests for the sharded serving tier (ISSUE 8 acceptance
+//! criteria):
+//!
+//! 1. **S-invariance**: fan-out routing over `S ∈ {1, 2, 4, 8}` shards
+//!    answers every query bit-identically to the single index;
+//! 2. **sketch recall**: sketch routing at `probe = 2` agrees with
+//!    fan-out on ≥ 95% of queries;
+//! 3. **cross-shard merge**: ingesting with online merges through the
+//!    tier produces a global snapshot bit-identical to the single index
+//!    ingesting the same batch on the union dataset — and fan-out
+//!    answers stay identical afterwards;
+//! 4. **transport**: `save_all → load_all` round-trips every shard
+//!    bit-exactly, serves identically, and continues per-shard
+//!    generations monotonically across the restart;
+//! 5. **manifest**: mismatched shard counts and partition seeds are
+//!    refused with typed errors, never served;
+//!
+//! plus the router-facing edge cases: empty shards (more shards than
+//! coarsest clusters) serve and persist cleanly, and zero-query batches
+//! return empty responses.
+
+use scc::core::Dataset;
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::pipeline::{Clusterer, Hierarchy, SccClusterer};
+use scc::runtime::NativeBackend;
+use scc::scc::{thresholds::edge_range, Thresholds};
+use scc::serve::shard::{RouteMode, ShardError, ShardRouter, ShardSpec, ShardedIndex};
+use scc::serve::{assign_to_level, HierarchySnapshot, IngestConfig, ServeIndex, ServiceConfig};
+use scc::util::prop::{check, Gen};
+use std::sync::Arc;
+
+/// A randomized small workload, mirroring `serve_properties.rs`.
+fn random_run(g: &mut Gen) -> (Dataset, Hierarchy) {
+    let n = g.usize_in(60..220);
+    let k = g.usize_in(2..7);
+    let ds = separated_mixture(&MixtureSpec {
+        n,
+        d: g.usize_in(2..5),
+        k,
+        sigma: 0.05,
+        delta: g.f64_in(6.0, 12.0),
+        imbalance: 0.0,
+        seed: g.rng().next_u64(),
+    });
+    let graph = knn_graph(&ds, g.usize_in(3..9), Measure::L2Sq);
+    let (lo, hi) = edge_range(&graph);
+    let taus = Thresholds::geometric(lo, hi, g.usize_in(8..30)).taus;
+    let clusterer = SccClusterer::with_schedule(taus).fixed_rounds(g.bool());
+    (ds, clusterer.cluster_csr(&graph))
+}
+
+/// Jittered copies of stored rows: unseen but realistic queries.
+fn jittered_queries(g: &mut Gen, ds: &Dataset, nq: usize) -> Vec<f32> {
+    let mut q = Vec::with_capacity(nq * ds.d);
+    for j in 0..nq {
+        let src = (j * 13 + 5) % ds.n;
+        for &x in ds.row(src) {
+            q.push(x + 0.01 * (g.rng().f32() - 0.5));
+        }
+    }
+    q
+}
+
+fn start_router(tier: Arc<ShardedIndex>, mode: RouteMode) -> ShardRouter {
+    ShardRouter::start(
+        tier,
+        Arc::new(NativeBackend::new()),
+        ServiceConfig { workers: 2, ..Default::default() },
+        mode,
+    )
+}
+
+#[test]
+fn fanout_routing_is_bit_identical_to_the_single_index_for_every_s() {
+    check("fan-out ≡ single index, S ∈ {1,2,4,8}", 10, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let nq = g.usize_in(10..60);
+        let queries = jittered_queries(g, &ds, nq);
+        let want =
+            assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2);
+        let seed = g.rng().next_u64();
+        for shards in [1usize, 2, 4, 8] {
+            let tier =
+                Arc::new(ShardedIndex::new(snap.clone(), ShardSpec::new(shards, seed)));
+            let router = start_router(Arc::clone(&tier), RouteMode::Fanout);
+            let got = router.query_blocking(&queries, nq);
+            assert_eq!(
+                got.result, want,
+                "S={shards}: fan-out must answer bit-identically to the single index"
+            );
+            router.shutdown();
+        }
+    });
+}
+
+#[test]
+fn sketch_routing_recall_is_at_least_95_percent_at_probe_2() {
+    check("sketch@2 recall ≥ 0.95 vs fan-out", 10, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let nq = g.usize_in(40..120);
+        let queries = jittered_queries(g, &ds, nq);
+        let seed = g.rng().next_u64();
+        let tier = Arc::new(ShardedIndex::new(snap.clone(), ShardSpec::new(4, seed)));
+        let fan = start_router(Arc::clone(&tier), RouteMode::Fanout);
+        let exact = fan.query_blocking(&queries, nq);
+        fan.shutdown();
+        let sketch = start_router(Arc::clone(&tier), RouteMode::Sketch { probe: 2 });
+        let approx = sketch.query_blocking(&queries, nq);
+        sketch.shutdown();
+        let hits = (0..nq)
+            .filter(|&q| approx.result.cluster[q] == exact.result.cluster[q])
+            .count();
+        let recall = hits as f64 / nq as f64;
+        assert!(
+            recall >= 0.95,
+            "sketch routing at probe=2 recalled {hits}/{nq} = {recall:.3} (< 0.95)"
+        );
+    });
+}
+
+#[test]
+fn cross_shard_online_merge_equals_the_single_index_merge_on_the_union() {
+    check("tier ingest ≡ single-index ingest", 8, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        // a batch that lands between existing clusters often triggers
+        // cross-cluster (and therefore potentially cross-shard) merges
+        let m = g.usize_in(2..10);
+        let mut batch = Vec::with_capacity(m * ds.d);
+        for j in 0..m {
+            let (a, b) = (g.usize_in(0..ds.n), g.usize_in(0..ds.n));
+            for dim in 0..ds.d {
+                let mid = 0.5 * (ds.row(a)[dim] + ds.row(b)[dim]);
+                batch.push(if j % 2 == 0 { mid } else { ds.row(a)[dim] + 0.001 });
+            }
+        }
+        let icfg = IngestConfig {
+            online_merges: true,
+            workers: g.usize_in(1..5), // Leader path when > 1: bit-identical
+            ..Default::default()
+        };
+        let backend = NativeBackend::new();
+        // single index on the union dataset
+        let single = ServeIndex::new(snap.clone());
+        let single_report = single.ingest(&batch, &icfg, &backend);
+        // sharded tier: ingest applies to the global index, shards
+        // re-project
+        let shards = g.usize_in(2..6);
+        let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(shards, g.rng().next_u64())));
+        let tier_report = tier.ingest(&batch, &icfg, &backend);
+        assert_eq!(tier_report.ingested, single_report.ingested);
+        assert_eq!(tier_report.online_merges, single_report.online_merges);
+        assert_eq!(tier_report.conflicts, single_report.conflicts);
+        let a = single.snapshot();
+        let b = tier.global().snapshot();
+        assert_eq!(*a, *b, "global tier snapshot must equal the single-index snapshot");
+        // and the served answers stay S-invariant after the merge
+        let nq = 30.min(a.n);
+        let queries: Vec<f32> = a.points[..nq * a.d].to_vec();
+        let want = assign_to_level(&a, usize::MAX, &queries, nq, &backend, 2);
+        let router = start_router(Arc::clone(&tier), RouteMode::Fanout);
+        let got = router.query_blocking(&queries, nq);
+        assert_eq!(got.result, want, "post-merge fan-out diverged");
+        router.shutdown();
+    });
+}
+
+#[test]
+fn save_all_load_all_round_trips_serve_identically_and_continue_generations() {
+    check("tier save/load round trip", 8, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let shards = g.usize_in(2..5);
+        let spec = ShardSpec::new(shards, g.rng().next_u64());
+        let tier = ShardedIndex::new(snap, spec);
+        // advance some generations with a real ingest before saving
+        let batch: Vec<f32> = ds.row(0).iter().map(|&x| x + 0.003).collect();
+        tier.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        let dir = std::env::temp_dir().join(format!(
+            "scc-shard-prop-{}-{}",
+            std::process::id(),
+            g.rng().next_u64()
+        ));
+        tier.save_all(&dir).expect("save_all");
+        let loaded = ShardedIndex::load_all(&dir, spec).expect("load_all");
+        // bit-exact round trip, including generation stamps
+        for s in 0..shards {
+            let (a, b) = (tier.shard(s).snapshot(), loaded.shard(s).snapshot());
+            assert_eq!(*a, *b, "shard {s} must round-trip bit-exactly");
+        }
+        assert_eq!(*tier.global().snapshot(), *loaded.global().snapshot());
+        // serves identically
+        let nq = 20.min(ds.n);
+        let queries: Vec<f32> = ds.data[..nq * ds.d].to_vec();
+        let before = {
+            let r = start_router(Arc::new(tier), RouteMode::Fanout);
+            let resp = r.query_blocking(&queries, nq);
+            r.shutdown();
+            resp
+        };
+        let loaded = Arc::new(loaded);
+        let after = {
+            let r = start_router(Arc::clone(&loaded), RouteMode::Fanout);
+            let resp = r.query_blocking(&queries, nq);
+            r.shutdown();
+            resp
+        };
+        assert_eq!(before.result, after.result, "restart must not change answers");
+        // generation continuity: the next ingest bumps strictly past the
+        // loaded stamps on every shard it touches
+        let gens_before: Vec<u64> =
+            (0..shards).map(|s| loaded.shard(s).generation()).collect();
+        loaded.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        let gens_after: Vec<u64> = (0..shards).map(|s| loaded.shard(s).generation()).collect();
+        assert!(
+            gens_after.iter().zip(&gens_before).all(|(a, b)| a >= b),
+            "generations must never regress across a restart: {gens_before:?} -> {gens_after:?}"
+        );
+        assert!(
+            gens_after.iter().zip(&gens_before).any(|(a, b)| a > b),
+            "the post-restart ingest must advance the owning shard's generation"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn manifest_rejects_mismatched_shard_counts_and_seeds_with_typed_errors() {
+    check("manifest typed rejections", 8, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let shards = g.usize_in(2..5);
+        let seed = g.rng().next_u64();
+        let tier = ShardedIndex::new(snap, ShardSpec::new(shards, seed));
+        let dir = std::env::temp_dir().join(format!(
+            "scc-shard-man-{}-{}",
+            std::process::id(),
+            g.rng().next_u64()
+        ));
+        tier.save_all(&dir).expect("save_all");
+        match ShardedIndex::load_all(&dir, ShardSpec::new(shards + 1, seed)) {
+            Err(ShardError::ShardCountMismatch { manifest, expected }) => {
+                assert_eq!(manifest, shards);
+                assert_eq!(expected, shards + 1);
+            }
+            other => panic!("expected ShardCountMismatch, got {other:?}", other = other.err()),
+        }
+        match ShardedIndex::load_all(&dir, ShardSpec::new(shards, seed.wrapping_add(1))) {
+            Err(ShardError::SeedMismatch { manifest, expected }) => {
+                assert_eq!(manifest, seed);
+                assert_eq!(expected, seed.wrapping_add(1));
+            }
+            other => panic!("expected SeedMismatch, got {other:?}", other = other.err()),
+        }
+        // the matching spec still loads fine afterwards
+        assert!(ShardedIndex::load_all(&dir, ShardSpec::new(shards, seed)).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn empty_shards_serve_and_persist_cleanly() {
+    check("empty shards are first-class", 8, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let k = snap.num_clusters(snap.coarsest());
+        // strictly more shards than coarsest clusters: some must be empty
+        let shards = k + g.usize_in(1..4);
+        let spec = ShardSpec::new(shards, g.rng().next_u64());
+        let tier = Arc::new(ShardedIndex::new(snap.clone(), spec));
+        let views = tier.views();
+        let empty = (0..shards).filter(|&s| views.sketches[s].is_none()).count();
+        assert!(empty >= 1, "k={k} clusters over {shards} shards");
+        let total: usize = (0..shards).map(|s| tier.shard(s).snapshot().n).sum();
+        assert_eq!(total, ds.n, "empty shards own nothing, the rest own everything");
+        // serving straight through the empty shards stays exact
+        let nq = 15.min(ds.n);
+        let queries: Vec<f32> = ds.data[..nq * ds.d].to_vec();
+        let want = assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2);
+        let router = start_router(Arc::clone(&tier), RouteMode::Fanout);
+        let got = router.query_blocking(&queries, nq);
+        assert_eq!(got.result, want);
+        // zero-query batches return an empty response, not an error
+        let nothing = router.query_blocking(&[], 0);
+        assert!(nothing.result.is_empty());
+        router.shutdown();
+        // persistence round-trips the empty shards too
+        let dir = std::env::temp_dir().join(format!(
+            "scc-shard-empty-{}-{}",
+            std::process::id(),
+            g.rng().next_u64()
+        ));
+        tier.save_all(&dir).expect("save_all with empty shards");
+        let loaded = ShardedIndex::load_all(&dir, spec).expect("load_all with empty shards");
+        for s in 0..shards {
+            assert_eq!(
+                *tier.shard(s).snapshot(),
+                *loaded.shard(s).snapshot(),
+                "shard {s} (possibly empty) must round-trip"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}

@@ -18,10 +18,11 @@ use scc::data::mixture::{separated_mixture, MixtureSpec};
 use scc::knn::knn_graph_with_backend;
 use scc::linkage::Measure;
 use scc::pipeline::{SccClusterer, TeraHacClusterer};
+use scc::knn::DEFAULT_PROBE;
 use scc::serve::{
-    assign_to_level, ingest_batch, rebuild_snapshot, HierarchySnapshot, IngestConfig,
-    RebuildConfig, RouteMode, ServeIndex, Service, ServiceConfig, ShardRouter, ShardSpec,
-    ShardedIndex,
+    assign_to_level, assign_with_strategy, ingest_batch, rebuild_snapshot, AssignCache,
+    AssignStrategy, HierarchySnapshot, IngestConfig, RebuildConfig, RouteMode, ServeIndex,
+    Service, ServiceConfig, ShardRouter, ShardSpec, ShardedIndex,
 };
 use scc::util::stats::{fmt_count, fmt_secs};
 use scc::util::{par, Rng, Timer};
@@ -135,7 +136,8 @@ fn main() {
         // serial path: one thread, direct tiled assignment
         let snap_now = index.snapshot();
         let t = Timer::start();
-        let serial = assign_to_level(&snap_now, level, &queries, nq, backend.as_ref(), 1);
+        let serial = assign_to_level(&snap_now, level, &queries, nq, backend.as_ref(), 1)
+            .expect("finite bench queries");
         let serial_secs = t.secs();
         assert_eq!(serial.len(), nq);
         rows.push(row(nq, "serial", serial_secs));
@@ -148,7 +150,7 @@ fn main() {
         );
         let t = Timer::start();
         let mut served = 0usize;
-        for h in service.submit_chunked(&queries, nq) {
+        for h in service.submit_chunked(&queries, nq).expect("finite bench queries") {
             served += h.recv().expect("response").result.len();
         }
         let pooled_secs = t.secs();
@@ -206,7 +208,8 @@ fn main() {
         &batch,
         &IngestConfig { level, ..Default::default() },
         backend.as_ref(),
-    );
+    )
+    .expect("bench batch fits the id space");
     let rebuilt = rebuild_snapshot(&defer_snap, &rcfg, backend.as_ref());
     let defer_secs = t.secs();
     assert_eq!(rebuilt.n, snap_now.n + m);
@@ -220,7 +223,8 @@ fn main() {
         &batch,
         &IngestConfig { level, online_merges: true, workers: threads, ..Default::default() },
         backend.as_ref(),
-    );
+    )
+    .expect("bench batch fits the id space");
     let online_secs = t.secs();
     rows.push(row(m, "ingest_online_merge", online_secs));
     println!(
@@ -281,7 +285,9 @@ fn main() {
             squeries.push(x + 0.01 * rng.normal_f32());
         }
     }
-    let baseline = assign_to_level(&snap_now, level, &squeries, shard_nq, backend.as_ref(), threads);
+    let baseline =
+        assign_to_level(&snap_now, level, &squeries, shard_nq, backend.as_ref(), threads)
+            .expect("finite bench queries");
     let chunk = 256usize;
     let mut tier4: Option<Arc<ShardedIndex>> = None;
     for &s_count in &[1usize, 2, 4, 8] {
@@ -321,7 +327,9 @@ fn main() {
         while q0 < shard_nq {
             let q1 = (q0 + chunk).min(shard_nq);
             let tq = Timer::start();
-            let resp = router.query_blocking(&squeries[q0 * d..q1 * d], q1 - q0);
+            let resp = router
+                .query_blocking(&squeries[q0 * d..q1 * d], q1 - q0)
+                .expect("finite bench queries");
             lat.push(tq.secs());
             assert_eq!(
                 resp.result.cluster,
@@ -369,7 +377,9 @@ fn main() {
     while q0 < shard_nq {
         let q1 = (q0 + chunk).min(shard_nq);
         let tq = Timer::start();
-        let resp = router.query_blocking(&squeries[q0 * d..q1 * d], q1 - q0);
+        let resp = router
+            .query_blocking(&squeries[q0 * d..q1 * d], q1 - q0)
+            .expect("finite bench queries");
         lat.push(tq.secs());
         matched += resp
             .result
@@ -399,6 +409,85 @@ fn main() {
         fmt_secs(p99),
         recall
     );
+
+    // --- ivf arm: brute vs IVF assignment as the serving cluster count
+    //     grows (finest non-singleton level → coarsest). Brute scans all
+    //     k centroids per query; IVF at the default probe scans
+    //     ~probe·k/nlist ≈ probe·√k rows after an O(√k) cell rank, so
+    //     its latency stays near-flat while brute grows linearly. Each
+    //     ivf row also records recall vs the exact scan on that level.
+    let snap_now = index.snapshot();
+    let ivf_nq = (10_000.0 * cfg.scale).round().max(1000.0) as usize;
+    let mut rng = Rng::new(cfg.seed ^ 0x1F4F);
+    let mut iqueries = Vec::with_capacity(ivf_nq * d);
+    for j in 0..ivf_nq {
+        for &x in ds.row((j * 29) % ds.n) {
+            iqueries.push(x + 0.01 * rng.normal_f32());
+        }
+    }
+    let cache = AssignCache::new();
+    let coarsest = snap_now.coarsest();
+    let picks: [(usize, &'static str, &'static str); 3] = [
+        (1.min(coarsest), "assign_brute_fine", "assign_ivf_fine"),
+        (coarsest.div_ceil(2), "assign_brute_mid", "assign_ivf_mid"),
+        (coarsest, "assign_brute_coarse", "assign_ivf_coarse"),
+    ];
+    let strategy = AssignStrategy::Ivf { nlist: 0, probe: DEFAULT_PROBE };
+    for (lv, bpath, ipath) in picks {
+        let ncl = snap_now.num_clusters(lv);
+        let t = Timer::start();
+        let brute = assign_to_level(&snap_now, lv, &iqueries, ivf_nq, backend.as_ref(), threads)
+            .expect("finite bench queries");
+        let brute_secs = t.secs();
+        rows.push(row(ivf_nq, bpath, brute_secs));
+        // warm the per-level index first: it is built once per snapshot
+        // swap in production, so the timed region measures queries only
+        let _ = assign_with_strategy(
+            &snap_now,
+            lv,
+            &iqueries[..d],
+            1,
+            backend.as_ref(),
+            1,
+            strategy,
+            &cache,
+        )
+        .expect("finite bench queries");
+        let t = Timer::start();
+        let ivf = assign_with_strategy(
+            &snap_now,
+            lv,
+            &iqueries,
+            ivf_nq,
+            backend.as_ref(),
+            threads,
+            strategy,
+            &cache,
+        )
+        .expect("finite bench queries");
+        let ivf_secs = t.secs();
+        let matched =
+            ivf.cluster.iter().zip(brute.cluster.iter()).filter(|(a, b)| a == b).count();
+        let recall = matched as f64 / ivf_nq as f64;
+        rows.push(Row {
+            queries: ivf_nq,
+            path: ipath,
+            secs: ivf_secs,
+            points_per_sec: ivf_nq as f64 / ivf_secs,
+            p99_secs: None,
+            recall: Some(recall),
+        });
+        println!(
+            "assign L={lv} k={:>6}  brute {:>10} ({:>12.0} pts/s)   ivf(p={}) {:>10} ({:>12.0} pts/s)  recall {:.3}",
+            fmt_count(ncl),
+            fmt_secs(brute_secs),
+            ivf_nq as f64 / brute_secs,
+            DEFAULT_PROBE,
+            fmt_secs(ivf_secs),
+            ivf_nq as f64 / ivf_secs,
+            recall
+        );
+    }
 
     let tele = tele.merge(scc::telemetry::global().snapshot());
     write_json(&rows, build_n, ds.d, clusters, backend.name(), threads, &tele);

@@ -108,8 +108,16 @@ pub struct ServeOpts {
     /// Shard routing mode: `fanout` (exact, bit-identical to the single
     /// index) or `sketch` (probe the nearest `--probe` shards).
     pub route: String,
-    /// Shards probed per query under sketch routing.
+    /// Shards probed per query under sketch routing; also the IVF cells
+    /// probed per query under `--assign ivf`.
     pub probe: usize,
+    /// Assignment strategy inside each worker pool: `brute` (exact scan)
+    /// or `ivf` (coarse-probe + exact rerank; `probe >= nlist` is
+    /// bit-identical to brute).
+    pub assign: String,
+    /// IVF coarse cell count for `--assign ivf` (0 = auto,
+    /// `ceil(sqrt(#clusters))` per level).
+    pub nlist: usize,
 }
 
 impl Default for ServeOpts {
@@ -127,6 +135,8 @@ impl Default for ServeOpts {
             shards: 0,
             route: "fanout".to_string(),
             probe: 2,
+            assign: "brute".to_string(),
+            nlist: 0,
         }
     }
 }
@@ -181,9 +191,9 @@ OPTIONS:
                   scc | scc-fixed | affinity | hac | terahac | perch |
                   grinch | kmeans | dpmeans (default scc; all dispatch
                   through the pipeline Clusterer trait)
-  --graph G       graph construction strategy: brute | nn-descent | lsh
-                  (default brute; nn-descent is sub-quadratic approximate
-                  k-NN, composes with every --algo)
+  --graph G       graph construction strategy: brute | nn-descent | lsh |
+                  ivf (default brute; nn-descent and ivf are sub-quadratic
+                  approximate k-NN, composing with every --algo)
   --epsilon F     terahac approximation slack: each merge is within
                   (1+F) of the best local merge (default 0.1; 0 = exact
                   graph HAC, larger = faster/coarser)
@@ -213,8 +223,17 @@ OPTIONS:
   --route R       serve: shard routing mode: fanout | sketch (default
                   fanout — exact and bit-identical to the single index;
                   sketch probes only the nearest shards per query)
-  --probe P       serve: shards probed per query under --route sketch
-                  (default 2)
+  --probe P       serve: shards probed per query under --route sketch,
+                  and IVF cells probed per query under --assign ivf
+                  (default 2; probe >= nlist degenerates to the exact scan)
+  --assign A      serve: per-worker assignment strategy: brute | ivf
+                  (default brute; ivf routes each query through a
+                  per-level inverted-file index over the centroids —
+                  sub-linear in the cluster count, exact rerank of the
+                  probed cells; see README \"Sub-linear assignment\")
+  --nlist N       serve: IVF coarse cell count for --assign ivf; omit for
+                  auto = ceil(sqrt(#clusters)) per level (explicit 0 is
+                  rejected)
   --metrics-out P write the run's telemetry snapshot to P after the
                   command finishes: Prometheus text when P ends in
                   .prom, JSON otherwise (see README \"Observability\")
@@ -265,8 +284,11 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--algo" => cli.algo = val()?.clone(),
             "--graph" => {
                 cli.cfg.graph = val()?.clone();
-                if !matches!(cli.cfg.graph.as_str(), "brute" | "nn-descent" | "lsh") {
-                    bail!("unknown graph strategy {:?} (brute|nn-descent|lsh)", cli.cfg.graph);
+                if !matches!(cli.cfg.graph.as_str(), "brute" | "nn-descent" | "lsh" | "ivf") {
+                    bail!(
+                        "unknown graph strategy {:?} (brute|nn-descent|lsh|ivf)",
+                        cli.cfg.graph
+                    );
                 }
             }
             "--epsilon" => {
@@ -304,7 +326,21 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--probe" => {
                 cli.serve.probe = val()?.parse().context("--probe")?;
                 if cli.serve.probe == 0 {
-                    bail!("--probe must be >= 1 (shards probed per query)");
+                    bail!("--probe must be >= 1 (shards or IVF cells probed per query)");
+                }
+            }
+            "--assign" => {
+                cli.serve.assign = val()?.clone();
+                if !matches!(cli.serve.assign.as_str(), "brute" | "ivf") {
+                    bail!("unknown assign strategy {:?} (brute|ivf)", cli.serve.assign);
+                }
+            }
+            "--nlist" => {
+                cli.serve.nlist = val()?.parse().context("--nlist")?;
+                if cli.serve.nlist == 0 {
+                    // 0 is the *internal* auto sentinel; an explicit 0 on
+                    // the command line is a mistake, not a request for it
+                    bail!("--nlist must be >= 1 (omit the flag for auto = ceil(sqrt(n)))");
                 }
             }
             "--snapshot-in" => cli.serve.snapshot_in = Some(val()?.clone()),
@@ -484,6 +520,41 @@ fn serving_level(snap: &crate::serve::HierarchySnapshot, opts: &ServeOpts) -> us
     }
 }
 
+/// Resolve `--assign`/`--nlist`/`--probe` into the worker pools'
+/// [`crate::serve::AssignStrategy`].
+fn assign_strategy(opts: &ServeOpts) -> crate::serve::AssignStrategy {
+    match opts.assign.as_str() {
+        "ivf" => crate::serve::AssignStrategy::Ivf { nlist: opts.nlist, probe: opts.probe },
+        _ => crate::serve::AssignStrategy::Brute,
+    }
+}
+
+/// One line describing the resolved strategy for the serve report.
+fn assign_line(strategy: crate::serve::AssignStrategy) -> String {
+    match strategy {
+        crate::serve::AssignStrategy::Brute => String::new(),
+        crate::serve::AssignStrategy::Ivf { nlist, probe } => format!(
+            "assignment strategy ivf (nlist {}, probe {probe})\n",
+            if nlist == 0 { "auto".to_string() } else { nlist.to_string() }
+        ),
+    }
+}
+
+/// FNV-1a over the assigned cluster ids in submission order: a cheap
+/// deterministic fingerprint of *what* was assigned, printed by both
+/// serve paths so CI can diff an `--assign ivf --probe >= nlist` run
+/// against `--assign brute` (latency lines differ; this line must not).
+fn assign_checksum(cluster: &[u32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &c in cluster {
+        for b in c.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 /// `serve`: build (any `--algo`, through the trait) → snapshot → pooled
 /// queries → ingest (online merges when requested) → automatic
 /// drift-triggered rebuild (same clusterer) → report.
@@ -506,7 +577,7 @@ fn serve_cmd(
     let graph_builder: Arc<dyn crate::pipeline::GraphBuilder> =
         match crate::eval::common::make_graph_builder(cfg) {
             Some(g) => Arc::from(g),
-            None => bail!("unknown graph strategy {:?} (brute|nn-descent|lsh)", cfg.graph),
+            None => bail!("unknown graph strategy {:?} (brute|nn-descent|lsh|ivf)", cfg.graph),
         };
     if opts.shards > 0 {
         return serve_sharded_cmd(dataset, algo, cfg, opts, backend, graph_builder, metrics_out);
@@ -569,10 +640,12 @@ fn serve_cmd(
 
     let index = Arc::new(ServeIndex::new(snap));
     let workers = if opts.workers == 0 { cfg.threads.max(1) } else { opts.workers };
+    let strategy = assign_strategy(opts);
+    out.push_str(&assign_line(strategy));
     let service = Service::start(
         Arc::clone(&index),
         Arc::clone(&backend),
-        ServiceConfig { workers, level, ..Default::default() },
+        ServiceConfig { workers, level, assign: strategy, ..Default::default() },
     );
     // automatic rebuild: watches the drift counter off the hot path and
     // swaps a fresh snapshot in without blocking queries
@@ -599,15 +672,18 @@ fn serve_cmd(
         },
     );
     let mut served = 0usize;
-    for h in service.submit_chunked(&queries, nq) {
+    let mut clusters: Vec<u32> = Vec::with_capacity(nq);
+    for h in service.submit_chunked(&queries, nq)? {
         let r = h.recv().context("service response")?;
         served += r.result.len();
+        clusters.extend_from_slice(&r.result.cluster);
     }
     crate::telemetry::event(
         "cli.serve.queries",
         &[("served", served.into()), ("workers", workers.into()), ("level", level.into())],
     );
     out.push_str(&format!("served {served} queries\n{}\n", service.stats().report()));
+    out.push_str(&format!("assign checksum {:016x}\n", assign_checksum(&clusters)));
 
     if opts.ingest > 0 {
         let icfg = IngestConfig {
@@ -617,7 +693,7 @@ fn serve_cmd(
             workers: cfg.threads.max(1),
             ..Default::default()
         };
-        let report = index.ingest(&batch, &icfg, backend.as_ref());
+        let report = index.ingest(&batch, &icfg, backend.as_ref())?;
         let after = index.snapshot();
         out.push_str(&format!(
             "ingested {} points: {} attached, {} new clusters, {} conflicts deferred, \
@@ -773,10 +849,12 @@ fn serve_sharded_cmd(
         "sketch" => RouteMode::Sketch { probe: opts.probe },
         _ => RouteMode::Fanout,
     };
+    let strategy = assign_strategy(opts);
+    out.push_str(&assign_line(strategy));
     let router = ShardRouter::start(
         Arc::clone(&tier),
         Arc::clone(&backend),
-        ServiceConfig { workers, level, ..Default::default() },
+        ServiceConfig { workers, level, assign: strategy, ..Default::default() },
         mode,
     );
     // tier-level freshness: the worker rebuilds the *global* index (a
@@ -795,7 +873,7 @@ fn serve_sharded_cmd(
         Arc::clone(&backend),
         std::time::Duration::from_millis(25),
     );
-    let resp = router.query_blocking(&queries, nq);
+    let resp = router.query_blocking(&queries, nq)?;
     let served = resp.result.len();
     crate::telemetry::event(
         "cli.serve.sharded.queries",
@@ -807,6 +885,7 @@ fn serve_sharded_cmd(
         ],
     );
     out.push_str(&format!("served {served} queries\n{}\n", router.stats().report()));
+    out.push_str(&format!("assign checksum {:016x}\n", assign_checksum(&resp.result.cluster)));
 
     if opts.ingest > 0 {
         let owner = tier.route_ingest(&batch[..d]);
@@ -817,7 +896,7 @@ fn serve_sharded_cmd(
             workers: cfg.threads.max(1),
             ..Default::default()
         };
-        let report = tier.ingest(&batch, &icfg, backend.as_ref());
+        let report = tier.ingest(&batch, &icfg, backend.as_ref())?;
         let after = tier.global().snapshot();
         out.push_str(&format!(
             "ingested {} points (owner shard {owner} by sketch): {} attached, {} new clusters, \
@@ -1222,6 +1301,48 @@ mod tests {
         assert!(parse(&argv("serve --route bogus")).is_err());
         assert!(parse(&argv("serve --probe 0")).is_err());
         assert!(parse(&argv("serve --shards nope")).is_err());
+    }
+
+    #[test]
+    fn parses_assign_flags_and_rejects_degenerate_values() {
+        let cli = parse(&argv("serve --assign ivf --nlist 16 --probe 4")).unwrap();
+        assert_eq!(cli.serve.assign, "ivf");
+        assert_eq!(cli.serve.nlist, 16);
+        assert_eq!(cli.serve.probe, 4);
+        let defaults = parse(&argv("serve")).unwrap();
+        assert_eq!(defaults.serve.assign, "brute", "exact scan by default");
+        assert_eq!(defaults.serve.nlist, 0, "0 = auto internally");
+        // strategy typos and degenerate cell counts are parse errors,
+        // not silent sentinels
+        assert!(parse(&argv("serve --assign bogus")).is_err());
+        assert!(parse(&argv("serve --nlist 0")).is_err(), "explicit 0 must be rejected");
+        assert!(parse(&argv("serve --nlist nope")).is_err());
+        assert!(parse(&argv("serve --assign")).is_err(), "flag needs a value");
+        // ivf also resolves as a --graph strategy
+        assert_eq!(parse(&argv("cluster --graph ivf")).unwrap().cfg.graph, "ivf");
+    }
+
+    #[test]
+    fn serve_ivf_probe_all_matches_the_brute_checksum() {
+        // probe = nlist degenerates to the exact scan, so the assign
+        // checksum (FNV over assigned cluster ids, query-order) must be
+        // byte-identical between the two strategies — the same diff CI
+        // runs in the serve smoke job
+        let base = "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                    --queries 60 --workers 2 --ingest 0";
+        let line = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("assign checksum"))
+                .expect("report carries a checksum line")
+                .to_string()
+        };
+        let brute = execute(&parse(&argv(base)).unwrap()).unwrap();
+        let ivf = execute(
+            &parse(&argv(&format!("{base} --assign ivf --nlist 8 --probe 8"))).unwrap(),
+        )
+        .unwrap();
+        assert!(ivf.contains("assignment strategy ivf (nlist 8, probe 8)"), "{ivf}");
+        assert_eq!(line(&brute), line(&ivf), "probe = nlist must reproduce brute bit-for-bit");
     }
 
     #[test]

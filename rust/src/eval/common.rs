@@ -7,8 +7,8 @@ use crate::data::analogs::{bench_analog, spec_by_name, AnalogSpec};
 use crate::graph::CsrGraph;
 use crate::linkage::Measure;
 use crate::pipeline::{
-    AffinityClusterer, BruteKnn, Clusterer, GraphBuilder, GraphContext, Hierarchy, LshKnn,
-    NnDescentKnn, SccClusterer,
+    AffinityClusterer, BruteKnn, Clusterer, GraphBuilder, GraphContext, Hierarchy, IvfKnn,
+    LshKnn, NnDescentKnn, SccClusterer,
 };
 use crate::runtime::Backend;
 use crate::scc::SccConfig;
@@ -31,7 +31,7 @@ pub struct EvalConfig {
     /// dot products).
     pub measure: Measure,
     /// Graph-construction strategy (`--graph`): `brute` | `nn-descent` |
-    /// `lsh`, resolved by [`make_graph_builder`].
+    /// `lsh` | `ivf`, resolved by [`make_graph_builder`].
     pub graph: String,
     /// Approximation slack ε of the TeraHAC clusterer (`--epsilon`).
     pub epsilon: f64,
@@ -65,6 +65,7 @@ pub fn make_graph_builder(cfg: &EvalConfig) -> Option<Box<dyn GraphBuilder>> {
             NnDescentKnn::new(cfg.knn_k).iters(cfg.nnd_iters).seed(cfg.seed),
         )),
         "lsh" => Some(Box::new(LshKnn::new(cfg.knn_k))),
+        "ivf" => Some(Box::new(IvfKnn::new(cfg.knn_k).seed(cfg.seed))),
         _ => None,
     }
 }
@@ -289,9 +290,12 @@ mod tests {
     #[test]
     fn graph_selection_resolves_every_strategy() {
         let mut cfg = tiny_cfg();
-        for (name, expect) in
-            [("brute", "brute-knn"), ("nn-descent", "nn-descent"), ("lsh", "lsh-knn")]
-        {
+        for (name, expect) in [
+            ("brute", "brute-knn"),
+            ("nn-descent", "nn-descent"),
+            ("lsh", "lsh-knn"),
+            ("ivf", "ivf-knn"),
+        ] {
             cfg.graph = name.to_string();
             let b = make_graph_builder(&cfg).unwrap_or_else(|| panic!("{name} must resolve"));
             assert_eq!(b.name(), expect);

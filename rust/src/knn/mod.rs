@@ -6,11 +6,16 @@
 //!   (identical tiling, identical merge).
 //! * [`lsh`] — random-hyperplane LSH banding for approximate candidate
 //!   generation at web scale (the paper's "hashing techniques", §5).
+//! * [`ivf`] — seeded-kmeans inverted-file index: coarse cell probe, then
+//!   exact prepared-kernel rerank of the gathered candidates
+//!   (`probe = nlist` is bit-identical to [`brute`]).
 
 pub mod brute;
+pub mod ivf;
 pub mod lsh;
 
 pub use brute::{all_pairs_topk, knn_graph, knn_graph_with_backend};
+pub use ivf::{auto_nlist, IvfIndex, DEFAULT_PROBE};
 pub use lsh::{lsh_knn_graph, LshParams};
 
 use crate::graph::{CsrGraph, Edge};

@@ -1,13 +1,13 @@
 //! [`GraphBuilder`] implementations: exact brute-force k-NN, NN-descent
-//! approximate k-NN, LSH approximate k-NN, and a precomputed CSR
-//! pass-through.
+//! approximate k-NN, LSH approximate k-NN, IVF coarse-probe k-NN, and a
+//! precomputed CSR pass-through.
 
 use super::GraphBuilder;
 use crate::core::Dataset;
 use crate::graph::CsrGraph;
 use crate::knn::{
-    all_pairs_topk, knn_graph_with_backend, lsh_knn_graph, topk_to_graph, KSmallest, LshParams,
-    TopK,
+    all_pairs_topk, auto_nlist, knn_graph_with_backend, lsh_knn_graph, topk_to_graph, IvfIndex,
+    KSmallest, LshParams, TopK, DEFAULT_PROBE,
 };
 use crate::linkage::Measure;
 use crate::runtime::Backend;
@@ -245,6 +245,101 @@ impl GraphBuilder for LshKnn {
     }
 }
 
+/// Approximate k-NN through an inverted-file index
+/// ([`crate::knn::IvfIndex`]): a seeded-kmeans coarse quantizer over the
+/// points, then an **exact** prepared-kernel rerank of the `probe`
+/// nearest cells per query. `probe ≥ nlist` degenerates to brute force
+/// bit-for-bit; smaller probes trade recall for sub-linear candidate
+/// scans. Deterministic per seed, independent of the thread count.
+#[derive(Debug, Clone)]
+pub struct IvfKnn {
+    pub k: usize,
+    /// Coarse cell count (0 = auto, `⌈√n⌉` via [`auto_nlist`]).
+    pub nlist: usize,
+    /// Cells scanned per query (clamped to `[1, nlist]`).
+    pub probe: usize,
+    pub seed: u64,
+}
+
+impl IvfKnn {
+    pub fn new(k: usize) -> IvfKnn {
+        IvfKnn { k, nlist: 0, probe: DEFAULT_PROBE, seed: 0x5EED }
+    }
+
+    pub fn nlist(mut self, nlist: usize) -> IvfKnn {
+        self.nlist = nlist;
+        self
+    }
+
+    pub fn probe(mut self, probe: usize) -> IvfKnn {
+        self.probe = probe.max(1);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> IvfKnn {
+        self.seed = seed;
+        self
+    }
+
+    /// Per-point top-k lists with the self match stripped (exposed like
+    /// [`NnDescentKnn::topk`] so recall tests can compare against
+    /// [`all_pairs_topk`] directly). Datasets too small to quantize fall
+    /// back to the exact path.
+    pub fn topk(
+        &self,
+        ds: &Dataset,
+        measure: Measure,
+        backend: &dyn Backend,
+        threads: usize,
+    ) -> TopK {
+        let n = ds.n;
+        let k = clamp_k(self.k, n);
+        if n <= 1 || k + 1 >= n {
+            return all_pairs_topk(ds, k, measure, backend, threads);
+        }
+        let nlist = if self.nlist == 0 { auto_nlist(n) } else { self.nlist };
+        let ix = IvfIndex::build(&ds.data, n, ds.d, measure, nlist, self.seed, backend, threads);
+        // ask for k + 1 so the self match (dist 0, always admitted when
+        // its cell is probed) doesn't displace a real neighbor
+        let kk = k + 1;
+        let raw = ix.search_topk(&ds.data, n, kk, self.probe, backend, threads);
+        let mut out = TopK::new(n, k);
+        for q in 0..n {
+            let (ri, rd) = raw.row(q);
+            let lo = q * k;
+            let mut j = 0;
+            for t in 0..kk {
+                if ri[t] == u32::MAX || j == k {
+                    break;
+                }
+                if ri[t] as usize == q {
+                    continue;
+                }
+                out.idx[lo + j] = ri[t];
+                out.dist[lo + j] = rd[t];
+                j += 1;
+            }
+        }
+        out
+    }
+}
+
+impl GraphBuilder for IvfKnn {
+    fn build(
+        &self,
+        ds: &Dataset,
+        measure: Measure,
+        backend: &dyn Backend,
+        threads: usize,
+    ) -> CsrGraph {
+        topk_to_graph(ds.n, &self.topk(ds, measure, backend, threads))
+    }
+
+    fn name(&self) -> &'static str {
+        "ivf-knn"
+    }
+}
+
 /// A graph computed elsewhere (custom dissimilarities, loaded edge
 /// lists): the builder hands out clones and asserts the node count
 /// matches the dataset.
@@ -347,6 +442,7 @@ mod tests {
             Box::new(BruteKnn::new(0)),
             Box::new(LshKnn::new(0)),
             Box::new(NnDescentKnn::new(0)),
+            Box::new(IvfKnn::new(0)),
         ];
         for builder in &builders {
             let g = builder.build(&ds, Measure::L2Sq, &b, 1);
@@ -369,6 +465,44 @@ mod tests {
         let brute = knn_graph(&four, 3, Measure::L2Sq);
         let g = topk_to_graph(4, &exact);
         assert_eq!(g.num_edges(), brute.num_edges());
+    }
+
+    #[test]
+    fn ivf_probe_all_matches_the_exact_topk() {
+        let ds = tiny();
+        let b = NativeBackend::new();
+        let ivf = IvfKnn::new(5).nlist(4).probe(4).topk(&ds, Measure::L2Sq, &b, 2);
+        let exact = all_pairs_topk(&ds, 5, Measure::L2Sq, &b, 2);
+        assert_eq!(ivf.idx, exact.idx, "probe = nlist must be exact");
+        assert_eq!(ivf.dist, exact.dist);
+    }
+
+    #[test]
+    fn ivf_is_deterministic_per_seed_and_thread_count() {
+        let ds = tiny();
+        let b = NativeBackend::new();
+        let t1 = IvfKnn::new(5).seed(42).topk(&ds, Measure::L2Sq, &b, 1);
+        let t2 = IvfKnn::new(5).seed(42).topk(&ds, Measure::L2Sq, &b, 7);
+        assert_eq!(t1.idx, t2.idx, "same seed must give bit-identical lists");
+        assert_eq!(t1.dist, t2.dist);
+    }
+
+    #[test]
+    fn ivf_graph_covers_every_point_with_high_recall() {
+        let ds = separated_mixture(&MixtureSpec {
+            n: 220,
+            d: 4,
+            k: 4,
+            sigma: 0.05,
+            delta: 8.0,
+            ..Default::default()
+        });
+        let b = NativeBackend::new();
+        let ivf = IvfKnn::new(6).build(&ds, Measure::L2Sq, &b, 2);
+        assert_eq!(ivf.n, ds.n);
+        let exact = knn_graph(&ds, 6, Measure::L2Sq);
+        let recall = crate::knn::lsh::recall_vs_exact(&ivf, &exact);
+        assert!(recall >= 0.9, "graph recall {recall} too low");
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //! * [`GraphBuilder`] — dataset → dissimilarity graph. Implementations:
 //!   exact tiled brute force ([`BruteKnn`]), NN-descent refinement
 //!   ([`NnDescentKnn`], sub-quadratic approximate k-NN), random-hyperplane
-//!   LSH ([`LshKnn`]), and a precomputed CSR pass-through
-//!   ([`Precomputed`]).
+//!   LSH ([`LshKnn`]), IVF coarse-probe with exact rerank ([`IvfKnn`]),
+//!   and a precomputed CSR pass-through ([`Precomputed`]).
 //! * [`Clusterer`] — graph (+ dataset context) → [`Hierarchy`], one
 //!   result type for every algorithm: [`SccClusterer`] (sequential
 //!   engine or the sharded coordinator — bit-identical),
@@ -45,7 +45,7 @@ pub use clusterers::{
     KMeansClusterer, PerchClusterer, SccClusterer,
 };
 pub use cut::{ClusterCut, Cut, CutReport};
-pub use graphs::{BruteKnn, LshKnn, NnDescentKnn, Precomputed};
+pub use graphs::{BruteKnn, IvfKnn, LshKnn, NnDescentKnn, Precomputed};
 pub use hierarchy::{closest_to_k_index, Hierarchy};
 pub use terahac::{MergeRecord, TeraHacClusterer};
 

@@ -6,11 +6,82 @@
 //! a [`crate::runtime::Backend`] — so the PJRT `assign` artifact serves
 //! this path unchanged, and per-tile argmins merge to the exact global
 //! argmin with deterministic `(dist, cluster id)` tie-breaking.
+//!
+//! Two strategies sit behind [`AssignStrategy`]:
+//!
+//! * [`AssignStrategy::Brute`] — the linear scan above. Exact, and still
+//!   the right call when the served level has few clusters (the coarse
+//!   probe would scan most of them anyway).
+//! * [`AssignStrategy::Ivf`] — an [`IvfIndex`] over the level's centroid
+//!   matrix: rank `nlist` quantizer cells coarsely, exact-rerank the
+//!   rows of the `probe` nearest cells through the same kernel. Cached
+//!   per `(snapshot generation, level)` in an [`AssignCache`], so an
+//!   index is built at most once per snapshot swap and every splice or
+//!   ingest (which bumps the generation) invalidates it automatically.
+//!   `probe = nlist` is bit-identical to `Brute`.
+//!
+//! Input contract: query coordinates must be finite. A NaN/∞ row would
+//! otherwise fall out of the scan as `(u32::MAX, +∞)` — exactly the
+//! empty-level sentinel the shard fan-out merge relies on — so
+//! non-finite batches are rejected up front with
+//! [`AssignError::NonFiniteQuery`] instead of silently aliasing it.
 
 use super::snapshot::HierarchySnapshot;
 use crate::knn::brute::{CAND_TILE, QUERY_TILE};
+use crate::knn::IvfIndex;
 use crate::runtime::{Backend, PreparedDataset};
 use crate::util::par;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Fixed seed for serving-side IVF quantizer builds: the index must be
+/// a pure function of the centroid matrix, not of when it was built.
+pub const IVF_BUILD_SEED: u64 = 0x1BF_5EED;
+
+/// How queries find their nearest centroid at the served level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignStrategy {
+    /// Exact linear scan over every centroid (the default).
+    Brute,
+    /// Coarse-quantized scan: probe the `probe` nearest of `nlist`
+    /// k-means cells, exact-rerank their member centroids. `nlist = 0`
+    /// selects `⌈√num_clusters⌉` per level at build time.
+    Ivf { nlist: usize, probe: usize },
+}
+
+impl Default for AssignStrategy {
+    fn default() -> Self {
+        AssignStrategy::Brute
+    }
+}
+
+/// Typed rejection of an invalid query batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignError {
+    /// Query row `row` contains a NaN or infinite coordinate.
+    NonFiniteQuery { row: usize },
+}
+
+impl std::fmt::Display for AssignError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssignError::NonFiniteQuery { row } => {
+                write!(f, "query row {row} has a non-finite (NaN/∞) coordinate")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AssignError {}
+
+/// Reject batches containing non-finite coordinates, reporting the first
+/// offending row (`d = 0` batches are vacuously finite).
+pub fn validate_queries(queries: &[f32], d: usize) -> Result<(), AssignError> {
+    match queries.iter().position(|x| !x.is_finite()) {
+        Some(pos) => Err(AssignError::NonFiniteQuery { row: if d == 0 { 0 } else { pos / d } }),
+        None => Ok(()),
+    }
+}
 
 /// Per-query nearest cluster and its dissimilarity.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,9 +103,25 @@ impl AssignResult {
 }
 
 /// Assign each of `nq` query rows to its nearest cluster centroid at
-/// `level` (clamped; `usize::MAX` = coarsest). Queries are row-major
-/// `nq × d` under the snapshot's measure.
+/// `level` (clamped; `usize::MAX` = coarsest) by exact linear scan.
+/// Queries are row-major `nq × d` under the snapshot's measure, and must
+/// be finite ([`AssignError::NonFiniteQuery`] otherwise).
 pub fn assign_to_level(
+    snap: &HierarchySnapshot,
+    level: usize,
+    queries: &[f32],
+    nq: usize,
+    backend: &dyn Backend,
+    threads: usize,
+) -> Result<AssignResult, AssignError> {
+    assert_eq!(queries.len(), nq * snap.d, "queries must be nq*d row-major");
+    validate_queries(queries, snap.d)?;
+    Ok(brute_assign(snap, level, queries, nq, backend, threads))
+}
+
+/// The exact scan with inputs already validated (shared by the public
+/// entry point and by [`assign_with_strategy`]'s brute arm).
+fn brute_assign(
     snap: &HierarchySnapshot,
     level: usize,
     queries: &[f32],
@@ -43,7 +130,6 @@ pub fn assign_to_level(
     threads: usize,
 ) -> AssignResult {
     let d = snap.d;
-    assert_eq!(queries.len(), nq * d, "queries must be nq*d row-major");
     let level = snap.resolve_level(level);
     let centers = snap.centroids(level);
     let ncl = snap.num_clusters(level);
@@ -108,8 +194,100 @@ pub fn assign_at_tau(
     nq: usize,
     backend: &dyn Backend,
     threads: usize,
-) -> AssignResult {
+) -> Result<AssignResult, AssignError> {
     assign_to_level(snap, snap.level_for_tau(tau), queries, nq, backend, threads)
+}
+
+/// Lazily-built per-level IVF centroid indexes for one serving instance.
+///
+/// Keyed by `(snapshot generation, resolved level, requested nlist)`.
+/// Every visible snapshot mutation (ingest, splice, rebuild swap) goes
+/// through `ServeIndex::replace`, which strictly bumps the generation —
+/// so stale indexes can never serve a newer snapshot; they are evicted
+/// on the next lookup.
+#[derive(Debug, Default)]
+pub struct AssignCache {
+    built: Mutex<HashMap<(u64, usize, usize), Arc<IvfIndex>>>,
+}
+
+impl AssignCache {
+    pub fn new() -> Self {
+        AssignCache { built: Mutex::new(HashMap::new()) }
+    }
+
+    /// Cached indexes currently held (tests pin the eviction contract).
+    pub fn len(&self) -> usize {
+        self.built.lock().expect("assign cache poisoned").len()
+    }
+
+    /// The IVF index over `snap`'s centroids at `level`, building it on
+    /// first use. Builds run outside the lock (queries on other levels
+    /// proceed meanwhile); concurrent builders of the same key converge
+    /// because the build is deterministic, and the first insert wins.
+    pub fn index_for(
+        &self,
+        snap: &HierarchySnapshot,
+        level: usize,
+        nlist: usize,
+        backend: &dyn Backend,
+        threads: usize,
+    ) -> Arc<IvfIndex> {
+        let level = snap.resolve_level(level);
+        let key = (snap.generation, level, nlist);
+        {
+            let mut map = self.built.lock().expect("assign cache poisoned");
+            // superseded generations can never be queried again
+            map.retain(|k, _| k.0 == snap.generation);
+            if let Some(ix) = map.get(&key) {
+                return Arc::clone(ix);
+            }
+        }
+        let built = Arc::new(IvfIndex::build(
+            snap.centroids(level),
+            snap.num_clusters(level),
+            snap.d,
+            snap.measure,
+            nlist,
+            IVF_BUILD_SEED,
+            backend,
+            threads,
+        ));
+        let mut map = self.built.lock().expect("assign cache poisoned");
+        Arc::clone(map.entry(key).or_insert(built))
+    }
+}
+
+/// [`assign_to_level`] routed through `strategy`. The IVF arm pulls (or
+/// builds) the level's centroid index from `cache` and probes it; with
+/// `probe >= nlist` the result is bit-identical to the brute arm.
+pub fn assign_with_strategy(
+    snap: &HierarchySnapshot,
+    level: usize,
+    queries: &[f32],
+    nq: usize,
+    backend: &dyn Backend,
+    threads: usize,
+    strategy: AssignStrategy,
+    cache: &AssignCache,
+) -> Result<AssignResult, AssignError> {
+    match strategy {
+        AssignStrategy::Brute => assign_to_level(snap, level, queries, nq, backend, threads),
+        AssignStrategy::Ivf { nlist, probe } => {
+            assert_eq!(queries.len(), nq * snap.d, "queries must be nq*d row-major");
+            validate_queries(queries, snap.d)?;
+            let level = snap.resolve_level(level);
+            let ncl = snap.num_clusters(level);
+            if nq == 0 || ncl == 0 {
+                return Ok(AssignResult {
+                    cluster: vec![u32::MAX; nq],
+                    dist: vec![f32::INFINITY; nq],
+                });
+            }
+            let ix = cache.index_for(snap, level, nlist, backend, threads);
+            let (cluster, dist) = ix.search(queries, nq, probe.max(1), backend, threads);
+            Ok(AssignResult { cluster, dist })
+        }
+    }
 }
 
 /// Shared raw output pointers (see safety note at the write site).
@@ -148,7 +326,8 @@ mod tests {
     fn known_points_assign_to_their_own_cluster() {
         let (ds, snap) = snapshot();
         let level = snap.coarsest();
-        let got = assign_to_level(&snap, level, &ds.data, ds.n, &NativeBackend::new(), 3);
+        let got =
+            assign_to_level(&snap, level, &ds.data, ds.n, &NativeBackend::new(), 3).unwrap();
         let want = &snap.level(level).partition;
         let hits = (0..ds.n).filter(|&i| got.cluster[i] == want.assign[i]).count();
         // well-separated clusters: every point is closest to its own
@@ -159,8 +338,10 @@ mod tests {
     #[test]
     fn thread_count_does_not_change_assignment() {
         let (ds, snap) = snapshot();
-        let a = assign_to_level(&snap, snap.coarsest(), &ds.data, ds.n, &NativeBackend::new(), 1);
-        let b = assign_to_level(&snap, snap.coarsest(), &ds.data, ds.n, &NativeBackend::new(), 6);
+        let a = assign_to_level(&snap, snap.coarsest(), &ds.data, ds.n, &NativeBackend::new(), 1)
+            .unwrap();
+        let b = assign_to_level(&snap, snap.coarsest(), &ds.data, ds.n, &NativeBackend::new(), 6)
+            .unwrap();
         assert_eq!(a, b);
     }
 
@@ -169,7 +350,7 @@ mod tests {
         let (ds, snap) = snapshot();
         // querying a point against level 0 (centroids == points) must
         // return the point itself at distance ~0
-        let got = assign_to_level(&snap, 0, ds.row(17), 1, &NativeBackend::new(), 1);
+        let got = assign_to_level(&snap, 0, ds.row(17), 1, &NativeBackend::new(), 1).unwrap();
         assert_eq!(got.cluster[0], 17);
         assert!(got.dist[0] <= 1e-6);
     }
@@ -177,7 +358,73 @@ mod tests {
     #[test]
     fn empty_query_batch_is_fine() {
         let (_, snap) = snapshot();
-        let got = assign_to_level(&snap, 1, &[], 0, &NativeBackend::new(), 4);
+        let got = assign_to_level(&snap, 1, &[], 0, &NativeBackend::new(), 4).unwrap();
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn non_finite_queries_are_rejected_with_the_offending_row() {
+        let (ds, snap) = snapshot();
+        let backend = NativeBackend::new();
+        let mut q = ds.data[..3 * snap.d].to_vec();
+        q[snap.d + 1] = f32::NAN; // second row
+        assert_eq!(
+            assign_to_level(&snap, 1, &q, 3, &backend, 2),
+            Err(AssignError::NonFiniteQuery { row: 1 })
+        );
+        q[snap.d + 1] = f32::INFINITY;
+        assert_eq!(
+            assign_to_level(&snap, 1, &q, 3, &backend, 2),
+            Err(AssignError::NonFiniteQuery { row: 1 })
+        );
+        // ...and the error formats without panicking
+        let msg = AssignError::NonFiniteQuery { row: 1 }.to_string();
+        assert!(msg.contains("row 1"), "{msg}");
+    }
+
+    #[test]
+    fn ivf_probe_all_is_bit_identical_to_brute_at_every_level() {
+        let (ds, snap) = snapshot();
+        let backend = NativeBackend::new();
+        let cache = AssignCache::new();
+        let nq = 40;
+        let queries = &ds.data[..nq * snap.d];
+        for level in 0..=snap.coarsest() {
+            let ncl = snap.num_clusters(level);
+            let brute =
+                assign_to_level(&snap, level, queries, nq, &backend, 2).unwrap();
+            let ivf = assign_with_strategy(
+                &snap,
+                level,
+                queries,
+                nq,
+                &backend,
+                2,
+                AssignStrategy::Ivf { nlist: 0, probe: ncl.max(1) },
+                &cache,
+            )
+            .unwrap();
+            assert_eq!(ivf, brute, "level {level} ({ncl} clusters)");
+        }
+    }
+
+    #[test]
+    fn assign_cache_builds_once_and_evicts_on_generation_bump() {
+        let (ds, snap) = snapshot();
+        let backend = NativeBackend::new();
+        let cache = AssignCache::new();
+        let a = cache.index_for(&snap, snap.coarsest(), 0, &backend, 2);
+        let b = cache.index_for(&snap, snap.coarsest(), 0, &backend, 2);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must reuse the built index");
+        assert_eq!(cache.len(), 1);
+        cache.index_for(&snap, 0, 0, &backend, 2);
+        assert_eq!(cache.len(), 2, "distinct levels cache separately");
+        // a snapshot swap (ingest/splice/rebuild all bump generation)
+        // invalidates every index of the old generation
+        let mut bumped = snap.clone();
+        bumped.generation += 1;
+        cache.index_for(&bumped, snap.coarsest(), 0, &backend, 2);
+        assert_eq!(cache.len(), 1, "old-generation indexes must be evicted");
+        let _ = ds;
     }
 }

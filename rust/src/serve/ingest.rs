@@ -98,6 +98,32 @@ impl IngestConfig {
     }
 }
 
+/// Typed rejection of a batch the snapshot cannot absorb.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestError {
+    /// Appending `adding` points to the current `existing` would push a
+    /// point (or cluster) id past the `u32` id space — `u32::MAX` is
+    /// reserved as the "no cluster" sentinel, so the last usable id is
+    /// `u32::MAX - 1`. Before this was checked, the widening casts
+    /// silently wrapped and corrupted the level-0 partition.
+    TooManyPoints { existing: usize, adding: usize },
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::TooManyPoints { existing, adding } => write!(
+                f,
+                "ingesting {adding} points into a snapshot of {existing} would overflow \
+                 the u32 id space (max {} points)",
+                u32::MAX
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
 /// What one ingest call did.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct IngestReport {
@@ -137,12 +163,17 @@ enum Target {
 
 /// Ingest `batch` (row-major, `len % d == 0`) into `snap`. See module
 /// docs for the policy; returns what happened.
+///
+/// Fails with [`IngestError::TooManyPoints`] — before touching the
+/// snapshot — when the batch would exhaust the `u32` id space (point
+/// ids, and therefore cluster ids, must stay below the `u32::MAX`
+/// sentinel).
 pub fn ingest_batch(
     snap: &mut HierarchySnapshot,
     batch: &[f32],
     cfg: &IngestConfig,
     backend: &dyn Backend,
-) -> IngestReport {
+) -> Result<IngestReport, IngestError> {
     let d = snap.d;
     assert!(d > 0, "snapshot has no dimensions");
     assert_eq!(batch.len() % d, 0, "batch must be row-major with the snapshot's d");
@@ -150,7 +181,19 @@ pub fn ingest_batch(
     let mut report = IngestReport { ingested: m, ..Default::default() };
     if m == 0 {
         report.rebuild_recommended = snap.needs_rebuild(cfg.drift_limit);
-        return report;
+        return Ok(report);
+    }
+    // id-space guard, checked before any point is read: every new point
+    // id lands in n..n+m, and per-level cluster counts are bounded by
+    // the point count, so one checked add covers every widening cast
+    // below (`u32::MAX` itself is reserved as the "no cluster" sentinel)
+    if snap
+        .n
+        .checked_add(m)
+        .filter(|&total| total <= u32::MAX as usize)
+        .is_none()
+    {
+        return Err(IngestError::TooManyPoints { existing: snap.n, adding: m });
     }
     let base = snap.resolve_level(cfg.level);
     let tau = cfg.attach_tau.unwrap_or_else(|| snap.threshold(base));
@@ -336,13 +379,16 @@ pub fn ingest_batch(
     for i in 0..n_old {
         let c = snap.levels[base].partition.assign[i] as usize;
         if base_rep[c] == u32::MAX {
-            base_rep[c] = i as u32;
+            base_rep[c] = u32::try_from(i).expect("point id guarded at entry");
         }
     }
     snap.points.extend_from_slice(batch);
     snap.n = n_old + m;
     // level 0 stays "one singleton per point": ids are point indices
-    snap.levels[0].partition.assign.extend(n_old as u32..(n_old + m) as u32);
+    // (in-range by the entry guard: n_old + m <= u32::MAX)
+    let first = u32::try_from(n_old).expect("point id guarded at entry");
+    let last = u32::try_from(n_old + m).expect("point id guarded at entry");
+    snap.levels[0].partition.assign.extend(first..last);
 
     let nlv = snap.levels.len();
     let mut fresh_ids: Vec<Vec<Option<u32>>> = vec![vec![None; nlv]; fresh_groups];
@@ -404,7 +450,7 @@ pub fn ingest_batch(
             ("rebuild_recommended", report.rebuild_recommended.into()),
         ],
     );
-    report
+    Ok(report)
 }
 
 /// Merge each group of base-level clusters into one and cascade the
@@ -496,9 +542,11 @@ fn apply_splices(
     base_relabel
 }
 
-/// Append an empty cluster slot to a level, returning its id.
+/// Append an empty cluster slot to a level, returning its id. Cluster
+/// counts are bounded by the point count, so the entry guard in
+/// [`ingest_batch`] keeps this conversion in range.
 fn alloc_cluster(lv: &mut super::snapshot::SnapshotLevel, d: usize) -> u32 {
-    let id = lv.aggs.len() as u32;
+    let id = u32::try_from(lv.aggs.len()).expect("cluster id guarded at entry");
     lv.aggs.push(CentroidAgg::zero(d));
     lv.centroids.resize(lv.centroids.len() + d, 0.0);
     id
@@ -538,8 +586,8 @@ mod tests {
     fn zero_point_ingest_is_bit_identical() {
         let (_, mut snap) = snapshot(1);
         let before = snap.clone();
-        let report =
-            ingest_batch(&mut snap, &[], &IngestConfig::default(), &NativeBackend::new());
+        let report = ingest_batch(&mut snap, &[], &IngestConfig::default(), &NativeBackend::new())
+            .unwrap();
         assert_eq!(snap, before);
         assert_eq!(report.ingested, 0);
         assert_eq!(report.attached, 0);
@@ -554,7 +602,7 @@ mod tests {
         // jitter point 0 slightly: must join point 0's cluster
         let batch: Vec<f32> = ds.row(0).iter().map(|x| x + 1e-3).collect();
         let report =
-            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert_eq!(report.attached, 1, "{report:?}");
         assert_eq!(snap.n, ds.n + 1);
         assert_eq!(snap.level(coarse).partition.assign[ds.n], want);
@@ -586,7 +634,7 @@ mod tests {
             }
         }
         let report =
-            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert_eq!(report.new_clusters, 1, "{report:?}");
         assert_eq!(snap.num_clusters(coarse), before_k + 1);
         // all six land in the same (new) cluster at the coarsest cut
@@ -603,8 +651,10 @@ mod tests {
         let batch: Vec<f32> = (0..8 * ds.d).map(|i| ds.data[i] + 2e-3).collect();
         let mut a = snap.clone();
         let mut b = snap.clone();
-        let ra = ingest_batch(&mut a, &batch, &IngestConfig::default(), &NativeBackend::new());
-        let rb = ingest_batch(&mut b, &batch, &IngestConfig::default(), &NativeBackend::new());
+        let ra = ingest_batch(&mut a, &batch, &IngestConfig::default(), &NativeBackend::new())
+            .unwrap();
+        let rb = ingest_batch(&mut b, &batch, &IngestConfig::default(), &NativeBackend::new())
+            .unwrap();
         assert_eq!(ra, rb);
         assert_eq!(a, b);
     }
@@ -668,7 +718,7 @@ mod tests {
         let cb = snap.centroids(coarse)[2..4].to_vec();
         let batch = crate::data::mixture::bridge_chain(&ca, &cb, tau);
         let report =
-            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert_eq!(report.conflicts, 1, "{report:?}");
         assert_eq!(report.online_merges, 0);
         assert_eq!(snap.num_clusters(coarse), 2, "frozen structure must stay frozen");
@@ -690,7 +740,7 @@ mod tests {
         let batch = crate::data::mixture::bridge_chain(&ca, &cb, tau);
         let m = batch.len() / 2;
         let cfg = IngestConfig { online_merges: true, ..Default::default() };
-        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new()).unwrap();
         assert_eq!(report.online_merges, 1, "{report:?}");
         assert_eq!(report.conflicts, 0);
         assert_eq!(report.attached, m, "every chain point joins the merged cluster");
@@ -738,7 +788,7 @@ mod tests {
         let batch = crate::data::mixture::bridge_chain(&cb, &cc, tau);
         let mut snap = snap0.clone();
         let cfg = IngestConfig { level: base, online_merges: true, ..Default::default() };
-        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new()).unwrap();
         assert_eq!(report.online_merges, 1, "{report:?}\n{}", snap.summary());
         assert_eq!(snap.num_clusters(base), 3, "B and C merge at the base level");
         assert_eq!(snap.num_clusters(snap.coarsest()), 1, "parents must cascade-merge");
@@ -768,15 +818,41 @@ mod tests {
             &batch,
             &IngestConfig { online_merges: true, workers: 1, ..Default::default() },
             &NativeBackend::new(),
-        );
+        )
+        .unwrap();
         assert_eq!(r1.online_merges, 1);
         for workers in [2usize, 4, 8] {
             let mut snap = snap0.clone();
             let cfg = IngestConfig { online_merges: true, workers, ..Default::default() };
-            let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+            let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new()).unwrap();
             assert_eq!(report, r1, "report differs at workers={workers}");
             assert_eq!(snap, reference, "snapshot differs at workers={workers}");
         }
+    }
+
+    /// Bugfix regression: widening `as u32` casts used to wrap silently
+    /// past the id space and corrupt the level-0 partition; the checked
+    /// guard must reject the batch before any snapshot state changes.
+    #[test]
+    fn id_space_overflow_is_rejected_before_mutation() {
+        let (ds, mut snap) = snapshot(6);
+        // synthetic boundary: pretend the snapshot already holds nearly
+        // u32::MAX points (only the counter is faked — the guard fires
+        // before any point data is touched)
+        snap.n = u32::MAX as usize - 1;
+        let before = snap.clone();
+        let batch: Vec<f32> = ds.data[..2 * ds.d].to_vec();
+        let err = ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new())
+            .unwrap_err();
+        assert_eq!(
+            err,
+            IngestError::TooManyPoints { existing: u32::MAX as usize - 1, adding: 2 }
+        );
+        assert_eq!(snap, before, "a rejected batch must leave the snapshot untouched");
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // empty batches are still fine at the boundary
+        assert!(ingest_batch(&mut snap, &[], &IngestConfig::default(), &NativeBackend::new())
+            .is_ok());
     }
 
     #[test]
@@ -784,7 +860,7 @@ mod tests {
         let (ds, mut snap) = snapshot(5);
         let cfg = IngestConfig { drift_limit: 0.01, ..Default::default() };
         let batch: Vec<f32> = ds.data[..4 * ds.d].to_vec();
-        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+        let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new()).unwrap();
         assert!(report.rebuild_recommended, "4/260 > 1% drift must recommend rebuild");
         assert!(snap.needs_rebuild(0.01));
         assert!(!snap.needs_rebuild(0.5));

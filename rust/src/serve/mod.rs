@@ -17,7 +17,13 @@
 //! * [`assign`] — batched nearest-cluster assignment for unseen points,
 //!   tiled exactly like [`crate::knn::brute`] (query blocks across
 //!   threads, centroid tiles through a [`crate::runtime::Backend`]) so
-//!   PJRT acceleration applies unchanged;
+//!   PJRT acceleration applies unchanged; an optional IVF strategy
+//!   ([`AssignStrategy::Ivf`], indexes cached per snapshot generation in
+//!   an [`AssignCache`]) makes assignment sub-linear in the cluster
+//!   count while `probe = nlist` stays bit-identical to the scan;
+//!   non-finite query rows are rejected with a typed
+//!   [`AssignError::NonFiniteQuery`] instead of aliasing the
+//!   empty-level sentinel;
 //! * [`ingest`] — mini-batch insertion: new points attach by k-NN
 //!   against cluster centroids, a *local* SCC re-clustering (the
 //!   sequential round engine via
@@ -95,8 +101,11 @@ pub mod service;
 pub mod shard;
 pub mod snapshot;
 
-pub use assign::{assign_at_tau, assign_to_level, AssignResult};
-pub use ingest::{ingest_batch, IngestConfig, IngestReport};
+pub use assign::{
+    assign_at_tau, assign_to_level, assign_with_strategy, validate_queries, AssignCache,
+    AssignError, AssignResult, AssignStrategy,
+};
+pub use ingest::{ingest_batch, IngestConfig, IngestError, IngestReport};
 pub use persist::{
     load_snapshot, peek_info, save_snapshot, save_snapshot_if_newer, snapshot_from_bytes,
     snapshot_to_bytes, PersistError, SnapshotFileInfo,

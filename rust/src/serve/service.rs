@@ -36,8 +36,11 @@
 //! [`crate::util::par::parallel_ranges`] inside
 //! [`super::assign::assign_to_level`].
 
-use super::assign::{assign_to_level, AssignResult};
-use super::ingest::{ingest_batch, IngestConfig, IngestReport};
+use super::assign::{
+    assign_with_strategy, validate_queries, AssignCache, AssignError, AssignResult,
+    AssignStrategy,
+};
+use super::ingest::{ingest_batch, IngestConfig, IngestError, IngestReport};
 use super::snapshot::HierarchySnapshot;
 use crate::core::Dataset;
 use crate::pipeline::{BruteKnn, Clusterer, GraphBuilder, GraphContext, SccClusterer};
@@ -116,23 +119,27 @@ impl ServeIndex {
     /// outcome counts): the rebuild replays every queued batch onto its
     /// fresh snapshot before the swap, so nothing is lost and ingest
     /// never blocks for the rebuild's duration.
+    ///
+    /// A rejected batch ([`IngestError`], e.g. id-space exhaustion)
+    /// leaves the snapshot untouched — the error surfaces before the
+    /// copy-on-write swap.
     pub fn ingest(
         &self,
         batch: &[f32],
         cfg: &IngestConfig,
         backend: &dyn Backend,
-    ) -> IngestReport {
+    ) -> Result<IngestReport, IngestError> {
         let d = self.snapshot().d.max(1);
         loop {
             {
                 let mut q = self.pending.lock().expect("pending queue");
                 if q.rebuilding {
                     q.batches.push((batch.to_vec(), cfg.clone()));
-                    return IngestReport {
+                    return Ok(IngestReport {
                         ingested: batch.len() / d,
                         queued: true,
                         ..Default::default()
-                    };
+                    });
                 }
             }
             let _gate = self.ingest_gate.lock().expect("ingest gate");
@@ -143,9 +150,9 @@ impl ServeIndex {
                 continue; // enqueue on the next iteration
             }
             let mut next = (*self.snapshot()).clone();
-            let report = ingest_batch(&mut next, batch, cfg, backend);
+            let report = ingest_batch(&mut next, batch, cfg, backend)?;
             self.replace(next);
-            return report;
+            return Ok(report);
         }
     }
 
@@ -250,8 +257,15 @@ impl ServeIndex {
         for (batch, icfg) in q.batches.drain(..) {
             // outcome counts fold into `fresh`'s own counters
             // (ingested / conflicts / online_merges), so replayed
-            // batches stay observable on the post-rebuild snapshot
-            ingest_batch(&mut fresh, &batch, &icfg, backend);
+            // batches stay observable on the post-rebuild snapshot. A
+            // batch the id space can no longer hold is dropped with an
+            // event rather than wedging the swap.
+            if let Err(e) = ingest_batch(&mut fresh, &batch, &icfg, backend) {
+                crate::telemetry::event(
+                    "serve.ingest.replay_error",
+                    &[("error", format!("{e}").into())],
+                );
+            }
         }
         q.rebuilding = false;
         drop(q);
@@ -281,7 +295,14 @@ impl Drop for RebuildAbortGuard<'_> {
         if !batches.is_empty() {
             let mut next = (*self.index.snapshot()).clone();
             for (batch, icfg) in &batches {
-                ingest_batch(&mut next, batch, icfg, self.backend);
+                // never panic in a drop guard: an unappliable batch is
+                // dropped with an event (same policy as replay)
+                if let Err(e) = ingest_batch(&mut next, batch, icfg, self.backend) {
+                    crate::telemetry::event(
+                        "serve.ingest.replay_error",
+                        &[("error", format!("{e}").into())],
+                    );
+                }
             }
             self.index.replace(next);
         }
@@ -301,11 +322,22 @@ pub struct ServiceConfig {
     /// [`Service::submit_chunked`] splits bigger submissions into
     /// batches of this many queries.
     pub max_batch: usize,
+    /// How workers resolve nearest centroids: exact scan or coarse IVF
+    /// probe (see [`AssignStrategy`]). IVF indexes are cached per
+    /// `(snapshot generation, level)` inside the service, so each one
+    /// is built once per snapshot swap.
+    pub assign: AssignStrategy,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, level: usize::MAX, threads_per_request: 1, max_batch: 512 }
+        ServiceConfig {
+            workers: 4,
+            level: usize::MAX,
+            threads_per_request: 1,
+            max_batch: 512,
+            assign: AssignStrategy::Brute,
+        }
     }
 }
 
@@ -346,6 +378,10 @@ struct Shared {
     queries_served: Arc<Counter>,
     requests_served: Arc<Counter>,
     started: Instant,
+    /// Lazily-built per-level IVF centroid indexes (only populated when
+    /// [`ServiceConfig::assign`] is [`AssignStrategy::Ivf`]); generation
+    /// bumps evict stale entries on the next lookup.
+    assign_cache: AssignCache,
 }
 
 /// A running worker pool. Dropping (or [`Service::shutdown`]) closes the
@@ -379,6 +415,7 @@ impl Service {
             queries_served,
             requests_served,
             started: Instant::now(),
+            assign_cache: AssignCache::new(),
         });
         let workers = (0..shared.cfg.workers.max(1))
             .map(|w| {
@@ -399,7 +436,16 @@ impl Service {
     /// enters the worker pool (whatever stray bytes `queries` holds are
     /// ignored rather than tripping the `nq·d` shape assert inside a
     /// worker thread) and is not counted in the service's statistics.
-    pub fn submit(&self, queries: Vec<f32>, nq: usize) -> mpsc::Receiver<QueryResponse> {
+    ///
+    /// Batches with non-finite (NaN/∞) coordinates are rejected here, on
+    /// the submitting thread, with [`AssignError::NonFiniteQuery`] — a
+    /// NaN row would otherwise serve as `(u32::MAX, +∞)`, the
+    /// empty-level sentinel the shard fan-out merge keys on.
+    pub fn submit(
+        &self,
+        queries: Vec<f32>,
+        nq: usize,
+    ) -> Result<mpsc::Receiver<QueryResponse>, AssignError> {
         let (rtx, rrx) = mpsc::channel();
         if nq == 0 {
             let snap = self.shared.index.snapshot();
@@ -409,35 +455,47 @@ impl Service {
                 generation: snap.generation,
                 latency_secs: 0.0,
             });
-            return rrx;
+            return Ok(rrx);
         }
+        validate_queries(&queries, self.shared.index.snapshot().d)?;
         self.tx
             .as_ref()
             .expect("service is live")
             .send(Job::Batch { queries, nq, resp: rtx })
             .expect("worker pool alive");
-        rrx
+        Ok(rrx)
     }
 
     /// Split a large query set into `cfg.max_batch`-sized requests and
     /// enqueue them all (batched submission; responses arrive per chunk).
-    pub fn submit_chunked(&self, queries: &[f32], nq: usize) -> Vec<mpsc::Receiver<QueryResponse>> {
+    /// Validation is all-or-nothing: a non-finite row anywhere in the
+    /// set rejects the whole submission before any chunk is enqueued.
+    pub fn submit_chunked(
+        &self,
+        queries: &[f32],
+        nq: usize,
+    ) -> Result<Vec<mpsc::Receiver<QueryResponse>>, AssignError> {
         let d = if nq == 0 { 0 } else { queries.len() / nq };
         assert_eq!(queries.len(), nq * d, "queries must be nq*d row-major");
+        validate_queries(queries, d)?;
         let chunk = self.shared.cfg.max_batch.max(1);
         let mut handles = Vec::new();
         let mut q0 = 0usize;
         while q0 < nq {
             let q1 = (q0 + chunk).min(nq);
-            handles.push(self.submit(queries[q0 * d..q1 * d].to_vec(), q1 - q0));
+            handles.push(self.submit(queries[q0 * d..q1 * d].to_vec(), q1 - q0)?);
             q0 = q1;
         }
-        handles
+        Ok(handles)
     }
 
     /// Submit one batch and wait for its response.
-    pub fn query_blocking(&self, queries: Vec<f32>, nq: usize) -> QueryResponse {
-        self.submit(queries, nq).recv().expect("service response")
+    pub fn query_blocking(
+        &self,
+        queries: Vec<f32>,
+        nq: usize,
+    ) -> Result<QueryResponse, AssignError> {
+        Ok(self.submit(queries, nq)?.recv().expect("service response"))
     }
 
     /// The index this service reads from.
@@ -533,14 +591,17 @@ fn worker_loop(shared: &Shared) {
         let timer = Timer::start();
         let snap = shared.index.snapshot();
         let level = snap.resolve_level(shared.cfg.level);
-        let result = assign_to_level(
+        let result = assign_with_strategy(
             &snap,
             level,
             &queries,
             nq,
             shared.backend.as_ref(),
             shared.cfg.threads_per_request.max(1),
-        );
+            shared.cfg.assign,
+            &shared.assign_cache,
+        )
+        .expect("queries validated at submit");
         let secs = timer.secs();
         shared.latency.observe(secs);
         shared.queries_served.add(nq as u64);
@@ -765,6 +826,7 @@ impl ServiceStats {
 
 #[cfg(test)]
 mod tests {
+    use super::super::assign::assign_to_level;
     use super::*;
     use crate::data::mixture::{separated_mixture, MixtureSpec};
     use crate::knn::knn_graph;
@@ -796,7 +858,7 @@ mod tests {
             Arc::new(NativeBackend::new()),
             ServiceConfig { workers: 3, max_batch: 64, ..Default::default() },
         );
-        let handles = service.submit_chunked(&ds.data, ds.n);
+        let handles = service.submit_chunked(&ds.data, ds.n).unwrap();
         let mut pooled = vec![u32::MAX; ds.n];
         let mut q0 = 0usize;
         for h in handles {
@@ -813,7 +875,8 @@ mod tests {
             ds.n,
             &NativeBackend::new(),
             1,
-        );
+        )
+        .unwrap();
         assert_eq!(pooled, direct.cluster, "pool must not change answers");
         let stats = service.shutdown();
         assert_eq!(stats.queries, ds.n as u64);
@@ -831,13 +894,13 @@ mod tests {
         );
         let before = index.snapshot();
         let batch: Vec<f32> = ds.row(3).iter().map(|x| x + 1e-3).collect();
-        let report = index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        let report = index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert_eq!(report.ingested, 1);
         let after = index.snapshot();
         assert_eq!(after.n, before.n + 1, "new snapshot swapped in");
         assert_eq!(before.n, ds.n, "old snapshot untouched (copy-on-write)");
         // queries keep flowing against the new snapshot
-        let r = service.query_blocking(ds.row(3).to_vec(), 1);
+        let r = service.query_blocking(ds.row(3).to_vec(), 1).unwrap();
         assert_eq!(
             r.result.cluster[0],
             after.level(after.coarsest()).partition.assign[3]
@@ -850,7 +913,7 @@ mod tests {
         let (ds, index) = index();
         assert_eq!(index.generation(), 0);
         let batch: Vec<f32> = ds.row(0).to_vec();
-        index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert_eq!(index.generation(), 1, "ingest swap bumps the generation");
         index.replace((*index.snapshot()).clone());
         assert_eq!(index.generation(), 2, "every swap bumps, monotone");
@@ -871,7 +934,7 @@ mod tests {
         // push past a tiny drift limit
         let batch: Vec<f32> = ds.data[..8 * ds.d].to_vec();
         let cfg = IngestConfig { drift_limit: 0.01, ..Default::default() };
-        let report = index.ingest(&batch, &cfg, &NativeBackend::new());
+        let report = index.ingest(&batch, &cfg, &NativeBackend::new()).unwrap();
         assert!(report.rebuild_recommended);
         let rcfg = RebuildConfig { drift_limit: 0.01, knn_k: 8, ..Default::default() };
         assert!(index.rebuild_if_needed(&rcfg, &NativeBackend::new()));
@@ -900,7 +963,7 @@ mod tests {
         assert_eq!(worker.rebuilds(), 0);
         let batch: Vec<f32> = ds.data[..8 * ds.d].to_vec();
         let cfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
-        index.ingest(&batch, &cfg, &NativeBackend::new());
+        index.ingest(&batch, &cfg, &NativeBackend::new()).unwrap();
         // 8/220 > 2%: the worker must notice and swap exactly once
         let deadline = Instant::now() + Duration::from_secs(60);
         while worker.rebuilds() == 0 && Instant::now() < deadline {
@@ -945,7 +1008,7 @@ mod tests {
         // push past the drift limit so the rebuild fires
         let primer: Vec<f32> = ds.data[..8 * ds.d].to_vec();
         let icfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
-        let r = index.ingest(&primer, &icfg, &NativeBackend::new());
+        let r = index.ingest(&primer, &icfg, &NativeBackend::new()).unwrap();
         assert!(r.rebuild_recommended);
         assert!(!r.queued, "no rebuild in flight yet: ingest applies directly");
         let n_at_rebuild = index.snapshot().n;
@@ -971,7 +1034,7 @@ mod tests {
         // mid-rebuild ingest: returns immediately as queued, no swap
         let gen_before = index.generation();
         let batch: Vec<f32> = ds.row(5).iter().map(|x| x + 1e-3).collect();
-        let queued = index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        let queued = index.ingest(&batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert!(queued.queued, "{queued:?}");
         assert_eq!(queued.ingested, 1);
         assert_eq!(queued.attached + queued.new_clusters + queued.conflicts, 0);
@@ -1020,7 +1083,7 @@ mod tests {
         let (ds, index) = index();
         let primer: Vec<f32> = ds.data[..8 * ds.d].to_vec();
         let icfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
-        index.ingest(&primer, &icfg, &NativeBackend::new());
+        index.ingest(&primer, &icfg, &NativeBackend::new()).unwrap();
         let bad = RebuildConfig {
             drift_limit: 0.02,
             knn_k: 8,
@@ -1032,11 +1095,9 @@ mod tests {
         }));
         assert!(outcome.is_err(), "the builder panic must propagate");
         // the guard closed the queue: ingests apply directly again …
-        let r = index.ingest(
-            &ds.row(0).to_vec(),
-            &IngestConfig::default(),
-            &NativeBackend::new(),
-        );
+        let r = index
+            .ingest(&ds.row(0).to_vec(), &IngestConfig::default(), &NativeBackend::new())
+            .unwrap();
         assert!(!r.queued, "{r:?}");
         assert_eq!(r.attached + r.new_clusters + r.conflicts, 1);
         // … and a healthy rebuild still goes through afterwards
@@ -1064,7 +1125,7 @@ mod tests {
             9.0, 9.0, 9.1, 9.0, 9.0, 9.1,
         ];
         let icfg = IngestConfig { drift_limit: 0.5, ..Default::default() };
-        let report = index.ingest(&batch, &icfg, &NativeBackend::new());
+        let report = index.ingest(&batch, &icfg, &NativeBackend::new()).unwrap();
         assert_eq!(report.ingested, 6);
         assert!(
             report.rebuild_recommended,
@@ -1092,7 +1153,7 @@ mod tests {
         let (ds, index) = index();
         let batch: Vec<f32> = ds.data[..8 * ds.d].to_vec();
         let icfg = IngestConfig { drift_limit: 0.02, ..Default::default() };
-        index.ingest(&batch, &icfg, &NativeBackend::new());
+        index.ingest(&batch, &icfg, &NativeBackend::new()).unwrap();
         let rcfg = RebuildConfig {
             drift_limit: 0.02,
             knn_k: 8,
@@ -1124,7 +1185,9 @@ mod tests {
 
         let (ds, index) = index();
         // bump to generation 1 so the stamp is non-trivial
-        index.ingest(&ds.row(0).to_vec(), &IngestConfig::default(), &NativeBackend::new());
+        index
+            .ingest(&ds.row(0).to_vec(), &IngestConfig::default(), &NativeBackend::new())
+            .unwrap();
         assert_eq!(index.generation(), 1);
         index.save(&path).expect("save");
 
@@ -1158,18 +1221,18 @@ mod tests {
             Arc::new(NativeBackend::new()),
             ServiceConfig { workers: 1, ..Default::default() },
         );
-        let r = service.query_blocking(Vec::new(), 0);
+        let r = service.query_blocking(Vec::new(), 0).unwrap();
         assert!(r.result.is_empty(), "{:?}", r.result);
         assert_eq!(r.level, index.snapshot().coarsest());
         assert_eq!(r.generation, index.generation());
         // stray bytes with nq == 0 are ignored, not shape-asserted
-        let r = service.query_blocking(vec![1.0, 2.0, 3.0], 0);
+        let r = service.query_blocking(vec![1.0, 2.0, 3.0], 0).unwrap();
         assert!(r.result.is_empty());
         assert_eq!(service.stats().queries, 0, "empty batches don't count as traffic");
         // the pool is still healthy afterwards
-        let r = service.query_blocking(ds.row(0).to_vec(), 1);
+        let r = service.query_blocking(ds.row(0).to_vec(), 1).unwrap();
         assert_eq!(r.result.len(), 1);
-        let handles = service.submit_chunked(&[], 0);
+        let handles = service.submit_chunked(&[], 0).unwrap();
         assert!(handles.is_empty(), "chunked empty submission yields no handles");
         service.shutdown();
     }
@@ -1193,10 +1256,10 @@ mod tests {
             ServiceConfig { workers: 2, ..Default::default() },
         );
         for j in 0..7 {
-            a.query_blocking(ds.row(j).to_vec(), 1);
+            a.query_blocking(ds.row(j).to_vec(), 1).unwrap();
         }
         for j in 0..5 {
-            b.query_blocking(ds.row(j).to_vec(), 1);
+            b.query_blocking(ds.row(j).to_vec(), 1).unwrap();
         }
         let merged = Service::merged_stats(&[&a, &b]);
         assert_eq!(merged.requests, 12);
@@ -1220,5 +1283,74 @@ mod tests {
         assert_eq!((empty.qps, empty.p50, empty.p99, empty.max_latency), (0.0, 0.0, 0.0, 0.0));
         a.shutdown();
         b.shutdown();
+    }
+
+    /// Tentpole contract at the service layer: an IVF-strategy pool with
+    /// `probe = nlist` answers bit-identically to a brute pool, and the
+    /// strategy survives a snapshot swap (the cache rebuilds for the new
+    /// generation).
+    #[test]
+    fn ivf_service_with_full_probe_matches_brute_service() {
+        let (ds, index) = index();
+        let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+        let ncl = index.snapshot().num_clusters(index.snapshot().coarsest());
+        let brute = Service::start(
+            Arc::clone(&index),
+            backend.clone(),
+            ServiceConfig { workers: 2, ..Default::default() },
+        );
+        let ivf = Service::start(
+            Arc::clone(&index),
+            backend.clone(),
+            ServiceConfig {
+                workers: 2,
+                assign: AssignStrategy::Ivf { nlist: ncl, probe: ncl },
+                ..Default::default()
+            },
+        );
+        let a = brute.query_blocking(ds.data[..20 * ds.d].to_vec(), 20).unwrap();
+        let b = ivf.query_blocking(ds.data[..20 * ds.d].to_vec(), 20).unwrap();
+        assert_eq!(a.result, b.result, "probe=nlist must be bit-identical to brute");
+        // swap a new generation in; the ivf pool must keep agreeing
+        index
+            .ingest(&ds.row(1).to_vec(), &IngestConfig::default(), &NativeBackend::new())
+            .unwrap();
+        let a = brute.query_blocking(ds.row(2).to_vec(), 1).unwrap();
+        let b = ivf.query_blocking(ds.row(2).to_vec(), 1).unwrap();
+        assert_eq!(a.result, b.result);
+        assert_eq!(b.generation, index.generation(), "served from the fresh snapshot");
+        brute.shutdown();
+        ivf.shutdown();
+    }
+
+    /// Bugfix regression (pooled path): a NaN/∞ coordinate must be
+    /// rejected on the submitting thread, not flow through a worker as
+    /// the `(u32::MAX, +∞)` empty-level sentinel.
+    #[test]
+    fn non_finite_submission_is_rejected_before_the_pool() {
+        let (ds, index) = index();
+        let service = Service::start(
+            Arc::clone(&index),
+            Arc::new(NativeBackend::new()),
+            ServiceConfig { workers: 1, ..Default::default() },
+        );
+        let mut bad = ds.row(0).to_vec();
+        bad[1] = f32::NAN;
+        assert_eq!(
+            service.query_blocking(bad.clone(), 1).unwrap_err(),
+            AssignError::NonFiniteQuery { row: 0 }
+        );
+        // chunked: all-or-nothing, the offending row is globally indexed
+        let mut two = ds.row(0).to_vec();
+        two.extend_from_slice(&bad);
+        assert_eq!(
+            service.submit_chunked(&two, 2).unwrap_err(),
+            AssignError::NonFiniteQuery { row: 1 }
+        );
+        // the pool stays healthy and statistics uncontaminated
+        assert_eq!(service.stats().queries, 0);
+        let r = service.query_blocking(ds.row(0).to_vec(), 1).unwrap();
+        assert_eq!(r.result.len(), 1);
+        service.shutdown();
     }
 }

@@ -40,7 +40,7 @@ use super::manifest::{ShardError, ShardManifest};
 use super::partition::{cluster_shards, owned_points, shard_sketch, sketch_distance, ShardSpec};
 use crate::core::Partition;
 use crate::runtime::Backend;
-use crate::serve::ingest::{IngestConfig, IngestReport};
+use crate::serve::ingest::{IngestConfig, IngestError, IngestReport};
 use crate::serve::persist::{load_snapshot, save_snapshot_if_newer, PersistError};
 use crate::serve::service::{RebuildConfig, ServeIndex};
 use crate::serve::snapshot::{HierarchySnapshot, SnapshotLevel};
@@ -274,17 +274,19 @@ impl ShardedIndex {
     /// changed. When a global rebuild is in flight the batch is queued
     /// by the global index ([`IngestReport::queued`]) and the
     /// projections are refreshed by the rebuild's own reproject instead.
+    /// A rejected batch (e.g. [`IngestError::TooManyPoints`]) propagates
+    /// before any reprojection: the tier is untouched.
     pub fn ingest(
         &self,
         batch: &[f32],
         cfg: &IngestConfig,
         backend: &dyn Backend,
-    ) -> IngestReport {
-        let report = self.global.ingest(batch, cfg, backend);
+    ) -> Result<IngestReport, IngestError> {
+        let report = self.global.ingest(batch, cfg, backend)?;
         if !report.queued {
             self.reproject();
         }
-        report
+        Ok(report)
     }
 
     /// Recompute the partition and every projection from the current
@@ -606,7 +608,8 @@ mod tests {
                 1,
                 &NativeBackend::new(),
                 1,
-            );
+            )
+            .unwrap();
             assert_eq!(got.cluster, vec![u32::MAX]);
             assert_eq!(got.dist, vec![f32::INFINITY]);
         }
@@ -621,7 +624,7 @@ mod tests {
         // index swaps, but only the owning shard's projection changes
         let snap0 = tier.global().snapshot();
         let row = snap0.point_row(0).to_vec();
-        let report = tier.ingest(&row, &IngestConfig::default(), &NativeBackend::new());
+        let report = tier.ingest(&row, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         assert_eq!(report.ingested, 1);
         assert!(!report.queued);
         let after: Vec<u64> = (0..4).map(|s| tier.shard(s).generation()).collect();
@@ -660,7 +663,7 @@ mod tests {
         let tier = ShardedIndex::new(global, spec);
         // advance one shard's generation with a real ingest first
         let row = tier.global().snapshot().point_row(3).to_vec();
-        tier.ingest(&row, &IngestConfig::default(), &NativeBackend::new());
+        tier.ingest(&row, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         let dir = std::env::temp_dir().join(format!("scc-tier-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         tier.save_all(&dir).unwrap();

@@ -32,7 +32,7 @@ use std::sync::Arc;
 use super::index::{ShardViews, ShardedIndex};
 use super::partition::sketch_distance;
 use crate::runtime::Backend;
-use crate::serve::assign::AssignResult;
+use crate::serve::assign::{validate_queries, AssignError, AssignResult};
 use crate::serve::service::{QueryResponse, Service, ServiceConfig, ServiceStats};
 use crate::telemetry::TelemetrySnapshot;
 
@@ -90,23 +90,31 @@ impl ShardRouter {
     /// Route one batch of `nq` row-major queries and block for the
     /// merged answer. Cluster ids in the response are **global**; its
     /// generation is the global index's. `nq == 0` returns an empty
-    /// response immediately without touching any shard.
-    pub fn query_blocking(&self, queries: &[f32], nq: usize) -> QueryResponse {
+    /// response immediately without touching any shard. Queries are
+    /// validated **once** at the router — a non-finite coordinate is a
+    /// typed [`AssignError::NonFiniteQuery`] before any shard sees the
+    /// batch, so no per-shard fan-out can half-complete on bad input.
+    pub fn query_blocking(
+        &self,
+        queries: &[f32],
+        nq: usize,
+    ) -> Result<QueryResponse, AssignError> {
         let gsnap = self.tier.global().snapshot();
         let level = gsnap.resolve_level(self.level);
         if nq == 0 {
-            return QueryResponse {
+            return Ok(QueryResponse {
                 result: AssignResult { cluster: Vec::new(), dist: Vec::new() },
                 level,
                 generation: gsnap.generation,
                 latency_secs: 0.0,
-            };
+            });
         }
+        validate_queries(queries, gsnap.d)?;
         let (result, latency) = match self.mode {
             RouteMode::Fanout => self.fanout(queries, nq, level),
             RouteMode::Sketch { probe } => self.sketch(queries, nq, level, probe, gsnap.measure),
         };
-        QueryResponse { result, level, generation: gsnap.generation, latency_secs: latency }
+        Ok(QueryResponse { result, level, generation: gsnap.generation, latency_secs: latency })
     }
 
     /// Fan-out: submit the full batch to every non-empty shard, merge
@@ -119,7 +127,12 @@ impl ShardRouter {
                 (0..self.services.len()).filter(|&s| views.sketches[s].is_some()).collect();
             let pending: Vec<(usize, mpsc::Receiver<QueryResponse>)> = targets
                 .iter()
-                .map(|&s| (s, self.services[s].submit(queries.to_vec(), nq)))
+                .map(|&s| {
+                    let rx = self.services[s]
+                        .submit(queries.to_vec(), nq)
+                        .expect("validated at router entry");
+                    (s, rx)
+                })
                 .collect();
             let responses: Vec<(usize, QueryResponse)> = pending
                 .into_iter()
@@ -188,7 +201,10 @@ impl ShardRouter {
                     for &q in rows {
                         sub.extend_from_slice(&queries[q as usize * d..(q as usize + 1) * d]);
                     }
-                    (s, self.services[s].submit(sub, rows.len()))
+                    let rx = self.services[s]
+                        .submit(sub, rows.len())
+                        .expect("validated at router entry");
+                    (s, rx)
                 })
                 .collect();
             let responses: Vec<(usize, QueryResponse)> = pending
@@ -319,10 +335,11 @@ mod tests {
     #[test]
     fn fanout_matches_the_single_index_bit_for_bit() {
         let (ds, snap) = build(200, 5, 51);
-        let want = assign_to_level(&snap, usize::MAX, &ds.data, ds.n, &NativeBackend::new(), 2);
+        let want =
+            assign_to_level(&snap, usize::MAX, &ds.data, ds.n, &NativeBackend::new(), 2).unwrap();
         for shards in [1, 2, 4, 8] {
             let r = router(snap.clone(), shards, RouteMode::Fanout);
-            let got = r.query_blocking(&ds.data, ds.n);
+            let got = r.query_blocking(&ds.data, ds.n).unwrap();
             assert_eq!(got.result, want, "S={shards} diverged from the single index");
             r.shutdown();
         }
@@ -331,10 +348,11 @@ mod tests {
     #[test]
     fn sketch_probing_all_shards_is_exact() {
         let (ds, snap) = build(160, 4, 53);
-        let want = assign_to_level(&snap, usize::MAX, &ds.data, ds.n, &NativeBackend::new(), 2);
+        let want =
+            assign_to_level(&snap, usize::MAX, &ds.data, ds.n, &NativeBackend::new(), 2).unwrap();
         // probe == S degenerates to fan-out: same bits
         let r = router(snap, 4, RouteMode::Sketch { probe: 4 });
-        let got = r.query_blocking(&ds.data, ds.n);
+        let got = r.query_blocking(&ds.data, ds.n).unwrap();
         assert_eq!(got.result, want);
         r.shutdown();
     }
@@ -343,9 +361,9 @@ mod tests {
     fn zero_query_batches_and_stats_merge() {
         let (ds, snap) = build(120, 3, 57);
         let r = router(snap, 3, RouteMode::Fanout);
-        let empty = r.query_blocking(&[], 0);
+        let empty = r.query_blocking(&[], 0).unwrap();
         assert!(empty.result.is_empty());
-        let _ = r.query_blocking(&ds.data[..4 * 8], 8);
+        let _ = r.query_blocking(&ds.data[..4 * 8], 8).unwrap();
         let stats = r.stats();
         // the fan-out touched every non-empty shard with one request of
         // 8 queries each; zero-query batches are not counted
@@ -364,9 +382,26 @@ mod tests {
         let (ds, snap) = build(150, 4, 59);
         let k = snap.num_clusters(snap.coarsest());
         let r = router(snap, 4, RouteMode::Fanout);
-        let got = r.query_blocking(&ds.data, ds.n);
+        let got = r.query_blocking(&ds.data, ds.n).unwrap();
         assert!(got.result.cluster.iter().all(|&c| (c as usize) < k));
         assert_eq!(got.generation, r.tier().global().generation());
+        r.shutdown();
+    }
+
+    #[test]
+    fn non_finite_queries_are_rejected_before_any_shard_sees_them() {
+        let (ds, snap) = build(120, 3, 61);
+        let d = ds.d;
+        let r = router(snap, 3, RouteMode::Fanout);
+        let mut bad = ds.data[..3 * d].to_vec();
+        bad[d + 1] = f32::NAN;
+        let err = r.query_blocking(&bad, 3).unwrap_err();
+        assert_eq!(err, AssignError::NonFiniteQuery { row: 1 });
+        // nothing was enqueued: the tier served zero queries
+        assert_eq!(r.stats().queries, 0, "rejected batch must not reach any shard pool");
+        // the pools stay healthy after the rejection
+        let ok = r.query_blocking(&ds.data[..3 * d], 3).unwrap();
+        assert_eq!(ok.result.len(), 3);
         r.shutdown();
     }
 }

@@ -1,0 +1,320 @@
+//! Property tests for IVF sub-linear assignment (ISSUE 9 acceptance
+//! criteria):
+//!
+//! 1. **probe = nlist bit-identity** — routing a query batch through
+//!    [`scc::serve::AssignStrategy::Ivf`] with `probe = nlist` answers
+//!    bit-identically to the brute linear scan at *every* level of the
+//!    hierarchy (ids and distances), for arbitrary cell counts;
+//! 2. **recall** — at the default probe width the coarse quantizer
+//!    recalls the true nearest row on ≥ 95% of jittered queries over
+//!    separated mixtures;
+//! 3. **determinism** — building and searching the index is
+//!    bit-identical across thread counts and repeated builds with one
+//!    seed;
+//! 4. **edges** — oversized `nlist` clamps without losing exactness,
+//!    single-cell indexes answer exactly, and empty query batches
+//!    return empty results;
+//!
+//! plus regression pins for the three serve-path input-validation
+//! bugfixes that ride along in this PR: non-finite queries are rejected
+//! with a typed [`scc::serve::AssignError`] on the serial, pooled, and
+//! sharded entry paths; the ingest id-space overflow is a typed
+//! [`scc::serve::IngestError`] raised before any mutation; and the CLI
+//! rejects degenerate `--probe 0` / `--nlist 0` at parse time.
+
+use scc::core::Dataset;
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::{auto_nlist, knn_graph, IvfIndex, DEFAULT_PROBE};
+use scc::linkage::Measure;
+use scc::pipeline::{Clusterer, Hierarchy, SccClusterer};
+use scc::runtime::NativeBackend;
+use scc::scc::{thresholds::edge_range, Thresholds};
+use scc::serve::shard::{RouteMode, ShardRouter, ShardSpec, ShardedIndex};
+use scc::serve::{
+    assign_to_level, assign_with_strategy, ingest_batch, AssignCache, AssignError,
+    AssignStrategy, HierarchySnapshot, IngestConfig, IngestError, ServeIndex, Service,
+    ServiceConfig,
+};
+use scc::util::prop::{check, Gen};
+use std::sync::Arc;
+
+/// A randomized small workload, mirroring `serve_properties.rs`.
+fn random_run(g: &mut Gen) -> (Dataset, Hierarchy) {
+    let n = g.usize_in(60..220);
+    let k = g.usize_in(2..7);
+    let ds = separated_mixture(&MixtureSpec {
+        n,
+        d: g.usize_in(2..5),
+        k,
+        sigma: 0.05,
+        delta: g.f64_in(6.0, 12.0),
+        imbalance: 0.0,
+        seed: g.rng().next_u64(),
+    });
+    let graph = knn_graph(&ds, g.usize_in(3..9), Measure::L2Sq);
+    let (lo, hi) = edge_range(&graph);
+    let taus = Thresholds::geometric(lo, hi, g.usize_in(8..30)).taus;
+    let clusterer = SccClusterer::with_schedule(taus).fixed_rounds(g.bool());
+    (ds, clusterer.cluster_csr(&graph))
+}
+
+/// Jittered copies of stored rows: unseen but realistic queries.
+fn jittered_queries(g: &mut Gen, ds: &Dataset, nq: usize) -> Vec<f32> {
+    let mut q = Vec::with_capacity(nq * ds.d);
+    for j in 0..nq {
+        let src = (j * 13 + 5) % ds.n;
+        for &x in ds.row(src) {
+            q.push(x + 0.01 * (g.rng().f32() - 0.5));
+        }
+    }
+    q
+}
+
+/// Criterion 1: `probe = nlist` is a full sweep of the coarse cells, so
+/// the IVF strategy must reproduce the brute scan bit-for-bit — ids
+/// *and* distances — at every level, whatever the cell count.
+#[test]
+fn probe_equals_nlist_matches_brute_bit_for_bit_at_every_level() {
+    check("ivf@probe=nlist ≡ brute at every level", 10, |g| {
+        let (ds, res) = random_run(g);
+        let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+        let nq = g.usize_in(10..50);
+        let queries = jittered_queries(g, &ds, nq);
+        let backend = NativeBackend::new();
+        let cache = AssignCache::new();
+        for level in 0..=snap.coarsest() {
+            let want = assign_to_level(&snap, level, &queries, nq, &backend, 2).unwrap();
+            // arbitrary cell count, including > #clusters (clamped)
+            let nlist = g.usize_in(1..snap.num_clusters(level) + 4);
+            let strategy = AssignStrategy::Ivf { nlist, probe: nlist };
+            let got =
+                assign_with_strategy(&snap, level, &queries, nq, &backend, 2, strategy, &cache)
+                    .unwrap();
+            assert_eq!(
+                got, want,
+                "level {level} nlist {nlist}: full-probe IVF must equal the brute scan"
+            );
+        }
+    });
+}
+
+/// Criterion 2: at the default probe width the quantizer recalls the
+/// true nearest row on ≥ 95% of jittered queries over a separated
+/// mixture — the workload the serving tier actually sees.
+#[test]
+fn default_probe_recall_beats_point_95_on_separated_mixtures() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 400,
+        d: 4,
+        k: 6,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 41,
+    });
+    let backend = NativeBackend::new();
+    let nlist = auto_nlist(ds.n); // 20 cells over 400 rows
+    assert!(DEFAULT_PROBE < nlist, "the probe must genuinely skip cells");
+    let ix = IvfIndex::build(&ds.data, ds.n, ds.d, Measure::L2Sq, nlist, 7, &backend, 2);
+    let nq = 300usize;
+    let mut rng = scc::util::Rng::new(0x9EC);
+    let mut queries = Vec::with_capacity(nq * ds.d);
+    for j in 0..nq {
+        for &x in ds.row((j * 17 + 3) % ds.n) {
+            queries.push(x + 0.02 * rng.normal_f32());
+        }
+    }
+    let (exact_ids, _) = ix.search(&queries, nq, nlist, &backend, 2);
+    let (probed_ids, _) = ix.search(&queries, nq, DEFAULT_PROBE, &backend, 2);
+    let hits = exact_ids.iter().zip(&probed_ids).filter(|(a, b)| a == b).count();
+    let recall = hits as f64 / nq as f64;
+    assert!(
+        recall >= 0.95,
+        "probe={DEFAULT_PROBE}/{nlist} recalled {hits}/{nq} = {recall:.3} (< 0.95)"
+    );
+}
+
+/// Criterion 3: one seed, one answer — builds and searches are
+/// bit-identical across thread counts and across repeated builds.
+#[test]
+fn build_and_search_are_bit_identical_across_threads_and_rebuilds() {
+    check("ivf determinism across threads/rebuilds", 8, |g| {
+        let (ds, _) = random_run(g);
+        let backend = NativeBackend::new();
+        let nlist = g.usize_in(1..auto_nlist(ds.n) + 3);
+        let probe = g.usize_in(1..nlist + 2);
+        let seed = g.rng().next_u64();
+        let nq = 20.min(ds.n);
+        let queries: Vec<f32> = ds.data[..nq * ds.d].to_vec();
+        let a = IvfIndex::build(&ds.data, ds.n, ds.d, Measure::L2Sq, nlist, seed, &backend, 1);
+        let b = IvfIndex::build(&ds.data, ds.n, ds.d, Measure::L2Sq, nlist, seed, &backend, 7);
+        let ra = a.search(&queries, nq, probe, &backend, 1);
+        let rb = b.search(&queries, nq, probe, &backend, 7);
+        assert_eq!(ra, rb, "threads must not change ids or distances");
+        let ta = a.search_topk(&queries, nq, 3.min(ds.n), probe, &backend, 1);
+        let tb = b.search_topk(&queries, nq, 3.min(ds.n), probe, &backend, 7);
+        assert_eq!(ta.idx, tb.idx);
+        assert_eq!(ta.dist, tb.dist);
+    });
+}
+
+/// Criterion 4: the edges — oversized `nlist` clamps and stays exact,
+/// single-cell indexes answer exactly, empty query batches return empty
+/// results, and a single-cluster level routes through IVF unchanged.
+#[test]
+fn edge_cases_stay_exact_and_empty_batches_stay_empty() {
+    let backend = NativeBackend::new();
+    // 3 rows, nlist far beyond n: clamped, still exact at probe 1..=n
+    let data = vec![0.0f32, 0.0, 5.0, 0.0, 10.0, 0.0];
+    let ix = IvfIndex::build(&data, 3, 2, Measure::L2Sq, 64, 1, &backend, 1);
+    assert!(ix.nlist() <= 3, "nlist must clamp to the row count");
+    let q = vec![4.9f32, 0.1];
+    let (ids, dist) = ix.search(&q, 1, ix.nlist(), &backend, 1);
+    assert_eq!(ids, vec![1]);
+    assert!(dist[0] > 0.0 && dist[0].is_finite());
+    // empty query batch
+    let (ids, dist) = ix.search(&[], 0, 1, &backend, 1);
+    assert!(ids.is_empty() && dist.is_empty());
+    // single-cell index: probe 1 is already the full sweep
+    let one = IvfIndex::build(&data, 3, 2, Measure::L2Sq, 1, 1, &backend, 1);
+    assert_eq!(one.nlist(), 1);
+    let (full, _) = ix.search(&q, 1, ix.nlist(), &backend, 1);
+    let (single, _) = one.search(&q, 1, 1, &backend, 1);
+    assert_eq!(single, full);
+
+    // a single-cluster hierarchy level served through the IVF strategy
+    let ds = separated_mixture(&MixtureSpec {
+        n: 80,
+        d: 3,
+        k: 1,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 3,
+    });
+    let graph = knn_graph(&ds, 5, Measure::L2Sq);
+    let res = SccClusterer::geometric(12).cluster_csr(&graph);
+    let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 1);
+    let coarse = snap.coarsest();
+    let cache = AssignCache::new();
+    let nq = 10usize;
+    let queries: Vec<f32> = ds.data[..nq * ds.d].to_vec();
+    let want = assign_to_level(&snap, coarse, &queries, nq, &backend, 1).unwrap();
+    let got = assign_with_strategy(
+        &snap,
+        coarse,
+        &queries,
+        nq,
+        &backend,
+        1,
+        AssignStrategy::Ivf { nlist: 5, probe: 1 },
+        &cache,
+    )
+    .unwrap();
+    assert_eq!(got, want, "a single-cluster level has nowhere to miss");
+}
+
+/// Regression (bugfix satellite): a NaN or ∞ coordinate in a query
+/// batch is a typed [`AssignError::NonFiniteQuery`] on every entry path
+/// — serial, pooled, and sharded — and never reaches a worker pool.
+#[test]
+fn non_finite_queries_are_rejected_on_every_entry_path() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 120,
+        d: 3,
+        k: 3,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 17,
+    });
+    let graph = knn_graph(&ds, 5, Measure::L2Sq);
+    let res = SccClusterer::geometric(15).cluster_csr(&graph);
+    let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
+    let backend = NativeBackend::new();
+    let d = ds.d;
+    let mut bad = ds.data[..3 * d].to_vec();
+    bad[2 * d] = f32::INFINITY;
+
+    // serial path
+    let err = assign_to_level(&snap, usize::MAX, &bad, 3, &backend, 1).unwrap_err();
+    assert_eq!(err, AssignError::NonFiniteQuery { row: 2 });
+
+    // pooled path: rejected at submit, before any worker sees the batch
+    let service = Service::start(
+        Arc::new(ServeIndex::new(snap.clone())),
+        Arc::new(NativeBackend::new()),
+        ServiceConfig { workers: 2, ..Default::default() },
+    );
+    let mut nan_bad = ds.data[..2 * d].to_vec();
+    nan_bad[1] = f32::NAN;
+    let err = service.submit(nan_bad, 2).unwrap_err();
+    assert_eq!(err, AssignError::NonFiniteQuery { row: 0 });
+    let good = service.query_blocking(ds.data[..d].to_vec(), 1).unwrap();
+    assert_eq!(good.result.len(), 1);
+    let stats = service.shutdown();
+    assert_eq!(stats.queries, 1, "the rejected batch must not be counted as served");
+
+    // sharded path: rejected once at the router, before any shard fan-out
+    let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(3, 5)));
+    let router = ShardRouter::start(
+        tier,
+        Arc::new(NativeBackend::new()),
+        ServiceConfig { workers: 2, ..Default::default() },
+        RouteMode::Fanout,
+    );
+    let err = router.query_blocking(&bad, 3).unwrap_err();
+    assert_eq!(err, AssignError::NonFiniteQuery { row: 2 });
+    assert_eq!(router.stats().queries, 0, "no shard pool may see the rejected batch");
+    router.shutdown();
+}
+
+/// Regression (bugfix satellite): ingesting past the `u32` id space is
+/// a typed [`IngestError::TooManyPoints`] raised before the snapshot is
+/// touched — pinned here at a synthetic boundary, since a real 4-billion
+/// point snapshot is not test material.
+#[test]
+fn ingest_id_space_overflow_is_a_typed_error_before_mutation() {
+    let ds = separated_mixture(&MixtureSpec {
+        n: 60,
+        d: 2,
+        k: 2,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed: 23,
+    });
+    let graph = knn_graph(&ds, 4, Measure::L2Sq);
+    let res = SccClusterer::geometric(10).cluster_csr(&graph);
+    let mut snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 1);
+    let levels_before = snap.levels.clone();
+    let gen_before = snap.generation;
+    // pretend the snapshot already holds nearly u32::MAX points; the
+    // entry guard must fire before any batch row is even read
+    snap.n = u32::MAX as usize - 1;
+    let batch = vec![0.5f32; 2 * snap.d];
+    let err = ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new())
+        .unwrap_err();
+    assert_eq!(
+        err,
+        IngestError::TooManyPoints { existing: u32::MAX as usize - 1, adding: 2 }
+    );
+    assert!(err.to_string().contains("overflow"), "{err}");
+    assert_eq!(snap.levels, levels_before, "a rejected batch must not mutate structure");
+    assert_eq!(snap.generation, gen_before, "a rejected batch must not stamp a generation");
+}
+
+/// Regression (bugfix satellite): degenerate serve flags are parse
+/// errors, not latent panics — `--probe 0` and `--nlist 0` are refused
+/// before any index is built.
+#[test]
+fn cli_rejects_degenerate_probe_and_nlist_at_parse_time() {
+    let argv = |s: &str| -> Vec<String> { s.split_whitespace().map(String::from).collect() };
+    assert!(scc::cli::parse(&argv("serve --probe 0")).is_err());
+    assert!(scc::cli::parse(&argv("serve --nlist 0")).is_err());
+    assert!(scc::cli::parse(&argv("serve --assign bogus")).is_err());
+    let ok = scc::cli::parse(&argv("serve --assign ivf --nlist 4 --probe 2")).unwrap();
+    assert_eq!(ok.serve.assign, "ivf");
+    assert_eq!(ok.serve.nlist, 4);
+    assert_eq!(ok.serve.probe, 2);
+}

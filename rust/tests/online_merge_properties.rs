@@ -166,7 +166,7 @@ fn online_merge_cut_matches_from_scratch_within_recorded_bound() {
             workers: *g.choose(&[1usize, 2, 4]),
             ..Default::default()
         };
-        let report = ingest_batch(&mut online, &batch, &cfg, &NativeBackend::new());
+        let report = ingest_batch(&mut online, &batch, &cfg, &NativeBackend::new()).unwrap();
         assert_eq!(report.online_merges, 1, "the bridge must merge exactly one component");
         assert_eq!(report.conflicts, 0);
         assert_eq!(online.splice_bound(), tau_b, "recorded bound is the contraction τ");
@@ -303,7 +303,7 @@ fn nesting_survives_arbitrary_ingest_merge_interleavings() {
                 workers: *g.choose(&[1usize, 2, 4]),
                 ..Default::default()
             };
-            let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new());
+            let report = ingest_batch(&mut snap, &batch, &cfg, &NativeBackend::new()).unwrap();
             if batch.is_empty() {
                 assert_eq!(snap, before, "zero-point ingest must stay a bit-exact no-op");
                 continue;
@@ -355,7 +355,8 @@ fn ingest_is_bit_identical_across_worker_counts() {
             &batch,
             &IngestConfig { online_merges: true, workers: 1, ..Default::default() },
             &NativeBackend::new(),
-        );
+        )
+        .unwrap();
         assert!(r1.online_merges >= 1, "the interesting path must be exercised: {r1:?}");
         for workers in [2usize, 4, 8] {
             let mut sw = snap.clone();
@@ -364,7 +365,8 @@ fn ingest_is_bit_identical_across_worker_counts() {
                 &batch,
                 &IngestConfig { online_merges: true, workers, ..Default::default() },
                 &NativeBackend::new(),
-            );
+            )
+            .unwrap();
             assert_eq!(rw, r1, "report differs at workers={workers}");
             assert_eq!(sw, reference, "snapshot differs at workers={workers}");
         }
@@ -421,7 +423,7 @@ fn rebuild_worker_swaps_once_under_query_load_without_torn_reads() {
                 let mut q = c;
                 while !stop.load(Ordering::Acquire) {
                     let row = ds.row(q % ds.n).to_vec();
-                    let r = service.query_blocking(row, 1);
+                    let r = service.query_blocking(row, 1).unwrap();
                     assert_eq!(r.result.len(), 1);
                     assert_ne!(r.result.cluster[0], u32::MAX, "torn/empty response");
                     seen.push(r.generation);
@@ -434,11 +436,13 @@ fn rebuild_worker_swaps_once_under_query_load_without_torn_reads() {
         // let the clients spin, then push drift over the limit
         std::thread::sleep(Duration::from_millis(30));
         let batch: Vec<f32> = ds.data[..n_ingest * d].to_vec();
-        let report = index.ingest(
-            &batch,
-            &IngestConfig { drift_limit: 0.04, ..Default::default() },
-            backend.as_ref(),
-        );
+        let report = index
+            .ingest(
+                &batch,
+                &IngestConfig { drift_limit: 0.04, ..Default::default() },
+                backend.as_ref(),
+            )
+            .unwrap();
         assert!(report.rebuild_recommended);
 
         let deadline = Instant::now() + Duration::from_secs(120);
@@ -496,7 +500,8 @@ fn defer_policy_keeps_frozen_structure_frozen() {
         );
         let mut deferred = snap.clone();
         let report =
-            ingest_batch(&mut deferred, &batch, &IngestConfig::default(), &NativeBackend::new());
+            ingest_batch(&mut deferred, &batch, &IngestConfig::default(), &NativeBackend::new())
+                .unwrap();
         assert_eq!(report.conflicts, 1, "{report:?}");
         assert_eq!(report.online_merges, 0);
         assert_eq!(

@@ -98,7 +98,8 @@ fn round_trip_is_bit_exact_fresh_and_post_ingest() {
             &batch,
             &IngestConfig { workers: *g.choose(&[1usize, 2, 4]), ..Default::default() },
             &NativeBackend::new(),
-        );
+        )
+        .unwrap();
         assert!(report.ingested > 0);
         let back = snapshot_from_bytes(&snapshot_to_bytes(&after).unwrap()).unwrap();
         assert_eq!(back, after, "post-ingest snapshot must round-trip bit-exactly");
@@ -145,7 +146,8 @@ fn round_trip_preserves_online_merge_splices() {
             &batch,
             &IngestConfig { online_merges: true, workers: 1, ..Default::default() },
             &NativeBackend::new(),
-        );
+        )
+        .unwrap();
         if report.online_merges == 0 {
             return; // bridge attached without a cross-clump merge: skip
         }
@@ -212,8 +214,8 @@ fn loaded_snapshot_serves_identically_to_the_saved_one() {
         let nq = g.usize_in(3..20);
         let queries = jitter_batch(g, &ds, nq);
         for level in [0, snap.coarsest() / 2, snap.coarsest()] {
-            let a = assign_to_level(&snap, level, &queries, nq, &backend, 2);
-            let b = assign_to_level(&loaded, level, &queries, nq, &backend, 2);
+            let a = assign_to_level(&snap, level, &queries, nq, &backend, 2).unwrap();
+            let b = assign_to_level(&loaded, level, &queries, nq, &backend, 2).unwrap();
             assert_eq!(a.cluster, b.cluster, "level {level} assignments");
             assert_eq!(a.dist, b.dist, "level {level} distances");
         }
@@ -229,7 +231,7 @@ fn loaded_snapshot_continues_ingesting_from_persisted_counters() {
         let (ds, mut snap) = random_snapshot(g);
         // accumulate some drift before the save
         let first = jitter_batch(g, &ds, g.usize_in(1..6));
-        ingest_batch(&mut snap, &first, &IngestConfig::default(), &NativeBackend::new());
+        ingest_batch(&mut snap, &first, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         let saved_ingested = snap.ingested;
         let saved_drift = snap.drift();
 
@@ -241,7 +243,9 @@ fn loaded_snapshot_continues_ingesting_from_persisted_counters() {
         // from the persisted values, not from zero
         let m = g.usize_in(1..6);
         let second = jitter_batch(g, &ds, m);
-        let report = ingest_batch(&mut loaded, &second, &IngestConfig::default(), &NativeBackend::new());
+        let report =
+            ingest_batch(&mut loaded, &second, &IngestConfig::default(), &NativeBackend::new())
+                .unwrap();
         assert_eq!(report.ingested, m);
         assert_eq!(loaded.ingested, saved_ingested + m, "drift counter continues across restart");
         assert!(loaded.drift() > saved_drift);

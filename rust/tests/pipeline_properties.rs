@@ -189,7 +189,8 @@ fn cut_report_flags_spliced_clusters_after_online_merge() {
         &batch,
         &IngestConfig { online_merges: true, ..Default::default() },
         &NativeBackend::new(),
-    );
+    )
+    .unwrap();
     assert_eq!(report.online_merges, 1, "{report:?}");
 
     let cut = spliced.cut_report(f64::INFINITY);

@@ -90,7 +90,7 @@ fn ingest_of_zero_points_is_bit_identical_noop() {
             level: g.usize_in(0..snap.num_levels() + 2), // may exceed: clamped
             ..Default::default()
         };
-        let report = ingest_batch(&mut snap, &[], &cfg, &NativeBackend::new());
+        let report = ingest_batch(&mut snap, &[], &cfg, &NativeBackend::new()).unwrap();
         assert_eq!(report.ingested, 0);
         assert_eq!(report.attached + report.new_clusters + report.conflicts, 0);
         assert_eq!(snap, before, "zero-point ingest must leave the snapshot bit-identical");
@@ -119,7 +119,8 @@ fn ingest_preserves_nesting_and_counts() {
             }
         }
         let report =
-            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new());
+            ingest_batch(&mut snap, &batch, &IngestConfig::default(), &NativeBackend::new())
+                .unwrap();
         assert_eq!(report.ingested, m);
         assert_eq!(snap.n, ds.n + m);
         for (l, w) in snap.levels.windows(2).enumerate() {
@@ -186,11 +187,13 @@ fn rebuild_with_terahac_clusterer_restores_exactness_and_generations() {
         &centers[b as usize * d..b as usize * d + d],
         tau,
     );
-    let report = index.ingest(
-        &batch,
-        &IngestConfig { online_merges: true, drift_limit: 0.01, ..Default::default() },
-        &backend,
-    );
+    let report = index
+        .ingest(
+            &batch,
+            &IngestConfig { online_merges: true, drift_limit: 0.01, ..Default::default() },
+            &backend,
+        )
+        .unwrap();
     assert_eq!(report.online_merges, 1, "{report:?}");
     assert!(report.rebuild_recommended);
     let spliced = index.snapshot();
@@ -272,11 +275,9 @@ fn save_during_rebuild_with_queued_ingest_loses_nothing() {
 
     // prime past the drift limit so the rebuild fires
     let primer: Vec<f32> = ds.data[..8 * ds.d].to_vec();
-    let primed = index.ingest(
-        &primer,
-        &IngestConfig { drift_limit: 0.02, ..Default::default() },
-        &backend,
-    );
+    let primed = index
+        .ingest(&primer, &IngestConfig { drift_limit: 0.02, ..Default::default() }, &backend)
+        .unwrap();
     assert!(primed.rebuild_recommended);
     let n_at_rebuild = index.snapshot().n;
     let gen_before = index.generation();
@@ -301,7 +302,7 @@ fn save_during_rebuild_with_queued_ingest_loses_nothing() {
 
     // mid-rebuild ingest: queued for catch-up, not applied yet
     let batch: Vec<f32> = ds.row(5).iter().map(|x| x + 1e-3).collect();
-    let queued = index.ingest(&batch, &IngestConfig::default(), &backend);
+    let queued = index.ingest(&batch, &IngestConfig::default(), &backend).unwrap();
     assert!(queued.queued, "{queued:?}");
 
     // save with the rebuild mid-flight and the queue non-empty: the

@@ -79,14 +79,14 @@ fn fanout_routing_is_bit_identical_to_the_single_index_for_every_s() {
         let snap = HierarchySnapshot::build(&ds, &res, Measure::L2Sq, 2);
         let nq = g.usize_in(10..60);
         let queries = jittered_queries(g, &ds, nq);
-        let want =
-            assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2);
+        let want = assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2)
+            .unwrap();
         let seed = g.rng().next_u64();
         for shards in [1usize, 2, 4, 8] {
             let tier =
                 Arc::new(ShardedIndex::new(snap.clone(), ShardSpec::new(shards, seed)));
             let router = start_router(Arc::clone(&tier), RouteMode::Fanout);
-            let got = router.query_blocking(&queries, nq);
+            let got = router.query_blocking(&queries, nq).unwrap();
             assert_eq!(
                 got.result, want,
                 "S={shards}: fan-out must answer bit-identically to the single index"
@@ -106,10 +106,10 @@ fn sketch_routing_recall_is_at_least_95_percent_at_probe_2() {
         let seed = g.rng().next_u64();
         let tier = Arc::new(ShardedIndex::new(snap.clone(), ShardSpec::new(4, seed)));
         let fan = start_router(Arc::clone(&tier), RouteMode::Fanout);
-        let exact = fan.query_blocking(&queries, nq);
+        let exact = fan.query_blocking(&queries, nq).unwrap();
         fan.shutdown();
         let sketch = start_router(Arc::clone(&tier), RouteMode::Sketch { probe: 2 });
-        let approx = sketch.query_blocking(&queries, nq);
+        let approx = sketch.query_blocking(&queries, nq).unwrap();
         sketch.shutdown();
         let hits = (0..nq)
             .filter(|&q| approx.result.cluster[q] == exact.result.cluster[q])
@@ -146,12 +146,12 @@ fn cross_shard_online_merge_equals_the_single_index_merge_on_the_union() {
         let backend = NativeBackend::new();
         // single index on the union dataset
         let single = ServeIndex::new(snap.clone());
-        let single_report = single.ingest(&batch, &icfg, &backend);
+        let single_report = single.ingest(&batch, &icfg, &backend).unwrap();
         // sharded tier: ingest applies to the global index, shards
         // re-project
         let shards = g.usize_in(2..6);
         let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(shards, g.rng().next_u64())));
-        let tier_report = tier.ingest(&batch, &icfg, &backend);
+        let tier_report = tier.ingest(&batch, &icfg, &backend).unwrap();
         assert_eq!(tier_report.ingested, single_report.ingested);
         assert_eq!(tier_report.online_merges, single_report.online_merges);
         assert_eq!(tier_report.conflicts, single_report.conflicts);
@@ -161,9 +161,9 @@ fn cross_shard_online_merge_equals_the_single_index_merge_on_the_union() {
         // and the served answers stay S-invariant after the merge
         let nq = 30.min(a.n);
         let queries: Vec<f32> = a.points[..nq * a.d].to_vec();
-        let want = assign_to_level(&a, usize::MAX, &queries, nq, &backend, 2);
+        let want = assign_to_level(&a, usize::MAX, &queries, nq, &backend, 2).unwrap();
         let router = start_router(Arc::clone(&tier), RouteMode::Fanout);
-        let got = router.query_blocking(&queries, nq);
+        let got = router.query_blocking(&queries, nq).unwrap();
         assert_eq!(got.result, want, "post-merge fan-out diverged");
         router.shutdown();
     });
@@ -179,7 +179,7 @@ fn save_all_load_all_round_trips_serve_identically_and_continue_generations() {
         let tier = ShardedIndex::new(snap, spec);
         // advance some generations with a real ingest before saving
         let batch: Vec<f32> = ds.row(0).iter().map(|&x| x + 0.003).collect();
-        tier.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        tier.ingest(&batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         let dir = std::env::temp_dir().join(format!(
             "scc-shard-prop-{}-{}",
             std::process::id(),
@@ -198,14 +198,14 @@ fn save_all_load_all_round_trips_serve_identically_and_continue_generations() {
         let queries: Vec<f32> = ds.data[..nq * ds.d].to_vec();
         let before = {
             let r = start_router(Arc::new(tier), RouteMode::Fanout);
-            let resp = r.query_blocking(&queries, nq);
+            let resp = r.query_blocking(&queries, nq).unwrap();
             r.shutdown();
             resp
         };
         let loaded = Arc::new(loaded);
         let after = {
             let r = start_router(Arc::clone(&loaded), RouteMode::Fanout);
-            let resp = r.query_blocking(&queries, nq);
+            let resp = r.query_blocking(&queries, nq).unwrap();
             r.shutdown();
             resp
         };
@@ -214,7 +214,7 @@ fn save_all_load_all_round_trips_serve_identically_and_continue_generations() {
         // loaded stamps on every shard it touches
         let gens_before: Vec<u64> =
             (0..shards).map(|s| loaded.shard(s).generation()).collect();
-        loaded.ingest(&batch, &IngestConfig::default(), &NativeBackend::new());
+        loaded.ingest(&batch, &IngestConfig::default(), &NativeBackend::new()).unwrap();
         let gens_after: Vec<u64> = (0..shards).map(|s| loaded.shard(s).generation()).collect();
         assert!(
             gens_after.iter().zip(&gens_before).all(|(a, b)| a >= b),
@@ -280,12 +280,13 @@ fn empty_shards_serve_and_persist_cleanly() {
         // serving straight through the empty shards stays exact
         let nq = 15.min(ds.n);
         let queries: Vec<f32> = ds.data[..nq * ds.d].to_vec();
-        let want = assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2);
+        let want = assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2)
+            .unwrap();
         let router = start_router(Arc::clone(&tier), RouteMode::Fanout);
-        let got = router.query_blocking(&queries, nq);
+        let got = router.query_blocking(&queries, nq).unwrap();
         assert_eq!(got.result, want);
         // zero-query batches return an empty response, not an error
-        let nothing = router.query_blocking(&[], 0);
+        let nothing = router.query_blocking(&[], 0).unwrap();
         assert!(nothing.result.is_empty());
         router.shutdown();
         // persistence round-trips the empty shards too

@@ -74,7 +74,7 @@ fn main() {
     }
     let mut answers = vec![u32::MAX; nq];
     let mut q0 = 0usize;
-    for h in service.submit_chunked(&queries, nq) {
+    for h in service.submit_chunked(&queries, nq).expect("finite demo queries") {
         let r = h.recv().expect("service response");
         answers[q0..q0 + r.result.len()].copy_from_slice(&r.result.cluster);
         q0 += r.result.len();
@@ -101,7 +101,9 @@ fn main() {
             batch.push(center + 0.01 * rng.normal_f32());
         }
     }
-    let report = index.ingest(&batch, &IngestConfig::at_level(level), backend.as_ref());
+    let report = index
+        .ingest(&batch, &IngestConfig::at_level(level), backend.as_ref())
+        .expect("demo batch fits the id space");
     println!(
         "ingest: {} points — {} attached, {} new clusters, {} conflicts{}",
         report.ingested,
@@ -129,7 +131,9 @@ fn main() {
 
     // 6. re-query through the (still running) service: ingested points
     //    answer with their post-ingest clusters
-    let novel_again = service.query_blocking(after.point_row(after.n - 1).to_vec(), 1);
+    let novel_again = service
+        .query_blocking(after.point_row(after.n - 1).to_vec(), 1)
+        .expect("pool is live");
     assert_eq!(novel_again.result.cluster[0], *novel.iter().next().unwrap());
 
     // 7. online conflict merge: a dense chain of points bridging the two
@@ -150,11 +154,18 @@ fn main() {
         &centers[nb * d..nb * d + d],
         bridge_tau,
     );
-    let merge_report = index.ingest(
-        &bridge,
-        &IngestConfig { level: serving, online_merges: true, workers: 4, ..Default::default() },
-        backend.as_ref(),
-    );
+    let merge_report = index
+        .ingest(
+            &bridge,
+            &IngestConfig {
+                level: serving,
+                online_merges: true,
+                workers: 4,
+                ..Default::default()
+            },
+            backend.as_ref(),
+        )
+        .expect("demo batch fits the id space");
     let merged = index.snapshot();
     println!(
         "bridge ingest: {} points — {} conflict merges applied online (splice bound {:.4})",
@@ -196,7 +207,7 @@ fn main() {
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
     while worker.rebuilds() == 0 && std::time::Instant::now() < deadline {
         // the service keeps answering while the rebuild runs
-        let r = service.query_blocking(ds.row(0).to_vec(), 1);
+        let r = service.query_blocking(ds.row(0).to_vec(), 1).expect("pool is live");
         assert_eq!(r.result.len(), 1);
         std::thread::sleep(std::time::Duration::from_millis(5));
     }

@@ -68,14 +68,16 @@ fn main() {
             queries.push(x + 0.005 * rng.normal_f32());
         }
     }
-    let single = assign_to_level(&snap, level, &queries, nq, &NativeBackend::new(), 4);
+    let single = assign_to_level(&snap, level, &queries, nq, &NativeBackend::new(), 4)
+        .expect("finite demo queries");
     let router = ShardRouter::start(
         Arc::clone(&tier),
         backend.clone(),
         ServiceConfig { workers: 2, level, max_batch: 256, ..Default::default() },
         RouteMode::Fanout,
     );
-    let fanned = router.query_blocking(&queries, nq);
+    let fanned = router.query_blocking(&queries, nq).expect("router is live");
+    assert!(fanned.outcome.is_complete(), "no faults injected, no shard may be missing");
     assert_eq!(fanned.result.cluster, single.cluster, "fan-out ≡ single index (ids)");
     assert_eq!(fanned.result.dist, single.dist, "fan-out ≡ single index (distances)");
     println!("fan-out: {nq} queries, bit-identical to the single index");
@@ -91,7 +93,7 @@ fn main() {
         ServiceConfig { workers: 2, level, max_batch: 256, ..Default::default() },
         RouteMode::Sketch { probe: 2 },
     );
-    let sketched = router.query_blocking(&queries, nq);
+    let sketched = router.query_blocking(&queries, nq).expect("router is live");
     let hits =
         sketched.result.cluster.iter().zip(&single.cluster).filter(|(a, b)| a == b).count();
     println!("sketch probe=2: recall {hits}/{nq} vs the exact fan-out answer");
@@ -109,11 +111,13 @@ fn main() {
             batch.push(x + 0.005 * rng.normal_f32());
         }
     }
-    let report = tier.ingest(
-        &batch,
-        &IngestConfig { level, workers: 2, ..Default::default() },
-        backend.as_ref(),
-    );
+    let report = tier
+        .ingest(
+            &batch,
+            &IngestConfig { level, workers: 2, ..Default::default() },
+            backend.as_ref(),
+        )
+        .expect("demo batch fits the id space");
     let after = tier.global().snapshot();
     println!(
         "ingest (nearest-sketch owner: shard {owner}): {} points, {} attached — tier n={}",
@@ -124,7 +128,7 @@ fn main() {
         (0..tier.num_shards()).map(|s| tier.shard(s).snapshot().n).collect();
     assert_eq!(sizes_after.iter().sum::<usize>(), after.n, "re-projection kept the partition");
     // the running router serves the re-projected shards immediately
-    let requery = router.query_blocking(&queries[..ds.d], 1);
+    let requery = router.query_blocking(&queries[..ds.d], 1).expect("router is live");
     assert_eq!(requery.generation, after.generation, "router sees the post-ingest generation");
     router.shutdown();
 
@@ -157,8 +161,9 @@ fn main() {
         ServiceConfig { workers: 2, level, max_batch: 256, ..Default::default() },
         RouteMode::Fanout,
     );
-    let again = router.query_blocking(&queries, nq);
-    let post = assign_to_level(&after, level, &queries, nq, &NativeBackend::new(), 4);
+    let again = router.query_blocking(&queries, nq).expect("router is live");
+    let post = assign_to_level(&after, level, &queries, nq, &NativeBackend::new(), 4)
+        .expect("finite demo queries");
     assert_eq!(again.result.cluster, post.cluster, "cold-started tier ≡ live tier");
     router.shutdown();
     std::fs::remove_dir_all(&dir).ok();

@@ -3,7 +3,10 @@
 //! plus the ingest arm: absorbing a conflict-merge batch by
 //! defer-to-full-rebuild vs applying the merge online; plus the
 //! cold-start arm: restarting from a persisted snapshot (one read +
-//! bulk section conversion) vs re-running the batch pipeline.
+//! bulk section conversion) vs re-running the batch pipeline; plus the
+//! fault arms (`degraded_fanout`, `fault_deadline_p99`): routed fan-out
+//! with one shard killed, and request p99 under injected delays with a
+//! per-shard deadline.
 //!
 //! ```bash
 //! cargo bench --bench serve            # SCC_BENCH_SCALE / SCC_BENCH_BACKEND apply
@@ -21,8 +24,9 @@ use scc::pipeline::{SccClusterer, TeraHacClusterer};
 use scc::knn::DEFAULT_PROBE;
 use scc::serve::{
     assign_to_level, assign_with_strategy, ingest_batch, rebuild_snapshot, AssignCache,
-    AssignStrategy, HierarchySnapshot, IngestConfig, RebuildConfig, RouteMode, ServeIndex,
-    Service, ServiceConfig, ShardRouter, ShardSpec, ShardedIndex,
+    AssignStrategy, Clock, FaultInjector, FaultPlan, FaultPolicy, HierarchySnapshot,
+    IngestConfig, QueryError, RebuildConfig, RouteMode, ServeIndex, Service, ServiceConfig,
+    ShardRouter, ShardSpec, ShardedIndex,
 };
 use scc::util::stats::{fmt_count, fmt_secs};
 use scc::util::{par, Rng, Timer};
@@ -408,6 +412,136 @@ fn main() {
         shard_nq as f64 / sk_secs,
         fmt_secs(p99),
         recall
+    );
+
+    // --- fault arms: routing under injected faults (the chaos bench).
+    //     degraded_fanout kills one shard outright — the router pays the
+    //     panic/respawn/requeue cycle and merges the survivors into a
+    //     Degraded outcome, so the row measures the *cost of losing a
+    //     shard*, not a tuned steady state. fault_deadline_p99 injects
+    //     random worker delays under a per-shard deadline — the row
+    //     measures what deadline enforcement does to request p99 when
+    //     the tail is adversarial.
+    let victim =
+        (0..4usize).find(|&s| tier4.shard(s).snapshot().n > 0).expect("tier holds points");
+    let injector = Arc::new(FaultInjector::new(
+        FaultPlan { kill_shards: vec![victim], ..FaultPlan::all_clear() },
+        cfg.seed,
+        4,
+        Clock::wall(),
+    ));
+    let router = ShardRouter::start_with_policy(
+        Arc::clone(&tier4),
+        Arc::clone(&backend),
+        ServiceConfig {
+            workers: (threads / 4).max(1),
+            level,
+            max_batch: 1024,
+            ..Default::default()
+        },
+        RouteMode::Fanout,
+        FaultPolicy::default(),
+        Some(injector),
+    );
+    let mut lat = Vec::with_capacity(shard_nq / chunk + 1);
+    let mut degraded = 0usize;
+    let t = Timer::start();
+    let mut q0 = 0usize;
+    while q0 < shard_nq {
+        let q1 = (q0 + chunk).min(shard_nq);
+        let tq = Timer::start();
+        let resp = router
+            .query_blocking(&squeries[q0 * d..q1 * d], q1 - q0)
+            .expect("survivor quorum holds");
+        lat.push(tq.secs());
+        if !resp.outcome.is_complete() {
+            degraded += 1;
+        }
+        q0 = q1;
+    }
+    let deg_secs = t.secs();
+    let p99 = p99_of(&mut lat);
+    rows.push(Row {
+        queries: shard_nq,
+        path: "degraded_fanout",
+        secs: deg_secs,
+        points_per_sec: shard_nq as f64 / deg_secs,
+        p99_secs: Some(p99),
+        recall: None,
+    });
+    router.shutdown();
+    println!(
+        "degraded S=4 kill={victim}  {:>10} ({:>10.0} q/s, p99 {}/req)  {degraded} of {} chunks degraded",
+        fmt_secs(deg_secs),
+        shard_nq as f64 / deg_secs,
+        fmt_secs(p99),
+        lat.len()
+    );
+
+    let injector = Arc::new(FaultInjector::new(
+        FaultPlan {
+            delay_prob: 0.35,
+            delay: std::time::Duration::from_millis(4),
+            ..FaultPlan::all_clear()
+        },
+        cfg.seed ^ 1,
+        4,
+        Clock::wall(),
+    ));
+    let router = ShardRouter::start_with_policy(
+        Arc::clone(&tier4),
+        Arc::clone(&backend),
+        ServiceConfig {
+            workers: (threads / 4).max(1),
+            level,
+            max_batch: 1024,
+            ..Default::default()
+        },
+        RouteMode::Fanout,
+        FaultPolicy {
+            deadline: Some(std::time::Duration::from_millis(2)),
+            ..Default::default()
+        },
+        Some(injector),
+    );
+    let mut lat = Vec::with_capacity(shard_nq / chunk + 1);
+    let (mut degraded, mut lost) = (0usize, 0usize);
+    let t = Timer::start();
+    let mut q0 = 0usize;
+    while q0 < shard_nq {
+        let q1 = (q0 + chunk).min(shard_nq);
+        let tq = Timer::start();
+        match router.query_blocking(&squeries[q0 * d..q1 * d], q1 - q0) {
+            Ok(resp) => {
+                if !resp.outcome.is_complete() {
+                    degraded += 1;
+                }
+            }
+            // every shard can miss the deadline in the same attempt —
+            // a real (rare) outcome under this plan, and part of what
+            // the arm measures, not a bench failure
+            Err(QueryError::QuorumLost { .. }) => lost += 1,
+            Err(e) => panic!("unexpected query error: {e}"),
+        }
+        lat.push(tq.secs());
+        q0 = q1;
+    }
+    let dl_secs = t.secs();
+    let p99 = p99_of(&mut lat);
+    rows.push(Row {
+        queries: shard_nq,
+        path: "fault_deadline_p99",
+        secs: dl_secs,
+        points_per_sec: shard_nq as f64 / dl_secs,
+        p99_secs: Some(p99),
+        recall: None,
+    });
+    router.shutdown();
+    println!(
+        "deadline S=4 2ms/delay 4ms@0.35  {:>10} ({:>10.0} q/s, p99 {}/req)  {degraded} degraded, {lost} quorum-lost",
+        fmt_secs(dl_secs),
+        shard_nq as f64 / dl_secs,
+        fmt_secs(p99)
     );
 
     // --- ivf arm: brute vs IVF assignment as the serving cluster count

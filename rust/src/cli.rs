@@ -118,6 +118,19 @@ pub struct ServeOpts {
     /// IVF coarse cell count for `--assign ivf` (0 = auto,
     /// `ceil(sqrt(#clusters))` per level).
     pub nlist: usize,
+    /// Seed for deterministic fault injection (`--shards` only). Chaos
+    /// is enabled when either this or `--chaos-plan` is given; a seeded
+    /// run with an all-clear plan is bit-identical to no chaos at all.
+    pub chaos_seed: Option<u64>,
+    /// Parsed fault plan ([`crate::serve::FaultPlan::parse`] grammar);
+    /// `None` with `--chaos-seed` means an all-clear plan.
+    pub chaos_plan: Option<crate::serve::FaultPlan>,
+    /// Per-shard response deadline in milliseconds; shards that miss it
+    /// are dropped from the merge and reported in a degraded outcome.
+    pub shard_deadline_ms: Option<u64>,
+    /// Shards that must answer before a degraded result is acceptable
+    /// (fewer is a typed `QuorumLost` error). Default 1.
+    pub quorum: Option<usize>,
 }
 
 impl Default for ServeOpts {
@@ -137,6 +150,10 @@ impl Default for ServeOpts {
             probe: 2,
             assign: "brute".to_string(),
             nlist: 0,
+            chaos_seed: None,
+            chaos_plan: None,
+            shard_deadline_ms: None,
+            quorum: None,
         }
     }
 }
@@ -234,6 +251,20 @@ OPTIONS:
   --nlist N       serve: IVF coarse cell count for --assign ivf; omit for
                   auto = ceil(sqrt(#clusters)) per level (explicit 0 is
                   rejected)
+  --chaos-seed N  serve --shards: enable deterministic fault injection,
+                  seeded with N (all-clear plan unless --chaos-plan adds
+                  faults; a seeded all-clear run is bit-identical to a
+                  run without chaos)
+  --chaos-plan P  serve --shards: fault plan, ';'-separated clauses:
+                  kill=1,3 | kill-until=8 | drop=0.25 | delay=0.5x40
+                  (prob x millis) | stale=2 | corrupt=2 (see README
+                  \"Fault tolerance & degraded serving\")
+  --shard-deadline-ms N  serve --shards: per-shard response deadline;
+                  shards that miss it are dropped from the merge and the
+                  outcome reported as degraded instead of blocking
+  --quorum N      serve --shards: shards that must answer before a
+                  degraded merge is acceptable (default 1; fewer
+                  answering is a typed QuorumLost error)
   --metrics-out P write the run's telemetry snapshot to P after the
                   command finishes: Prometheus text when P ends in
                   .prom, JSON otherwise (see README \"Observability\")
@@ -343,11 +374,64 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     bail!("--nlist must be >= 1 (omit the flag for auto = ceil(sqrt(n)))");
                 }
             }
+            "--chaos-seed" => {
+                cli.serve.chaos_seed = Some(val()?.parse().context("--chaos-seed")?)
+            }
+            "--chaos-plan" => {
+                let spec = val()?;
+                let plan = crate::serve::FaultPlan::parse(spec)
+                    .map_err(|e| anyhow::anyhow!("--chaos-plan: {e}"))?;
+                cli.serve.chaos_plan = Some(plan);
+            }
+            "--shard-deadline-ms" => {
+                let ms: u64 = val()?.parse().context("--shard-deadline-ms")?;
+                if ms == 0 {
+                    bail!("--shard-deadline-ms must be >= 1 (a zero deadline drops every shard)");
+                }
+                cli.serve.shard_deadline_ms = Some(ms);
+            }
+            "--quorum" => {
+                let q: usize = val()?.parse().context("--quorum")?;
+                if q == 0 {
+                    bail!("--quorum must be >= 1 (shards that must answer)");
+                }
+                cli.serve.quorum = Some(q);
+            }
             "--snapshot-in" => cli.serve.snapshot_in = Some(val()?.clone()),
             "--snapshot-out" => cli.serve.snapshot_out = Some(val()?.clone()),
             "--metrics-out" => cli.metrics_out = Some(val()?.clone()),
             "--verbose" => cli.verbose = true,
             other => bail!("unknown flag {other:?}\n{USAGE}"),
+        }
+    }
+    // the fault flags configure the sharded router; without --shards
+    // there is nothing for them to act on, so catch the mistake here
+    // rather than silently ignoring it
+    let s = &cli.serve;
+    if (s.chaos_seed.is_some()
+        || s.chaos_plan.is_some()
+        || s.shard_deadline_ms.is_some()
+        || s.quorum.is_some())
+        && s.shards == 0
+    {
+        bail!(
+            "--chaos-seed/--chaos-plan/--shard-deadline-ms/--quorum require --shards >= 1 \
+             (they configure the sharded router)"
+        );
+    }
+    if let Some(plan) = &s.chaos_plan {
+        if let Some(&bad) = plan
+            .kill_shards
+            .iter()
+            .chain(plan.corrupt_shards.iter())
+            .find(|&&x| x >= s.shards)
+        {
+            bail!("--chaos-plan names shard {bad} but --shards is {}", s.shards);
+        }
+    }
+    if let Some(q) = s.quorum {
+        if q > s.shards {
+            bail!("--quorum {q} exceeds --shards {} (it can never be met)", s.shards);
         }
     }
     Ok(cli)
@@ -778,7 +862,10 @@ fn serve_sharded_cmd(
     use crate::serve::shard::{
         RouteMode, ShardRebuildWorker, ShardRouter, ShardSpec, ShardedIndex,
     };
-    use crate::serve::{HierarchySnapshot, IngestConfig, RebuildConfig, ServiceConfig};
+    use crate::serve::{
+        Clock, FaultInjector, FaultPlan, FaultPolicy, HierarchySnapshot, IngestConfig,
+        QueryOutcome, RebuildConfig, ServiceConfig,
+    };
     // the partition seed is part of the tier's identity: the same
     // --seed must be passed when reloading a persisted tier (the
     // manifest refuses otherwise, with a typed error)
@@ -786,19 +873,27 @@ fn serve_sharded_cmd(
     let (tier, clusterer, mut out) = match opts.snapshot_in.as_deref() {
         Some(dir) => {
             let t0 = std::time::Instant::now();
-            let tier = ShardedIndex::load_all(std::path::Path::new(dir), spec)?;
+            // quarantining cold start: a shard file that fails PR-7
+            // validation is sidelined and re-projected from global.scc
+            // instead of refusing to serve (manifest/global failures
+            // stay fatal — there is nothing to repair *from*)
+            let (tier, repairs) =
+                ShardedIndex::load_all_with_repair(std::path::Path::new(dir), spec)?;
             let secs = t0.elapsed().as_secs_f64();
             if tier.global().snapshot().n == 0 {
                 bail!("tier at {dir} holds zero points; nothing to serve");
             }
             let clusterer = make_clusterer(algo, cfg, 1)?;
-            let out = format!(
+            let mut out = format!(
                 "cold start: loaded {}-shard tier from {dir} in {} (global generation {}, \
                  skipped build)\n",
                 tier.num_shards(),
                 crate::util::stats::fmt_secs(secs),
                 tier.global().generation()
             );
+            for r in &repairs {
+                out.push_str(&format!("cold start repair — {r}\n"));
+            }
             (tier, clusterer, out)
         }
         None => {
@@ -851,11 +946,41 @@ fn serve_sharded_cmd(
     };
     let strategy = assign_strategy(opts);
     out.push_str(&assign_line(strategy));
-    let router = ShardRouter::start(
+    // chaos is on when either flag appeared; `--chaos-seed` alone means
+    // a seeded all-clear plan (the determinism control CI diffs against)
+    let injector = (opts.chaos_seed.is_some() || opts.chaos_plan.is_some()).then(|| {
+        let plan = opts.chaos_plan.clone().unwrap_or_else(FaultPlan::all_clear);
+        Arc::new(FaultInjector::new(
+            plan,
+            opts.chaos_seed.unwrap_or(0),
+            opts.shards,
+            Clock::wall(),
+        ))
+    });
+    let mut policy = FaultPolicy::default();
+    if let Some(ms) = opts.shard_deadline_ms {
+        policy.deadline = Some(std::time::Duration::from_millis(ms));
+    }
+    if let Some(q) = opts.quorum {
+        policy.quorum = q;
+    }
+    if let Some(inj) = &injector {
+        out.push_str(&format!("chaos: plan {} (seed {})\n", inj.plan(), inj.seed()));
+    }
+    if opts.shard_deadline_ms.is_some() || opts.quorum.is_some() {
+        out.push_str(&format!(
+            "fault policy: deadline {}, quorum {}\n",
+            opts.shard_deadline_ms.map_or("none".to_string(), |ms| format!("{ms}ms")),
+            policy.quorum,
+        ));
+    }
+    let router = ShardRouter::start_with_policy(
         Arc::clone(&tier),
         Arc::clone(&backend),
         ServiceConfig { workers, level, assign: strategy, ..Default::default() },
         mode,
+        policy,
+        injector.clone(),
     );
     // tier-level freshness: the worker rebuilds the *global* index (a
     // per-shard rebuild would break S-invariance) and reprojects
@@ -885,6 +1010,14 @@ fn serve_sharded_cmd(
         ],
     );
     out.push_str(&format!("served {served} queries\n{}\n", router.stats().report()));
+    if let QueryOutcome::Degraded { missing_shards, covered_points } = &resp.outcome {
+        out.push_str(&format!(
+            "degraded ({}/{} shards missing) — merged {covered_points} covered points, \
+             missing shards {missing_shards:?}\n",
+            missing_shards.len(),
+            tier.num_shards(),
+        ));
+    }
     out.push_str(&format!("assign checksum {:016x}\n", assign_checksum(&resp.result.cluster)));
 
     if opts.ingest > 0 {
@@ -945,6 +1078,21 @@ fn serve_sharded_cmd(
             "tier written to {dir} ({} shard files + manifest, generations {gens:?})\n",
             tier.num_shards()
         ));
+        // `corrupt=` clauses act on the *persisted* tier: flip one
+        // deterministic byte in each named shard file so the next cold
+        // start exercises quarantine + re-projection (the CI chaos
+        // cold-start step drives exactly this)
+        if let Some(inj) = &injector {
+            for &s in &inj.plan().corrupt_shards {
+                let path = std::path::Path::new(dir).join(format!("shard-{s:04}.scc"));
+                if let Some(off) = inj.corrupt_file(&path)? {
+                    out.push_str(&format!(
+                        "chaos: corrupted {} at byte offset {off}\n",
+                        path.display()
+                    ));
+                }
+            }
+        }
     }
     if let Some(path) = metrics_out {
         // per-shard service registries (each labeled shard="s") union
@@ -1401,6 +1549,119 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("shards"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parses_fault_flags_and_validates_them() {
+        let cli = parse(&argv(
+            "serve --shards 4 --chaos-seed 7 --chaos-plan kill=1;drop=0.25 \
+             --shard-deadline-ms 40 --quorum 2",
+        ))
+        .unwrap();
+        assert_eq!(cli.serve.chaos_seed, Some(7));
+        let plan = cli.serve.chaos_plan.unwrap();
+        assert_eq!(plan.kill_shards, vec![1]);
+        assert_eq!(plan.drop_prob, 0.25);
+        assert_eq!(cli.serve.shard_deadline_ms, Some(40));
+        assert_eq!(cli.serve.quorum, Some(2));
+        let defaults = parse(&argv("serve")).unwrap();
+        assert_eq!(defaults.serve.chaos_seed, None);
+        assert!(defaults.serve.chaos_plan.is_none());
+        assert_eq!(defaults.serve.shard_deadline_ms, None);
+        assert_eq!(defaults.serve.quorum, None);
+        // the fault flags configure the sharded router; without --shards
+        // they are a mistake, not a no-op
+        assert!(parse(&argv("serve --chaos-seed 7")).is_err());
+        assert!(parse(&argv("serve --quorum 1")).is_err());
+        // degenerate values are parse errors, not silent sentinels
+        assert!(parse(&argv("serve --shards 2 --chaos-plan bogus")).is_err());
+        assert!(parse(&argv("serve --shards 2 --chaos-plan kill=5")).is_err(), "out of range");
+        assert!(parse(&argv("serve --shards 2 --chaos-plan corrupt=2")).is_err());
+        assert!(parse(&argv("serve --shards 2 --quorum 0")).is_err());
+        assert!(parse(&argv("serve --shards 2 --quorum 3")).is_err(), "can never be met");
+        assert!(parse(&argv("serve --shards 2 --shard-deadline-ms 0")).is_err());
+    }
+
+    #[test]
+    fn sharded_serve_all_clear_chaos_is_bit_identical_to_no_chaos() {
+        // `--chaos-seed` with no plan arms the injector but injects
+        // nothing: the all-clear run must reproduce the clean run's
+        // assignments bit-for-bit (the determinism control CI diffs)
+        let base = "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                    --queries 40 --workers 2 --ingest 0 --shards 2";
+        let line = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("assign checksum"))
+                .expect("report carries a checksum line")
+                .to_string()
+        };
+        let clean = execute(&parse(&argv(base)).unwrap()).unwrap();
+        let chaos =
+            execute(&parse(&argv(&format!("{base} --chaos-seed 7"))).unwrap()).unwrap();
+        assert!(chaos.contains("chaos: plan all-clear (seed 7)"), "{chaos}");
+        assert!(!chaos.contains("degraded"), "{chaos}");
+        assert_eq!(line(&clean), line(&chaos), "all-clear chaos must not perturb results");
+    }
+
+    #[test]
+    fn sharded_serve_chaos_kill_prints_a_degraded_line() {
+        let base = "serve --dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                    --queries 40 --workers 2 --ingest 0 --shards 3";
+        let baseline = execute(&parse(&argv(base)).unwrap()).unwrap();
+        // pick a shard that owns points: an empty shard is never
+        // targeted by fan-out, so killing it (correctly) stays Complete
+        let sizes_line =
+            baseline.lines().find(|l| l.contains("points per shard")).unwrap().to_string();
+        let sizes: Vec<usize> = sizes_line
+            .split('[')
+            .nth(1)
+            .unwrap()
+            .trim_end_matches(']')
+            .split(',')
+            .map(|t| t.trim().parse().unwrap())
+            .collect();
+        let victim = sizes.iter().position(|&n| n > 0).expect("some shard owns points");
+        let chaos = execute(
+            &parse(&argv(&format!("{base} --chaos-seed 7 --chaos-plan kill={victim}")))
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(chaos.contains("degraded (1/3 shards missing)"), "{chaos}");
+        assert!(chaos.contains(&format!("missing shards [{victim}]")), "{chaos}");
+        assert!(chaos.contains("served 40 queries"), "killed shard must not sink the run");
+    }
+
+    #[test]
+    fn sharded_serve_corrupt_plan_quarantines_on_the_next_cold_start() {
+        let dir = std::env::temp_dir().join("scc_cli_chaos_quarantine_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let base = "--dataset aloi --scale 0.04 --knn 6 --rounds 10 --backend native \
+                    --queries 20 --workers 2 --ingest 0 --shards 2";
+        // `corrupt=1` flips one byte of shard-0001.scc *after* the tier
+        // is persisted; the PR-7 trailer catches it on the next load
+        let saved = execute(
+            &parse(&argv(&format!(
+                "serve {base} --chaos-seed 11 --chaos-plan corrupt=1 --snapshot-out {}",
+                dir.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(saved.contains("chaos: corrupted"), "{saved}");
+        let restored = execute(
+            &parse(&argv(&format!(
+                "serve --backend native --queries 20 --workers 2 --ingest 0 --shards 2 \
+                 --snapshot-in {}",
+                dir.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(restored.contains("cold start repair — shard 1: quarantined"), "{restored}");
+        assert!(restored.contains("re-projected from global.scc"), "{restored}");
+        assert!(restored.contains("served 20 queries"), "{restored}");
+        assert!(dir.join("shard-0001.scc.quarantined").exists(), "bad file is sidelined");
         std::fs::remove_dir_all(&dir).ok();
     }
 

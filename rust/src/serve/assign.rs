@@ -217,7 +217,7 @@ impl AssignCache {
 
     /// Cached indexes currently held (tests pin the eviction contract).
     pub fn len(&self) -> usize {
-        self.built.lock().expect("assign cache poisoned").len()
+        super::fault::lock_recover(&self.built).len()
     }
 
     /// The IVF index over `snap`'s centroids at `level`, building it on
@@ -235,7 +235,9 @@ impl AssignCache {
         let level = snap.resolve_level(level);
         let key = (snap.generation, level, nlist);
         {
-            let mut map = self.built.lock().expect("assign cache poisoned");
+            // poison-recovering: the map only ever holds complete
+            // entries (insert is the last step of a build)
+            let mut map = super::fault::lock_recover(&self.built);
             // superseded generations can never be queried again
             map.retain(|k, _| k.0 == snap.generation);
             if let Some(ix) = map.get(&key) {
@@ -252,7 +254,7 @@ impl AssignCache {
             backend,
             threads,
         ));
-        let mut map = self.built.lock().expect("assign cache poisoned");
+        let mut map = super::fault::lock_recover(&self.built);
         Arc::clone(map.entry(key).or_insert(built))
     }
 }

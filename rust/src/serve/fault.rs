@@ -1,0 +1,884 @@
+//! Deterministic fault injection + the degraded-mode serving contracts.
+//!
+//! The paper's serving scenario is measured in billions of queries; at
+//! that scale "a shard worker wedged" is weather, not an incident. This
+//! module supplies two halves of the same robustness story:
+//!
+//! * **Injection** — [`FaultPlan`] (what can go wrong) +
+//!   [`FaultInjector`] (when it goes wrong). Every decision is a pure
+//!   function of `(seed, domain, shard, sequence number)` through
+//!   [`crate::util::Rng`] (SplitMix64), and time flows through a
+//!   [`Clock`] that tests pin to a virtual counter — so an entire chaos
+//!   run, including which batches are dropped, delayed, or panicked, is
+//!   bit-reproducible from a single `u64` seed.
+//! * **Degradation** — the typed vocabulary the hardened serve stack
+//!   speaks: [`FaultPolicy`] (deadlines, bounded retry-and-backoff,
+//!   quorum), [`QueryOutcome`] (`Complete` vs `Degraded`), [`QueryError`]
+//!   (a dead worker is an error the caller sees, never a router panic),
+//!   and the per-shard [`CircuitBreaker`] (closed → open after K
+//!   consecutive failures → half-open probe → closed).
+//!
+//! Poison recovery: [`lock_recover`] / [`read_recover`] /
+//! [`write_recover`] replace the serve layer's
+//! `expect("... poisoned")` calls. A panicking worker poisons whatever
+//! mutex it held; the data under the serve-layer locks is either
+//! read-only for the holder (`rx`, views) or guarded by its own
+//! invariants (copy-on-write swaps are assign-only), so recovering the
+//! guard is sound — and it converts one isolated panic from a
+//! tier-wide cascade into a blip the breaker and respawn logic absorb.
+//!
+//! Zero-fault identity: an all-clear plan injects nothing, draws no
+//! randomness on the query path, and a `FaultPolicy` with no deadline
+//! changes no receive discipline — `fault_properties.rs` pins that a
+//! chaos-wired router answers bit-identically to a fault-free one.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
+
+use crate::serve::assign::AssignError;
+use crate::telemetry::Registry;
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------
+// clock
+
+/// Time source for fault decisions, breaker cooldowns, and backoff.
+///
+/// `Wall` is real monotonic time (CLI and benches). `Virtual` is a
+/// shared nanosecond counter that only moves when someone calls
+/// [`Clock::advance`] / [`Clock::pause`] — chaos tests use it so
+/// "waiting out a deadline" and "cooling down a breaker" are arithmetic,
+/// not sleeps, and every run replays identically.
+#[derive(Debug, Clone)]
+pub enum Clock {
+    Wall(Instant),
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
+    }
+
+    pub fn virtual_at(nanos: u64) -> Clock {
+        Clock::Virtual(Arc::new(AtomicU64::new(nanos)))
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+
+    /// Nanoseconds since this clock's origin.
+    pub fn now_nanos(&self) -> u64 {
+        match self {
+            Clock::Wall(origin) => origin.elapsed().as_nanos() as u64,
+            Clock::Virtual(t) => t.load(Ordering::Acquire),
+        }
+    }
+
+    /// Move a virtual clock forward; no-op on a wall clock (wall time
+    /// advances itself).
+    pub fn advance(&self, d: Duration) {
+        if let Clock::Virtual(t) = self {
+            t.fetch_add(d.as_nanos() as u64, Ordering::AcqRel);
+        }
+    }
+
+    /// Wait out `d`: a real sleep on the wall clock, a pure counter
+    /// bump on the virtual one (backoff in tests costs nothing and
+    /// stays deterministic).
+    pub fn pause(&self, d: Duration) {
+        match self {
+            Clock::Wall(_) => {
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+            }
+            Clock::Virtual(t) => {
+                t.fetch_add(d.as_nanos() as u64, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// plan
+
+/// What a chaos run is allowed to break. All-clear by default; parsed
+/// from a compact spec string on the CLI (see [`FaultPlan::parse`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Shards whose workers panic mid-batch (reap + respawn path).
+    pub kill_shards: Vec<usize>,
+    /// Each killed shard's workers panic only for their first
+    /// `kill_until_seq` batches, then recover (`u64::MAX` = forever) —
+    /// the knob the breaker's half-open probe tests turn.
+    pub kill_until_seq: u64,
+    /// Probability a shard's response is dropped on the floor (the
+    /// router perceives a deadline miss).
+    pub drop_prob: f64,
+    /// Probability a shard's response is delayed by [`FaultPlan::delay`].
+    pub delay_prob: f64,
+    /// Injected per-response delay.
+    pub delay: Duration,
+    /// The first `stale_seqs` fan-outs are reported generation-raced,
+    /// forcing the router's stale-retry path (a "storm" of raced swaps).
+    pub stale_seqs: u64,
+    /// Shard files to corrupt on disk ([`FaultInjector::corrupt_file`])
+    /// — exercises cold-start quarantine.
+    pub corrupt_shards: Vec<usize>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            kill_shards: Vec::new(),
+            kill_until_seq: u64::MAX,
+            drop_prob: 0.0,
+            delay_prob: 0.0,
+            delay: Duration::ZERO,
+            stale_seqs: 0,
+            corrupt_shards: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The plan that injects nothing (identical to `Default`).
+    pub fn all_clear() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// `true` when this plan can never inject a fault.
+    pub fn is_all_clear(&self) -> bool {
+        self.kill_shards.is_empty()
+            && self.drop_prob == 0.0
+            && self.delay_prob == 0.0
+            && self.stale_seqs == 0
+            && self.corrupt_shards.is_empty()
+    }
+
+    /// Parse a `;`-separated clause spec, e.g.
+    /// `kill=1,3;kill-until=8;drop=0.25;delay=0.5x40;stale=2;corrupt=2`:
+    ///
+    /// | clause | meaning |
+    /// |---|---|
+    /// | `kill=S[,S…]` | workers of those shards panic mid-batch |
+    /// | `kill-until=N` | killed shards recover after N batches |
+    /// | `drop=P` | drop each response with probability P |
+    /// | `delay=PxMS` | delay each response by MS ms with probability P |
+    /// | `stale=N` | first N fan-outs report a generation race |
+    /// | `corrupt=S[,S…]` | flip one byte in those shard files |
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("chaos clause {clause:?} is not key=value"))?;
+            let shard_list = |v: &str| -> Result<Vec<usize>, String> {
+                v.split(',')
+                    .map(|s| s.trim().parse::<usize>().map_err(|_| format!("bad shard id {s:?}")))
+                    .collect()
+            };
+            match key.trim() {
+                "kill" => plan.kill_shards = shard_list(val)?,
+                "kill-until" => {
+                    plan.kill_until_seq =
+                        val.trim().parse().map_err(|_| format!("bad kill-until {val:?}"))?;
+                }
+                "drop" => {
+                    plan.drop_prob = parse_prob(val)?;
+                }
+                "delay" => {
+                    let (p, ms) = val
+                        .split_once('x')
+                        .ok_or_else(|| format!("delay wants PROBxMILLIS, got {val:?}"))?;
+                    plan.delay_prob = parse_prob(p)?;
+                    let millis: u64 =
+                        ms.trim().parse().map_err(|_| format!("bad delay millis {ms:?}"))?;
+                    plan.delay = Duration::from_millis(millis);
+                }
+                "stale" => {
+                    plan.stale_seqs =
+                        val.trim().parse().map_err(|_| format!("bad stale count {val:?}"))?;
+                }
+                "corrupt" => plan.corrupt_shards = shard_list(val)?,
+                other => return Err(format!("unknown chaos clause key {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_prob(v: &str) -> Result<f64, String> {
+    let p: f64 = v.trim().parse().map_err(|_| format!("bad probability {v:?}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("probability {p} out of [0, 1]"));
+    }
+    Ok(p)
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut clauses: Vec<String> = Vec::new();
+        let list = |v: &[usize]| {
+            v.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        };
+        if !self.kill_shards.is_empty() {
+            clauses.push(format!("kill={}", list(&self.kill_shards)));
+            if self.kill_until_seq != u64::MAX {
+                clauses.push(format!("kill-until={}", self.kill_until_seq));
+            }
+        }
+        if self.drop_prob > 0.0 {
+            clauses.push(format!("drop={}", self.drop_prob));
+        }
+        if self.delay_prob > 0.0 {
+            clauses.push(format!("delay={}x{}", self.delay_prob, self.delay.as_millis()));
+        }
+        if self.stale_seqs > 0 {
+            clauses.push(format!("stale={}", self.stale_seqs));
+        }
+        if !self.corrupt_shards.is_empty() {
+            clauses.push(format!("corrupt={}", list(&self.corrupt_shards)));
+        }
+        if clauses.is_empty() {
+            write!(f, "all-clear")
+        } else {
+            write!(f, "{}", clauses.join(";"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// injector
+
+/// The fate the injector hands one shard submission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteFault {
+    /// Deliver normally.
+    None,
+    /// The response is lost: the router never hears back.
+    Drop,
+    /// The response arrives this much late.
+    Delay(Duration),
+}
+
+// Domain constants keep the per-decision streams decorrelated even for
+// equal (shard, seq) pairs.
+const DOMAIN_ROUTE: u64 = 0x524F_5554;
+const DOMAIN_CORRUPT: u64 = 0x4252_4F54;
+
+/// Deterministic chaos: hands out [`RouteFault`]s and worker panics as a
+/// pure function of `(seed, domain, shard, seq)`, where `seq` is a
+/// per-shard attempt counter. Two injectors built from the same
+/// `(plan, seed, shards)` produce identical fault schedules; an
+/// all-clear plan short-circuits every query-path decision without
+/// touching the counters' cache lines more than the increment.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    seed: u64,
+    clock: Clock,
+    /// Per-shard submission-attempt counters (router side).
+    route_seqs: Vec<AtomicU64>,
+    /// Per-shard batch counters (worker side).
+    worker_seqs: Vec<AtomicU64>,
+    /// Fan-out counter for the stale-generation storm.
+    stale_seq: AtomicU64,
+    /// What was actually injected (`serve.fault.injected.*`, all
+    /// scheduling-class: which attempt draws which fate depends on
+    /// thread interleaving of the seq counters under concurrency).
+    metrics: Registry,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, seed: u64, shards: usize, clock: Clock) -> FaultInjector {
+        FaultInjector {
+            plan,
+            seed,
+            clock,
+            route_seqs: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            worker_seqs: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            stale_seq: AtomicU64::new(0),
+            metrics: Registry::new(),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Injected-fault counters (merge into the router's telemetry).
+    pub fn telemetry(&self) -> crate::telemetry::TelemetrySnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn decision_rng(&self, domain: u64, shard: usize, seq: u64) -> Rng {
+        Rng::new(
+            self.seed
+                ^ domain.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (shard as u64).wrapping_mul(0xA076_1D64_78BD_642F)
+                ^ seq.wrapping_mul(0xBF58_476D_1CE4_E5B9),
+        )
+    }
+
+    /// The fate of the next submission to `shard`. Draw order is fixed
+    /// (drop, then delay) so a given `(seed, shard, seq)` always yields
+    /// the same fate regardless of which probabilities are enabled.
+    pub fn route_fault(&self, shard: usize) -> RouteFault {
+        let seq = self.route_seqs[shard].fetch_add(1, Ordering::AcqRel);
+        if self.plan.drop_prob == 0.0 && self.plan.delay_prob == 0.0 {
+            return RouteFault::None;
+        }
+        let mut rng = self.decision_rng(DOMAIN_ROUTE, shard, seq);
+        let (drop_draw, delay_draw) = (rng.f64(), rng.f64());
+        if drop_draw < self.plan.drop_prob {
+            self.metrics.counter_sched("serve.fault.injected.drops").inc();
+            return RouteFault::Drop;
+        }
+        if delay_draw < self.plan.delay_prob {
+            self.metrics.counter_sched("serve.fault.injected.delays").inc();
+            return RouteFault::Delay(self.plan.delay);
+        }
+        RouteFault::None
+    }
+
+    /// `true` when the worker serving `shard` should panic on its next
+    /// batch (first `kill_until_seq` batches of each killed shard).
+    pub fn worker_panics(&self, shard: usize) -> bool {
+        if !self.plan.kill_shards.contains(&shard) {
+            return false;
+        }
+        let seq = self.worker_seqs[shard].fetch_add(1, Ordering::AcqRel);
+        let panics = seq < self.plan.kill_until_seq;
+        if panics {
+            self.metrics.counter_sched("serve.fault.injected.panics").inc();
+        }
+        panics
+    }
+
+    /// `true` for the first [`FaultPlan::stale_seqs`] fan-outs: the
+    /// router must treat the round as generation-raced and retry.
+    pub fn stale_route(&self) -> bool {
+        if self.plan.stale_seqs == 0 {
+            return false;
+        }
+        let seq = self.stale_seq.fetch_add(1, Ordering::AcqRel);
+        let stale = seq < self.plan.stale_seqs;
+        if stale {
+            self.metrics.counter_sched("serve.fault.injected.stales").inc();
+        }
+        stale
+    }
+
+    /// Flip one deterministic byte of `path` in place (the FNV-1a
+    /// trailer of the PR-7 format rejects any single flipped bit, so
+    /// this reliably produces a `Corrupt` load). Returns the flipped
+    /// offset, or `None` for an empty file.
+    pub fn corrupt_file(&self, path: &Path) -> std::io::Result<Option<usize>> {
+        let mut bytes = std::fs::read(path)?;
+        if bytes.is_empty() {
+            return Ok(None);
+        }
+        let off = Rng::new(self.seed ^ DOMAIN_CORRUPT.wrapping_mul(0x94D0_49BB_1331_11EB))
+            .index(bytes.len());
+        bytes[off] ^= 0xFF;
+        std::fs::write(path, &bytes)?;
+        self.metrics.counter_sched("serve.fault.injected.corruptions").inc();
+        Ok(Some(off))
+    }
+}
+
+// `ServiceConfig` derives `Debug` and carries an `Option<Arc<FaultInjector>>`;
+// the registry inside has no useful Debug form, so print identity only.
+impl fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("plan", &self.plan)
+            .field("seed", &self.seed)
+            .field("virtual_clock", &self.clock.is_virtual())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// policy / outcome / error
+
+/// How the router behaves when shards misbehave. The default changes
+/// nothing: no deadline means the pre-fault blocking receive, quorum 1
+/// accepts any single answering shard, and the breaker needs real
+/// consecutive failures before it trips.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPolicy {
+    /// Per-shard response deadline (`None` = block until the shard
+    /// answers or its worker pool dies — exactly the pre-fault path).
+    pub deadline: Option<Duration>,
+    /// Resubmission attempts per shard after the first failure.
+    pub retries: u32,
+    /// Base backoff between attempts, scaled linearly by attempt number
+    /// (also applied between stale-generation fan-out retries).
+    pub backoff: Duration,
+    /// Minimum answering shards for a fan-out to succeed (clamped to
+    /// the number of targeted shards; fewer answers is
+    /// [`QueryError::QuorumLost`]).
+    pub quorum: usize,
+    /// Consecutive per-shard failures that trip its breaker open.
+    pub breaker_failures: u32,
+    /// How long an open breaker waits before the half-open probe.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            deadline: None,
+            retries: 1,
+            backoff: Duration::from_millis(1),
+            quorum: 1,
+            breaker_failures: 3,
+            breaker_cooldown: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Coverage of one routed answer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryOutcome {
+    /// Every targeted shard answered: the merge is the single-index
+    /// answer, bit for bit.
+    Complete,
+    /// Some shards never answered (dead workers, deadline misses, open
+    /// breakers). The merge is exact over the survivors; queries owned
+    /// by a missing shard may return the `(u32::MAX, ∞)` sentinel.
+    Degraded {
+        /// Targeted shards that produced no answer, ascending.
+        missing_shards: Vec<usize>,
+        /// Points owned by the shards that did answer.
+        covered_points: usize,
+    },
+}
+
+impl QueryOutcome {
+    pub fn is_complete(&self) -> bool {
+        matches!(self, QueryOutcome::Complete)
+    }
+}
+
+/// Typed failure of a routed (or pooled) query — what used to be a
+/// `recv().expect(...)` panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryError {
+    /// The batch itself was invalid (pre-submit validation).
+    Assign(AssignError),
+    /// The worker pool died before answering (`shard` known on the
+    /// routed path, `None` for a single-service pool).
+    WorkerLost { shard: Option<usize> },
+    /// Fewer shards answered than the policy's quorum requires.
+    QuorumLost { answered: usize, required: usize, missing_shards: Vec<usize> },
+}
+
+impl fmt::Display for QueryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QueryError::Assign(e) => write!(f, "{e}"),
+            QueryError::WorkerLost { shard: Some(s) } => {
+                write!(f, "shard {s} worker pool died before answering")
+            }
+            QueryError::WorkerLost { shard: None } => {
+                write!(f, "worker pool died before answering")
+            }
+            QueryError::QuorumLost { answered, required, missing_shards } => write!(
+                f,
+                "quorum lost: {answered} of {required} required shards answered \
+                 (missing: {missing_shards:?})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+impl From<AssignError> for QueryError {
+    fn from(e: AssignError) -> QueryError {
+        QueryError::Assign(e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// circuit breaker
+
+/// Breaker position (gauge encoding: closed 0, half-open 1, open 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    pub fn gauge_value(self) -> f64 {
+        match self {
+            BreakerState::Closed => 0.0,
+            BreakerState::HalfOpen => 1.0,
+            BreakerState::Open => 2.0,
+        }
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    /// Consecutive failures while closed.
+    failures: u32,
+    /// [`Clock::now_nanos`] at the moment the breaker opened.
+    opened_at: u64,
+}
+
+/// Per-shard circuit breaker: closed → open after
+/// [`FaultPolicy::breaker_failures`] consecutive failures → half-open
+/// after [`FaultPolicy::breaker_cooldown`] (one probe attempt passes) →
+/// closed on probe success, straight back to open on probe failure.
+/// Time flows through the router's [`Clock`], so the FSM is fully
+/// deterministic under a virtual clock.
+pub struct CircuitBreaker {
+    failures_limit: u32,
+    cooldown: Duration,
+    clock: Clock,
+    inner: Mutex<BreakerInner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(failures_limit: u32, cooldown: Duration, clock: Clock) -> CircuitBreaker {
+        CircuitBreaker {
+            failures_limit: failures_limit.max(1),
+            cooldown,
+            clock,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                failures: 0,
+                opened_at: 0,
+            }),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        lock_recover(&self.inner).state
+    }
+
+    /// May this shard be tried right now? Open breakers refuse until
+    /// the cooldown elapses, then admit exactly the half-open probe.
+    pub fn allow(&self) -> bool {
+        let mut b = lock_recover(&self.inner);
+        match b.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                let waited = self.clock.now_nanos().saturating_sub(b.opened_at);
+                if waited >= self.cooldown.as_nanos() as u64 {
+                    b.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful answer; returns the new state.
+    pub fn record_success(&self) -> BreakerState {
+        let mut b = lock_recover(&self.inner);
+        b.failures = 0;
+        b.state = BreakerState::Closed;
+        b.state
+    }
+
+    /// Record a failed attempt; returns `(new state, tripped_open_now)`.
+    pub fn record_failure(&self) -> (BreakerState, bool) {
+        let mut b = lock_recover(&self.inner);
+        match b.state {
+            BreakerState::HalfOpen => {
+                // the probe failed: straight back to open, fresh cooldown
+                b.state = BreakerState::Open;
+                b.opened_at = self.clock.now_nanos();
+                (b.state, true)
+            }
+            BreakerState::Closed => {
+                b.failures += 1;
+                if b.failures >= self.failures_limit {
+                    b.state = BreakerState::Open;
+                    b.opened_at = self.clock.now_nanos();
+                    b.failures = 0;
+                    (b.state, true)
+                } else {
+                    (b.state, false)
+                }
+            }
+            BreakerState::Open => (b.state, false),
+        }
+    }
+}
+
+impl fmt::Debug for CircuitBreaker {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CircuitBreaker")
+            .field("state", &self.state())
+            .field("failures_limit", &self.failures_limit)
+            .field("cooldown", &self.cooldown)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// poison recovery
+
+/// Lock a mutex, recovering from poisoning (see module docs for why
+/// this is sound on the serve layer's locks).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poisoning.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poisoning.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// shard repair report (cold-start quarantine)
+
+/// One quarantined-and-reprojected shard file from a repairing cold
+/// start (`ShardedIndex::load_all_with_repair`).
+#[derive(Debug, Clone)]
+pub struct ShardRepair {
+    pub shard: usize,
+    /// The path that failed validation (now re-written from the fresh
+    /// projection).
+    pub file: PathBuf,
+    /// Where the failing bytes were sidelined (`<file>.quarantined`).
+    pub quarantined: PathBuf,
+    /// Human-readable validation failure.
+    pub reason: String,
+}
+
+impl fmt::Display for ShardRepair {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "shard {}: quarantined {} ({}); re-projected from global.scc",
+            self.shard,
+            self.file.display(),
+            self.reason
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_round_trips_through_display() {
+        let spec = "kill=1,3;kill-until=8;drop=0.25;delay=0.5x40;stale=2;corrupt=2";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.kill_shards, vec![1, 3]);
+        assert_eq!(plan.kill_until_seq, 8);
+        assert_eq!(plan.drop_prob, 0.25);
+        assert_eq!(plan.delay_prob, 0.5);
+        assert_eq!(plan.delay, Duration::from_millis(40));
+        assert_eq!(plan.stale_seqs, 2);
+        assert_eq!(plan.corrupt_shards, vec![2]);
+        assert!(!plan.is_all_clear());
+        // canonical display re-parses to the same plan
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert_eq!(FaultPlan::all_clear().to_string(), "all-clear");
+        assert!(FaultPlan::default().is_all_clear());
+    }
+
+    #[test]
+    fn plan_parse_rejects_malformed_specs() {
+        for bad in [
+            "kill",            // no value
+            "kill=x",          // non-numeric shard
+            "drop=1.5",        // probability out of range
+            "drop=-0.1",       // negative probability
+            "delay=0.5",       // missing xMILLIS
+            "delay=0.5xten",   // non-numeric millis
+            "explode=1",       // unknown key
+            "stale=many",      // non-numeric count
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // empty spec and stray separators are the all-clear plan
+        assert!(FaultPlan::parse("").unwrap().is_all_clear());
+        assert!(FaultPlan::parse(" ; ;").unwrap().is_all_clear());
+    }
+
+    #[test]
+    fn same_seed_yields_identical_fault_schedules() {
+        let plan = FaultPlan::parse("drop=0.3;delay=0.3x5").unwrap();
+        let schedule = |seed: u64| -> Vec<RouteFault> {
+            let inj = FaultInjector::new(plan.clone(), seed, 4, Clock::virtual_at(0));
+            (0..64).map(|i| inj.route_fault(i % 4)).collect()
+        };
+        assert_eq!(schedule(7), schedule(7), "same seed, same fates");
+        assert_ne!(schedule(7), schedule(8), "different seed, different fates");
+        // the schedule actually mixes fates
+        let s = schedule(7);
+        assert!(s.iter().any(|f| matches!(f, RouteFault::Drop)));
+        assert!(s.iter().any(|f| matches!(f, RouteFault::Delay(_))));
+        assert!(s.iter().any(|f| matches!(f, RouteFault::None)));
+    }
+
+    #[test]
+    fn all_clear_injector_never_injects() {
+        let inj = FaultInjector::new(FaultPlan::all_clear(), 7, 2, Clock::virtual_at(0));
+        for _ in 0..32 {
+            assert_eq!(inj.route_fault(0), RouteFault::None);
+            assert_eq!(inj.route_fault(1), RouteFault::None);
+            assert!(!inj.worker_panics(0));
+            assert!(!inj.stale_route());
+        }
+        assert!(inj.telemetry().metrics.is_empty(), "nothing injected, nothing counted");
+    }
+
+    #[test]
+    fn kill_until_bounds_worker_panics() {
+        let plan = FaultPlan { kill_shards: vec![1], kill_until_seq: 3, ..Default::default() };
+        let inj = FaultInjector::new(plan, 1, 2, Clock::virtual_at(0));
+        assert!(!inj.worker_panics(0), "unkilled shard never panics");
+        let panics: Vec<bool> = (0..6).map(|_| inj.worker_panics(1)).collect();
+        assert_eq!(panics, vec![true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn stale_storm_covers_exactly_the_first_n_fanouts() {
+        let plan = FaultPlan { stale_seqs: 2, ..Default::default() };
+        let inj = FaultInjector::new(plan, 1, 1, Clock::virtual_at(0));
+        let seen: Vec<bool> = (0..5).map(|_| inj.stale_route()).collect();
+        assert_eq!(seen, vec![true, true, false, false, false]);
+    }
+
+    #[test]
+    fn corrupt_file_flips_one_deterministic_byte() {
+        let dir = std::env::temp_dir().join(format!("scc-fault-corrupt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("victim.bin");
+        let original: Vec<u8> = (0..=255u8).collect();
+        std::fs::write(&path, &original).unwrap();
+        let inj = FaultInjector::new(FaultPlan::all_clear(), 42, 1, Clock::wall());
+        let off = inj.corrupt_file(&path).unwrap().expect("non-empty file");
+        let after = std::fs::read(&path).unwrap();
+        let flipped: Vec<usize> =
+            (0..original.len()).filter(|&i| original[i] != after[i]).collect();
+        assert_eq!(flipped, vec![off], "exactly one byte flipped, at the reported offset");
+        assert_eq!(after[off], original[off] ^ 0xFF);
+        // same seed flips the same offset again (back to the original)
+        let off2 = inj.corrupt_file(&path).unwrap().unwrap();
+        assert_eq!(off, off2);
+        assert_eq!(std::fs::read(&path).unwrap(), original);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_half_open_closed() {
+        let clock = Clock::virtual_at(0);
+        let b = CircuitBreaker::new(2, Duration::from_millis(10), clock.clone());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+        assert_eq!(b.record_failure(), (BreakerState::Closed, false));
+        let (state, opened) = b.record_failure();
+        assert_eq!((state, opened), (BreakerState::Open, true), "K=2 consecutive failures trip");
+        assert!(!b.allow(), "open breaker refuses before the cooldown");
+        clock.advance(Duration::from_millis(10));
+        assert!(b.allow(), "cooldown elapsed: half-open probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.record_success(), BreakerState::Closed, "probe success closes");
+        // probe failure path: back to open immediately, no K accumulation
+        b.record_failure();
+        b.record_failure();
+        clock.advance(Duration::from_millis(10));
+        assert!(b.allow());
+        let (state, opened) = b.record_failure();
+        assert_eq!((state, opened), (BreakerState::Open, true), "failed probe re-opens");
+        assert!(!b.allow());
+    }
+
+    #[test]
+    fn breaker_success_resets_the_consecutive_count() {
+        let b = CircuitBreaker::new(3, Duration::from_millis(1), Clock::virtual_at(0));
+        b.record_failure();
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "non-consecutive failures must not trip");
+        let (state, _) = b.record_failure();
+        assert_eq!(state, BreakerState::Open);
+    }
+
+    #[test]
+    fn poison_recovery_returns_the_inner_value() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex is poisoned");
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
+
+        let l = Arc::new(RwLock::new(1));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        *write_recover(&l) += 1;
+        assert_eq!(*read_recover(&l), 2);
+    }
+
+    #[test]
+    fn virtual_clock_is_manual_and_wall_clock_moves() {
+        let v = Clock::virtual_at(5);
+        assert!(v.is_virtual());
+        assert_eq!(v.now_nanos(), 5);
+        v.advance(Duration::from_nanos(10));
+        v.pause(Duration::from_nanos(85)); // pause on virtual = advance
+        assert_eq!(v.now_nanos(), 100);
+        let w = Clock::wall();
+        assert!(!w.is_virtual());
+        let t0 = w.now_nanos();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(w.now_nanos() > t0);
+    }
+
+    #[test]
+    fn query_error_display_and_conversion() {
+        let e: QueryError = AssignError::NonFiniteQuery { row: 3 }.into();
+        assert_eq!(e, QueryError::Assign(AssignError::NonFiniteQuery { row: 3 }));
+        assert!(e.to_string().contains("row 3"));
+        let e = QueryError::WorkerLost { shard: Some(2) };
+        assert!(e.to_string().contains("shard 2"));
+        let e = QueryError::QuorumLost { answered: 1, required: 3, missing_shards: vec![0, 2] };
+        assert!(e.to_string().contains("1 of 3"));
+        assert!(QueryOutcome::Complete.is_complete());
+        assert!(!QueryOutcome::Degraded { missing_shards: vec![1], covered_points: 10 }
+            .is_complete());
+    }
+}

@@ -36,6 +36,17 @@
 //! (their pairwise aggregates are not retained in the snapshot), so
 //! existing structure can only be bridged transitively through new
 //! points — which is exactly the conflict-merge case above.
+//!
+//! Fault interplay: ingestion runs on the caller's thread against the
+//! *global* index (the sharded tier re-projects afterwards), so it sits
+//! outside the [`super::fault`] injection surface — injected worker
+//! panics, dropped responses, and per-shard deadlines only touch the
+//! query path. A degraded query phase ([`super::QueryOutcome::Degraded`])
+//! therefore never loses ingested points: the batch lands in the global
+//! snapshot regardless of which shard pools were answering, and the next
+//! re-projection restores the dead shards' views from it — the same
+//! re-projection that repairs a quarantined shard file on cold start
+//! ([`super::shard::ShardedIndex::load_all_with_repair`]).
 
 use super::snapshot::HierarchySnapshot;
 use crate::core::Partition;

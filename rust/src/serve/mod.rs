@@ -51,7 +51,15 @@
 //!   and approximate sketch routing, and per-shard snapshot transport
 //!   over the [`persist`] format
 //!   ([`ShardedIndex::save_all`] / [`ShardedIndex::load_all`] plus a
-//!   seed- and generation-validated tier manifest).
+//!   seed- and generation-validated tier manifest);
+//! * [`fault`] — the robustness axis: deterministic, seeded fault
+//!   injection ([`FaultPlan`] / [`FaultInjector`] over a virtual
+//!   [`Clock`]) and the degraded-mode vocabulary the hardened stack
+//!   speaks — [`FaultPolicy`] deadlines/retries/quorum,
+//!   [`QueryOutcome::Degraded`] instead of router panics, typed
+//!   [`QueryError`]s, per-shard [`CircuitBreaker`]s, poison-recovering
+//!   lock helpers, and cold-start snapshot quarantine
+//!   ([`ShardedIndex::load_all_with_repair`]).
 //!
 //! Update policy (documented invariant): ingest appends points to
 //! clusters (updating their exact aggregates) or creates new clusters;
@@ -95,6 +103,7 @@
 //! [`crate::pipeline::CutReport`]).
 
 pub mod assign;
+pub mod fault;
 pub mod ingest;
 pub mod persist;
 pub mod service;
@@ -104,6 +113,10 @@ pub mod snapshot;
 pub use assign::{
     assign_at_tau, assign_to_level, assign_with_strategy, validate_queries, AssignCache,
     AssignError, AssignResult, AssignStrategy,
+};
+pub use fault::{
+    lock_recover, read_recover, write_recover, BreakerState, CircuitBreaker, Clock,
+    FaultInjector, FaultPlan, FaultPolicy, QueryError, QueryOutcome, RouteFault, ShardRepair,
 };
 pub use ingest::{ingest_batch, IngestConfig, IngestError, IngestReport};
 pub use persist::{
@@ -115,7 +128,7 @@ pub use service::{
     ServiceConfig, ServiceStats,
 };
 pub use shard::{
-    RouteMode, ShardError, ShardManifest, ShardRebuildWorker, ShardRouter, ShardSpec,
-    ShardedIndex,
+    RouteMode, RoutedResponse, ShardError, ShardManifest, ShardRebuildWorker, ShardRouter,
+    ShardSpec, ShardedIndex,
 };
 pub use snapshot::{HierarchySnapshot, SnapshotLevel};

@@ -40,6 +40,7 @@ use super::assign::{
     assign_with_strategy, validate_queries, AssignCache, AssignError, AssignResult,
     AssignStrategy,
 };
+use super::fault::{lock_recover, read_recover, write_recover, FaultInjector, QueryError};
 use super::ingest::{ingest_batch, IngestConfig, IngestError, IngestReport};
 use super::snapshot::HierarchySnapshot;
 use crate::core::Dataset;
@@ -84,21 +85,23 @@ impl ServeIndex {
         }
     }
 
-    /// The current frozen snapshot (cheap: one `Arc` clone).
+    /// The current frozen snapshot (cheap: one `Arc` clone). Recovers
+    /// from lock poisoning: the cell only ever holds a complete `Arc`
+    /// swap, so a panicking writer cannot leave a torn snapshot behind.
     pub fn snapshot(&self) -> Arc<HierarchySnapshot> {
-        self.current.read().expect("index lock").clone()
+        read_recover(&self.current).clone()
     }
 
     /// The current snapshot's swap generation.
     pub fn generation(&self) -> u64 {
-        self.current.read().expect("index lock").generation
+        read_recover(&self.current).generation
     }
 
     /// Swap in a freshly built snapshot (e.g. after a full rebuild),
     /// stamping the next generation. Readers holding the old `Arc` keep
     /// serving it untouched.
     pub fn replace(&self, mut snapshot: HierarchySnapshot) {
-        let mut cur = self.current.write().expect("index lock");
+        let mut cur = write_recover(&self.current);
         snapshot.generation = cur.generation + 1;
         // wall-clock ordering of swaps is scheduling-dependent
         crate::telemetry::global()
@@ -132,7 +135,7 @@ impl ServeIndex {
         let d = self.snapshot().d.max(1);
         loop {
             {
-                let mut q = self.pending.lock().expect("pending queue");
+                let mut q = lock_recover(&self.pending);
                 if q.rebuilding {
                     q.batches.push((batch.to_vec(), cfg.clone()));
                     return Ok(IngestReport {
@@ -142,11 +145,11 @@ impl ServeIndex {
                     });
                 }
             }
-            let _gate = self.ingest_gate.lock().expect("ingest gate");
+            let _gate = lock_recover(&self.ingest_gate);
             // a rebuild may have reached its decision point while we
             // waited on the gate; re-check under the gate (the rebuild
             // sets the flag with the gate held, so this read is racefree)
-            if self.pending.lock().expect("pending queue").rebuilding {
+            if lock_recover(&self.pending).rebuilding {
                 continue; // enqueue on the next iteration
             }
             let mut next = (*self.snapshot()).clone();
@@ -236,8 +239,8 @@ impl ServeIndex {
     ) -> bool {
         // phase 1 (gate held briefly): decide, open the catch-up queue
         let cur = {
-            let _gate = self.ingest_gate.lock().expect("ingest gate");
-            let mut q = self.pending.lock().expect("pending queue");
+            let _gate = lock_recover(&self.ingest_gate);
+            let mut q = lock_recover(&self.pending);
             let cur = self.snapshot();
             if q.rebuilding || !cur.needs_rebuild(drift_limit) {
                 return false; // another rebuild is in flight, or no drift
@@ -252,8 +255,8 @@ impl ServeIndex {
         std::mem::forget(guard);
         // phase 3 (gate held): replay queued batches onto the fresh
         // snapshot, close the queue, swap
-        let _gate = self.ingest_gate.lock().expect("ingest gate");
-        let mut q = self.pending.lock().expect("pending queue");
+        let _gate = lock_recover(&self.ingest_gate);
+        let mut q = lock_recover(&self.pending);
         for (batch, icfg) in q.batches.drain(..) {
             // outcome counts fold into `fresh`'s own counters
             // (ingested / conflicts / online_merges), so replayed
@@ -287,8 +290,8 @@ struct RebuildAbortGuard<'a> {
 
 impl Drop for RebuildAbortGuard<'_> {
     fn drop(&mut self) {
-        let _gate = self.index.ingest_gate.lock().expect("ingest gate");
-        let mut q = self.index.pending.lock().expect("pending queue");
+        let _gate = lock_recover(&self.index.ingest_gate);
+        let mut q = lock_recover(&self.index.pending);
         let batches: Vec<_> = q.batches.drain(..).collect();
         q.rebuilding = false;
         drop(q);
@@ -327,6 +330,14 @@ pub struct ServiceConfig {
     /// `(snapshot generation, level)` inside the service, so each one
     /// is built once per snapshot swap.
     pub assign: AssignStrategy,
+    /// Chaos hook: when set, workers consult the injector before each
+    /// batch and panic on demand ([`FaultInjector::worker_panics`]) —
+    /// the deterministic driver of the reap-and-respawn path. `None`
+    /// (the default) adds no branch beyond this `Option` check.
+    pub fault: Option<Arc<FaultInjector>>,
+    /// Which shard this pool serves, for the injector's per-shard fault
+    /// schedules (0 for an unsharded service).
+    pub fault_shard: usize,
 }
 
 impl Default for ServiceConfig {
@@ -337,6 +348,8 @@ impl Default for ServiceConfig {
             threads_per_request: 1,
             max_batch: 512,
             assign: AssignStrategy::Brute,
+            fault: None,
+            fault_shard: 0,
         }
     }
 }
@@ -358,7 +371,19 @@ pub struct QueryResponse {
 }
 
 enum Job {
-    Batch { queries: Vec<f32>, nq: usize, resp: mpsc::Sender<QueryResponse> },
+    Batch {
+        queries: Vec<f32>,
+        nq: usize,
+        resp: mpsc::Sender<QueryResponse>,
+        /// Injected response delay (wall-clock chaos runs only; virtual
+        /// clocks resolve delays numerically at the router and never
+        /// enqueue one).
+        delay: Option<Duration>,
+        /// `true` once a panicking worker has re-queued this batch: a
+        /// second panic drops it (and its response sender), so a
+        /// poisoned batch cannot ping-pong the pool to death.
+        retried: bool,
+    },
 }
 
 struct Shared {
@@ -366,6 +391,15 @@ struct Shared {
     backend: Arc<dyn Backend + Send + Sync>,
     cfg: ServiceConfig,
     rx: Mutex<mpsc::Receiver<Job>>,
+    /// A clone of the submission sender, for panicking workers to
+    /// re-queue their in-flight batch. `None` once shutdown begins
+    /// (both this and [`Service::tx`] must drop for the channel to
+    /// close and the workers to exit).
+    requeue_tx: Mutex<Option<mpsc::Sender<Job>>>,
+    /// Every live-or-exited worker handle, including respawned
+    /// replacements (a panicking worker registers its replacement here
+    /// before unwinding out). Shutdown drains until empty.
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Each service owns its metrics (latency histogram + lifetime
     /// counters), so two services — or two tests — never bleed into each
     /// other's stats. [`Service::telemetry`] snapshots it; callers merge
@@ -385,11 +419,10 @@ struct Shared {
 }
 
 /// A running worker pool. Dropping (or [`Service::shutdown`]) closes the
-/// queue and joins the workers.
+/// queue and joins the workers (including any respawned replacements).
 pub struct Service {
     shared: Arc<Shared>,
     tx: Option<mpsc::Sender<Job>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
@@ -410,6 +443,8 @@ impl Service {
             backend,
             cfg,
             rx: Mutex::new(rx),
+            requeue_tx: Mutex::new(Some(tx.clone())),
+            workers: Mutex::new(Vec::new()),
             metrics,
             latency,
             queries_served,
@@ -417,7 +452,7 @@ impl Service {
             started: Instant::now(),
             assign_cache: AssignCache::new(),
         });
-        let workers = (0..shared.cfg.workers.max(1))
+        let handles: Vec<_> = (0..shared.cfg.workers.max(1))
             .map(|w| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
@@ -426,7 +461,8 @@ impl Service {
                     .expect("spawn serve worker")
             })
             .collect();
-        Service { shared, tx: Some(tx), workers }
+        lock_recover(&shared.workers).extend(handles);
+        Service { shared, tx: Some(tx) }
     }
 
     /// Enqueue one batch of `nq` row-major queries; the response arrives
@@ -446,6 +482,22 @@ impl Service {
         queries: Vec<f32>,
         nq: usize,
     ) -> Result<mpsc::Receiver<QueryResponse>, AssignError> {
+        self.submit_with(queries, nq, None)
+    }
+
+    /// [`Service::submit`] with an injected response delay (the chaos
+    /// path: the router hands a slow-shard fate to the worker so the
+    /// latency lands where a real straggler's would — in the pool).
+    ///
+    /// If every worker is gone (the pool died), the send fails and the
+    /// response sender is dropped with the job: the caller's `recv()`
+    /// observes a closed channel instead of this thread panicking.
+    pub fn submit_with(
+        &self,
+        queries: Vec<f32>,
+        nq: usize,
+        delay: Option<Duration>,
+    ) -> Result<mpsc::Receiver<QueryResponse>, AssignError> {
         let (rtx, rrx) = mpsc::channel();
         if nq == 0 {
             let snap = self.shared.index.snapshot();
@@ -458,11 +510,8 @@ impl Service {
             return Ok(rrx);
         }
         validate_queries(&queries, self.shared.index.snapshot().d)?;
-        self.tx
-            .as_ref()
-            .expect("service is live")
-            .send(Job::Batch { queries, nq, resp: rtx })
-            .expect("worker pool alive");
+        let job = Job::Batch { queries, nq, resp: rtx, delay, retried: false };
+        let _ = self.tx.as_ref().expect("service is live").send(job);
         Ok(rrx)
     }
 
@@ -489,13 +538,17 @@ impl Service {
         Ok(handles)
     }
 
-    /// Submit one batch and wait for its response.
+    /// Submit one batch and wait for its response. A dead worker pool
+    /// is a typed [`QueryError::WorkerLost`], never a panic on the
+    /// calling thread.
     pub fn query_blocking(
         &self,
         queries: Vec<f32>,
         nq: usize,
-    ) -> Result<QueryResponse, AssignError> {
-        Ok(self.submit(queries, nq)?.recv().expect("service response"))
+    ) -> Result<QueryResponse, QueryError> {
+        self.submit(queries, nq)?
+            .recv()
+            .map_err(|_| QueryError::WorkerLost { shard: None })
     }
 
     /// The index this service reads from.
@@ -522,6 +575,8 @@ impl Service {
             p95: zero_if_nan(lat.percentile(95.0)),
             p99: zero_if_nan(lat.percentile(99.0)),
             max_latency: lat.max(),
+            stale_retries: 0,
+            sentinel_ids: 0,
         }
     }
 
@@ -553,6 +608,8 @@ impl Service {
             p95: zero_if_nan(merged.percentile(95.0)),
             p99: zero_if_nan(merged.percentile(99.0)),
             max_latency: merged.max(),
+            stale_retries: 0,
+            sentinel_ids: 0,
         }
     }
 
@@ -566,62 +623,128 @@ impl Service {
 
     /// Drain the queue, stop the workers, and return final stats.
     pub fn shutdown(mut self) -> ServiceStats {
-        self.tx = None; // closes the channel; workers exit on recv error
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.close_and_join();
         self.stats()
+    }
+
+    /// Close both submission senders (ours and the workers' re-queue
+    /// clone), then join handles until the registry stays empty — a
+    /// panicking worker may register its respawned replacement while we
+    /// drain, so one pass is not enough.
+    fn close_and_join(&mut self) {
+        self.tx = None;
+        *lock_recover(&self.shared.requeue_tx) = None;
+        loop {
+            let handles: Vec<_> = lock_recover(&self.shared.workers).drain(..).collect();
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.tx = None;
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        self.close_and_join();
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        // only one worker parks in recv(); the rest queue on the mutex
+        let job = { lock_recover(&shared.rx).recv() };
+        let Ok(Job::Batch { queries, nq, resp, delay, retried }) = job else { break };
+        if let Some(d) = delay {
+            // wall-clock chaos run: a straggling shard's latency lands
+            // where a real one's would — inside the pool, ahead of the
+            // batch (virtual-clock runs resolve delays at the router and
+            // never enqueue one)
+            std::thread::sleep(d);
+        }
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(inj) = &shared.cfg.fault {
+                if inj.worker_panics(shared.cfg.fault_shard) {
+                    panic!("injected worker fault (shard {})", shared.cfg.fault_shard);
+                }
+            }
+            serve_batch(shared, &queries, nq)
+        }));
+        match outcome {
+            Ok((result, level, generation, secs)) => {
+                // receiver may have given up; that's fine
+                let _ = resp.send(QueryResponse { result, level, generation, latency_secs: secs });
+            }
+            Err(_) => {
+                // panic isolation: count the casualty, re-queue the
+                // in-flight batch exactly once (a second panic drops it,
+                // and the dropped response sender is the caller's
+                // deterministic worker-lost signal), register a respawned
+                // replacement, and reap this thread by returning.
+                shared.metrics.counter_sched("serve.fault.worker_panics").inc();
+                if !retried {
+                    if let Some(tx) = lock_recover(&shared.requeue_tx).as_ref() {
+                        let requeued = Job::Batch { queries, nq, resp, delay: None, retried: true };
+                        let _ = tx.send(requeued);
+                    }
+                }
+                respawn_worker(shared);
+                return;
+            }
         }
     }
 }
 
-fn worker_loop(shared: &Shared) {
-    loop {
-        // only one worker parks in recv(); the rest queue on the mutex
-        let job = { shared.rx.lock().expect("rx lock").recv() };
-        let Ok(Job::Batch { queries, nq, resp }) = job else { break };
-        let timer = Timer::start();
-        let snap = shared.index.snapshot();
-        let level = snap.resolve_level(shared.cfg.level);
-        let result = assign_with_strategy(
-            &snap,
-            level,
-            &queries,
-            nq,
-            shared.backend.as_ref(),
-            shared.cfg.threads_per_request.max(1),
-            shared.cfg.assign,
-            &shared.assign_cache,
-        )
-        .expect("queries validated at submit");
-        let secs = timer.secs();
-        shared.latency.observe(secs);
-        shared.queries_served.add(nq as u64);
-        shared.requests_served.inc();
-        crate::telemetry::event(
-            "serve.query",
-            &[
-                ("nq", nq.into()),
-                ("level", level.into()),
-                ("generation", snap.generation.into()),
-                ("secs", secs.into()),
-            ],
-        );
-        // receiver may have given up; that's fine
-        let _ = resp.send(QueryResponse {
-            result,
-            level,
-            generation: snap.generation,
-            latency_secs: secs,
-        });
+/// The measured part of one batch: snapshot read, assignment, stats.
+/// Split out of [`worker_loop`] so the panic boundary wraps exactly the
+/// work a fault can interrupt.
+fn serve_batch(shared: &Shared, queries: &[f32], nq: usize) -> (AssignResult, usize, u64, f64) {
+    let timer = Timer::start();
+    let snap = shared.index.snapshot();
+    let level = snap.resolve_level(shared.cfg.level);
+    let result = assign_with_strategy(
+        &snap,
+        level,
+        queries,
+        nq,
+        shared.backend.as_ref(),
+        shared.cfg.threads_per_request.max(1),
+        shared.cfg.assign,
+        &shared.assign_cache,
+    )
+    .expect("queries validated at submit");
+    let secs = timer.secs();
+    shared.latency.observe(secs);
+    shared.queries_served.add(nq as u64);
+    shared.requests_served.inc();
+    crate::telemetry::event(
+        "serve.query",
+        &[
+            ("nq", nq.into()),
+            ("level", level.into()),
+            ("generation", snap.generation.into()),
+            ("secs", secs.into()),
+        ],
+    );
+    (result, level, snap.generation, secs)
+}
+
+/// Spawn a replacement for a worker that is unwinding out of the pool.
+/// Skipped once shutdown has cleared the re-queue sender (the pool is
+/// draining; a replacement would just park and leak).
+fn respawn_worker(shared: &Arc<Shared>) {
+    if lock_recover(&shared.requeue_tx).is_none() {
+        return;
+    }
+    let clone = Arc::clone(shared);
+    if let Ok(h) = std::thread::Builder::new()
+        .name("serve-worker-respawn".into())
+        .spawn(move || worker_loop(&clone))
+    {
+        shared.metrics.counter_sched("serve.fault.worker_respawns").inc();
+        lock_recover(&shared.workers).push(h);
     }
 }
 
@@ -802,13 +925,21 @@ pub struct ServiceStats {
     pub p95: f64,
     pub p99: f64,
     pub max_latency: f64,
+    /// Generation races the router re-ran instead of serving stale
+    /// (filled by [`super::shard::ShardRouter::stats`]; a plain service
+    /// has no router and reports 0).
+    pub stale_retries: u64,
+    /// Raced ids the router's fallback path dropped (`u32::MAX`
+    /// sentinel) — nonzero means answers were silently incomplete before
+    /// this counter existed; now it is degradation you can see.
+    pub sentinel_ids: u64,
 }
 
 impl ServiceStats {
     /// One-line human-readable report.
     pub fn report(&self) -> String {
         use crate::util::stats::fmt_secs;
-        format!(
+        let mut line = format!(
             "{} queries in {} requests over {} ({:.0} qps) — \
              batch latency mean {} p50 {} p95 {} p99 {} max {}",
             self.queries,
@@ -820,7 +951,14 @@ impl ServiceStats {
             fmt_secs(self.p95),
             fmt_secs(self.p99),
             fmt_secs(self.max_latency),
-        )
+        );
+        if self.stale_retries > 0 || self.sentinel_ids > 0 {
+            line.push_str(&format!(
+                " — {} stale retries, {} sentinel ids dropped",
+                self.stale_retries, self.sentinel_ids
+            ));
+        }
+        line
     }
 }
 
@@ -1338,7 +1476,7 @@ mod tests {
         bad[1] = f32::NAN;
         assert_eq!(
             service.query_blocking(bad.clone(), 1).unwrap_err(),
-            AssignError::NonFiniteQuery { row: 0 }
+            QueryError::Assign(AssignError::NonFiniteQuery { row: 0 })
         );
         // chunked: all-or-nothing, the offending row is globally indexed
         let mut two = ds.row(0).to_vec();

@@ -40,6 +40,7 @@ use super::manifest::{ShardError, ShardManifest};
 use super::partition::{cluster_shards, owned_points, shard_sketch, sketch_distance, ShardSpec};
 use crate::core::Partition;
 use crate::runtime::Backend;
+use crate::serve::fault::{lock_recover, read_recover, write_recover, ShardRepair};
 use crate::serve::ingest::{IngestConfig, IngestError, IngestReport};
 use crate::serve::persist::{load_snapshot, save_snapshot_if_newer, PersistError};
 use crate::serve::service::{RebuildConfig, ServeIndex};
@@ -257,8 +258,10 @@ impl ShardedIndex {
     }
 
     /// The current consistent routing view (cheap `Arc` clone).
+    /// Poison-recovering: the cell only ever holds a complete `Arc`
+    /// swap, so a panicking reprojector cannot leave a torn view.
     pub fn views(&self) -> Arc<ShardViews> {
-        self.views.read().expect("views lock").clone()
+        read_recover(&self.views).clone()
     }
 
     /// Tier drift = global drift (shards are projections; their drift
@@ -294,7 +297,7 @@ impl ShardedIndex {
     /// (untouched shards keep their generation — a point-local ingest
     /// leaves `S − 1` shards' serving state and stats completely alone).
     pub fn reproject(&self) {
-        let _gate = self.project_gate.lock().expect("project gate");
+        let _gate = lock_recover(&self.project_gate);
         let snap = self.global.snapshot();
         let (projections, maps, sketches) = project_all(&snap, &self.spec);
         let mut changed = 0usize;
@@ -305,7 +308,7 @@ impl ShardedIndex {
             }
         }
         let generations = self.shards.iter().map(|s| s.generation()).collect();
-        *self.views.write().expect("views lock") =
+        *write_recover(&self.views) =
             Arc::new(ShardViews { maps, sketches, generations });
         crate::telemetry::event(
             "serve.shard.reproject",
@@ -344,7 +347,7 @@ impl ShardedIndex {
     /// manifest describing the old (still present, still valid) files.
     pub fn save_all(&self, dir: &Path) -> Result<(), ShardError> {
         std::fs::create_dir_all(dir)?;
-        let _gate = self.project_gate.lock().expect("project gate");
+        let _gate = lock_recover(&self.project_gate);
         save_guarded(&self.global.snapshot(), &global_path(dir))?;
         let mut generations = Vec::with_capacity(self.shards.len());
         for (s, shard) in self.shards.iter().enumerate() {
@@ -406,6 +409,83 @@ impl ShardedIndex {
             views: RwLock::new(Arc::new(ShardViews { maps, sketches, generations })),
             project_gate: Mutex::new(()),
         })
+    }
+
+    /// [`ShardedIndex::load_all`] with **snapshot quarantine**: a shard
+    /// file that fails validation (unreadable, corrupt, generation or
+    /// content mismatch) no longer aborts the cold start. The failing
+    /// bytes are sidelined to `<file>.quarantined`, the shard is
+    /// re-projected from the (validated) `global.scc` with the
+    /// manifest's generation stamped for continuity, the repaired file
+    /// is re-saved, and the repair is reported — one flipped bit costs
+    /// one shard file, not the restart.
+    ///
+    /// Manifest, spec, and `global.scc` failures stay fatal: with no
+    /// trusted global snapshot there is nothing to re-project *from*.
+    pub fn load_all_with_repair(
+        dir: &Path,
+        spec: ShardSpec,
+    ) -> Result<(ShardedIndex, Vec<ShardRepair>), ShardError> {
+        let manifest = ShardManifest::load(&manifest_path(dir))?;
+        if manifest.shards != spec.shards {
+            return Err(ShardError::ShardCountMismatch {
+                manifest: manifest.shards,
+                expected: spec.shards,
+            });
+        }
+        if manifest.seed != spec.seed {
+            return Err(ShardError::SeedMismatch { manifest: manifest.seed, expected: spec.seed });
+        }
+        let global_snap = load_snapshot(&global_path(dir))?;
+        let (projections, maps, sketches) = project_all(&global_snap, &spec);
+        let mut shards = Vec::with_capacity(spec.shards);
+        let mut generations = Vec::with_capacity(spec.shards);
+        let mut repairs = Vec::new();
+        for (s, mut proj) in projections.into_iter().enumerate() {
+            let path = shard_path(dir, s);
+            let reason = match load_snapshot(&path) {
+                Ok(file) if file.generation != manifest.generations[s] => Some(format!(
+                    "file generation {} != manifest generation {}",
+                    file.generation, manifest.generations[s]
+                )),
+                Ok(file) if !same_content(&file, &proj) => {
+                    Some("content does not match the projection of global.scc".to_string())
+                }
+                Ok(file) => {
+                    generations.push(file.generation);
+                    shards.push(Arc::new(ServeIndex::new(file)));
+                    None
+                }
+                Err(e) => Some(format!("{e}")),
+            };
+            if let Some(reason) = reason {
+                let mut q = path.clone().into_os_string();
+                q.push(".quarantined");
+                let quarantined = PathBuf::from(q);
+                if path.exists() {
+                    std::fs::rename(&path, &quarantined)?;
+                }
+                // projections start at generation 0: stamp the
+                // manifest's so post-restart swaps stay monotone
+                proj.generation = manifest.generations[s];
+                save_guarded(&proj, &path)?;
+                crate::telemetry::event(
+                    "serve.shard.quarantine",
+                    &[("shard", s.into()), ("reason", reason.clone().into())],
+                );
+                repairs.push(ShardRepair { shard: s, file: path, quarantined, reason });
+                generations.push(proj.generation);
+                shards.push(Arc::new(ServeIndex::new(proj)));
+            }
+        }
+        let tier = ShardedIndex {
+            spec,
+            global: Arc::new(ServeIndex::new(global_snap)),
+            shards,
+            views: RwLock::new(Arc::new(ShardViews { maps, sketches, generations })),
+            project_gate: Mutex::new(()),
+        };
+        Ok((tier, repairs))
     }
 }
 

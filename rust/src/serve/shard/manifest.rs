@@ -21,6 +21,14 @@
 //! cross-checks it against the file so a half-updated directory
 //! (manifest from one save, shard file from another) is caught as
 //! [`ShardError::Corrupt`] rather than served.
+//!
+//! Repair boundary: the manifest and `global.scc` are the tier's
+//! ground truth, so damage to either stays **fatal** on every load
+//! path. Per-shard files are derived data (projections of the global
+//! index), which is why the quarantining cold start
+//! ([`super::ShardedIndex::load_all_with_repair`]) may sideline and
+//! re-project a bad shard file but never "repairs" a bad manifest —
+//! there would be nothing trustworthy to repair it from.
 
 use std::fmt;
 use std::fs;

@@ -30,7 +30,10 @@
 //!   [`ShardRebuildWorker`];
 //! * [`router`] — [`ShardRouter`]: per-shard [`crate::serve::Service`]
 //!   pools, fan-out and sketch routing, `(dist, global id)` merging,
-//!   per-shard telemetry labeled and folded into one snapshot;
+//!   per-shard telemetry labeled and folded into one snapshot; plus the
+//!   degraded-mode machinery (deadlines, retries, quorum,
+//!   [`crate::serve::QueryOutcome`], per-shard circuit breakers) wired
+//!   to [`crate::serve::fault`];
 //! * [`manifest`] — the tier manifest and the typed [`ShardError`].
 //!
 //! Contracts (all property-tested in `rust/tests/shard_properties.rs`):
@@ -52,4 +55,4 @@ pub use index::{
 };
 pub use manifest::{ShardError, ShardManifest};
 pub use partition::{cluster_shards, owned_points, shard_sketch, sketch_distance, ShardSpec};
-pub use router::{RouteMode, ShardRouter};
+pub use router::{RouteMode, RoutedResponse, ShardRouter};

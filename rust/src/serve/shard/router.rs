@@ -22,9 +22,24 @@
 //! generation. A reprojection racing a fan-out is detected by comparing
 //! each shard response's generation against the view the requests were
 //! routed with; the router re-reads the view and resubmits (bounded
-//! retries), then falls back to the freshest view with per-id bounds
-//! checks — stale merges are impossible, at worst a raced query is
-//! served from the newer projection set.
+//! retries with linear backoff, counted in `serve.router.stale_retries`),
+//! then falls back to the freshest view with per-id bounds checks —
+//! stale merges are impossible, at worst a raced query is served from
+//! the newer projection set, and any raced id the fallback drops is
+//! counted in `serve.router.sentinel_ids`.
+//!
+//! **Degraded mode** ([`FaultPolicy`]): with a per-shard deadline set,
+//! a shard that misses it is retried ([`FaultPolicy::retries`], linear
+//! backoff) and then *left out* — the merge stays exact over the
+//! survivors and the response's [`QueryOutcome::Degraded`] names the
+//! missing shards. A dead worker pool is the same: a typed outcome or
+//! [`QueryError`], never a router panic. Per-shard [`CircuitBreaker`]s
+//! stop hammering a failing shard (state exported as
+//! `serve.fault.breaker_state.{s}` gauges); fewer answers than
+//! [`FaultPolicy::quorum`] is [`QueryError::QuorumLost`]. With the
+//! default policy (no deadline, no injector) the receive discipline and
+//! the merge are exactly the pre-fault path — bit-identical answers,
+//! pinned by `fault_properties.rs`.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -32,9 +47,13 @@ use std::sync::Arc;
 use super::index::{ShardViews, ShardedIndex};
 use super::partition::sketch_distance;
 use crate::runtime::Backend;
-use crate::serve::assign::{validate_queries, AssignError, AssignResult};
+use crate::serve::assign::{validate_queries, AssignResult};
+use crate::serve::fault::{
+    BreakerState, CircuitBreaker, Clock, FaultInjector, FaultPolicy, QueryError, QueryOutcome,
+    RouteFault,
+};
 use crate::serve::service::{QueryResponse, Service, ServiceConfig, ServiceStats};
-use crate::telemetry::TelemetrySnapshot;
+use crate::telemetry::{Counter, Gauge, Registry, TelemetrySnapshot};
 
 /// How the router turns one query batch into shard work.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,36 +66,127 @@ pub enum RouteMode {
     Sketch { probe: usize },
 }
 
+/// One routed answer: a [`QueryResponse`]-shaped payload plus the
+/// coverage verdict ([`QueryOutcome`]) of the fan-out that produced it.
+#[derive(Debug)]
+pub struct RoutedResponse {
+    pub result: AssignResult,
+    /// Level the batch was served at.
+    pub level: usize,
+    /// The **global** index's swap generation.
+    pub generation: u64,
+    /// Slowest answering shard's batch latency.
+    pub latency_secs: f64,
+    /// Whether every targeted shard answered ([`QueryOutcome::Complete`]
+    /// — the bit-identical single-index answer) or some were left out.
+    pub outcome: QueryOutcome,
+}
+
 /// Per-shard worker pools plus the merge logic. See module docs.
 pub struct ShardRouter {
     tier: Arc<ShardedIndex>,
     services: Vec<Service>,
     mode: RouteMode,
     level: usize,
+    policy: FaultPolicy,
+    injector: Option<Arc<FaultInjector>>,
+    clock: Clock,
+    breakers: Vec<CircuitBreaker>,
+    metrics: Registry,
+    stale_retries: Arc<Counter>,
+    sentinel_ids: Arc<Counter>,
+    deadline_misses: Arc<Counter>,
+    degraded_queries: Arc<Counter>,
+    breaker_opens: Arc<Counter>,
+    breaker_gauges: Vec<Arc<Gauge>>,
 }
 
 /// How many times a raced fan-out re-reads the view and resubmits
 /// before serving from the freshest view best-effort.
 const ROUTE_RETRIES: usize = 3;
 
+/// Why one shard receive failed (internal to the collect loop).
+enum RecvFail {
+    /// Deadline elapsed (or the injector dropped the response).
+    Deadline,
+    /// The shard's worker pool died: its response sender was dropped.
+    Lost,
+}
+
 impl ShardRouter {
     /// Spawn one `cfg.workers`-thread [`Service`] per shard (shards are
     /// independent pools, so tier capacity scales with `S`).
     /// `cfg.level` fixes the serving level for every routed query.
+    /// Fault policy is the do-nothing default and no chaos is wired —
+    /// behavior is exactly the pre-fault router.
     pub fn start(
         tier: Arc<ShardedIndex>,
         backend: Arc<dyn Backend + Send + Sync>,
         cfg: ServiceConfig,
         mode: RouteMode,
     ) -> ShardRouter {
+        ShardRouter::start_with_policy(tier, backend, cfg, mode, FaultPolicy::default(), None)
+    }
+
+    /// [`ShardRouter::start`] with explicit degraded-mode policy and an
+    /// optional chaos injector. The injector's [`Clock`] (virtual in
+    /// tests, wall on the CLI) drives deadlines, backoff, and breaker
+    /// cooldowns; without an injector the router runs on wall time.
+    pub fn start_with_policy(
+        tier: Arc<ShardedIndex>,
+        backend: Arc<dyn Backend + Send + Sync>,
+        cfg: ServiceConfig,
+        mode: RouteMode,
+        policy: FaultPolicy,
+        injector: Option<Arc<FaultInjector>>,
+    ) -> ShardRouter {
         if let RouteMode::Sketch { probe } = mode {
             assert!(probe >= 1, "sketch routing needs probe >= 1");
         }
         let level = cfg.level;
-        let services = (0..tier.num_shards())
-            .map(|s| Service::start(Arc::clone(tier.shard(s)), Arc::clone(&backend), cfg.clone()))
+        let clock =
+            injector.as_ref().map(|i| i.clock().clone()).unwrap_or_else(Clock::wall);
+        let services: Vec<Service> = (0..tier.num_shards())
+            .map(|s| {
+                let mut scfg = cfg.clone();
+                scfg.fault = injector.as_ref().map(Arc::clone);
+                scfg.fault_shard = s;
+                Service::start(Arc::clone(tier.shard(s)), Arc::clone(&backend), scfg)
+            })
             .collect();
-        ShardRouter { tier, services, mode, level }
+        let breakers: Vec<CircuitBreaker> = (0..tier.num_shards())
+            .map(|_| {
+                CircuitBreaker::new(policy.breaker_failures, policy.breaker_cooldown, clock.clone())
+            })
+            .collect();
+        let metrics = Registry::new();
+        // all fault/degradation metrics are scheduling-class: which
+        // attempt fails first depends on thread interleaving
+        let stale_retries = metrics.counter_sched("serve.router.stale_retries");
+        let sentinel_ids = metrics.counter_sched("serve.router.sentinel_ids");
+        let deadline_misses = metrics.counter_sched("serve.fault.deadline_misses");
+        let degraded_queries = metrics.counter_sched("serve.fault.degraded_queries");
+        let breaker_opens = metrics.counter_sched("serve.fault.breaker_opens");
+        let breaker_gauges: Vec<Arc<Gauge>> = (0..tier.num_shards())
+            .map(|s| metrics.gauge_sched(&format!("serve.fault.breaker_state.{s}")))
+            .collect();
+        ShardRouter {
+            tier,
+            services,
+            mode,
+            level,
+            policy,
+            injector,
+            clock,
+            breakers,
+            metrics,
+            stale_retries,
+            sentinel_ids,
+            deadline_misses,
+            degraded_queries,
+            breaker_opens,
+            breaker_gauges,
+        }
     }
 
     pub fn tier(&self) -> &Arc<ShardedIndex> {
@@ -87,62 +197,236 @@ impl ShardRouter {
         self.mode
     }
 
+    pub fn policy(&self) -> &FaultPolicy {
+        &self.policy
+    }
+
+    /// Current breaker position for `shard`.
+    pub fn breaker_state(&self, shard: usize) -> BreakerState {
+        self.breakers[shard].state()
+    }
+
     /// Route one batch of `nq` row-major queries and block for the
     /// merged answer. Cluster ids in the response are **global**; its
     /// generation is the global index's. `nq == 0` returns an empty
     /// response immediately without touching any shard. Queries are
     /// validated **once** at the router — a non-finite coordinate is a
-    /// typed [`AssignError::NonFiniteQuery`] before any shard sees the
-    /// batch, so no per-shard fan-out can half-complete on bad input.
+    /// typed [`QueryError::Assign`] before any shard sees the batch, so
+    /// no per-shard fan-out can half-complete on bad input.
     pub fn query_blocking(
         &self,
         queries: &[f32],
         nq: usize,
-    ) -> Result<QueryResponse, AssignError> {
+    ) -> Result<RoutedResponse, QueryError> {
         let gsnap = self.tier.global().snapshot();
         let level = gsnap.resolve_level(self.level);
         if nq == 0 {
-            return Ok(QueryResponse {
+            return Ok(RoutedResponse {
                 result: AssignResult { cluster: Vec::new(), dist: Vec::new() },
                 level,
                 generation: gsnap.generation,
                 latency_secs: 0.0,
+                outcome: QueryOutcome::Complete,
             });
         }
         validate_queries(queries, gsnap.d)?;
-        let (result, latency) = match self.mode {
-            RouteMode::Fanout => self.fanout(queries, nq, level),
-            RouteMode::Sketch { probe } => self.sketch(queries, nq, level, probe, gsnap.measure),
+        let (result, latency, outcome) = match self.mode {
+            RouteMode::Fanout => self.fanout(queries, nq, level)?,
+            RouteMode::Sketch { probe } => {
+                self.sketch(queries, nq, level, probe, gsnap.measure)?
+            }
         };
-        Ok(QueryResponse { result, level, generation: gsnap.generation, latency_secs: latency })
+        Ok(RoutedResponse {
+            result,
+            level,
+            generation: gsnap.generation,
+            latency_secs: latency,
+            outcome,
+        })
+    }
+
+    /// Submit every sub-batch and collect what answers within policy:
+    /// breaker-gated submission, injected fates, per-shard deadline
+    /// receive, then up to [`FaultPolicy::retries`] retry rounds with
+    /// linear backoff over the shards that failed. Returns the answered
+    /// `(shard, response)` pairs and the shards that never answered
+    /// (ascending).
+    fn collect(
+        &self,
+        subs: &[(usize, Vec<f32>, usize)],
+    ) -> (Vec<(usize, QueryResponse)>, Vec<usize>) {
+        let mut answered: Vec<(usize, QueryResponse)> = Vec::new();
+        let mut remaining: Vec<usize> = (0..subs.len()).collect();
+        for attempt in 0..=self.policy.retries {
+            if remaining.is_empty() {
+                break;
+            }
+            if attempt > 0 {
+                self.clock.pause(self.policy.backoff * attempt);
+            }
+            let mut pending: Vec<(usize, mpsc::Receiver<QueryResponse>)> = Vec::new();
+            let mut failed: Vec<usize> = Vec::new();
+            for &i in &remaining {
+                let (shard, queries, nq) = (&subs[i].0, &subs[i].1, subs[i].2);
+                let shard = *shard;
+                if !self.breakers[shard].allow() {
+                    // an open breaker is a refusal, not a new failure
+                    failed.push(i);
+                    continue;
+                }
+                let fate = match &self.injector {
+                    Some(inj) => inj.route_fault(shard),
+                    None => RouteFault::None,
+                };
+                match fate {
+                    RouteFault::Drop => {
+                        // the response is lost: the router perceives a
+                        // deadline miss without waiting one out
+                        self.deadline_misses.inc();
+                        self.shard_failed(shard);
+                        failed.push(i);
+                    }
+                    RouteFault::Delay(d) if self.clock.is_virtual() => {
+                        // resolve the delay-vs-deadline race numerically:
+                        // no sleeps, bit-reproducible
+                        match self.policy.deadline {
+                            Some(dl) if d > dl => {
+                                self.clock.advance(dl);
+                                self.deadline_misses.inc();
+                                self.shard_failed(shard);
+                                failed.push(i);
+                            }
+                            _ => {
+                                self.clock.advance(d);
+                                let rx = self.services[shard]
+                                    .submit(queries.clone(), nq)
+                                    .expect("validated at router entry");
+                                pending.push((i, rx));
+                            }
+                        }
+                    }
+                    RouteFault::Delay(d) => {
+                        // wall clock: the straggler really sleeps in its
+                        // pool; the deadline receive below decides
+                        let rx = self.services[shard]
+                            .submit_with(queries.clone(), nq, Some(d))
+                            .expect("validated at router entry");
+                        pending.push((i, rx));
+                    }
+                    RouteFault::None => {
+                        let rx = self.services[shard]
+                            .submit(queries.clone(), nq)
+                            .expect("validated at router entry");
+                        pending.push((i, rx));
+                    }
+                }
+            }
+            for (i, rx) in pending {
+                let shard = subs[i].0;
+                let got = match self.policy.deadline {
+                    // no deadline (and no wall-clock delays in flight):
+                    // the pre-fault blocking receive, closed-channel on
+                    // a dead pool instead of a panic
+                    None => rx.recv().map_err(|_| RecvFail::Lost),
+                    Some(_) if self.clock.is_virtual() => rx.recv().map_err(|_| RecvFail::Lost),
+                    Some(dl) => match rx.recv_timeout(dl) {
+                        Ok(r) => Ok(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvFail::Deadline),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => Err(RecvFail::Lost),
+                    },
+                };
+                match got {
+                    Ok(resp) => {
+                        self.shard_succeeded(shard);
+                        answered.push((shard, resp));
+                    }
+                    Err(RecvFail::Deadline) => {
+                        self.deadline_misses.inc();
+                        self.shard_failed(shard);
+                        failed.push(i);
+                    }
+                    Err(RecvFail::Lost) => {
+                        self.shard_failed(shard);
+                        failed.push(i);
+                    }
+                }
+            }
+            remaining = failed;
+        }
+        let mut missing: Vec<usize> = remaining.iter().map(|&i| subs[i].0).collect();
+        missing.sort_unstable();
+        (answered, missing)
+    }
+
+    fn shard_failed(&self, shard: usize) {
+        let (state, tripped) = self.breakers[shard].record_failure();
+        if tripped {
+            self.breaker_opens.inc();
+        }
+        self.breaker_gauges[shard].set(state.gauge_value());
+    }
+
+    fn shard_succeeded(&self, shard: usize) {
+        let state = self.breakers[shard].record_success();
+        self.breaker_gauges[shard].set(state.gauge_value());
+    }
+
+    /// Points owned by the answering shards — the `covered_points` of a
+    /// degraded outcome.
+    fn covered_points(&self, responses: &[(usize, QueryResponse)]) -> usize {
+        responses.iter().map(|(s, _)| self.tier.shard(*s).snapshot().n).sum()
+    }
+
+    /// Quorum over what was actually targeted, then the typed outcome.
+    fn outcome(
+        &self,
+        responses: &[(usize, QueryResponse)],
+        missing: Vec<usize>,
+        targeted: usize,
+    ) -> Result<QueryOutcome, QueryError> {
+        let required = self.policy.quorum.min(targeted);
+        if responses.len() < required {
+            return Err(QueryError::QuorumLost {
+                answered: responses.len(),
+                required,
+                missing_shards: missing,
+            });
+        }
+        if missing.is_empty() {
+            Ok(QueryOutcome::Complete)
+        } else {
+            self.degraded_queries.inc();
+            Ok(QueryOutcome::Degraded {
+                missing_shards: missing,
+                covered_points: self.covered_points(responses),
+            })
+        }
     }
 
     /// Fan-out: submit the full batch to every non-empty shard, merge
     /// per query by `(dist, global id)`.
-    fn fanout(&self, queries: &[f32], nq: usize, level: usize) -> (AssignResult, f64) {
+    fn fanout(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        level: usize,
+    ) -> Result<(AssignResult, f64, QueryOutcome), QueryError> {
         let mut attempt = 0;
         loop {
             let views = self.tier.views();
             let targets: Vec<usize> =
                 (0..self.services.len()).filter(|&s| views.sketches[s].is_some()).collect();
-            let pending: Vec<(usize, mpsc::Receiver<QueryResponse>)> = targets
-                .iter()
-                .map(|&s| {
-                    let rx = self.services[s]
-                        .submit(queries.to_vec(), nq)
-                        .expect("validated at router entry");
-                    (s, rx)
-                })
-                .collect();
-            let responses: Vec<(usize, QueryResponse)> = pending
-                .into_iter()
-                .map(|(s, rx)| (s, rx.recv().expect("shard response")))
-                .collect();
+            let subs: Vec<(usize, Vec<f32>, usize)> =
+                targets.iter().map(|&s| (s, queries.to_vec(), nq)).collect();
+            let (responses, missing) = self.collect(&subs);
             let raced = responses
                 .iter()
-                .any(|(s, r)| r.generation != views.generations[*s]);
+                .any(|(s, r)| r.generation != views.generations[*s])
+                || self.injector.as_ref().is_some_and(|i| i.stale_route());
             if raced && attempt < ROUTE_RETRIES {
                 attempt += 1;
+                self.stale_retries.inc();
+                self.clock.pause(self.policy.backoff * attempt as u32);
                 continue;
             }
             // merge with the freshest view on fallback, so local ids are
@@ -154,10 +438,15 @@ impl ShardRouter {
                 cluster: vec![u32::MAX; nq],
                 dist: vec![f32::INFINITY; nq],
             };
+            let mut dropped = 0u64;
             for (s, resp) in &responses {
-                merge_response(&mut out, &views, *s, resp, level, None);
+                dropped += merge_response(&mut out, &views, *s, resp, level, None);
             }
-            return (out, latency);
+            if dropped > 0 {
+                self.sentinel_ids.add(dropped);
+            }
+            let outcome = self.outcome(&responses, missing, targets.len())?;
+            return Ok((out, latency, outcome));
         }
     }
 
@@ -170,7 +459,7 @@ impl ShardRouter {
         level: usize,
         probe: usize,
         measure: crate::linkage::Measure,
-    ) -> (AssignResult, f64) {
+    ) -> Result<(AssignResult, f64, QueryOutcome), QueryError> {
         let d = queries.len() / nq;
         let mut attempt = 0;
         loop {
@@ -192,7 +481,7 @@ impl ShardRouter {
                     probed[s].push(q as u32);
                 }
             }
-            let pending: Vec<(usize, mpsc::Receiver<QueryResponse>)> = probed
+            let subs: Vec<(usize, Vec<f32>, usize)> = probed
                 .iter()
                 .enumerate()
                 .filter(|(_, rows)| !rows.is_empty())
@@ -201,21 +490,19 @@ impl ShardRouter {
                     for &q in rows {
                         sub.extend_from_slice(&queries[q as usize * d..(q as usize + 1) * d]);
                     }
-                    let rx = self.services[s]
-                        .submit(sub, rows.len())
-                        .expect("validated at router entry");
-                    (s, rx)
+                    (s, sub, rows.len())
                 })
                 .collect();
-            let responses: Vec<(usize, QueryResponse)> = pending
-                .into_iter()
-                .map(|(s, rx)| (s, rx.recv().expect("shard response")))
-                .collect();
+            let targeted = subs.len();
+            let (responses, missing) = self.collect(&subs);
             let raced = responses
                 .iter()
-                .any(|(s, r)| r.generation != views.generations[*s]);
+                .any(|(s, r)| r.generation != views.generations[*s])
+                || self.injector.as_ref().is_some_and(|i| i.stale_route());
             if raced && attempt < ROUTE_RETRIES {
                 attempt += 1;
+                self.stale_retries.inc();
+                self.clock.pause(self.policy.backoff * attempt as u32);
                 continue;
             }
             let merge_views = if raced { self.tier.views() } else { views };
@@ -225,24 +512,37 @@ impl ShardRouter {
                 cluster: vec![u32::MAX; nq],
                 dist: vec![f32::INFINITY; nq],
             };
+            let mut dropped = 0u64;
             for (s, resp) in &responses {
-                merge_response(&mut out, &merge_views, *s, resp, level, Some(&probed[*s]));
+                dropped +=
+                    merge_response(&mut out, &merge_views, *s, resp, level, Some(&probed[*s]));
             }
-            return (out, latency);
+            if dropped > 0 {
+                self.sentinel_ids.add(dropped);
+            }
+            let outcome = self.outcome(&responses, missing, targeted)?;
+            return Ok((out, latency, outcome));
         }
     }
 
     /// One aggregated [`ServiceStats`] over every shard pool
     /// (histogram-merged, not concatenated — see
-    /// [`Service::merged_stats`]).
+    /// [`Service::merged_stats`]), with the router's own degradation
+    /// counters filled in (`stale_retries`, `sentinel_ids`).
     pub fn stats(&self) -> ServiceStats {
         let refs: Vec<&Service> = self.services.iter().collect();
-        Service::merged_stats(&refs)
+        let mut stats = Service::merged_stats(&refs);
+        stats.stale_retries = self.stale_retries.get();
+        stats.sentinel_ids = self.sentinel_ids.get();
+        stats
     }
 
     /// Per-shard registries folded into one snapshot, each metric tagged
     /// with a `shard` label so `--metrics-out` and the Prometheus view
-    /// keep one series per shard instead of colliding.
+    /// keep one series per shard instead of colliding. The router's own
+    /// metrics (`serve.router.*`, `serve.fault.*` counters and breaker
+    /// gauges) and the injector's `serve.fault.injected.*` counters are
+    /// merged in unlabeled — they are tier-wide.
     pub fn telemetry(&self) -> TelemetrySnapshot {
         let mut merged: Option<TelemetrySnapshot> = None;
         for (s, svc) in self.services.iter().enumerate() {
@@ -252,7 +552,12 @@ impl ShardRouter {
                 None => snap,
             });
         }
-        merged.expect("a tier has at least one shard")
+        let mut snap = merged.expect("a tier has at least one shard");
+        snap = snap.merge(self.metrics.snapshot());
+        if let Some(inj) = &self.injector {
+            snap = snap.merge(inj.telemetry());
+        }
+        snap
     }
 
     /// Drain every shard pool and return the aggregated final stats.
@@ -268,7 +573,9 @@ impl ShardRouter {
 /// Fold one shard's response into the running per-query argmin,
 /// translating local cluster ids to global through the shard's map.
 /// `rows`: the original query index of each response row (`None` = the
-/// response covers all queries in order, i.e. fan-out).
+/// response covers all queries in order, i.e. fan-out). Returns how many
+/// raced local ids the stale-view fallback dropped (the `u32::MAX`
+/// sentinel path the router counts in `serve.router.sentinel_ids`).
 fn merge_response(
     out: &mut AssignResult,
     views: &ShardViews,
@@ -276,13 +583,15 @@ fn merge_response(
     resp: &QueryResponse,
     level: usize,
     rows: Option<&[u32]>,
-) {
+) -> u64 {
+    let mut dropped = 0u64;
     for i in 0..resp.result.len() {
         let local = resp.result.cluster[i];
         if local == u32::MAX {
             continue; // empty-level sentinel: this shard has no answer
         }
         let Some(g) = views.maps[shard].to_global(level, local) else {
+            dropped += 1;
             continue; // stale local id from a raced swap: never mistranslate
         };
         let q = rows.map_or(i, |r| r[i] as usize);
@@ -292,6 +601,7 @@ fn merge_response(
             out.cluster[q] = g;
         }
     }
+    dropped
 }
 
 #[cfg(test)]
@@ -302,7 +612,8 @@ mod tests {
     use crate::linkage::Measure;
     use crate::pipeline::SccClusterer;
     use crate::runtime::NativeBackend;
-    use crate::serve::assign::assign_to_level;
+    use crate::serve::assign::{assign_to_level, AssignError};
+    use crate::serve::fault::FaultPlan;
     use crate::serve::shard::{ShardSpec, ShardedIndex};
     use crate::serve::snapshot::HierarchySnapshot;
 
@@ -341,6 +652,7 @@ mod tests {
             let r = router(snap.clone(), shards, RouteMode::Fanout);
             let got = r.query_blocking(&ds.data, ds.n).unwrap();
             assert_eq!(got.result, want, "S={shards} diverged from the single index");
+            assert!(got.outcome.is_complete(), "healthy tier: every shard answers");
             r.shutdown();
         }
     }
@@ -354,6 +666,7 @@ mod tests {
         let r = router(snap, 4, RouteMode::Sketch { probe: 4 });
         let got = r.query_blocking(&ds.data, ds.n).unwrap();
         assert_eq!(got.result, want);
+        assert!(got.outcome.is_complete());
         r.shutdown();
     }
 
@@ -363,12 +676,15 @@ mod tests {
         let r = router(snap, 3, RouteMode::Fanout);
         let empty = r.query_blocking(&[], 0).unwrap();
         assert!(empty.result.is_empty());
+        assert!(empty.outcome.is_complete());
         let _ = r.query_blocking(&ds.data[..4 * 8], 8).unwrap();
         let stats = r.stats();
         // the fan-out touched every non-empty shard with one request of
         // 8 queries each; zero-query batches are not counted
         assert!(stats.requests >= 1);
         assert_eq!(stats.queries % 8, 0);
+        assert_eq!(stats.stale_retries, 0, "healthy tier: no races, no retries");
+        assert_eq!(stats.sentinel_ids, 0);
         let telem = r.telemetry();
         assert!(
             telem.get("serve.queries{shard=\"0\"}").is_some(),
@@ -396,12 +712,47 @@ mod tests {
         let mut bad = ds.data[..3 * d].to_vec();
         bad[d + 1] = f32::NAN;
         let err = r.query_blocking(&bad, 3).unwrap_err();
-        assert_eq!(err, AssignError::NonFiniteQuery { row: 1 });
+        assert_eq!(err, QueryError::Assign(AssignError::NonFiniteQuery { row: 1 }));
         // nothing was enqueued: the tier served zero queries
         assert_eq!(r.stats().queries, 0, "rejected batch must not reach any shard pool");
         // the pools stay healthy after the rejection
         let ok = r.query_blocking(&ds.data[..3 * d], 3).unwrap();
         assert_eq!(ok.result.len(), 3);
+        r.shutdown();
+    }
+
+    /// Tentpole at the router layer: a shard whose workers always panic
+    /// produces a `Degraded` outcome naming exactly that shard — the
+    /// merge stays exact over the survivors, nothing panics the router.
+    #[test]
+    fn killed_shard_degrades_instead_of_panicking() {
+        let (ds, snap) = build(160, 4, 63);
+        let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(4, 42)));
+        // kill a shard the fan-out actually targets (owns points)
+        let victim = (0..4).find(|&s| tier.shard(s).snapshot().n > 0).unwrap();
+        let plan = FaultPlan { kill_shards: vec![victim], ..Default::default() };
+        let inj = Arc::new(FaultInjector::new(plan, 7, 4, Clock::virtual_at(0)));
+        let r = ShardRouter::start_with_policy(
+            Arc::clone(&tier),
+            Arc::new(NativeBackend::new()),
+            ServiceConfig { workers: 1, ..Default::default() },
+            RouteMode::Fanout,
+            FaultPolicy::default(),
+            Some(inj),
+        );
+        let got = r.query_blocking(&ds.data[..8 * ds.d], 8).unwrap();
+        match &got.outcome {
+            QueryOutcome::Degraded { missing_shards, covered_points } => {
+                assert_eq!(missing_shards, &vec![victim], "exactly the killed shard is missing");
+                let total: usize = (0..4).map(|s| tier.shard(s).snapshot().n).sum();
+                let dead = tier.shard(victim).snapshot().n;
+                assert_eq!(*covered_points, total - dead);
+            }
+            other => panic!("expected Degraded, got {other:?}"),
+        }
+        // survivors answered exactly (their merge discipline unchanged)
+        assert_eq!(got.result.len(), 8);
+        assert!(r.telemetry().get("serve.fault.injected.panics").is_some());
         r.shutdown();
     }
 }

@@ -1,0 +1,414 @@
+//! Property tests for the fault-injection harness and degraded-mode
+//! serving (ISSUE 10 acceptance criteria):
+//!
+//! 1. **zero-fault identity**: a router armed with an all-clear chaos
+//!    plan answers bit-identically to the fault-free router (and to the
+//!    single index) at every shard count — chaos wiring itself must not
+//!    perturb the merge;
+//! 2. **determinism**: the injector's fault schedules are pure functions
+//!    of `(plan, seed, shard, seq)` — two injectors with the same
+//!    identity draw identical fates, and whole degraded *transcripts*
+//!    (outcome + answers per batch) reproduce under the virtual clock;
+//! 3. **kill → degraded**: killing one shard's workers yields
+//!    [`QueryOutcome::Degraded`] naming exactly that shard, with the
+//!    merge still exact over the survivors;
+//! 4. **breaker FSM**: closed → open → half-open → closed transitions
+//!    pinned step by step on the virtual clock;
+//! 5. **panic isolation**: an injected worker panic respawns the worker
+//!    and re-queues the in-flight batch — the caller still gets the
+//!    fault-free answer;
+//! 6. **quarantine**: a corrupt shard file is sidelined on cold start,
+//!    re-projected from `global.scc`, and the repaired tier serves
+//!    bit-identically to the original.
+
+use scc::core::Dataset;
+use scc::data::mixture::{separated_mixture, MixtureSpec};
+use scc::knn::knn_graph;
+use scc::linkage::Measure;
+use scc::pipeline::{Clusterer, SccClusterer};
+use scc::runtime::NativeBackend;
+use scc::scc::{thresholds::edge_range, Thresholds};
+use scc::serve::{
+    assign_to_level, BreakerState, CircuitBreaker, Clock, FaultInjector, FaultPlan, FaultPolicy,
+    HierarchySnapshot, QueryError, QueryOutcome, RouteFault, RouteMode, ServeIndex, Service,
+    ServiceConfig, ShardRouter, ShardSpec, ShardedIndex,
+};
+use scc::util::prop::{check, Gen};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One small fixed workload: mixture → k-NN → SCC → snapshot.
+fn build_snapshot(n: usize, d: usize, k: usize, seed: u64) -> (Dataset, HierarchySnapshot) {
+    let ds = separated_mixture(&MixtureSpec {
+        n,
+        d,
+        k,
+        sigma: 0.05,
+        delta: 8.0,
+        imbalance: 0.0,
+        seed,
+    });
+    let graph = knn_graph(&ds, 6, Measure::L2Sq);
+    let (lo, hi) = edge_range(&graph);
+    let taus = Thresholds::geometric(lo, hi, 16).taus;
+    let hierarchy = SccClusterer::with_schedule(taus).cluster_csr(&graph);
+    let snap = HierarchySnapshot::build(&ds, &hierarchy, Measure::L2Sq, 2);
+    (ds, snap)
+}
+
+/// Jittered copies of stored rows: unseen but realistic queries.
+fn jittered_queries(ds: &Dataset, nq: usize, seed: u64) -> Vec<f32> {
+    let mut rng = scc::util::Rng::new(seed);
+    let mut q = Vec::with_capacity(nq * ds.d);
+    for j in 0..nq {
+        let src = (j * 13 + 5) % ds.n;
+        for &x in ds.row(src) {
+            q.push(x + 0.01 * (rng.f32() - 0.5));
+        }
+    }
+    q
+}
+
+fn chaos_router(
+    tier: Arc<ShardedIndex>,
+    injector: Option<Arc<FaultInjector>>,
+    policy: FaultPolicy,
+) -> ShardRouter {
+    ShardRouter::start_with_policy(
+        tier,
+        Arc::new(NativeBackend::new()),
+        ServiceConfig { workers: 2, ..Default::default() },
+        RouteMode::Fanout,
+        policy,
+        injector,
+    )
+}
+
+/// First shard that owns at least one point — killing an *empty* shard
+/// is a no-op (fan-out never targets it), so fault tests aim here.
+fn non_empty_shard(tier: &ShardedIndex) -> usize {
+    (0..tier.num_shards())
+        .find(|&s| tier.shard(s).snapshot().n > 0)
+        .expect("a tier over a non-empty dataset has a non-empty shard")
+}
+
+#[test]
+fn fault_plan_round_trips_through_display_and_parse() {
+    let spec = "kill=1,3;kill-until=8;drop=0.25;delay=0.5x40;stale=2;corrupt=2";
+    let plan = FaultPlan::parse(spec).unwrap();
+    assert_eq!(plan.kill_shards, vec![1, 3]);
+    assert_eq!(plan.kill_until_seq, 8);
+    assert_eq!(plan.drop_prob, 0.25);
+    assert_eq!(plan.delay_prob, 0.5);
+    assert_eq!(plan.delay, Duration::from_millis(40));
+    assert_eq!(plan.stale_seqs, 2);
+    assert_eq!(plan.corrupt_shards, vec![2]);
+    // canonical Display re-parses to the same plan
+    assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+    assert_eq!(FaultPlan::all_clear().to_string(), "all-clear");
+    assert!(FaultPlan::all_clear().is_all_clear());
+    // malformed specs are typed errors, not defaults
+    assert!(FaultPlan::parse("drop=1.5").is_err());
+    assert!(FaultPlan::parse("delay=0.5").is_err());
+    assert!(FaultPlan::parse("warp=1").is_err());
+}
+
+#[test]
+fn zero_fault_chaos_router_is_bit_identical_to_the_fault_free_router() {
+    check("all-clear chaos ≡ no chaos, S ∈ {1,2,4}", 6, |g| {
+        let (ds, snap) = build_snapshot(
+            g.usize_in(80..200),
+            g.usize_in(2..4),
+            g.usize_in(3..7),
+            g.rng().next_u64(),
+        );
+        let nq = g.usize_in(10..40);
+        let queries = jittered_queries(&ds, nq, g.rng().next_u64());
+        let single = assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2)
+            .unwrap();
+        let seed = g.rng().next_u64();
+        for shards in [1usize, 2, 4] {
+            let tier =
+                Arc::new(ShardedIndex::new(snap.clone(), ShardSpec::new(shards, seed)));
+            let plain = chaos_router(Arc::clone(&tier), None, FaultPolicy::default());
+            let want = plain.query_blocking(&queries, nq).unwrap();
+            plain.shutdown();
+            let inj = Arc::new(FaultInjector::new(
+                FaultPlan::all_clear(),
+                g.rng().next_u64(),
+                shards,
+                Clock::virtual_at(0),
+            ));
+            let chaos = chaos_router(Arc::clone(&tier), Some(inj), FaultPolicy::default());
+            let got = chaos.query_blocking(&queries, nq).unwrap();
+            chaos.shutdown();
+            assert_eq!(got.outcome, QueryOutcome::Complete, "S={shards}");
+            assert_eq!(want.outcome, QueryOutcome::Complete, "S={shards}");
+            assert_eq!(got.result, want.result, "S={shards}: all-clear chaos must not perturb");
+            assert_eq!(got.result, single, "S={shards}: fan-out ≡ single index under chaos");
+        }
+    });
+}
+
+#[test]
+fn injected_fault_schedules_are_deterministic_per_seed() {
+    let plan = FaultPlan::parse("drop=0.4;delay=0.3x5").unwrap();
+    let shards = 3usize;
+    let draw = |seed: u64| -> Vec<RouteFault> {
+        let inj = FaultInjector::new(plan.clone(), seed, shards, Clock::virtual_at(0));
+        let mut fates = Vec::new();
+        for _ in 0..32 {
+            for s in 0..shards {
+                fates.push(inj.route_fault(s));
+            }
+        }
+        fates
+    };
+    let a = draw(42);
+    assert_eq!(a, draw(42), "same (plan, seed) must draw the same schedule");
+    assert_ne!(a, draw(43), "the seed must actually steer the schedule");
+    assert!(
+        a.iter().any(|f| *f == RouteFault::Drop) && a.iter().any(|f| *f != RouteFault::None),
+        "a drop=0.4 plan over 96 draws injects something: {a:?}"
+    );
+
+    // worker-panic and stale schedules are seq-counted, not random:
+    // exactly the first kill-until / stale draws fire
+    let plan = FaultPlan::parse("kill=0;kill-until=3;stale=2").unwrap();
+    let inj = FaultInjector::new(plan, 7, 2, Clock::virtual_at(0));
+    let panics: Vec<bool> = (0..5).map(|_| inj.worker_panics(0)).collect();
+    assert_eq!(panics, vec![true, true, true, false, false]);
+    assert!(!inj.worker_panics(1), "shard 1 is not in the kill list");
+    let stales: Vec<bool> = (0..4).map(|_| inj.stale_route()).collect();
+    assert_eq!(stales, vec![true, true, false, false]);
+    let snap = inj.telemetry();
+    assert_eq!(snap.counter("serve.fault.injected.panics"), Some(3));
+    assert_eq!(snap.counter("serve.fault.injected.stales"), Some(2));
+}
+
+#[test]
+fn degraded_transcripts_are_reproducible_per_seed() {
+    let (ds, snap) = build_snapshot(240, 3, 6, 11);
+    let nq = 24;
+    let queries = jittered_queries(&ds, nq, 5);
+    let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(3, 11)));
+    let plan = FaultPlan::parse("drop=0.35;delay=0.35x5").unwrap();
+    let policy = FaultPolicy {
+        deadline: Some(Duration::from_millis(2)),
+        ..FaultPolicy::default()
+    };
+    type Transcript = Vec<Result<(Vec<u32>, QueryOutcome), QueryError>>;
+    let run = || -> Transcript {
+        let inj = Arc::new(FaultInjector::new(
+            plan.clone(),
+            99,
+            tier.num_shards(),
+            Clock::virtual_at(0),
+        ));
+        let router = chaos_router(Arc::clone(&tier), Some(inj), policy.clone());
+        let transcript: Transcript = (0..8)
+            .map(|_| {
+                router
+                    .query_blocking(&queries, nq)
+                    .map(|r| (r.result.cluster, r.outcome))
+            })
+            .collect();
+        router.shutdown();
+        transcript
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same (plan, seed, shards) must reproduce the whole transcript");
+    assert!(
+        a.iter().any(|r| !matches!(r, Ok((_, QueryOutcome::Complete)))),
+        "a drop=0.35;delay=0.35x5 plan under a 2ms deadline degrades something over 8 batches"
+    );
+}
+
+#[test]
+fn a_killed_shard_yields_a_degraded_outcome_over_the_survivors() {
+    let (ds, snap) = build_snapshot(260, 3, 6, 17);
+    let nq = 30;
+    let queries = jittered_queries(&ds, nq, 9);
+    let single =
+        assign_to_level(&snap, usize::MAX, &queries, nq, &NativeBackend::new(), 2).unwrap();
+    let tier = Arc::new(ShardedIndex::new(snap, ShardSpec::new(4, 17)));
+    let victim = non_empty_shard(&tier);
+    let victim_points = tier.shard(victim).snapshot().n;
+    let inj = Arc::new(FaultInjector::new(
+        FaultPlan { kill_shards: vec![victim], ..FaultPlan::all_clear() },
+        23,
+        tier.num_shards(),
+        Clock::virtual_at(0),
+    ));
+    let router =
+        chaos_router(Arc::clone(&tier), Some(Arc::clone(&inj)), FaultPolicy::default());
+    let resp = router.query_blocking(&queries, nq).unwrap();
+    match &resp.outcome {
+        QueryOutcome::Degraded { missing_shards, covered_points } => {
+            assert_eq!(missing_shards, &vec![victim], "exactly the killed shard is missing");
+            assert_eq!(
+                *covered_points,
+                ds.n - victim_points,
+                "coverage is every point the survivors own"
+            );
+        }
+        QueryOutcome::Complete => panic!("a killed non-empty shard cannot be Complete"),
+    }
+    // the survivor merge stays exact: dropping a shard's centroids can
+    // only lose argmins, never fabricate a closer one
+    for q in 0..nq {
+        assert!(
+            resp.result.dist[q] >= single.dist[q],
+            "query {q}: degraded dist {} beat the full index {}",
+            resp.result.dist[q],
+            single.dist[q]
+        );
+        if resp.result.cluster[q] == single.cluster[q] {
+            assert_eq!(resp.result.dist[q], single.dist[q], "query {q}: same id, same dist");
+        }
+    }
+    let tel = router.telemetry();
+    assert_eq!(tel.counter("serve.fault.degraded_queries"), Some(1));
+    assert!(
+        inj.telemetry().counter("serve.fault.injected.panics").unwrap_or(0) >= 1,
+        "the kill plan must have actually panicked a worker"
+    );
+    router.shutdown();
+}
+
+#[test]
+fn breaker_walks_closed_open_half_open_closed_on_the_virtual_clock() {
+    let clock = Clock::virtual_at(0);
+    let breaker = CircuitBreaker::new(2, Duration::from_millis(50), clock.clone());
+    assert_eq!(breaker.state(), BreakerState::Closed);
+    assert!(breaker.allow());
+    assert_eq!(breaker.record_failure(), (BreakerState::Closed, false));
+    assert_eq!(breaker.record_failure(), (BreakerState::Open, true), "second failure trips");
+    assert!(!breaker.allow(), "freshly opened breakers refuse");
+    clock.advance(Duration::from_millis(49));
+    assert!(!breaker.allow(), "the cooldown has not elapsed at 49ms");
+    assert_eq!(breaker.state(), BreakerState::Open);
+    clock.advance(Duration::from_millis(1));
+    assert!(breaker.allow(), "cooldown elapsed: admit the half-open probe");
+    assert_eq!(breaker.state(), BreakerState::HalfOpen);
+    assert_eq!(
+        breaker.record_failure(),
+        (BreakerState::Open, true),
+        "a failed probe goes straight back to open"
+    );
+    assert!(!breaker.allow());
+    clock.advance(Duration::from_millis(50));
+    assert!(breaker.allow());
+    assert_eq!(breaker.state(), BreakerState::HalfOpen);
+    assert_eq!(breaker.record_success(), BreakerState::Closed, "a good probe closes it");
+    assert!(breaker.allow());
+    // a zero failure limit still needs one real failure (clamped to 1)
+    let touchy = CircuitBreaker::new(0, Duration::from_millis(1), Clock::virtual_at(0));
+    assert_eq!(touchy.record_failure(), (BreakerState::Open, true));
+}
+
+#[test]
+fn a_worker_panic_respawns_and_loses_no_batch() {
+    let (ds, snap) = build_snapshot(200, 3, 5, 29);
+    let queries = jittered_queries(&ds, 8, 3);
+    let index = Arc::new(ServeIndex::new(snap));
+    let backend: Arc<NativeBackend> = Arc::new(NativeBackend::new());
+
+    let clean = Service::start(
+        Arc::clone(&index),
+        backend.clone(),
+        ServiceConfig { workers: 2, ..Default::default() },
+    );
+    let want = clean.query_blocking(queries.clone(), 8).unwrap();
+    clean.shutdown();
+
+    // kill-until=1: the first batch panics its worker once, the
+    // re-queued copy (seq 1) serves — the caller never notices
+    let inj = Arc::new(FaultInjector::new(
+        FaultPlan::parse("kill=0;kill-until=1").unwrap(),
+        31,
+        1,
+        Clock::virtual_at(0),
+    ));
+    let service = Service::start(
+        Arc::clone(&index),
+        backend,
+        ServiceConfig {
+            workers: 2,
+            fault: Some(Arc::clone(&inj)),
+            fault_shard: 0,
+            ..Default::default()
+        },
+    );
+    let got = service.query_blocking(queries.clone(), 8).unwrap();
+    assert_eq!(got.result, want.result, "the re-queued batch answers bit-identically");
+    let tel = service.telemetry();
+    assert_eq!(tel.counter("serve.fault.worker_panics"), Some(1));
+    assert_eq!(tel.counter("serve.fault.worker_respawns"), Some(1));
+    assert_eq!(inj.telemetry().counter("serve.fault.injected.panics"), Some(1));
+    // the pool is healthy again: later batches serve without incident
+    let again = service.query_blocking(queries, 8).unwrap();
+    assert_eq!(again.result, want.result);
+    assert_eq!(service.telemetry().counter("serve.fault.worker_panics"), Some(1));
+    service.shutdown();
+}
+
+#[test]
+fn a_corrupt_shard_file_is_quarantined_and_the_repaired_tier_serves_identically() {
+    let (ds, snap) = build_snapshot(220, 3, 6, 37);
+    let nq = 20;
+    let queries = jittered_queries(&ds, nq, 13);
+    let spec = ShardSpec::new(2, 37);
+    let tier = Arc::new(ShardedIndex::new(snap, spec));
+    let victim = non_empty_shard(&tier);
+    let router = chaos_router(Arc::clone(&tier), None, FaultPolicy::default());
+    let want = router.query_blocking(&queries, nq).unwrap();
+    router.shutdown();
+
+    let dir = std::env::temp_dir().join(format!("scc-fault-props-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    tier.save_all(&dir).unwrap();
+    let shard_file = dir.join(format!("shard-{victim:04}.scc"));
+    let pristine = std::fs::read(&shard_file).unwrap();
+
+    let inj = FaultInjector::new(
+        FaultPlan { corrupt_shards: vec![victim], ..FaultPlan::all_clear() },
+        41,
+        tier.num_shards(),
+        Clock::virtual_at(0),
+    );
+    let off = inj.corrupt_file(&shard_file).unwrap().expect("snapshot files are not empty");
+    assert!(off < pristine.len());
+    assert!(
+        ShardedIndex::load_all(&dir, spec).is_err(),
+        "the strict loader must refuse a flipped byte"
+    );
+
+    let (restored, repairs) = ShardedIndex::load_all_with_repair(&dir, spec).unwrap();
+    assert_eq!(repairs.len(), 1, "one bad file, one repair: {repairs:?}");
+    assert_eq!(repairs[0].shard, victim);
+    assert_eq!(repairs[0].file, shard_file);
+    assert!(repairs[0].quarantined.exists(), "the bad bytes are sidelined, not destroyed");
+    assert!(repairs[0].to_string().contains("quarantined"));
+    for s in 0..tier.num_shards() {
+        assert_eq!(
+            *restored.shard(s).snapshot(),
+            *tier.shard(s).snapshot(),
+            "shard {s}: re-projection restores the pre-corruption view"
+        );
+    }
+    let router = chaos_router(Arc::new(restored), None, FaultPolicy::default());
+    let got = router.query_blocking(&queries, nq).unwrap();
+    assert_eq!(got.result, want.result, "the repaired tier serves bit-identically");
+    router.shutdown();
+    // the repaired file is valid again: a second cold start needs no repair
+    let (_, repairs) = ShardedIndex::load_all_with_repair(&dir, spec).unwrap();
+    assert!(repairs.is_empty(), "nothing left to repair: {repairs:?}");
+    // corrupt_file is an involution: the same injector flips the same
+    // byte back, so the quarantined bytes recover the pristine file
+    let quarantined = dir.join(format!("shard-{victim:04}.scc.quarantined"));
+    inj.corrupt_file(&quarantined).unwrap();
+    assert_eq!(std::fs::read(&quarantined).unwrap(), pristine);
+    std::fs::remove_dir_all(&dir).ok();
+}

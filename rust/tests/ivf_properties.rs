@@ -32,8 +32,8 @@ use scc::scc::{thresholds::edge_range, Thresholds};
 use scc::serve::shard::{RouteMode, ShardRouter, ShardSpec, ShardedIndex};
 use scc::serve::{
     assign_to_level, assign_with_strategy, ingest_batch, AssignCache, AssignError,
-    AssignStrategy, HierarchySnapshot, IngestConfig, IngestError, ServeIndex, Service,
-    ServiceConfig,
+    AssignStrategy, HierarchySnapshot, IngestConfig, IngestError, QueryError, ServeIndex,
+    Service, ServiceConfig,
 };
 use scc::util::prop::{check, Gen};
 use std::sync::Arc;
@@ -264,7 +264,7 @@ fn non_finite_queries_are_rejected_on_every_entry_path() {
         RouteMode::Fanout,
     );
     let err = router.query_blocking(&bad, 3).unwrap_err();
-    assert_eq!(err, AssignError::NonFiniteQuery { row: 2 });
+    assert_eq!(err, QueryError::Assign(AssignError::NonFiniteQuery { row: 2 }));
     assert_eq!(router.stats().queries, 0, "no shard pool may see the rejected batch");
     router.shutdown();
 }
